@@ -1,0 +1,76 @@
+//! Quickstart: the paper in five minutes.
+//!
+//! 1. Sliding window sums with each §3 algorithm (Eq. 3).
+//! 2. Dot product as a prefix sum of γ-pairs (Eq. 5–9).
+//! 3. Pooling as sliding sums (§2.3).
+//! 4. Convolution: sliding kernels vs im2col+GEMM (§2.5 + Fig 1).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use swsnn::bench::{bench, fmt_duration, BenchConfig};
+use swsnn::conv::{conv1d, Conv1dParams, ConvBackend};
+use swsnn::ops::{dot_reference, dot_via_prefix, AddOp, MaxOp};
+use swsnn::pool::{pool1d, Pool1dParams, PoolKind};
+use swsnn::sliding::{self, Algo};
+use swsnn::workload::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2023);
+
+    // ── 1. sliding window sums ────────────────────────────────────────
+    println!("1) sliding window sums, w=5, all algorithms agree:");
+    let xs = rng.vec_uniform(24, 0.0, 9.0);
+    let want = sliding::sliding_naive(AddOp::<f32>::new(), &xs, 5);
+    for algo in Algo::ALL {
+        let got = sliding::run(algo, AddOp::<f32>::new(), &xs, 5, 16);
+        assert_eq!(got.len(), want.len());
+        let ok = got.iter().zip(&want).all(|(a, b)| (a - b).abs() < 1e-3);
+        println!("   {:<18} {}", algo.name(), if ok { "✓" } else { "✗" });
+        assert!(ok);
+    }
+
+    // ── 2. dot product as prefix sum (Eq. 5–9) ────────────────────────
+    let a = rng.vec_uniform(8, -1.0, 1.0);
+    let b = rng.vec_uniform(8, -1.0, 1.0);
+    println!(
+        "\n2) dot product via the Eq. 8 pair operator: {:.6} (reference {:.6})",
+        dot_via_prefix(&a, &b),
+        dot_reference(&a, &b)
+    );
+
+    // ── 3. pooling as sliding sums ────────────────────────────────────
+    let x = rng.vec_uniform(4096, -1.0, 1.0);
+    let p = Pool1dParams::new(1, 4096, 8).with_stride(8);
+    let mx = pool1d(PoolKind::Max, &x, &p);
+    let av = pool1d(PoolKind::Avg, &x, &p);
+    println!(
+        "\n3) pooling 4096 → {} windows: max[0]={:.3} avg[0]={:.3}",
+        mx.len(),
+        mx[0],
+        av[0]
+    );
+    // Max pooling really is the sliding sum with ⊕ = max:
+    let direct = sliding::auto(MaxOp::<f32>::new(), &x[..8], 8, 64)[0];
+    assert_eq!(mx[0], direct);
+
+    // ── 4. convolution: sliding vs im2col+GEMM ────────────────────────
+    println!("\n4) conv1d N=100k, k=31 — the Fig 1 comparison:");
+    let n = 100_000;
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    let w = rng.vec_uniform(31, -1.0, 1.0);
+    let p = Conv1dParams::new(1, 1, n, 31);
+    let cfg = BenchConfig::quick();
+    let m_gemm = bench(&cfg, || {
+        std::hint::black_box(conv1d(ConvBackend::Im2colGemm, std::hint::black_box(&x), &w, None, &p));
+    });
+    let m_slide = bench(&cfg, || {
+        std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, &p));
+    });
+    println!(
+        "   im2col+gemm {}   sliding {}   speedup {:.2}x",
+        fmt_duration(m_gemm.median),
+        fmt_duration(m_slide.median),
+        m_gemm.median_ns() / m_slide.median_ns()
+    );
+    println!("\nquickstart done — see `swsnn bench-fig1` / `cargo bench` for the full figures.");
+}

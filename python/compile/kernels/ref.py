@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an entry here computed with plain
+``jax.numpy``/``lax`` ops; pytest asserts allclose between kernel and
+oracle across shape/dtype sweeps (hypothesis). These are also the L2
+fallback path when a kernel variant is not AOT-compiled.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv1d_ref(x, w, bias=None, *, stride: int = 1, dilation: int = 1, pad: int = 0):
+    """Reference 1-D convolution (cross-correlation).
+
+    Args:
+      x: ``[batch, c_in, n]`` input.
+      w: ``[c_out, c_in, k]`` filters.
+      bias: optional ``[c_out]``.
+      stride/dilation/pad: the usual hyper-parameters (symmetric padding).
+
+    Returns:
+      ``[batch, c_out, n_out]``.
+    """
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,),
+        padding=[(pad, pad)],
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    if bias is not None:
+        y = y + bias[None, :, None]
+    return y
+
+
+def avg_pool1d_ref(x, w: int, *, stride: int = 1):
+    """Reference average pooling over ``[batch, c, n]`` (valid mode)."""
+    y = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, 1, w),
+        window_strides=(1, 1, stride),
+        padding="VALID",
+    )
+    return y / w
+
+
+def max_pool1d_ref(x, w: int, *, stride: int = 1):
+    """Reference max pooling over ``[batch, c, n]`` (valid mode)."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, w),
+        window_strides=(1, 1, stride),
+        padding="VALID",
+    )
+
+
+def sliding_sum_ref(x, w: int):
+    """Dense sliding-window sum of a 1-D vector (valid mode)."""
+    c = jnp.concatenate([jnp.zeros(1, x.dtype), jnp.cumsum(x)])
+    return c[w:] - c[:-w]
+
+
+def sliding_min_ref(x, w: int):
+    """Dense sliding-window minimum of a 1-D vector (valid mode)."""
+    return lax.reduce_window(
+        x,
+        jnp.inf,
+        lax.min,
+        window_dimensions=(w,),
+        window_strides=(1,),
+        padding="VALID",
+    )
+
+
+def dot_via_pair_scan_ref(a, b):
+    """Paper Eq. 5-9: dot product as a prefix scan of (u, v) pairs.
+
+    Used by tests to validate the pair-operator algebra against jnp.dot —
+    the same associativity argument the rust ``ops::ConvPair`` relies on.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    alpha = jnp.where(a == 0, jnp.ones_like(a), a)
+    beta = jnp.where(a == 0, jnp.zeros_like(b), b)
+    # u_0 = 1, u_i = alpha_{i-1}/alpha_i, closing u_M = alpha_{M-1}.
+    u = jnp.concatenate([jnp.ones(1, a.dtype), alpha[:-1] / alpha[1:], alpha[-1:]])
+    v = jnp.concatenate([beta, jnp.zeros(1, a.dtype)])
+
+    def op(c1, c2):
+        u1, v1 = c1
+        u2, v2 = c2
+        return u1 * u2, u2 * v1 + v2
+
+    (_, vs) = lax.associative_scan(op, (u, v))
+    return vs[-1]

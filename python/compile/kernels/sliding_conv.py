@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: sliding-window 1-D convolution.
+
+TPU adaptation of the paper's CPU-vector algorithm (DESIGN.md
+§Hardware-Adaptation): instead of materializing the im2col matrix in HBM
+(k x memory traffic), each grid step keeps one input row tile resident in
+VMEM and accumulates one MXU matmul **per filter tap** over a shifted
+view of the *unmodified* input:
+
+    acc += W[:, :, tap] @ X[:, tap*dilation : tap*dilation + n_out]
+
+which is exactly Algorithm 4's ``X (+)= Slide(Y, Y1, P-k)`` with the
+slide realized as a VMEM offset and the FMA generalized to the MXU
+``(c_out, c_in) x (c_in, n_block)`` contraction. VMEM footprint is
+``c_in*(n_block + (k-1)*dilation) + c_out*n_block`` floats versus
+im2col's ``c_in*k*n_block`` — the k-fold blow-up the paper removes.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness is what the AOT
+artifacts carry (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int):
+    """One batch element: taps accumulate MXU matmuls over slid views."""
+    n_out = o_ref.shape[-1]
+    x = x_ref[0]          # [c_in, n_pad]   (VMEM-resident tile)
+    w = w_ref[...]        # [c_out, c_in, k]
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)  # [c_out, n_out]
+    for tap in range(k):  # static unroll: k MXU contractions
+        off = tap * dilation
+        xs = jax.lax.dynamic_slice_in_dim(x, off, n_out, axis=1)
+        acc = acc + jnp.dot(w[:, :, tap], xs, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][:, None]
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "dilation", "pad"))
+def conv1d_sliding(x, w, bias, *, stride: int = 1, dilation: int = 1, pad: int = 0):
+    """Sliding-window conv via the Pallas kernel (differentiable).
+
+    Args:
+      x: ``[batch, c_in, n]``; w: ``[c_out, c_in, k]``; bias: ``[c_out]``.
+
+    Stride is applied by decimating the dense (stride-1) output — the
+    dense windows are what the sliding formulation produces naturally,
+    and decimation inside the same jit keeps everything fused. The VJP
+    is registered below: both cotangent computations are convolutions
+    themselves (transposed / correlation forms), so training lowers to
+    more of the same sliding structure.
+    """
+    return _conv1d_vjp(x, w, bias, stride, dilation, pad)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _conv1d_vjp(x, w, bias, stride, dilation, pad):
+    return _conv1d_pallas(x, w, bias, stride, dilation, pad)
+
+
+def _conv1d_pallas(x, w, bias, stride: int, dilation: int, pad: int):
+    batch, c_in, n = x.shape
+    c_out, c_in_w, k = w.shape
+    assert c_in == c_in_w, (c_in, c_in_w)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad)))
+        n = n + 2 * pad
+    eff_k = (k - 1) * dilation + 1
+    n_dense = n - eff_k + 1
+    assert n_dense >= 1, "input shorter than the receptive field"
+
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, k=k, dilation=dilation),
+        out_shape=jax.ShapeDtypeStruct((batch, c_out, n_dense), x.dtype),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, c_in, n), lambda b: (b, 0, 0)),
+            pl.BlockSpec((c_out, c_in, k), lambda b: (0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, c_out, n_dense), lambda b: (b, 0, 0)),
+        interpret=True,
+    )(x, w, bias)
+    if stride > 1:
+        out = out[:, :, ::stride]
+    return out
+
+
+def _conv1d_fwd(x, w, bias, stride, dilation, pad):
+    y = _conv1d_pallas(x, w, bias, stride, dilation, pad)
+    return y, (x, w)
+
+
+def _conv1d_bwd(stride, dilation, pad, res, dy):
+    """Cotangents — both are convolutions (stride-1 training path only).
+
+    * ``dx = dy ⊛ flip(w)ᵀ`` with padding ``(k−1)·d − p`` (transposed
+      conv): another sliding-window convolution.
+    * ``dw[o,i,tap] = Σ_{b,t} dy[b,o,t] · x_pad[b,i,t + tap·d]``: one
+      MXU-shaped contraction per tap over the unmodified (padded) input —
+      the same slid-view schedule as the forward kernel.
+    """
+    assert stride == 1, "training path exports stride-1 convs only"
+    x, w = res
+    k = w.shape[-1]
+    # dx: transposed conv, channels swapped, taps flipped.
+    w_t = jnp.flip(w, axis=-1).transpose(1, 0, 2)  # [c_in, c_out, k]
+    dx = _conv1d_pallas(
+        dy,
+        w_t,
+        jnp.zeros((w.shape[1],), dy.dtype),
+        1,
+        dilation,
+        (k - 1) * dilation - pad,
+    )
+    # dw: per-tap contraction over slid views of the padded input.
+    x_pad = jnp.pad(x, ((0, 0), (0, 0), (pad, pad))) if pad else x
+    n_out = dy.shape[-1]
+    taps = []
+    for tap in range(k):
+        xs = jax.lax.dynamic_slice_in_dim(x_pad, tap * dilation, n_out, axis=2)
+        taps.append(jnp.einsum("bot,bit->oi", dy, xs))
+    dw = jnp.stack(taps, axis=-1)
+    dbias = jnp.sum(dy, axis=(0, 2))
+    return dx, dw, dbias
+
+
+_conv1d_vjp.defvjp(_conv1d_fwd, _conv1d_bwd)
+
+
+def vmem_footprint_bytes(c_in: int, c_out: int, k: int, n_block: int, dilation: int = 1) -> int:
+    """Estimated VMEM bytes for one grid step (DESIGN.md perf model)."""
+    halo = (k - 1) * dilation
+    x_tile = c_in * (n_block + halo)
+    w_tile = c_out * c_in * k
+    acc = c_out * n_block
+    return 4 * (x_tile + w_tile + acc)
+
+
+def mxu_utilization_estimate(c_in: int, c_out: int, n_block: int) -> float:
+    """Fraction of each 128x128 MXU pass doing useful work (perf model)."""
+
+    def eff(dim: int, tile: int = 128) -> float:
+        full = dim // tile
+        rem = dim % tile
+        used = full * tile + rem
+        passes = full + (1 if rem else 0)
+        return used / (passes * tile) if passes else 0.0
+
+    return eff(c_out) * eff(c_in) * eff(n_block)

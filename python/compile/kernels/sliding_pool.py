@@ -1,0 +1,95 @@
+"""L1 Pallas kernels: sliding-window pooling (paper §2.3).
+
+Average pooling = sliding sum with ``+``; max pooling = sliding sum with
+``max``. Both kernels use the *associative doubling ladder* (the paper's
+``O(log w)`` variant): window sums of size ``2^t`` are built by combining
+two slid size-``2^(t-1)`` windows, and a non-power-of-two ``w`` finishes
+with one extra combine — overlapping for idempotent ``max``, binary
+decomposition for ``+``. ``ceil(log2 w)+1`` vector ops per tile instead
+of ``w``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ladder(x, w: int, combine, n_out: int):
+    """Log-depth sliding windows of size ``w`` over the last axis.
+
+    ``x``: [..., n]; returns [..., n_out] where lane t = window [t, t+w).
+    ``combine(a, b)`` must be associative; overlap-safe iff idempotent.
+    """
+    idempotent = combine is jnp.maximum or combine is jnp.minimum
+    # Doubling ladder: win_t[lane j] = fold of x[j .. j+2^t).
+    win = x
+    size = 1
+    while size * 2 <= w:
+        win = combine(win[..., : win.shape[-1] - size], win[..., size:])
+        size *= 2
+    if size == w:
+        return win[..., :n_out]
+    rem = w - size
+    if idempotent:
+        # Overlapping union covers [t, t+w) exactly.
+        return combine(win[..., :n_out], win[..., rem : rem + n_out])
+    # Non-idempotent: recurse on the remainder chunk (binary decomposition).
+    rest = _ladder(x[..., size:], rem, combine, n_out)
+    return combine(win[..., :n_out], rest)
+
+
+def _pool_kernel(x_ref, o_ref, *, w: int, mode: str):
+    x = x_ref[0]  # [c, n]
+    n_out = o_ref.shape[-1]
+    if mode == "max":
+        o_ref[0] = _ladder(x, w, jnp.maximum, n_out)
+    elif mode == "min":
+        o_ref[0] = _ladder(x, w, jnp.minimum, n_out)
+    else:  # avg
+        s = _ladder(x, w, jnp.add, n_out)
+        o_ref[0] = s * (1.0 / w)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "stride", "mode"))
+def pool1d_sliding(x, *, w: int, stride: int = 1, mode: str = "max"):
+    """Sliding pooling over ``[batch, c, n]`` (valid mode).
+
+    Dense windows from the log-ladder kernel, then stride decimation.
+    """
+    assert mode in ("max", "min", "avg"), mode
+    batch, c, n = x.shape
+    n_dense = n - w + 1
+    assert n_dense >= 1, "input shorter than window"
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, w=w, mode=mode),
+        out_shape=jax.ShapeDtypeStruct((batch, c, n_dense), x.dtype),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, c, n), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, n_dense), lambda b: (b, 0, 0)),
+        interpret=True,
+    )(x)
+    if stride > 1:
+        out = out[:, :, ::stride]
+    return out
+
+
+def _sliding_sum_kernel(x_ref, o_ref, *, w: int):
+    n_out = o_ref.shape[-1]
+    o_ref[...] = _ladder(x_ref[...], w, jnp.add, n_out)
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def sliding_sum(x, *, w: int):
+    """Dense sliding-window sum of a 1-D vector (the bare Eq. 3 kernel)."""
+    (n,) = x.shape
+    n_out = n - w + 1
+    assert n_out >= 1
+    return pl.pallas_call(
+        functools.partial(_sliding_sum_kernel, w=w),
+        out_shape=jax.ShapeDtypeStruct((n_out,), x.dtype),
+        interpret=True,
+    )(x)

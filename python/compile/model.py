@@ -1,0 +1,150 @@
+"""L2: the JAX model — a dilated TCN built on the L1 sliding kernels.
+
+This is the "model graph" layer of the three-layer stack: pure-jax
+forward/backward that *calls the Pallas kernels* so everything lowers
+into a single HLO module per artifact. Python never runs at serving
+time — ``aot.py`` exports these functions as HLO text and the rust
+runtime executes them.
+
+Architecture (WaveNet/TCN shape — the 1-D dilated-conv workload the
+paper's Fig 2 targets):
+
+    stem:   conv k=7, c_in -> hidden
+    blocks: residual { conv(k, d) -> relu -> conv(k, d) -> relu } x D,
+            dilations d = 1, 2, 4, ..., receptive field grows 2^D
+    head:   1x1 conv hidden -> c_out
+
+Task for the e2e example: next-step prediction on synthetic AR series
+(MSE loss), trained with plain SGD inside the exported train step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sliding_conv import conv1d_sliding
+
+
+class TcnConfig(NamedTuple):
+    """Static hyper-parameters (baked into each AOT artifact)."""
+
+    c_in: int = 1
+    hidden: int = 32
+    c_out: int = 1
+    kernel: int = 3
+    stem_kernel: int = 7
+    n_blocks: int = 4
+    seq_len: int = 512
+
+    @property
+    def dilations(self):
+        return tuple(2**i for i in range(self.n_blocks))
+
+    @property
+    def receptive_field(self) -> int:
+        rf = self.stem_kernel
+        for d in self.dilations:
+            rf += 2 * (self.kernel - 1) * d
+        return rf
+
+
+def param_shapes(cfg: TcnConfig):
+    """Ordered (name, shape) list — the flat parameter layout shared with
+    the rust coordinator (which owns parameter state between steps)."""
+    shapes = [
+        ("stem_w", (cfg.hidden, cfg.c_in, cfg.stem_kernel)),
+        ("stem_b", (cfg.hidden,)),
+    ]
+    for i in range(cfg.n_blocks):
+        shapes += [
+            (f"block{i}_w1", (cfg.hidden, cfg.hidden, cfg.kernel)),
+            (f"block{i}_b1", (cfg.hidden,)),
+            (f"block{i}_w2", (cfg.hidden, cfg.hidden, cfg.kernel)),
+            (f"block{i}_b2", (cfg.hidden,)),
+        ]
+    shapes += [
+        ("head_w", (cfg.c_out, cfg.hidden, 1)),
+        ("head_b", (cfg.c_out,)),
+    ]
+    return shapes
+
+
+def init_params(cfg: TcnConfig, seed: int = 0):
+    """He-init parameters as a flat list of arrays (stable order)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 3:
+            fan_in = shape[1] * shape[2]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def param_count(cfg: TcnConfig) -> int:
+    total = 0
+    for _, shape in param_shapes(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def _same_pad(k: int, dilation: int) -> int:
+    return (k - 1) * dilation // 2
+
+
+def tcn_forward(params, x, cfg: TcnConfig):
+    """Forward pass: ``[batch, c_in, n] -> [batch, c_out, n]``.
+
+    Every conv is the L1 Pallas sliding kernel with same-padding so the
+    sequence length is preserved end to end.
+    """
+    it = iter(params)
+
+    def take():
+        return next(it)
+
+    h = conv1d_sliding(x, take(), take(), pad=_same_pad(cfg.stem_kernel, 1))
+    h = jax.nn.relu(h)
+    for d in cfg.dilations:
+        pad = _same_pad(cfg.kernel, d)
+        r = conv1d_sliding(h, take(), take(), dilation=d, pad=pad)
+        r = jax.nn.relu(r)
+        r = conv1d_sliding(r, take(), take(), dilation=d, pad=pad)
+        r = jax.nn.relu(r)
+        h = h + r  # residual
+    y = conv1d_sliding(h, take(), take())
+    return y
+
+
+def mse_next_step_loss(params, x, cfg: TcnConfig):
+    """Next-step prediction: predict x[t+1] from the causal-ish window.
+
+    The model sees x[:, :, :-1] and regresses x[:, :, 1:].
+    """
+    pred = tcn_forward(params, x[:, :, :-1], cfg)
+    target = x[:, : cfg.c_out, 1:]
+    return jnp.mean((pred - target) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params, x, cfg: TcnConfig, lr: float = 1e-3):
+    """One SGD step; returns (loss, new_params). Exported as one HLO."""
+    loss, grads = jax.value_and_grad(mse_next_step_loss)(params, x, cfg)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return loss, new_params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_jit(params, x, cfg: TcnConfig):
+    return tcn_forward(params, x, cfg)

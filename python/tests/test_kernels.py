@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/windows/dilations; every property asserts
+allclose against ``ref.py``. This is the core correctness signal for the
+AOT artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sliding_conv import (
+    conv1d_sliding,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.sliding_pool import pool1d_sliding, sliding_sum
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rnd(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def assert_close(a, b, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+class TestConvKernel:
+    @settings(**SETTINGS)
+    @given(
+        batch=st.integers(1, 3),
+        c_in=st.integers(1, 4),
+        c_out=st.integers(1, 4),
+        n=st.integers(8, 96),
+        k=st.integers(1, 7),
+    )
+    def test_matches_ref_shapes(self, batch, c_in, c_out, n, k):
+        if n < k:
+            n = k
+        x = rnd(1, (batch, c_in, n))
+        w = rnd(2, (c_out, c_in, k))
+        b = rnd(3, (c_out,))
+        assert_close(conv1d_sliding(x, w, b), ref.conv1d_ref(x, w, b))
+
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(32, 128),
+        k=st.integers(2, 9),
+        dilation=st.integers(1, 8),
+        stride=st.integers(1, 3),
+    )
+    def test_matches_ref_hyperparams(self, n, k, dilation, stride):
+        eff = (k - 1) * dilation + 1
+        if n < eff:
+            n = eff
+        pad = eff // 2
+        x = rnd(4, (2, 2, n))
+        w = rnd(5, (3, 2, k))
+        b = rnd(6, (3,))
+        got = conv1d_sliding(x, w, b, stride=stride, dilation=dilation, pad=pad)
+        want = ref.conv1d_ref(x, w, b, stride=stride, dilation=dilation, pad=pad)
+        assert_close(got, want)
+
+    def test_same_pad_preserves_length(self):
+        x = rnd(7, (1, 1, 50))
+        w = rnd(8, (1, 1, 7))
+        b = jnp.zeros((1,))
+        y = conv1d_sliding(x, w, b, pad=3)
+        assert y.shape == (1, 1, 50)
+
+    def test_identity_filter(self):
+        x = rnd(9, (1, 1, 20))
+        w = jnp.ones((1, 1, 1))
+        b = jnp.zeros((1,))
+        assert_close(conv1d_sliding(x, w, b), x)
+
+    def test_grad_matches_ref(self):
+        x = rnd(10, (2, 3, 24))
+        w = rnd(11, (4, 3, 3))
+        b = rnd(12, (4,))
+
+        def lk(x, w, b):
+            return jnp.sum(conv1d_sliding(x, w, b, dilation=2, pad=2) ** 2)
+
+        def lr(x, w, b):
+            return jnp.sum(ref.conv1d_ref(x, w, b, dilation=2, pad=2) ** 2)
+
+        gk = jax.grad(lk, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(lr, argnums=(0, 1, 2))(x, w, b)
+        for a, c in zip(gk, gr):
+            assert_close(a, c, atol=1e-3, rtol=1e-3)
+
+    def test_input_shorter_than_rf_raises(self):
+        x = rnd(13, (1, 1, 4))
+        w = rnd(14, (1, 1, 7))
+        with pytest.raises(AssertionError):
+            conv1d_sliding(x, w, jnp.zeros((1,)))
+
+    def test_perf_model_helpers(self):
+        fp = vmem_footprint_bytes(c_in=64, c_out=64, k=7, n_block=512)
+        # x tile 64*(512+6) + w 64*64*7 + acc 64*512, all f32
+        assert fp == 4 * (64 * 518 + 64 * 64 * 7 + 64 * 512)
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert 0.0 < mxu_utilization_estimate(96, 64, 200) < 1.0
+
+
+class TestPoolKernels:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(8, 128),
+        w=st.integers(2, 16),
+        stride=st.integers(1, 4),
+        mode=st.sampled_from(["max", "avg", "min"]),
+    )
+    def test_matches_ref(self, n, w, stride, mode):
+        if n < w:
+            n = w
+        x = rnd(20, (2, 3, n))
+        got = pool1d_sliding(x, w=w, stride=stride, mode=mode)
+        if mode == "max":
+            want = ref.max_pool1d_ref(x, w, stride=stride)
+        elif mode == "avg":
+            want = ref.avg_pool1d_ref(x, w, stride=stride)
+        else:
+            want = -ref.max_pool1d_ref(-x, w, stride=stride)
+        assert_close(got, want)
+
+    def test_max_pool_known_values(self):
+        x = jnp.asarray([[[1.0, 5.0, 2.0, 2.0, 9.0, 0.0]]])
+        y = pool1d_sliding(x, w=2, stride=2, mode="max")
+        assert_close(y, jnp.asarray([[[5.0, 2.0, 9.0]]]))
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(4, 200), w=st.integers(1, 32))
+    def test_sliding_sum_matches_cumsum_ref(self, n, w):
+        if n < w:
+            n = w
+        x = rnd(21, (n,))
+        assert_close(sliding_sum(x, w=w), ref.sliding_sum_ref(x, w), atol=1e-3, rtol=1e-3)
+
+
+class TestPairOperator:
+    """Paper Eq. 5-9 validated in jnp (mirrors rust ops::ConvPair tests)."""
+
+    @settings(**SETTINGS)
+    @given(m=st.integers(1, 64))
+    def test_dot_via_pair_scan(self, m):
+        a = rnd(30, (m,))
+        b = rnd(31, (m,))
+        assert_close(ref.dot_via_pair_scan_ref(a, b), jnp.dot(a, b), atol=1e-3, rtol=1e-3)
+
+    def test_dot_with_zero_taps(self):
+        a = jnp.asarray([0.0, 2.0, 0.0, -1.5])
+        b = jnp.asarray([9.0, 3.0, 7.0, 2.0])
+        assert_close(ref.dot_via_pair_scan_ref(a, b), jnp.dot(a, b))
+
+    def test_all_zero_filter(self):
+        a = jnp.zeros((5,))
+        b = jnp.arange(5.0)
+        assert_close(ref.dot_via_pair_scan_ref(a, b), 0.0)

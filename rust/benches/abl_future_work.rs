@@ -1,0 +1,125 @@
+//! Ablations for the paper's §5 future-work items, all implemented here:
+//!
+//! * 2-D convolution ("extending … to more than one dimension") —
+//!   sliding vs im2col, where the expansion factor is kh·kw;
+//! * custom small-filter kernels (k = 3, 5) — fused single-pass vs the
+//!   generic slid-accumulate schedule;
+//! * matmul reformulation (tap-GEMM, the MXU-shaped form) — measured on
+//!   CPU for completeness (it targets matmul accelerators);
+//! * int8 quantized sliding conv vs f32 ("quantization is not entangled
+//!   with GEMM").
+use swsnn::bench::{bench, fmt_duration, BenchConfig, Table};
+use swsnn::conv::{
+    conv1d, conv1d_quantized, conv1d_small_k, conv1d_tap_gemm, conv2d_im2col, conv2d_sliding,
+    Conv1dParams, Conv2dParams, ConvBackend, QuantParams,
+};
+use swsnn::workload::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rng = Rng::new(0xAB2);
+
+    // ── 2-D convolution ──────────────────────────────────────────────
+    let mut t2d = Table::new(
+        "ABL-2D — conv2d sliding vs im2col+GEMM (c_in=c_out=4, same-pad)",
+        &["hxw", "k", "im2col", "sliding", "speedup"],
+    );
+    for (hw, k) in [(64usize, 3usize), (64, 5), (128, 3), (128, 5), (128, 7), (256, 3)] {
+        let p = Conv2dParams::new(4, 4, hw, hw, k, k).with_same_pad();
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let mg = bench(&cfg, || {
+            std::hint::black_box(conv2d_im2col(std::hint::black_box(&x), &w, None, &p));
+        });
+        let ms = bench(&cfg, || {
+            std::hint::black_box(conv2d_sliding(std::hint::black_box(&x), &w, None, &p));
+        });
+        t2d.row(vec![
+            format!("{hw}x{hw}"),
+            k.to_string(),
+            fmt_duration(mg.median),
+            fmt_duration(ms.median),
+            format!("{:.2}x", mg.median_ns() / ms.median_ns()),
+        ]);
+    }
+    t2d.emit("abl_conv2d.csv");
+
+    // ── small-filter custom kernels ──────────────────────────────────
+    let mut tsk = Table::new(
+        "ABL-SK — fused small-k kernels vs generic sliding (N=1M, valid)",
+        &["k", "generic sliding", "fused kernel", "speedup"],
+    );
+    let n = 1_000_000;
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    for k in [3usize, 5] {
+        let w = rng.vec_uniform(k, -1.0, 1.0);
+        let p = Conv1dParams::new(1, 1, n, k);
+        let mgen = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, &p));
+        });
+        let mfused = bench(&cfg, || {
+            std::hint::black_box(conv1d_small_k(std::hint::black_box(&x), &w, None, &p).unwrap());
+        });
+        tsk.row(vec![
+            k.to_string(),
+            fmt_duration(mgen.median),
+            fmt_duration(mfused.median),
+            format!("{:.2}x", mgen.median_ns() / mfused.median_ns()),
+        ]);
+    }
+    tsk.emit("abl_small_k.csv");
+
+    // ── matmul reformulation ─────────────────────────────────────────
+    let mut tmm = Table::new(
+        "ABL-MM — tap-GEMM reformulation (MXU-shaped) vs sliding FMA on CPU",
+        &["shape", "sliding", "tap_gemm", "im2col"],
+    );
+    for (n, c, k) in [(8192usize, 4usize, 7usize), (8192, 16, 3), (4096, 32, 3)] {
+        let p = Conv1dParams::new(c, c, n, k).with_same_pad();
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let ms = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, &p));
+        });
+        let mt = bench(&cfg, || {
+            std::hint::black_box(conv1d_tap_gemm(std::hint::black_box(&x), &w, None, &p).unwrap());
+        });
+        let mg = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Im2colGemm, std::hint::black_box(&x), &w, None, &p));
+        });
+        tmm.row(vec![
+            format!("n{n}_c{c}_k{k}"),
+            fmt_duration(ms.median),
+            fmt_duration(mt.median),
+            fmt_duration(mg.median),
+        ]);
+    }
+    tmm.emit("abl_tap_gemm.csv");
+
+    // ── quantized path ───────────────────────────────────────────────
+    let mut tq = Table::new(
+        "ABL-Q — int8 sliding conv vs f32 sliding conv (N=1M, valid)",
+        &["k", "f32 sliding", "int8 sliding", "speedup"],
+    );
+    for k in [7usize, 15, 31] {
+        let p = Conv1dParams::new(1, 1, n, k);
+        let w = rng.vec_uniform(k, -0.5, 0.5);
+        let xq_p = QuantParams::from_range(-1.0, 1.0);
+        let wq_p = QuantParams::from_range(-0.5, 0.5);
+        let qx = xq_p.quantize_slice(&x);
+        let qw = wq_p.quantize_slice(&w);
+        let mf = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, &p));
+        });
+        let mq = bench(&cfg, || {
+            std::hint::black_box(conv1d_quantized(std::hint::black_box(&qx), &qw, xq_p, wq_p, &p));
+        });
+        tq.row(vec![
+            k.to_string(),
+            fmt_duration(mf.median),
+            fmt_duration(mq.median),
+            format!("{:.2}x", mf.median_ns() / mq.median_ns()),
+        ]);
+    }
+    tq.emit("abl_quantized.csv");
+}

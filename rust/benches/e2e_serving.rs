@@ -1,0 +1,81 @@
+//! E2E serving bench: throughput/latency of the coordinator over the
+//! rust-native engines (sliding vs im2col baseline) and — when
+//! artifacts exist — the PJRT TCN engine. This regenerates the serving
+//! numbers recorded in EXPERIMENTS.md §E2E.
+use std::sync::Arc;
+use swsnn::bench::Table;
+use swsnn::config::{load_config, ServeConfig};
+use swsnn::conv::ConvBackend;
+use swsnn::coordinator::{Coordinator, NativeEngine, PjrtTcnEngine};
+use swsnn::nn::Model;
+use swsnn::workload::Rng;
+
+fn drive(coord: Arc<Coordinator>, clients: usize, per_client: usize, row: usize) -> (f64, swsnn::coordinator::CoordinatorStats) {
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(42 + c as u64);
+            for _ in 0..per_client {
+                let x = rng.vec_uniform(row, -1.0, 1.0);
+                coord.infer(x).expect("inference");
+            }
+        }));
+    }
+    for h in handles { h.join().unwrap(); }
+    let dt = t0.elapsed().as_secs_f64();
+    ((clients * per_client) as f64 / dt, coord.stats())
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("SWSNN_BENCH_QUICK").map_or(false, |v| v == "1");
+    let per_client = if quick { 10 } else { 40 };
+    let mut table = Table::new(
+        "E2E serving: 8 concurrent clients through the dynamic batcher",
+        &["engine", "req/s", "mean batch", "e2e p50 µs", "e2e p99 µs"],
+    );
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_demo.toml"),
+    )?;
+    let (mc, _) = load_config(&text).map_err(anyhow::Error::msg)?;
+    let serve = ServeConfig { max_batch: 8, batch_deadline_us: 2_000, ..Default::default() };
+
+    for backend in [ConvBackend::Sliding, ConvBackend::Im2colGemm] {
+        let mut rng = Rng::new(1);
+        let model = Model::init(&mc, &mut rng)?;
+        let row = model.c_in * model.seq_len;
+        let coord = Arc::new(Coordinator::start_native(
+            NativeEngine::new(model, backend, serve.max_batch), &serve)?);
+        let (rps, stats) = drive(coord, 8, per_client, row);
+        table.row(vec![
+            format!("native/{}", backend.name()),
+            format!("{rps:.1}"),
+            format!("{:.2}", stats.mean_batch),
+            format!("{:.0}", stats.e2e_p50_us),
+            format!("{:.0}", stats.e2e_p99_us),
+        ]);
+    }
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.is_dir() {
+        let dir2 = dir.clone();
+        let coord = Arc::new(Coordinator::start(
+            Box::new(move || Ok(Box::new(PjrtTcnEngine::from_artifacts(dir2, 42)?) as _)),
+            &serve,
+        )?);
+        let row = coord.input_len();
+        let (rps, stats) = drive(coord, 8, per_client, row);
+        table.row(vec![
+            "pjrt/tcn".into(),
+            format!("{rps:.1}"),
+            format!("{:.2}", stats.mean_batch),
+            format!("{:.0}", stats.e2e_p50_us),
+            format!("{:.0}", stats.e2e_p99_us),
+        ]);
+    } else {
+        eprintln!("(artifacts/ missing — skipping PJRT engine row)");
+    }
+    table.emit("e2e_serving.csv");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Regenerates paper Figure 1: speedup of sliding 1-D convolution over
+//! the im2col+GEMM (MlasConv-style) baseline across filter sizes on a
+//! large 1-D input. Shape criterion: sliding wins from small k and the
+//! speedup grows ≈ log k (EXPERIMENTS.md §FIG1).
+use swsnn::bench::{figs, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n = 1_000_000;
+    let ks = [2usize, 3, 5, 7, 15, 31, 63, 127, 255];
+    let (table, rows) = figs::fig1(&cfg, n, &ks);
+    table.emit("fig1.csv");
+    // Shape check: monotone-ish growth of speedup with log k.
+    let first = rows.first().unwrap().speedup;
+    let last = rows.last().unwrap().speedup;
+    println!("speedup k={}: {:.2}x → k={}: {:.2}x (growth {:.2}x)",
+        rows.first().unwrap().k, first, rows.last().unwrap().k, last, last / first);
+}

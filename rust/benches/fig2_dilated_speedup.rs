@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 2: dilated-convolution speedup on the
+//! Chaudhary et al. [4] scenario (synthetic replica of their layer
+//! shapes). Paper: up to 6.8x on the small set, ≈4x across the board.
+use swsnn::bench::{figs, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let (table, rows) = figs::fig2(&cfg);
+    table.emit("fig2.csv");
+    let small_max = rows.iter().filter(|r| r.small_set).map(|r| r.speedup).fold(0.0f64, f64::max);
+    let board: Vec<f64> = rows.iter().filter(|r| !r.small_set).map(|r| r.speedup).collect();
+    let board_gm = (board.iter().map(|s| s.ln()).sum::<f64>() / board.len() as f64).exp();
+    println!("small-set max speedup: {small_max:.2}x (paper: up to 6.8x)");
+    println!("across-the-board geomean: {board_gm:.2}x (paper: ≈4x)");
+}

@@ -1,0 +1,14 @@
+//! TBL-A: the §3 sliding-sum algorithm family (Algorithms 1–4, linear vs
+//! log-depth variants) against the O(wN) naive baseline, plus the
+//! sliding-minimum table (the paper's associative-speedup example).
+use swsnn::bench::{figs, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n = 1_000_000;
+    for p in [8usize, 16, 32, 64] {
+        figs::tbl_algorithms(&cfg, n, p, &[2, 4, 8, 12, 15, 31])
+            .emit(&format!("tbl_algorithms_p{p}.csv"));
+    }
+    figs::tbl_sliding_min(&cfg, n, 64, &[4, 8, 15, 31, 63]).emit("tbl_sliding_min.csv");
+}

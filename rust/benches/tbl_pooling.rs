@@ -1,0 +1,7 @@
+//! TBL-P: pooling as sliding sums (§2.3) vs naive window recomputation.
+use swsnn::bench::{figs, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    figs::tbl_pooling(&cfg, 1_000_000, &[2, 4, 8, 16, 32, 64]).emit("tbl_pooling.csv");
+}

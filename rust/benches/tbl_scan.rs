@@ -1,0 +1,9 @@
+//! TBL-S: the §2.1 prefix-sum substrate — sequential vs Hillis–Steele vs
+//! Blelloch scans, sequential vs tree reduce.
+use swsnn::bench::{figs, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    figs::tbl_scan(&cfg, &[1_000, 10_000, 100_000, 1_000_000]).emit("tbl_scan.csv");
+    figs::tbl_backends(&cfg, 262_144, &[3, 7, 15, 31]).emit("tbl_backends.csv");
+}

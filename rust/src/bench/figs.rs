@@ -1,0 +1,307 @@
+//! Figure/table regeneration harnesses (DESIGN.md §4 experiment index).
+//!
+//! Each function reproduces one of the paper's evaluation artifacts and
+//! returns the rendered [`Table`]; the `cargo bench` targets and the CLI
+//! subcommands are thin wrappers. Absolute numbers differ from the
+//! authors' Xeon testbed — the *shape* criteria are asserted by
+//! `rust/tests/integration.rs` and recorded in EXPERIMENTS.md.
+
+use crate::bench::{bench, BenchConfig, Table};
+use crate::conv::{conv1d, Conv1dParams, ConvBackend};
+use crate::ops::{AddOp, MaxOp, MinOp};
+use crate::pool::{pool1d, pool1d_naive, Pool1dParams, PoolKind};
+use crate::scan;
+use crate::sliding::{self, Algo};
+use crate::workload::{chaudhary_dilated_suite, fig1_signal, Rng};
+
+/// One Fig-1 row: filter size → im2col/sliding times and speedup.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub k: usize,
+    pub im2col_ns: f64,
+    pub sliding_ns: f64,
+    pub speedup: f64,
+}
+
+/// Figure 1 — speedup of sliding 1-D convolution over the im2col+GEMM
+/// baseline on a large 1-D input, across filter sizes. Paper claim: the
+/// speedup is "approximately proportional to the logarithm of the kernel
+/// size".
+pub fn fig1(cfg: &BenchConfig, n: usize, ks: &[usize]) -> (Table, Vec<Fig1Row>) {
+    let mut rng = Rng::new(0xF161);
+    let x = fig1_signal(&mut rng, n);
+    let mut table = Table::new(
+        &format!("Fig 1 — 1-D convolution speedup vs MlasConv-style im2col+GEMM (N={n})"),
+        &["k", "im2col+gemm", "sliding", "speedup", "Gmac/s sliding"],
+    );
+    let mut rows = Vec::new();
+    for &k in ks {
+        let w = rng.vec_uniform(k, -1.0, 1.0);
+        let p = Conv1dParams::new(1, 1, n, k);
+        let macs = p.macs() as f64;
+
+        let m_gemm = bench(cfg, || {
+            std::hint::black_box(conv1d(
+                ConvBackend::Im2colGemm,
+                std::hint::black_box(&x),
+                &w,
+                None,
+                &p,
+            ));
+        });
+        let m_slide = bench(cfg, || {
+            std::hint::black_box(conv1d(
+                ConvBackend::Sliding,
+                std::hint::black_box(&x),
+                &w,
+                None,
+                &p,
+            ));
+        });
+        let speedup = m_gemm.median_ns() / m_slide.median_ns();
+        table.row(vec![
+            k.to_string(),
+            crate::bench::fmt_duration(m_gemm.median),
+            crate::bench::fmt_duration(m_slide.median),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", macs / m_slide.median_ns()),
+        ]);
+        rows.push(Fig1Row {
+            k,
+            im2col_ns: m_gemm.median_ns(),
+            sliding_ns: m_slide.median_ns(),
+            speedup,
+        });
+    }
+    (table, rows)
+}
+
+/// One Fig-2 row.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub name: String,
+    pub speedup: f64,
+    pub small_set: bool,
+}
+
+/// Figure 2 — dilated-convolution speedup on the Chaudhary et al. [4]
+/// scenario. Paper claims: up to 6.8× on the small set, ≈4× across the
+/// board.
+pub fn fig2(cfg: &BenchConfig) -> (Table, Vec<Fig2Row>) {
+    let mut rng = Rng::new(0xF162);
+    let mut table = Table::new(
+        "Fig 2 — dilated convolution speedup (Chaudhary scenario)",
+        &["workload", "im2col+gemm", "sliding", "speedup"],
+    );
+    let mut rows = Vec::new();
+    for (name, p) in chaudhary_dilated_suite() {
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let m_gemm = bench(cfg, || {
+            std::hint::black_box(conv1d(
+                ConvBackend::Im2colGemm,
+                std::hint::black_box(&x),
+                &w,
+                None,
+                &p,
+            ));
+        });
+        let m_slide = bench(cfg, || {
+            std::hint::black_box(conv1d(
+                ConvBackend::Sliding,
+                std::hint::black_box(&x),
+                &w,
+                None,
+                &p,
+            ));
+        });
+        let speedup = m_gemm.median_ns() / m_slide.median_ns();
+        table.row(vec![
+            name.clone(),
+            crate::bench::fmt_duration(m_gemm.median),
+            crate::bench::fmt_duration(m_slide.median),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Fig2Row {
+            small_set: name.starts_with("small/"),
+            name,
+            speedup,
+        });
+    }
+    (table, rows)
+}
+
+/// TBL-A — the §3 algorithm family compared on one operator: time per
+/// element for each algorithm across window sizes, normalized speedup vs
+/// naive. Also demonstrates the `O(P/w)` → `O(P/log w)` gap (linear vs
+/// log variants at large w).
+pub fn tbl_algorithms(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize]) -> Table {
+    let mut rng = Rng::new(0xA160);
+    let xs = rng.vec_uniform(n, -1.0, 1.0);
+    let op = AddOp::<f32>::new();
+    let mut table = Table::new(
+        &format!("TBL-A — sliding-sum algorithms (op=add, N={n}, P={p_width})"),
+        &["w", "naive", "scalar_input", "vector_input", "vector_input_log", "ping_pong", "vector_slide", "vector_slide_tree", "flat_tree", "best_speedup"],
+    );
+    for &w in ws {
+        let mut cells = vec![w.to_string()];
+        let naive_m = bench(cfg, || {
+            std::hint::black_box(sliding::run(Algo::Naive, op, std::hint::black_box(&xs), w, p_width));
+        });
+        cells.push(crate::bench::fmt_duration(naive_m.median));
+        let mut best = f64::INFINITY;
+        for algo in [
+            Algo::ScalarInput,
+            Algo::VectorInput,
+            Algo::VectorInputLog,
+            Algo::PingPong,
+            Algo::VectorSlide,
+            Algo::VectorSlideTree,
+            Algo::FlatTree,
+        ] {
+            let m = bench(cfg, || {
+                std::hint::black_box(sliding::run(algo, op, std::hint::black_box(&xs), w, p_width));
+            });
+            best = best.min(m.median_ns());
+            cells.push(crate::bench::fmt_duration(m.median));
+        }
+        cells.push(format!("{:.2}x", naive_m.median_ns() / best));
+        table.row(cells);
+    }
+    table
+}
+
+/// TBL-A2 — sliding minimum (associative, idempotent) across algorithms,
+/// the paper's "sliding window minimum can be computed using the faster
+/// version" example.
+pub fn tbl_sliding_min(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize]) -> Table {
+    let mut rng = Rng::new(0xA161);
+    let xs = rng.vec_uniform(n, -100.0, 100.0);
+    let op = MinOp::<f32>::new();
+    let mut table = Table::new(
+        &format!("TBL-A2 — sliding minimum (op=min, N={n}, P={p_width})"),
+        &["w", "naive", "vector_slide", "vector_slide_tree", "flat_tree", "tree_vs_naive"],
+    );
+    for &w in ws {
+        let naive_m = bench(cfg, || {
+            std::hint::black_box(sliding::run(Algo::Naive, op, std::hint::black_box(&xs), w, p_width));
+        });
+        let lin_m = bench(cfg, || {
+            std::hint::black_box(sliding::run(Algo::VectorSlide, op, std::hint::black_box(&xs), w, p_width));
+        });
+        let tree_m = bench(cfg, || {
+            std::hint::black_box(sliding::run(Algo::VectorSlideTree, op, std::hint::black_box(&xs), w, p_width));
+        });
+        let flat_m = bench(cfg, || {
+            std::hint::black_box(sliding::run(Algo::FlatTree, op, std::hint::black_box(&xs), w, p_width));
+        });
+        table.row(vec![
+            w.to_string(),
+            crate::bench::fmt_duration(naive_m.median),
+            crate::bench::fmt_duration(lin_m.median),
+            crate::bench::fmt_duration(tree_m.median),
+            crate::bench::fmt_duration(flat_m.median),
+            format!("{:.2}x", naive_m.median_ns() / flat_m.median_ns()),
+        ]);
+    }
+    table
+}
+
+/// TBL-P — pooling via sliding sums vs naive recomputation (§2.3).
+pub fn tbl_pooling(cfg: &BenchConfig, n: usize, ws: &[usize]) -> Table {
+    let mut rng = Rng::new(0xB001);
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    let mut table = Table::new(
+        &format!("TBL-P — pooling as sliding sum vs naive (N={n}, stride=1)"),
+        &["kind", "w", "naive", "sliding", "speedup"],
+    );
+    for kind in [PoolKind::Avg, PoolKind::Max] {
+        for &w in ws {
+            let p = Pool1dParams::new(1, n, w);
+            let m_naive = bench(cfg, || {
+                std::hint::black_box(pool1d_naive(kind, std::hint::black_box(&x), &p));
+            });
+            let m_slide = bench(cfg, || {
+                std::hint::black_box(pool1d(kind, std::hint::black_box(&x), &p));
+            });
+            table.row(vec![
+                kind.name().to_string(),
+                w.to_string(),
+                crate::bench::fmt_duration(m_naive.median),
+                crate::bench::fmt_duration(m_slide.median),
+                format!("{:.2}x", m_naive.median_ns() / m_slide.median_ns()),
+            ]);
+        }
+    }
+    table
+}
+
+/// TBL-S — scan/reduce substrate (§2.1): sequential vs Hillis–Steele vs
+/// Blelloch, plus tree/sequential reduce.
+pub fn tbl_scan(cfg: &BenchConfig, ns: &[usize]) -> Table {
+    let mut rng = Rng::new(0x5CA9);
+    let mut table = Table::new(
+        "TBL-S — prefix-sum substrate (op=add)",
+        &["N", "scan_seq", "scan_hillis_steele", "scan_blelloch", "reduce_seq", "reduce_tree"],
+    );
+    let op = AddOp::<f32>::new();
+    for &n in ns {
+        let xs = rng.vec_uniform(n, -1.0, 1.0);
+        let m1 = bench(cfg, || {
+            std::hint::black_box(scan::scan_inclusive(op, std::hint::black_box(&xs)));
+        });
+        let m2 = bench(cfg, || {
+            std::hint::black_box(scan::scan_hillis_steele(op, std::hint::black_box(&xs)));
+        });
+        let m3 = bench(cfg, || {
+            std::hint::black_box(scan::scan_blelloch(op, std::hint::black_box(&xs)));
+        });
+        let m4 = bench(cfg, || {
+            std::hint::black_box(scan::reduce_seq(op, std::hint::black_box(&xs)));
+        });
+        let m5 = bench(cfg, || {
+            std::hint::black_box(scan::reduce_tree(op, std::hint::black_box(&xs)));
+        });
+        table.row(vec![
+            n.to_string(),
+            crate::bench::fmt_duration(m1.median),
+            crate::bench::fmt_duration(m2.median),
+            crate::bench::fmt_duration(m3.median),
+            crate::bench::fmt_duration(m4.median),
+            crate::bench::fmt_duration(m5.median),
+        ]);
+    }
+    table
+}
+
+/// ABL-B — backend ablation at a fixed shape: all four conv backends,
+/// including the literal pair-operator formulation.
+pub fn tbl_backends(cfg: &BenchConfig, n: usize, ks: &[usize]) -> Table {
+    let mut rng = Rng::new(0xAB1E);
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    let mut table = Table::new(
+        &format!("ABL-B — conv backend ablation (N={n})"),
+        &["k", "direct", "im2col_gemm", "sliding", "sliding_pair"],
+    );
+    for &k in ks {
+        let w = rng.vec_uniform(k, -1.0, 1.0);
+        let p = Conv1dParams::new(1, 1, n, k);
+        let mut cells = vec![k.to_string()];
+        for backend in ConvBackend::ALL {
+            let m = bench(cfg, || {
+                std::hint::black_box(conv1d(backend, std::hint::black_box(&x), &w, None, &p));
+            });
+            cells.push(crate::bench::fmt_duration(m.median));
+        }
+        table.row(cells);
+    }
+    table
+}
+
+/// Sliding-sum max-op table used by the CLI `pool` subcommand demo.
+pub fn quick_max_demo(n: usize, w: usize) -> f64 {
+    let mut rng = Rng::new(1);
+    let xs = rng.vec_uniform(n, -1.0, 1.0);
+    let out = sliding::auto(MaxOp::<f32>::new(), &xs, w, 64);
+    out.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64
+}

@@ -1,0 +1,274 @@
+//! Measurement substrate (criterion is unavailable offline): warmup +
+//! repetition timing with median/MAD statistics, throughput computation,
+//! and markdown/CSV table emission used by every `cargo bench` target.
+
+pub mod figs;
+
+use std::time::{Duration, Instant};
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Minimum wall time spent warming up.
+    pub warmup: Duration,
+    /// Target wall time for the measurement phase.
+    pub measure: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(400),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster profile for CI/self-tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Honor `SWSNN_BENCH_QUICK=1` for fast smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("SWSNN_BENCH_QUICK").map_or(false, |v| v == "1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub iters: u64,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Items (elements, MACs…) per second given per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f`, returning robust statistics. `f` must perform one complete
+/// unit of work per call; use `std::hint::black_box` on its inputs and
+/// outputs to defeat DCE.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Measurement {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure individual iterations (coarse ones) or batched (fast ones).
+    let probe = {
+        let t = Instant::now();
+        f();
+        t.elapsed()
+    };
+    // Batch so each sample is ≥ ~20µs, bounding timer overhead to <1%.
+    let batch = (Duration::from_micros(20).as_nanos() / probe.as_nanos().max(1)).max(1) as u64;
+    let mut samples = Vec::new();
+    let begin = Instant::now();
+    let mut total_iters = 0u64;
+    while begin.elapsed() < cfg.measure && total_iters < cfg.max_iters {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed() / batch as u32);
+        total_iters += batch;
+    }
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|s| {
+            if *s > median {
+                *s - median
+            } else {
+                median - *s
+            }
+        })
+        .collect();
+    devs.sort_unstable();
+    let mad = devs[devs.len() / 2];
+    Measurement {
+        iters: total_iters,
+        median,
+        mad,
+        min,
+    }
+}
+
+/// A result table with aligned markdown rendering + CSV dump.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells);
+    }
+
+    /// Render aligned markdown.
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let sep = format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV for downstream plotting.
+    pub fn csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and write CSV next to the bench target
+    /// (under `bench_results/`).
+    pub fn emit(&self, csv_name: &str) {
+        println!("{}", self.markdown());
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(csv_name);
+            if let Err(e) = std::fs::write(&path, self.csv()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            } else {
+                println!("(csv written to {})", path.display());
+            }
+        }
+    }
+}
+
+/// Format a duration human-readably (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig::quick();
+        let mut acc = 0u64;
+        let m = bench(&cfg, || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(m.iters > 0);
+        assert!(m.median > Duration::ZERO);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            iters: 10,
+            median: Duration::from_millis(2),
+            mad: Duration::ZERO,
+            min: Duration::from_millis(2),
+        };
+        assert!((m.throughput(1000.0) - 500_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("| a  | bb |") || md.contains("| a | bb |"));
+        assert_eq!(t.csv(), "a,bb\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_arity_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(10)), "10ns");
+        assert!(fmt_duration(Duration::from_micros(15)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(15)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,187 @@
+//! Argument-parsing substrate (clap is unavailable offline).
+//! Subcommand + `--flag value` / `--flag=value` / boolean switches, with
+//! typed accessors, defaulting, and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus flags and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative flag spec used for usage text + unknown-flag detection.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parse `argv[1..]`. The first non-flag token becomes the subcommand;
+/// `--name value`, `--name=value` and bare `--switch` are supported.
+/// Known switches must be listed so `--switch value` is not mis-eaten.
+pub fn parse_args<I: IntoIterator<Item = String>>(argv: I, known_switches: &[&str]) -> Args {
+    let mut args = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(tok) = iter.next() {
+        if let Some(flag) = tok.strip_prefix("--") {
+            if let Some((name, value)) = flag.split_once('=') {
+                args.flags.insert(name.to_string(), value.to_string());
+            } else if known_switches.contains(&flag) {
+                args.switches.push(flag.to_string());
+            } else if let Some(next) = iter.peek() {
+                if next.starts_with("--") {
+                    args.switches.push(flag.to_string());
+                } else {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(flag.to_string(), v);
+                }
+            } else {
+                args.switches.push(flag.to_string());
+            }
+        } else if args.command.is_none() {
+            args.command = Some(tok);
+        } else {
+            args.positional.push(tok);
+        }
+    }
+    args
+}
+
+impl Args {
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize, String> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| format!("--{flag} expects an unsigned integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64, String> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| format!("--{flag} expects an unsigned integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64, String> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{flag} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    /// Error if any flag is not in `specs` (catches typos).
+    pub fn reject_unknown(&self, specs: &[FlagSpec]) -> Result<(), String> {
+        let known: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                return Err(format!("unknown switch --{s}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("swsnn {cmd} — {about}\n\nflags:\n");
+    for s in specs {
+        let lhs = match s.value {
+            Some(v) => format!("--{} <{}>", s.name, v),
+            None => format!("--{}", s.name),
+        };
+        out.push_str(&format!("  {lhs:<28} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], switches: &[&str]) -> Args {
+        parse_args(toks.iter().map(|s| s.to_string()), switches)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["bench-fig1", "--n", "1000", "--algo=sliding"], &[]);
+        assert_eq!(a.command.as_deref(), Some("bench-fig1"));
+        assert_eq!(a.get("n"), Some("1000"));
+        assert_eq!(a.get("algo"), Some("sliding"));
+    }
+
+    #[test]
+    fn known_switch_not_eats_value() {
+        let a = parse(&["run", "--verbose", "file.toml"], &["verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn unknown_trailing_flag_is_switch() {
+        let a = parse(&["run", "--fast"], &[]);
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse(&["x", "--n", "5"], &[]);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(parse(&["x", "--n", "zz"], &[]).get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let specs = [FlagSpec {
+            name: "n",
+            value: Some("int"),
+            help: "",
+        }];
+        assert!(parse(&["x", "--n", "1"], &[]).reject_unknown(&specs).is_ok());
+        assert!(parse(&["x", "--m", "1"], &[]).reject_unknown(&specs).is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let text = usage(
+            "serve",
+            "run the server",
+            &[FlagSpec {
+                name: "port",
+                value: Some("u16"),
+                help: "listen port",
+            }],
+        );
+        assert!(text.contains("--port <u16>"));
+        assert!(text.contains("listen port"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Minimal TOML-subset configuration substrate (serde is unavailable
+//! offline). Supports the subset the framework needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments. Typed accessors with
+//! defaulting; unknown keys are preserved (forward compatibility) and
+//! listable for lint warnings.
+
+mod parse;
+mod types;
+
+pub use parse::{parse, ParseError};
+pub use types::{ConfigDoc, Value};
+
+use crate::conv::ConvBackend;
+
+/// Model configuration — a sequential 1-D network definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Input channels of the first layer.
+    pub c_in: usize,
+    /// Input sequence length the AOT artifacts are specialized to.
+    pub seq_len: usize,
+    pub layers: Vec<LayerConfig>,
+}
+
+/// One layer of the model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerConfig {
+    Conv {
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        dilation: usize,
+        same_pad: bool,
+        relu: bool,
+    },
+    Pool {
+        kind: String,
+        w: usize,
+        stride: usize,
+    },
+    Residual {
+        /// Dilations of the two conv taps inside the TCN block.
+        k: usize,
+        dilation: usize,
+    },
+    Dense {
+        out: usize,
+        relu: bool,
+    },
+}
+
+/// Serving configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_deadline_us: u64,
+    pub workers: usize,
+    pub backend: ConvBackend,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            batch_deadline_us: 500,
+            workers: 1,
+            backend: ConvBackend::Sliding,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// Parse a full framework config (model + serve sections) from TOML text.
+pub fn load_config(text: &str) -> Result<(ModelConfig, ServeConfig), String> {
+    let doc = parse(text).map_err(|e| e.to_string())?;
+    let model = model_from_doc(&doc)?;
+    let serve = serve_from_doc(&doc)?;
+    Ok((model, serve))
+}
+
+fn model_from_doc(doc: &ConfigDoc) -> Result<ModelConfig, String> {
+    let name = doc.get_str("model.name").unwrap_or("model").to_string();
+    let c_in = doc.get_int("model.c_in").unwrap_or(1) as usize;
+    let seq_len = doc
+        .get_int("model.seq_len")
+        .ok_or("model.seq_len is required")? as usize;
+    let mut layers = Vec::new();
+    // Layers are numbered sections: [layer.0], [layer.1], …
+    for idx in 0.. {
+        let prefix = format!("layer.{idx}");
+        let Some(ty) = doc.get_str(&format!("{prefix}.type")) else {
+            break;
+        };
+        let layer = match ty {
+            "conv" => LayerConfig::Conv {
+                c_out: doc
+                    .get_int(&format!("{prefix}.c_out"))
+                    .ok_or_else(|| format!("{prefix}.c_out required"))? as usize,
+                k: doc
+                    .get_int(&format!("{prefix}.k"))
+                    .ok_or_else(|| format!("{prefix}.k required"))? as usize,
+                stride: doc.get_int(&format!("{prefix}.stride")).unwrap_or(1) as usize,
+                dilation: doc.get_int(&format!("{prefix}.dilation")).unwrap_or(1) as usize,
+                same_pad: doc.get_bool(&format!("{prefix}.same_pad")).unwrap_or(true),
+                relu: doc.get_bool(&format!("{prefix}.relu")).unwrap_or(true),
+            },
+            "pool" => LayerConfig::Pool {
+                kind: doc
+                    .get_str(&format!("{prefix}.kind"))
+                    .unwrap_or("max")
+                    .to_string(),
+                w: doc.get_int(&format!("{prefix}.w")).unwrap_or(2) as usize,
+                stride: doc.get_int(&format!("{prefix}.stride")).unwrap_or(2) as usize,
+            },
+            "residual" => LayerConfig::Residual {
+                k: doc.get_int(&format!("{prefix}.k")).unwrap_or(3) as usize,
+                dilation: doc.get_int(&format!("{prefix}.dilation")).unwrap_or(1) as usize,
+            },
+            "dense" => LayerConfig::Dense {
+                out: doc
+                    .get_int(&format!("{prefix}.out"))
+                    .ok_or_else(|| format!("{prefix}.out required"))? as usize,
+                relu: doc.get_bool(&format!("{prefix}.relu")).unwrap_or(false),
+            },
+            other => return Err(format!("unknown layer type {other:?}")),
+        };
+        layers.push(layer);
+    }
+    if layers.is_empty() {
+        return Err("config defines no [layer.N] sections".into());
+    }
+    Ok(ModelConfig {
+        name,
+        c_in,
+        seq_len,
+        layers,
+    })
+}
+
+fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
+    let d = ServeConfig::default();
+    let backend = match doc.get_str("serve.backend") {
+        None => d.backend,
+        Some(s) => ConvBackend::parse(s).ok_or_else(|| format!("unknown backend {s:?}"))?,
+    };
+    Ok(ServeConfig {
+        max_batch: doc.get_int("serve.max_batch").unwrap_or(d.max_batch as i64) as usize,
+        batch_deadline_us: doc
+            .get_int("serve.batch_deadline_us")
+            .unwrap_or(d.batch_deadline_us as i64) as u64,
+        workers: doc.get_int("serve.workers").unwrap_or(d.workers as i64) as usize,
+        backend,
+        queue_capacity: doc
+            .get_int("serve.queue_capacity")
+            .unwrap_or(d.queue_capacity as i64) as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# TCN for the serving demo
+[model]
+name = "tcn_demo"
+c_in = 1
+seq_len = 1024
+
+[layer.0]
+type = "conv"
+c_out = 8
+k = 7
+
+[layer.1]
+type = "residual"
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[serve]
+max_batch = 16
+backend = "sliding"
+"#;
+
+    #[test]
+    fn parses_model_and_serve() {
+        let (m, s) = load_config(EXAMPLE).unwrap();
+        assert_eq!(m.name, "tcn_demo");
+        assert_eq!(m.seq_len, 1024);
+        assert_eq!(m.layers.len(), 3);
+        assert!(matches!(m.layers[0], LayerConfig::Conv { c_out: 8, k: 7, .. }));
+        assert!(matches!(m.layers[1], LayerConfig::Residual { dilation: 2, .. }));
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.backend, ConvBackend::Sliding);
+        assert_eq!(s.workers, 1); // default
+    }
+
+    #[test]
+    fn missing_seq_len_is_error() {
+        let err = load_config("[model]\nname=\"x\"\n[layer.0]\ntype=\"dense\"\nout=4\n")
+            .unwrap_err();
+        assert!(err.contains("seq_len"));
+    }
+
+    #[test]
+    fn unknown_backend_is_error() {
+        let text = format!("{EXAMPLE}\n[serve2]\n");
+        assert!(load_config(&text).is_ok());
+        let bad = EXAMPLE.replace("\"sliding\"", "\"magic\"");
+        assert!(load_config(&bad).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn no_layers_is_error() {
+        let err = load_config("[model]\nseq_len = 8\n").unwrap_err();
+        assert!(err.contains("layer"));
+    }
+}

@@ -1,0 +1,236 @@
+//! Hand-rolled TOML-subset parser. Line-oriented: section headers,
+//! `key = value` pairs, comments. Values: quoted strings, booleans,
+//! integers (decimal, `_` separators), floats, flat arrays.
+
+use super::types::{ConfigDoc, Value};
+
+/// Parse failure with line context.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse TOML-subset text into a flat dotted-key document.
+pub fn parse(text: &str) -> Result<ConfigDoc, ParseError> {
+    let mut doc = ConfigDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: String| ParseError {
+            line: lineno + 1,
+            message: m,
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(err(format!("unterminated section header {line:?}")));
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty section name".into()));
+            }
+            validate_key(name).map_err(|m| err(m))?;
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(err(format!("expected `key = value`, got {line:?}")));
+        };
+        let key = line[..eq].trim();
+        validate_key(key).map_err(|m| err(m))?;
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if doc.entries.insert(full.clone(), value).is_some() {
+            return Err(err(format!("duplicate key {full:?}")));
+        }
+    }
+    Ok(doc)
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key(key: &str) -> Result<(), String> {
+    if key.is_empty() {
+        return Err("empty key".into());
+    }
+    for part in key.split('.') {
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("invalid key {key:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(format!("unterminated string {s:?}"));
+        };
+        if inner.contains('"') {
+            return Err(format!("stray quote inside string {s:?}"));
+        }
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            return Err(format!("unterminated array {s:?}"));
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let doc = parse(
+            "top = 1\n[a]\nx = \"hi\"\ny = 2.5\nz = true\n[a.b]\nn = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("top"), Some(1));
+        assert_eq!(doc.get_str("a.x"), Some("hi"));
+        assert_eq!(doc.get_float("a.y"), Some(2.5));
+        assert_eq!(doc.get_bool("a.z"), Some(true));
+        assert_eq!(doc.get_int("a.b.n"), Some(1000));
+    }
+
+    #[test]
+    fn comments_stripped_respecting_strings() {
+        let doc = parse("x = \"a # b\" # trailing\ny = 3 # c\n").unwrap();
+        assert_eq!(doc.get_str("x"), Some("a # b"));
+        assert_eq!(doc.get_int("y"), Some(3));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("ks = [3, 5, 7]\nnames = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        match doc.get("ks") {
+            Some(Value::Array(v)) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match doc.get("empty") {
+            Some(Value::Array(v)) => assert!(v.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse("a = -4\nb = -0.5\nc = 1e3\n").unwrap();
+        assert_eq!(doc.get_int("a"), Some(-4));
+        assert_eq!(doc.get_float("b"), Some(-0.5));
+        assert_eq!(doc.get_float("c"), Some(1000.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = \"open\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = parse("[s]\na = 1\na = 2\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn invalid_keys_rejected() {
+        assert!(parse("bad key = 1\n").is_err());
+        assert!(parse("[bad section]\n").is_err());
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let doc = parse("x = \"a\\nb\"\n").unwrap();
+        assert_eq!(doc.get_str("x"), Some("a\nb"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Config value model: a flat map of dotted keys to typed values.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// A parsed document: dotted-path → value (e.g. `serve.max_batch`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigDoc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Value::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Keys under a dotted prefix (for unknown-key linting).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(prefix) && k[prefix.len()..].starts_with('.'))
+            .map(|k| k.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors() {
+        let mut doc = ConfigDoc::default();
+        doc.entries.insert("a.b".into(), Value::Int(3));
+        doc.entries.insert("a.c".into(), Value::Str("x".into()));
+        doc.entries.insert("a.d".into(), Value::Bool(true));
+        doc.entries.insert("a.e".into(), Value::Float(1.5));
+        assert_eq!(doc.get_int("a.b"), Some(3));
+        assert_eq!(doc.get_str("a.c"), Some("x"));
+        assert_eq!(doc.get_bool("a.d"), Some(true));
+        assert_eq!(doc.get_float("a.e"), Some(1.5));
+        assert_eq!(doc.get_float("a.b"), Some(3.0)); // int coerces to float
+        assert_eq!(doc.get_int("a.c"), None); // wrong type → None
+        assert_eq!(doc.get_int("missing"), None);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let mut doc = ConfigDoc::default();
+        doc.entries.insert("layer.0.type".into(), Value::Str("conv".into()));
+        doc.entries.insert("layer.1.type".into(), Value::Str("pool".into()));
+        doc.entries.insert("model.name".into(), Value::Str("m".into()));
+        let keys: Vec<&str> = doc.keys_under("layer").collect();
+        assert_eq!(keys.len(), 2);
+    }
+
+    #[test]
+    fn value_type_names() {
+        assert_eq!(Value::Int(1).type_name(), "integer");
+        assert_eq!(Value::Array(vec![]).type_name(), "array");
+    }
+}

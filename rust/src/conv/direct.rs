@@ -1,0 +1,100 @@
+//! Nested-loop reference convolution — the oracle all backends test
+//! against. Handles stride/dilation/padding/batching with no cleverness.
+
+use super::Conv1dParams;
+
+/// Direct `O(B·Cout·Nout·Cin·k)` convolution (cross-correlation).
+pub fn conv1d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
+    p.validate(x, w, bias);
+    let n_out = p.n_out();
+    let mut y = vec![0.0f32; p.y_len()];
+    for b in 0..p.batch {
+        for co in 0..p.c_out {
+            let bias_v = bias.map_or(0.0, |bv| bv[co]);
+            for t in 0..n_out {
+                let mut acc = 0.0f32;
+                for ci in 0..p.c_in {
+                    let xrow = &x[(b * p.c_in + ci) * p.n..][..p.n];
+                    let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
+                    for tap in 0..p.k {
+                        // Input index with padding offset.
+                        let xi = t * p.stride + tap * p.dilation;
+                        let xi = xi as isize - p.pad as isize;
+                        if xi >= 0 && (xi as usize) < p.n {
+                            acc += wrow[tap] * xrow[xi as usize];
+                        }
+                    }
+                }
+                y[(b * p.c_out + co) * n_out + t] = acc + bias_v;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_is_scaled_copy() {
+        let p = Conv1dParams::new(1, 1, 4, 1);
+        let y = conv1d_direct(&[1.0, 2.0, 3.0, 4.0], &[2.0], None, &p);
+        assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn known_k3() {
+        // x = [1,2,3,4], w = [1,0,-1]: y_t = x_t - x_{t+2}
+        let p = Conv1dParams::new(1, 1, 4, 3);
+        let y = conv1d_direct(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, -1.0], None, &p);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn padding_zeros_outside() {
+        let p = Conv1dParams::new(1, 1, 3, 3).with_pad(1);
+        // x=[1,1,1], w=[1,1,1] → [0+1+1, 1+1+1, 1+1+0]
+        let y = conv1d_direct(&[1.0; 3], &[1.0; 3], None, &p);
+        assert_eq!(y, vec![2.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn stride_skips() {
+        let p = Conv1dParams::new(1, 1, 6, 2).with_stride(2);
+        // windows at t=0,2,4: sums of adjacent pairs
+        let y = conv1d_direct(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[1.0, 1.0], None, &p);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn dilation_spreads_taps() {
+        let p = Conv1dParams::new(1, 1, 5, 2).with_dilation(3);
+        // taps at offset 0 and 3: y_t = x_t + x_{t+3}, t=0,1
+        let y = conv1d_direct(&[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0, 1.0], None, &p);
+        assert_eq!(y, vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn multichannel_sums_over_cin() {
+        let p = Conv1dParams::new(2, 1, 3, 1);
+        // two input channels, filter picks 1·ch0 + 10·ch1
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let y = conv1d_direct(&x, &[1.0, 10.0], None, &p);
+        assert_eq!(y, vec![41.0, 52.0, 63.0]);
+    }
+
+    #[test]
+    fn bias_per_cout() {
+        let p = Conv1dParams::new(1, 2, 3, 1);
+        let y = conv1d_direct(&[1.0, 2.0, 3.0], &[1.0, 1.0], Some(&[10.0, 20.0]), &p);
+        assert_eq!(y, vec![11.0, 12.0, 13.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn batch_independent() {
+        let p = Conv1dParams::new(1, 1, 3, 2).with_batch(2);
+        let y = conv1d_direct(&[1.0, 2.0, 3.0, 10.0, 20.0, 30.0], &[1.0, 1.0], None, &p);
+        assert_eq!(y, vec![3.0, 5.0, 30.0, 50.0]);
+    }
+}

@@ -1,0 +1,127 @@
+//! The paper's comparator: im2col + GEMM (MlasConv's structure).
+//!
+//! "A common approach to implementing convolutional layers is to expand
+//! the input into a column matrix (im2col) and then call a highly tuned
+//! GEMM" (§1). The expansion costs `k×` the input memory and destroys
+//! locality — the very overheads the sliding path removes. We keep this
+//! implementation honest and competitive (blocked GEMM, §gemm) because
+//! Fig 1/Fig 2 speedups are measured *against* it.
+
+use crate::gemm;
+
+use super::Conv1dParams;
+
+/// Expand `[c_in, n]` (single batch element) into the `[c_in·k, n_out]`
+/// column matrix: column `t` stacks the k taps of every input channel at
+/// output position `t`. Memory: `c_in·k·n_out` floats — the k× blow-up.
+pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
+    let n_out = p.n_out();
+    let rows = p.c_in * p.k;
+    let mut cols = vec![0.0f32; rows * n_out];
+    for ci in 0..p.c_in {
+        let xrow = &x[ci * p.n..][..p.n];
+        for tap in 0..p.k {
+            let r = ci * p.k + tap;
+            let dst = &mut cols[r * n_out..][..n_out];
+            for t in 0..n_out {
+                let xi = (t * p.stride + tap * p.dilation) as isize - p.pad as isize;
+                dst[t] = if xi >= 0 && (xi as usize) < p.n {
+                    xrow[xi as usize]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+    cols
+}
+
+/// Convolution via im2col + blocked GEMM:
+/// `Y[c_out, n_out] = W[c_out, c_in·k] · cols[c_in·k, n_out]`.
+pub fn conv1d_im2col(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
+    p.validate(x, w, bias);
+    let n_out = p.n_out();
+    let rows = p.c_in * p.k;
+    let mut y = vec![0.0f32; p.y_len()];
+    for b in 0..p.batch {
+        let xb = &x[b * p.c_in * p.n..][..p.c_in * p.n];
+        let cols = im2col_expand(xb, p);
+        let yb = &mut y[b * p.c_out * n_out..][..p.c_out * n_out];
+        match bias {
+            Some(bv) => gemm::gemm_bias(p.c_out, rows, n_out, w, &cols, bv, yb),
+            None => gemm::gemm(p.c_out, rows, n_out, w, &cols, yb),
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conv1d_direct;
+    use super::*;
+
+    fn fill(buf: &mut [f32], seed: &mut u64) {
+        for v in buf.iter_mut() {
+            *seed ^= *seed << 13;
+            *seed ^= *seed >> 7;
+            *seed ^= *seed << 17;
+            *v = ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0;
+        }
+    }
+
+    fn check(p: &Conv1dParams, with_bias: bool) {
+        let mut seed = 0xfeedbeefu64 ^ (p.n as u64) << 3 ^ (p.k as u64);
+        let mut x = vec![0.0f32; p.x_len()];
+        let mut w = vec![0.0f32; p.w_len()];
+        let mut b = vec![0.0f32; p.c_out];
+        fill(&mut x, &mut seed);
+        fill(&mut w, &mut seed);
+        fill(&mut b, &mut seed);
+        let bias = with_bias.then_some(b.as_slice());
+        let got = conv1d_im2col(&x, &w, bias, p);
+        let want = conv1d_direct(&x, &w, bias, p);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, t)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - t).abs() <= 1e-3 * (1.0 + t.abs()),
+                "{p:?} idx {i}: {g} vs {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn expand_shape_and_values() {
+        let p = Conv1dParams::new(1, 1, 5, 3);
+        let cols = im2col_expand(&[1.0, 2.0, 3.0, 4.0, 5.0], &p);
+        // 3 rows × 3 cols: row r holds x[r..r+3]
+        assert_eq!(cols.len(), 9);
+        assert_eq!(&cols[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&cols[3..6], &[2.0, 3.0, 4.0]);
+        assert_eq!(&cols[6..9], &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn expand_memory_blowup_is_k_times() {
+        let p = Conv1dParams::new(4, 8, 1000, 7).with_same_pad();
+        let cols = im2col_expand(&vec![0.0; p.c_in * p.n], &p);
+        assert_eq!(cols.len(), p.c_in * p.k * p.n_out()); // k× per channel
+    }
+
+    #[test]
+    fn matches_direct_basic() {
+        check(&Conv1dParams::new(1, 1, 64, 5), false);
+        check(&Conv1dParams::new(3, 2, 33, 3), true);
+    }
+
+    #[test]
+    fn matches_direct_stride_dilation_pad() {
+        check(&Conv1dParams::new(2, 4, 50, 3).with_stride(2).with_pad(2), true);
+        check(&Conv1dParams::new(1, 1, 64, 5).with_dilation(4).with_same_pad(), false);
+        check(&Conv1dParams::new(2, 3, 41, 7).with_dilation(3).with_stride(2).with_pad(5), true);
+    }
+
+    #[test]
+    fn matches_direct_batched() {
+        check(&Conv1dParams::new(2, 2, 30, 3).with_batch(3).with_same_pad(), true);
+    }
+}

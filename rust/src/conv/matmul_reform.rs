@@ -1,0 +1,125 @@
+//! Matmul reformulation (paper §5, final future-work item): "since the
+//! accelerators for matrix multiplication are already present in the
+//! current generation of hardware, it would be wise re-using them. Thus,
+//! it is important to re-formulate our algorithms in terms of the small
+//! matrix multiplication completing the circle."
+//!
+//! The reformulation (and what the L1 Pallas kernel does on the MXU):
+//! multi-channel convolution is evaluated as **k small GEMMs over the
+//! unmodified input** — one `(c_out × c_in) · (c_in × n_out)` product
+//! per tap, each reading a *shifted view* of the input tensor:
+//!
+//! ```text
+//! Y[co, t] = Σ_tap  W[:, :, tap] @ X[:, t + tap·d]
+//! ```
+//!
+//! This keeps GEMM's arithmetic density (the accelerator-friendly
+//! shape) while preserving the sliding property — no im2col matrix is
+//! ever materialized. The per-tap products reuse the blocked microkernel
+//! from [`crate::gemm`].
+
+use crate::gemm;
+
+use super::Conv1dParams;
+
+/// Convolution as k tap-GEMMs on shifted input views (stride 1 path;
+/// strided shapes fall back to the caller's generic backend).
+///
+/// Requires channel-major input `[b, c_in, n]` like every other backend;
+/// per tap we hand GEMM the submatrix `X[:, off .. off+n_out]`, which is
+/// a *strided* view — so we repack rows once per tap into a contiguous
+/// panel (cost `c_in·n_out` copies per tap, amortized by the
+/// `c_out·c_in·n_out` FMAs when channels are non-trivial).
+pub fn conv1d_tap_gemm(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Option<Vec<f32>> {
+    if p.stride != 1 {
+        return None;
+    }
+    p.validate(x, w, bias);
+    let n_out = p.n_out();
+    let mut y = vec![0.0f32; p.y_len()];
+    if n_out == 0 {
+        return Some(y);
+    }
+    let padded_n = p.n + 2 * p.pad;
+    let mut xpad = vec![0.0f32; p.c_in * padded_n];
+    let mut panel = vec![0.0f32; p.c_in * n_out];
+    // Per-tap filter matrix W_tap[c_out, c_in], gathered once.
+    let mut w_tap = vec![0.0f32; p.c_out * p.c_in];
+
+    for b in 0..p.batch {
+        // Pad the batch element once (channel-major).
+        for ci in 0..p.c_in {
+            let src = &x[(b * p.c_in + ci) * p.n..][..p.n];
+            let dst = &mut xpad[ci * padded_n..][..padded_n];
+            dst[..p.pad].fill(0.0);
+            dst[p.pad..p.pad + p.n].copy_from_slice(src);
+            dst[p.pad + p.n..].fill(0.0);
+        }
+        let yb = &mut y[b * p.c_out * n_out..][..p.c_out * n_out];
+        if let Some(bv) = bias {
+            for co in 0..p.c_out {
+                yb[co * n_out..(co + 1) * n_out].fill(bv[co]);
+            }
+        }
+        for tap in 0..p.k {
+            let off = tap * p.dilation;
+            // Pack the shifted view into a contiguous (c_in × n_out) panel.
+            for ci in 0..p.c_in {
+                panel[ci * n_out..(ci + 1) * n_out]
+                    .copy_from_slice(&xpad[ci * padded_n + off..][..n_out]);
+            }
+            // Gather W[:, :, tap].
+            for co in 0..p.c_out {
+                for ci in 0..p.c_in {
+                    w_tap[co * p.c_in + ci] = w[(co * p.c_in + ci) * p.k + tap];
+                }
+            }
+            // Y += W_tap · panel  — the small matmul per tap.
+            gemm::gemm(p.c_out, p.c_in, n_out, &w_tap, &panel, yb);
+        }
+    }
+    Some(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conv1d_direct;
+    use super::*;
+    use crate::workload::Rng;
+
+    fn check(p: &Conv1dParams, with_bias: bool) {
+        let mut rng = Rng::new(0x7a9 ^ (p.k as u64));
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+        let bias = with_bias.then_some(b.as_slice());
+        let got = conv1d_tap_gemm(&x, &w, bias, p).expect("stride-1 qualifies");
+        let want = conv1d_direct(&x, &w, bias, p);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, c)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - c).abs() <= 1e-3 * (1.0 + c.abs()),
+                "{p:?} idx {i}: {a} vs {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_direct_multichannel() {
+        check(&Conv1dParams::new(4, 8, 64, 3), false);
+        check(&Conv1dParams::new(8, 16, 50, 5).with_same_pad(), true);
+        check(&Conv1dParams::new(3, 3, 40, 7).with_dilation(2).with_pad(6), true);
+        check(&Conv1dParams::new(2, 2, 33, 3).with_batch(3), false);
+    }
+
+    #[test]
+    fn strided_falls_back() {
+        let p = Conv1dParams::new(1, 1, 32, 3).with_stride(2);
+        assert!(conv1d_tap_gemm(&[0.0; 32], &[0.0; 3], None, &p).is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! 1-D (and row-decomposed 2-D) convolution — the paper's target operator.
+//!
+//! Convolution is "a sliding window sum (dot product) with the associative
+//! operator defined by equation 8" (§2.5). This module provides:
+//!
+//! * [`direct`] — textbook nested-loop convolution (correctness oracle).
+//! * [`im2col`] — the paper's *comparator*: expand the input into a column
+//!   matrix (k× memory blow-up) and call the blocked GEMM, exactly the
+//!   MlasConv structure.
+//! * [`sliding`] — the *contribution*: sliding-window kernels on the
+//!   unmodified input. Two realizations:
+//!   * `conv1d_sliding` — the broadcast-FMA schedule of Algorithm 4 (one
+//!     slid multiply-accumulate per tap, vectorized over outputs);
+//!   * `conv1d_pair` — the literal Eq. 7–9 pair-operator prefix sum, kept
+//!     as the faithful (and testable) form of the paper's math.
+//! * dilation, stride, multi-channel, batch on every path.
+//!
+//! Shapes follow the 1-D DNN convention: input `[batch, c_in, n]`,
+//! filters `[c_out, c_in, k]`, output `[batch, c_out, n_out]`, all
+//! row-major contiguous.
+
+mod conv2d;
+mod direct;
+mod quantized;
+mod im2col;
+mod matmul_reform;
+mod params;
+mod sliding;
+mod small_k;
+
+pub use conv2d::{conv2d_direct, conv2d_im2col, conv2d_sliding, Conv2dParams};
+pub use direct::conv1d_direct;
+pub use matmul_reform::conv1d_tap_gemm;
+pub use quantized::{conv1d_quantized, QuantParams};
+pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k};
+pub use im2col::{conv1d_im2col, im2col_expand};
+pub use params::{Conv1dParams, ConvBackend};
+pub use sliding::{conv1d_pair, conv1d_pair_tree, conv1d_sliding};
+
+/// Dispatch a 1-D convolution to the selected backend.
+///
+/// All backends take the same `[b, c_in, n] ⊛ [c_out, c_in, k]`
+/// layout and produce identical (up to FP rounding) outputs.
+pub fn conv1d(
+    backend: ConvBackend,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Vec<f32> {
+    match backend {
+        ConvBackend::Direct => conv1d_direct(x, w, bias, p),
+        ConvBackend::Im2colGemm => conv1d_im2col(x, w, bias, p),
+        ConvBackend::Sliding => conv1d_sliding(x, w, bias, p),
+        ConvBackend::SlidingPair => conv1d_pair(x, w, bias, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_all_backends_agree() {
+        let p = Conv1dParams::new(1, 1, 16, 3);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.5 - 4.0).collect();
+        let w = vec![0.25f32, 0.5, -1.0];
+        let d = conv1d(ConvBackend::Direct, &x, &w, None, &p);
+        for b in [ConvBackend::Im2colGemm, ConvBackend::Sliding, ConvBackend::SlidingPair] {
+            let got = conv1d(b, &x, &w, None, &p);
+            assert_eq!(got.len(), d.len());
+            for (g, t) in got.iter().zip(&d) {
+                assert!((g - t).abs() < 1e-4, "{b:?}");
+            }
+        }
+    }
+}

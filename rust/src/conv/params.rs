@@ -1,0 +1,195 @@
+//! Convolution hyper-parameters and backend selection.
+
+/// 1-D convolution parameters (cross-correlation convention, as in every
+/// DNN framework).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv1dParams {
+    /// Batch size.
+    pub batch: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Input spatial length.
+    pub n: usize,
+    /// Filter taps per channel.
+    pub k: usize,
+    /// Stride ≥ 1.
+    pub stride: usize,
+    /// Dilation ≥ 1 (the Fig 2 scenario sweeps this).
+    pub dilation: usize,
+    /// Symmetric zero padding on both spatial ends.
+    pub pad: usize,
+}
+
+impl Conv1dParams {
+    /// Minimal constructor: unit batch/stride/dilation, no padding.
+    pub fn new(c_in: usize, c_out: usize, n: usize, k: usize) -> Self {
+        Self {
+            batch: 1,
+            c_in,
+            c_out,
+            n,
+            k,
+            stride: 1,
+            dilation: 1,
+            pad: 0,
+        }
+    }
+
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn with_stride(mut self, s: usize) -> Self {
+        assert!(s >= 1);
+        self.stride = s;
+        self
+    }
+
+    pub fn with_dilation(mut self, d: usize) -> Self {
+        assert!(d >= 1);
+        self.dilation = d;
+        self
+    }
+
+    pub fn with_pad(mut self, p: usize) -> Self {
+        self.pad = p;
+        self
+    }
+
+    /// "Same" padding for odd effective kernels at stride 1.
+    pub fn with_same_pad(mut self) -> Self {
+        self.pad = (self.effective_k() - 1) / 2;
+        self
+    }
+
+    /// Effective receptive field: `(k−1)·dilation + 1`.
+    pub fn effective_k(&self) -> usize {
+        (self.k - 1) * self.dilation + 1
+    }
+
+    /// Output spatial length.
+    pub fn n_out(&self) -> usize {
+        let padded = self.n + 2 * self.pad;
+        let eff = self.effective_k();
+        if padded < eff {
+            0
+        } else {
+            (padded - eff) / self.stride + 1
+        }
+    }
+
+    /// Input element count.
+    pub fn x_len(&self) -> usize {
+        self.batch * self.c_in * self.n
+    }
+
+    /// Filter element count.
+    pub fn w_len(&self) -> usize {
+        self.c_out * self.c_in * self.k
+    }
+
+    /// Output element count.
+    pub fn y_len(&self) -> usize {
+        self.batch * self.c_out * self.n_out()
+    }
+
+    /// Multiply-accumulate count (for roofline/throughput reporting).
+    pub fn macs(&self) -> u64 {
+        self.batch as u64 * self.c_out as u64 * self.n_out() as u64 * self.c_in as u64 * self.k as u64
+    }
+
+    pub fn validate(&self, x: &[f32], w: &[f32], bias: Option<&[f32]>) {
+        assert_eq!(x.len(), self.x_len(), "input shape");
+        assert_eq!(w.len(), self.w_len(), "filter shape");
+        if let Some(b) = bias {
+            assert_eq!(b.len(), self.c_out, "bias shape");
+        }
+        assert!(self.k >= 1 && self.stride >= 1 && self.dilation >= 1);
+    }
+}
+
+/// Which convolution implementation executes the layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvBackend {
+    /// Nested-loop reference.
+    Direct,
+    /// im2col + blocked GEMM (the paper's MlasConv-shaped baseline).
+    Im2colGemm,
+    /// Sliding-window broadcast-FMA kernels (the paper's contribution).
+    Sliding,
+    /// Literal Eq. 7–9 pair-operator prefix-sum formulation.
+    SlidingPair,
+}
+
+impl ConvBackend {
+    pub const ALL: [ConvBackend; 4] = [
+        ConvBackend::Direct,
+        ConvBackend::Im2colGemm,
+        ConvBackend::Sliding,
+        ConvBackend::SlidingPair,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvBackend::Direct => "direct",
+            ConvBackend::Im2colGemm => "im2col_gemm",
+            ConvBackend::Sliding => "sliding",
+            ConvBackend::SlidingPair => "sliding_pair",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|b| b.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_len_basic() {
+        let p = Conv1dParams::new(1, 1, 10, 3);
+        assert_eq!(p.n_out(), 8);
+        assert_eq!(p.effective_k(), 3);
+    }
+
+    #[test]
+    fn out_len_stride_dilation_pad() {
+        let p = Conv1dParams::new(1, 1, 32, 3).with_stride(2).with_dilation(4).with_pad(4);
+        // effective k = 9, padded = 40 → (40-9)/2+1 = 16
+        assert_eq!(p.effective_k(), 9);
+        assert_eq!(p.n_out(), 16);
+    }
+
+    #[test]
+    fn same_pad_preserves_length() {
+        let p = Conv1dParams::new(2, 3, 100, 5).with_same_pad();
+        assert_eq!(p.n_out(), 100);
+        let p = Conv1dParams::new(1, 1, 64, 3).with_dilation(8).with_same_pad();
+        assert_eq!(p.n_out(), 64);
+    }
+
+    #[test]
+    fn too_small_input_yields_zero() {
+        let p = Conv1dParams::new(1, 1, 2, 5);
+        assert_eq!(p.n_out(), 0);
+        assert_eq!(p.y_len(), 0);
+    }
+
+    #[test]
+    fn macs_counting() {
+        let p = Conv1dParams::new(2, 4, 10, 3).with_batch(2);
+        assert_eq!(p.macs(), 2 * 4 * 8 * 2 * 3);
+    }
+
+    #[test]
+    fn backend_name_roundtrip() {
+        for b in ConvBackend::ALL {
+            assert_eq!(ConvBackend::parse(b.name()), Some(b));
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! The coordinator core: bounded queue + deadline batcher + worker loop.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::exec::{Channel, ChannelError};
+use crate::telemetry::{Counter, Histogram};
+
+use super::engine::{Engine, EngineFactory};
+use super::{Request, ResponseSlot, Ticket};
+
+/// Submission failure modes surfaced to clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — backpressure; client should retry/shed.
+    Overloaded,
+    /// Coordinator shut down.
+    Closed,
+    /// Input row has the wrong length for the deployed model.
+    BadShape { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+            SubmitError::BadShape { expected, got } => {
+                write!(f, "bad input shape: expected {expected} floats, got {got}")
+            }
+        }
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: Counter,
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub batches: Counter,
+    pub batched_rows: Counter,
+    pub queue_wait: Histogram,
+    pub inference: Histogram,
+    pub e2e: Histogram,
+}
+
+/// Snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct CoordinatorStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub queue_wait_p50_us: f64,
+    pub inference_p50_us: f64,
+    pub e2e_p50_us: f64,
+    pub e2e_p99_us: f64,
+}
+
+/// The running coordinator. Submit rows, get [`Ticket`]s; a background
+/// worker (which owns the engine — PJRT types are not `Send`) drains the
+/// queue in deadline-bounded batches.
+pub struct Coordinator {
+    queue: Arc<Channel<Request>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    input_len: usize,
+    output_len: usize,
+    engine_name: String,
+}
+
+impl Coordinator {
+    /// Start the worker thread; the engine is constructed *on* it via the
+    /// factory (fails fast if the factory errors).
+    pub fn start(factory: EngineFactory, cfg: &ServeConfig) -> anyhow::Result<Self> {
+        let queue: Arc<Channel<Request>> = Channel::new(cfg.queue_capacity);
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (meta_tx, meta_rx) = std::sync::mpsc::channel::<anyhow::Result<(usize, usize, String)>>();
+
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let shutdown = Arc::clone(&shutdown);
+            let max_batch = cfg.max_batch.max(1);
+            let deadline = Duration::from_micros(cfg.batch_deadline_us);
+            std::thread::Builder::new()
+                .name("swsnn-batcher".into())
+                .spawn(move || {
+                    let engine = match factory() {
+                        Ok(e) => {
+                            let _ = meta_tx.send(Ok((e.input_len(), e.output_len(), e.name())));
+                            e
+                        }
+                        Err(err) => {
+                            let _ = meta_tx.send(Err(err));
+                            return;
+                        }
+                    };
+                    batch_loop(queue, engine, metrics, shutdown, max_batch, deadline)
+                })
+                .expect("spawn batcher")
+        };
+
+        let (input_len, output_len, engine_name) = meta_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during construction"))??;
+
+        Ok(Self {
+            queue,
+            metrics,
+            next_id: AtomicU64::new(1),
+            shutdown,
+            worker: Some(worker),
+            input_len,
+            output_len,
+            engine_name,
+        })
+    }
+
+    /// Convenience for engines that are already `Send` (rust-native).
+    pub fn start_native(
+        engine: impl Engine + Send + 'static,
+        cfg: &ServeConfig,
+    ) -> anyhow::Result<Self> {
+        Self::start(Box::new(move || Ok(Box::new(engine) as Box<dyn Engine>)), cfg)
+    }
+
+    /// Blocking submit (applies backpressure by waiting).
+    pub fn submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.submit_inner(input, true)
+    }
+
+    /// Non-blocking submit; `Overloaded` when the queue is full.
+    pub fn try_submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.submit_inner(input, false)
+    }
+
+    fn submit_inner(&self, input: Vec<f32>, blocking: bool) -> Result<Ticket, SubmitError> {
+        if input.len() != self.input_len {
+            self.metrics.rejected.inc();
+            return Err(SubmitError::BadShape {
+                expected: self.input_len,
+                got: input.len(),
+            });
+        }
+        let slot = ResponseSlot::new();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            input,
+            enqueued: Instant::now(),
+            slot: Arc::clone(&slot),
+        };
+        let res = if blocking {
+            self.queue.send(req).map_err(|e| match e {
+                ChannelError::Closed => SubmitError::Closed,
+                ChannelError::Full => SubmitError::Overloaded,
+            })
+        } else {
+            self.queue.try_send(req).map_err(|(_, e)| match e {
+                ChannelError::Closed => SubmitError::Closed,
+                ChannelError::Full => SubmitError::Overloaded,
+            })
+        };
+        match res {
+            Ok(()) => {
+                self.metrics.submitted.inc();
+                Ok(Ticket { id, slot })
+            }
+            Err(e) => {
+                self.metrics.rejected.inc();
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        let ticket = self.submit(input).map_err(|e| e.to_string())?;
+        ticket.wait()
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.engine_name.clone()
+    }
+
+    /// Elements per output row.
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// Elements per input row.
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        let m = &self.metrics;
+        let batches = m.batches.get();
+        CoordinatorStats {
+            submitted: m.submitted.get(),
+            completed: m.completed.get(),
+            rejected: m.rejected.get(),
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                m.batched_rows.get() as f64 / batches as f64
+            },
+            queue_wait_p50_us: m.queue_wait.quantile_ns(0.5) / 1_000.0,
+            inference_p50_us: m.inference.quantile_ns(0.5) / 1_000.0,
+            e2e_p50_us: m.e2e.quantile_ns(0.5) / 1_000.0,
+            e2e_p99_us: m.e2e.quantile_ns(0.99) / 1_000.0,
+        }
+    }
+
+    /// Graceful shutdown: drain the queue, stop the worker.
+    pub fn shutdown(mut self) -> CoordinatorStats {
+        self.shutdown_inner();
+        self.stats()
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Worker: collect a batch (first request blocks, then wait up to the
+/// deadline for more, capped at `max_batch`), run the engine, distribute.
+fn batch_loop(
+    queue: Arc<Channel<Request>>,
+    engine: Box<dyn Engine>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    max_batch: usize,
+    deadline: Duration,
+) {
+    let row = engine.input_len();
+    let out_row = engine.output_len();
+    loop {
+        // Block for the first request.
+        let Some(first) = queue.recv() else {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        let mut batch = vec![first];
+        // Fill until deadline or max_batch.
+        let batch_deadline = Instant::now() + deadline;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= batch_deadline {
+                break;
+            }
+            // Fast path: grab whatever is queued.
+            let grabbed = queue.drain_up_to(max_batch - batch.len());
+            if !grabbed.is_empty() {
+                batch.extend(grabbed);
+                continue;
+            }
+            match queue.recv_timeout(batch_deadline - now) {
+                Ok(Some(req)) => batch.push(req),
+                Ok(None) => break,        // deadline
+                Err(_) => break,          // closed: run what we have
+            }
+        }
+
+        let b = batch.len();
+        let infer_start = Instant::now();
+        for req in &batch {
+            metrics
+                .queue_wait
+                .record(infer_start.duration_since(req.enqueued));
+        }
+        let mut x = Vec::with_capacity(b * row);
+        for req in &batch {
+            x.extend_from_slice(&req.input);
+        }
+        let result = engine.infer(&x, b);
+        metrics.inference.record(infer_start.elapsed());
+        metrics.batches.inc();
+        metrics.batched_rows.add(b as u64);
+
+        match result {
+            Ok(y) => {
+                debug_assert_eq!(y.len(), b * out_row);
+                for (i, req) in batch.iter().enumerate() {
+                    // Record metrics BEFORE waking the waiter so stats()
+                    // observed after wait() always include this request.
+                    metrics.completed.inc();
+                    metrics.e2e.record(req.enqueued.elapsed());
+                    req.slot
+                        .fill(Ok(y[i * out_row..(i + 1) * out_row].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("inference failed: {e:#}");
+                for req in &batch {
+                    req.slot.fill(Err(msg.clone()));
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Inference engines the coordinator can drive.
+
+use anyhow::{bail, Context, Result};
+
+/// Constructor run on the coordinator's worker thread.
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send + 'static>;
+
+use crate::conv::ConvBackend;
+use crate::nn::Model;
+use crate::runtime::{ArtifactRegistry, TensorView};
+
+/// A batched inference engine with a fixed per-row input/output shape.
+///
+/// Engines are **not** required to be `Send`/`Sync`: the PJRT wrapper
+/// types hold `Rc` internals, so the coordinator constructs its engine
+/// *on* the worker thread via an [`EngineFactory`] and never moves it.
+pub trait Engine {
+    /// Elements per input row.
+    fn input_len(&self) -> usize;
+    /// Elements per output row.
+    fn output_len(&self) -> usize;
+    /// Batch sizes the engine can execute directly. The batcher pads a
+    /// collected batch up to the smallest bucket ≥ its size.
+    fn batch_buckets(&self) -> Vec<usize>;
+    /// Run `batch` rows (input length `batch * input_len()`).
+    fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+    /// Human-readable backend tag for metrics/logs.
+    fn name(&self) -> String;
+}
+
+/// Rust-native engine: the [`Model`] layer stack on a conv backend.
+pub struct NativeEngine {
+    model: Model,
+    backend: ConvBackend,
+    max_batch: usize,
+}
+
+impl NativeEngine {
+    pub fn new(model: Model, backend: ConvBackend, max_batch: usize) -> Self {
+        Self {
+            model,
+            backend,
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl Engine for NativeEngine {
+    fn input_len(&self) -> usize {
+        self.model.c_in * self.model.seq_len
+    }
+
+    fn output_len(&self) -> usize {
+        let (c, n) = self.model.out_shape();
+        c * n
+    }
+
+    fn batch_buckets(&self) -> Vec<usize> {
+        // Native conv handles any batch; one bucket = no padding waste.
+        (1..=self.max_batch).collect()
+    }
+
+    fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        Ok(self.model.forward(x, batch, self.backend)?.data)
+    }
+
+    fn name(&self) -> String {
+        format!("native/{}", self.backend.name())
+    }
+}
+
+/// PJRT engine: the AOT TCN artifacts (`tcn_forward_b{1,4,8}`), executed
+/// through the xla runtime. Parameters are loaded once (deterministic He
+/// init from the manifest shapes, or externally trained weights).
+pub struct PjrtTcnEngine {
+    registry: ArtifactRegistry,
+    params: Vec<TensorView>,
+    seq_len: usize,
+    c_in: usize,
+    c_out: usize,
+    buckets: Vec<usize>,
+}
+
+impl PjrtTcnEngine {
+    /// Build from an artifacts directory, generating params with `seed`.
+    pub fn from_artifacts(dir: impl Into<std::path::PathBuf>, seed: u64) -> Result<Self> {
+        let registry = ArtifactRegistry::open(dir)?;
+        let manifest = registry
+            .manifest()
+            .context("manifest.toml missing — rerun `make artifacts`")?
+            .clone();
+        let mut rng = crate::workload::Rng::new(seed);
+        let params: Vec<TensorView> = manifest
+            .param_shapes()
+            .iter()
+            .map(|(name, s)| {
+                let n: usize = s.iter().product();
+                if name.ends_with("_w") || name.contains("_w") {
+                    let fan_in: usize = s[1..].iter().product();
+                    TensorView::new(s.clone(), rng.vec_normal(n, (2.0 / fan_in as f32).sqrt()))
+                } else {
+                    TensorView::new(s.clone(), vec![0.0; n])
+                }
+            })
+            .collect();
+        let mut buckets = Vec::new();
+        for b in [1usize, 4, 8] {
+            if registry.contains(&format!("tcn_forward_b{b}_n{}", manifest.seq_len)) {
+                buckets.push(b);
+            }
+        }
+        if buckets.is_empty() {
+            bail!("no tcn_forward_b*.hlo.txt artifacts found");
+        }
+        // Pre-compile every bucket now: serving latency must not pay the
+        // first-request JIT cost (it dominated p99 by ~100x before this).
+        for b in &buckets {
+            registry.get(&format!("tcn_forward_b{b}_n{}", manifest.seq_len))?;
+        }
+        Ok(Self {
+            registry,
+            params,
+            seq_len: manifest.seq_len,
+            c_in: manifest.c_in,
+            c_out: manifest.c_out,
+            buckets,
+        })
+    }
+
+    /// Replace parameters (e.g. after rust-driven training).
+    pub fn set_params(&mut self, params: Vec<TensorView>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+
+    pub fn params(&self) -> &[TensorView] {
+        &self.params
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    fn bucket_for(&self, batch: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|b| *b >= batch)
+            .with_context(|| format!("batch {batch} exceeds largest bucket {:?}", self.buckets))
+    }
+}
+
+impl Engine for PjrtTcnEngine {
+    fn input_len(&self) -> usize {
+        self.c_in * self.seq_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.c_out * self.seq_len
+    }
+
+    fn batch_buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let bucket = self.bucket_for(batch)?;
+        let exe = self
+            .registry
+            .get(&format!("tcn_forward_b{bucket}_n{}", self.seq_len))?;
+        // Pad to bucket with zero rows.
+        let row = self.input_len();
+        let mut xb = x.to_vec();
+        xb.resize(bucket * row, 0.0);
+        let mut args = self.params.clone();
+        args.push(TensorView::new(vec![bucket, self.c_in, self.seq_len], xb));
+        let out = exe.run1(&args)?;
+        let out_row = self.output_len();
+        Ok(out.data[..batch * out_row].to_vec())
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt/tcn_n{}", self.seq_len)
+    }
+}

@@ -1,0 +1,129 @@
+//! L3 serving coordinator: request queue → shape-checked router →
+//! deadline-based dynamic batcher → worker → response distribution.
+//!
+//! The paper's contribution is the kernel, so the coordinator's job is to
+//! make the kernel *deployable*: it owns the event loop, batches
+//! same-shape requests (dynamic batching with a deadline, vLLM-router
+//! style), runs them on a selectable [`Engine`] — the rust-native sliding
+//! kernels, the im2col+GEMM baseline, or the AOT PJRT TCN artifacts —
+//! and reports latency/throughput via [`crate::telemetry`].
+//!
+//! Shapes are fixed per deployment (AOT artifacts are shape-specialized),
+//! so the router's job reduces to validating input length and enforcing
+//! backpressure (bounded queue + `try_submit`).
+
+mod batcher;
+mod engine;
+mod server;
+
+pub use batcher::{Coordinator, CoordinatorStats, SubmitError};
+pub use engine::{Engine, EngineFactory, NativeEngine, PjrtTcnEngine};
+pub use server::{serve_tcp, TcpClient};
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// An inference request: one input row of the deployed model shape.
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub enqueued: std::time::Instant,
+    slot: Arc<ResponseSlot>,
+}
+
+/// Response payload (output row) or failure message.
+pub type Response = Result<Vec<f32>, String>;
+
+/// One-shot response rendezvous (std has no oneshot channel).
+#[derive(Debug)]
+pub struct ResponseSlot {
+    value: Mutex<Option<Response>>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            value: Mutex::new(None),
+            ready: Condvar::new(),
+        })
+    }
+
+    fn fill(&self, resp: Response) {
+        let mut g = self.value.lock().unwrap();
+        *g = Some(resp);
+        self.ready.notify_all();
+    }
+
+    /// Block until the response arrives.
+    pub fn wait(&self) -> Response {
+        let mut g = self.value.lock().unwrap();
+        loop {
+            if let Some(resp) = g.take() {
+                return resp;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Wait with a timeout; `None` on timeout.
+    pub fn wait_timeout(&self, dur: std::time::Duration) -> Option<Response> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut g = self.value.lock().unwrap();
+        loop {
+            if let Some(resp) = g.take() {
+                return Some(resp);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.ready.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+/// Handle returned to the submitter.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    slot: Arc<ResponseSlot>,
+}
+
+impl Ticket {
+    pub fn wait(&self) -> Response {
+        self.slot.wait()
+    }
+
+    pub fn wait_timeout(&self, dur: std::time::Duration) -> Option<Response> {
+        self.slot.wait_timeout(dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_slot_rendezvous() {
+        let slot = ResponseSlot::new();
+        let s2 = Arc::clone(&slot);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            s2.fill(Ok(vec![1.0, 2.0]));
+        });
+        assert_eq!(slot.wait().unwrap(), vec![1.0, 2.0]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn response_slot_timeout() {
+        let slot = ResponseSlot::new();
+        assert!(slot
+            .wait_timeout(std::time::Duration::from_millis(5))
+            .is_none());
+        slot.fill(Err("boom".into()));
+        let got = slot.wait_timeout(std::time::Duration::from_millis(5)).unwrap();
+        assert_eq!(got.unwrap_err(), "boom");
+    }
+}

@@ -1,0 +1,148 @@
+//! TCP front-end: length-prefixed f32 frames over a blocking socket.
+//!
+//! Wire format (little-endian):
+//!   request:  u32 n  | n × f32            (one input row)
+//!   response: u8 tag | u32 n | payload    (tag 0 = ok row, 1 = error utf8)
+//!
+//! One thread per connection (the workload is CPU-bound inference; the
+//! batcher serializes actual compute, so connection threads just park).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::Coordinator;
+
+fn read_exact_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
+    let mut buf = [0u8; 4];
+    stream.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_frame(stream: &mut TcpStream, max_floats: u32) -> Result<Option<Vec<f32>>> {
+    let n = match read_exact_u32(stream) {
+        Ok(n) => n,
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    if n > max_floats {
+        bail!("frame of {n} floats exceeds limit {max_floats}");
+    }
+    let mut bytes = vec![0u8; n as usize * 4];
+    stream.read_exact(&mut bytes)?;
+    let mut out = Vec::with_capacity(n as usize);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(Some(out))
+}
+
+fn write_ok(stream: &mut TcpStream, row: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(5 + row.len() * 4);
+    buf.push(0u8);
+    buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&buf)
+}
+
+fn write_err(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    let bytes = msg.as_bytes();
+    let mut buf = Vec::with_capacity(5 + bytes.len());
+    buf.push(1u8);
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    stream.write_all(&buf)
+}
+
+/// Serve until `stop` is set (checked between accepts). Returns the bound
+/// address immediately via the callback so tests can connect.
+pub fn serve_tcp(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(false)?;
+                let coord = Arc::clone(&coordinator);
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, coord);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    let max = 1 << 22; // 16 MiB of floats per frame is plenty
+    while let Some(row) = read_frame(&mut stream, max)? {
+        match coord.try_submit(row) {
+            Ok(ticket) => match ticket.wait() {
+                Ok(out) => write_ok(&mut stream, &out)?,
+                Err(e) => write_err(&mut stream, &e)?,
+            },
+            Err(e) => write_err(&mut stream, &e.to_string())?,
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for examples/tests/benches.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(Self {
+            stream: TcpStream::connect(addr)?,
+        })
+    }
+
+    /// Send one row, wait for the response.
+    pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
+        let mut buf = Vec::with_capacity(4 + row.len() * 4);
+        buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        for v in row {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+
+        let mut tag = [0u8; 1];
+        self.stream.read_exact(&mut tag)?;
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if tag[0] == 0 {
+            let mut bytes = vec![0u8; n * 4];
+            self.stream.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        } else {
+            let mut bytes = vec![0u8; n];
+            self.stream.read_exact(&mut bytes)?;
+            bail!("server error: {}", String::from_utf8_lossy(&bytes))
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Thread/channel execution substrate (tokio is unavailable offline; the
+//! request path is CPU-bound anyway, so blocking workers + bounded
+//! channels are the right shape). Provides a bounded MPMC channel and a
+//! small worker pool used by the coordinator.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Error returned by channel operations after close.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelError {
+    Closed,
+    Full,
+}
+
+struct ChanInner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+    capacity: usize,
+}
+
+/// Bounded MPMC blocking channel.
+pub struct Channel<T> {
+    inner: Mutex<ChanInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Channel<T> {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(ChanInner {
+                queue: VecDeque::new(),
+                closed: false,
+                capacity: capacity.max(1),
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        })
+    }
+
+    /// Blocking send; errors if closed.
+    pub fn send(&self, item: T) -> Result<(), ChannelError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(ChannelError::Closed);
+            }
+            if g.queue.len() < g.capacity {
+                g.queue.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking send (backpressure signal for the router).
+    pub fn try_send(&self, item: T) -> Result<(), (T, ChannelError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((item, ChannelError::Closed));
+        }
+        if g.queue.len() >= g.capacity {
+            return Err((item, ChannelError::Full));
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` once closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Receive with a deadline; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, ChannelError> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(ChannelError::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.queue.is_empty() {
+                if g.closed {
+                    return Err(ChannelError::Closed);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Drain up to `max` queued items without blocking (batch collection).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = g.queue.len().min(max);
+        let out: Vec<T> = g.queue.drain(..take).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: senders fail, receivers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// A joinable set of named worker threads.
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn spawn<F>(count: usize, name: &str, f: F) -> Self
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles = (0..count)
+            .map(|i| {
+                let f = Arc::clone(&f);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { handles }
+    }
+
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let ch = Channel::new(4);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn try_send_backpressure() {
+        let ch = Channel::new(1);
+        ch.try_send(1).unwrap();
+        match ch.try_send(2) {
+            Err((2, ChannelError::Full)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let ch = Channel::new(4);
+        ch.send(7).unwrap();
+        ch.close();
+        assert_eq!(ch.send(8), Err(ChannelError::Closed));
+        assert_eq!(ch.recv(), Some(7));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let ch: Arc<Channel<i32>> = Channel::new(1);
+        let got = ch.recv_timeout(Duration::from_millis(10)).unwrap();
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn drain_up_to_batches() {
+        let ch = Channel::new(8);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        let batch = ch.drain_up_to(3);
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let ch = Channel::new(2);
+        let ch2 = Arc::clone(&ch);
+        let t = std::thread::spawn(move || {
+            for i in 0..100 {
+                ch2.send(i).unwrap();
+            }
+            ch2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = ch.recv() {
+            got.push(v);
+        }
+        t.join().unwrap();
+        assert_eq!(got.len(), 100);
+        assert_eq!(got[99], 99);
+    }
+
+    #[test]
+    fn worker_pool_runs_all() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let pool = WorkerPool::spawn(4, "t", move |_i| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+}

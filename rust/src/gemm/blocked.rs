@@ -1,0 +1,309 @@
+//! Cache-blocked, register-tiled SGEMM (BLIS-style).
+//!
+//! Loop structure: NC → KC → MC blocking with packed A (MC×KC,
+//! micro-panel major) and packed B (KC×NC, micro-panel major), around an
+//! MR×NR microkernel kept entirely in registers. Tile sizes default to a
+//! shape that fits L1/L2 on commodity x86; they are parameters so the
+//! bench harness can expose the blocking ablation (TBL-A in DESIGN.md).
+
+use super::GemmShape;
+
+/// Register microkernel tile: MR×NR accumulator block.
+const MR: usize = 8;
+const NR: usize = 8;
+
+/// Cache blocking parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmBlocking {
+    /// Rows of A per L2-resident packed block.
+    pub mc: usize,
+    /// Depth per L1-resident packed panel.
+    pub kc: usize,
+    /// Columns of B per L3-resident packed block.
+    pub nc: usize,
+}
+
+impl Default for GemmBlocking {
+    fn default() -> Self {
+        Self { mc: 128, kc: 256, nc: 512 }
+    }
+}
+
+/// `c[m×n] += a[m×k]·b[k×n]` with default blocking.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_blocked(GemmShape { m, k, n }, GemmBlocking::default(), a, b, c)
+}
+
+/// GEMM followed by a broadcast bias add over rows: `c[i][j] += bias[i]`.
+/// (Conv layers use one bias per output channel = per row of the
+/// filter-matrix product.)
+pub fn gemm_bias(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: &[f32], c: &mut [f32]) {
+    gemm(m, k, n, a, b, c);
+    assert_eq!(bias.len(), m);
+    for i in 0..m {
+        let row = &mut c[i * n..(i + 1) * n];
+        let bi = bias[i];
+        for v in row {
+            *v += bi;
+        }
+    }
+}
+
+/// Fully parameterized entry point.
+pub fn gemm_blocked(shape: GemmShape, blk: GemmBlocking, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let GemmShape { m, k, n } = shape;
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Skinny-M fast path (gemv-like): the MR×NR microkernel would waste
+    // (MR−m)/MR of its accumulators. MLAS/BLIS ship dedicated gemv
+    // kernels; mirroring that keeps the im2col baseline honest for the
+    // single-output-channel Fig-1 workload.
+    if m < MR {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (p, &ap) in arow.iter().enumerate() {
+                if ap == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] = ap.mul_add(brow[j], crow[j]);
+                }
+            }
+        }
+        return;
+    }
+
+    // Panels are zero-padded to MR/NR multiples; round the buffers up so
+    // non-multiple blocking parameters stay in bounds.
+    let mc_pad = blk.mc.div_ceil(MR) * MR;
+    let nc_pad = blk.nc.div_ceil(NR) * NR;
+    let mut a_pack = vec![0.0f32; mc_pad * blk.kc];
+    let mut b_pack = vec![0.0f32; blk.kc * nc_pad];
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = blk.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = blk.kc.min(k - pc);
+            pack_b(&mut b_pack, b, k, n, pc, jc, kc, nc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = blk.mc.min(m - ic);
+                pack_a(&mut a_pack, a, k, ic, pc, mc, kc);
+                macro_kernel(&a_pack, &b_pack, c, n, ic, jc, mc, nc, kc);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Pack an MC×KC block of A into MR-row micro-panels (column-major within
+/// each panel) so the microkernel streams it contiguously.
+fn pack_a(dst: &mut [f32], a: &[f32], lda: usize, ic: usize, pc: usize, mc: usize, kc: usize) {
+    let mut out = 0;
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        for p in 0..kc {
+            for r in 0..MR {
+                dst[out] = if r < mr {
+                    a[(ic + ir + r) * lda + pc + p]
+                } else {
+                    0.0
+                };
+                out += 1;
+            }
+        }
+        ir += MR;
+    }
+}
+
+/// Pack a KC×NC block of B into NR-column micro-panels (row-major within
+/// each panel).
+fn pack_b(dst: &mut [f32], b: &[f32], _ldbk: usize, ldb: usize, pc: usize, jc: usize, kc: usize, nc: usize) {
+    let mut out = 0;
+    let mut jr = 0;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        for p in 0..kc {
+            for cidx in 0..NR {
+                dst[out] = if cidx < nr {
+                    b[(pc + p) * ldb + jc + jr + cidx]
+                } else {
+                    0.0
+                };
+                out += 1;
+            }
+        }
+        jr += NR;
+    }
+}
+
+/// Macro kernel: sweep micro-panels, dispatching to the register kernel.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    a_pack: &[f32],
+    b_pack: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+) {
+    let mut jr = 0;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        let bp = &b_pack[(jr / NR) * kc * NR..][..kc * NR];
+        let mut ir = 0;
+        while ir < mc {
+            let mr = MR.min(mc - ir);
+            let ap = &a_pack[(ir / MR) * kc * MR..][..kc * MR];
+            micro_kernel(ap, bp, kc, c, ldc, ic + ir, jc + jr, mr, nr);
+            ir += MR;
+        }
+        jr += NR;
+    }
+}
+
+/// MR×NR register microkernel: `acc += ap·bp` over the packed panels,
+/// then spill into C. The inner loop is a rank-1 update per depth step —
+/// LLVM turns the NR-wide row updates into FMA vector ops.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let arow = &ap[p * MR..p * MR + MR];
+        let brow = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let ar = arow[r];
+            for cidx in 0..NR {
+                acc[r][cidx] = ar.mul_add(brow[cidx], acc[r][cidx]);
+            }
+        }
+    }
+    for r in 0..mr {
+        let crow = &mut c[(row0 + r) * ldc + col0..];
+        for cidx in 0..nr {
+            crow[cidx] += acc[r][cidx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemm_naive;
+    use super::*;
+
+    fn xorshift_fill(buf: &mut [f32], seed: &mut u64) {
+        for v in buf.iter_mut() {
+            *seed ^= *seed << 13;
+            *seed ^= *seed >> 7;
+            *seed ^= *seed << 17;
+            *v = ((*seed >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0;
+        }
+    }
+
+    fn check(m: usize, k: usize, n: usize) {
+        let mut seed = 0x12345678abcdefu64 ^ ((m * 73 + k * 37 + n) as u64);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        xorshift_fill(&mut a, &mut seed);
+        xorshift_fill(&mut b, &mut seed);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut c1);
+        gemm_naive(m, k, n, &a, &b, &mut c2);
+        for i in 0..m * n {
+            assert!(
+                (c1[i] - c2[i]).abs() <= 1e-3 * (1.0 + c2[i].abs()),
+                "({m},{k},{n}) idx {i}: {} vs {}",
+                c1[i],
+                c2[i]
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        for (m, k, n) in [(1, 1, 1), (2, 3, 4), (8, 8, 8), (5, 7, 9)] {
+            check(m, k, n);
+        }
+    }
+
+    #[test]
+    fn matches_naive_tile_edges() {
+        // Exercise partial MR/NR tiles and blocking boundaries.
+        for (m, k, n) in [(9, 17, 9), (16, 16, 16), (33, 65, 31), (130, 70, 100)] {
+            check(m, k, n);
+        }
+    }
+
+    #[test]
+    fn matches_naive_bigger_than_blocks() {
+        check(150, 300, 80); // crosses mc and kc
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut c: Vec<f32> = vec![];
+        gemm(0, 4, 0, &[], &[0.0; 0], &mut c);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn custom_blocking_agrees() {
+        let m = 40;
+        let k = 50;
+        let n = 60;
+        let mut seed = 99u64;
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        xorshift_fill(&mut a, &mut seed);
+        xorshift_fill(&mut b, &mut seed);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_blocked(
+            GemmShape { m, k, n },
+            GemmBlocking { mc: 16, kc: 24, nc: 32 },
+            &a,
+            &b,
+            &mut c1,
+        );
+        gemm_naive(m, k, n, &a, &b, &mut c2);
+        for i in 0..m * n {
+            assert!((c1[i] - c2[i]).abs() <= 1e-3 * (1.0 + c2[i].abs()));
+        }
+    }
+
+    #[test]
+    fn bias_broadcast_rows() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [1.0f32, 2.0, 3.0, 4.0];
+        let bias = [10.0f32, 20.0];
+        let mut c = [0.0f32; 4];
+        gemm_bias(2, 2, 2, &a, &b, &bias, &mut c);
+        assert_eq!(c, [11.0, 12.0, 23.0, 24.0]);
+    }
+}

@@ -1,0 +1,41 @@
+//! Blocked SGEMM — the substrate for the paper's im2col+GEMM comparator.
+//!
+//! The paper benchmarks against ONNX Runtime's `MlasConv`, which lowers
+//! convolution to im2col followed by a hand-tuned GEMM. ONNX Runtime is
+//! not available in this environment, so we rebuild the same structure:
+//! a cache-blocked, register-tiled `C ← A·B + C` with packed panels
+//! (BLIS-style MC/KC/NC blocking around an MR×NR microkernel). The conv
+//! baseline in [`crate::conv::im2col`] drives this exactly like MlasConv
+//! drives its GEMM, so the sliding-vs-GEMM *ratio* (Fig 1/Fig 2) is
+//! preserved even though absolute GFLOPs differ from the authors' Xeon.
+
+mod blocked;
+mod naive;
+
+pub use blocked::{gemm, gemm_bias, GemmBlocking};
+pub use naive::gemm_naive;
+
+/// Row-major matrix view dims: `a` is m×k, `b` is k×n, `c` is m×n.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_counts_fma_as_two() {
+        let s = GemmShape { m: 3, k: 4, n: 5 };
+        assert_eq!(s.flops(), 120);
+    }
+}

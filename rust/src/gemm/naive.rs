@@ -1,0 +1,52 @@
+//! Triple-loop reference GEMM (correctness oracle for the blocked kernel).
+
+/// `c[m×n] += a[m×k] · b[k×n]`, all row-major, no blocking. O(mnk).
+pub fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += aip * b[p * n + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_times_b_is_b() {
+        let a = [1.0f32, 0.0, 0.0, 1.0]; // I2
+        let b = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let mut c = [0.0f32; 6];
+        gemm_naive(2, 2, 3, &a, &b, &mut c);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn small_known_product() {
+        // [[1,2],[3,4]] · [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm_naive(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = [1.0f32];
+        let b = [2.0f32];
+        let mut c = [10.0f32];
+        gemm_naive(1, 1, 1, &a, &b, &mut c);
+        assert_eq!(c, [12.0]);
+    }
+}

@@ -1,0 +1,29 @@
+//! # swsnn — Sliding Window Sum Algorithms for Deep Neural Networks
+//!
+//! A rust + JAX + Pallas reproduction of Snytsar 2023. The library
+//! re-expresses DNN pooling and convolution as *sliding window sums*
+//! (paper Eq. 3) and evaluates them with the vectorized algorithm family
+//! of §3, displacing the im2col + GEMM path.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): algorithm family, conv/pool operators, NN stack,
+//!   serving coordinator, benchmark harness.
+//! * L2/L1 (build-time python): JAX model + Pallas kernels, AOT-lowered
+//!   to `artifacts/*.hlo.txt`, executed by [`runtime`] via PJRT.
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod nn;
+pub mod ops;
+pub mod prop;
+pub mod scan;
+pub mod simd;
+pub mod sliding;
+pub mod conv;
+pub mod pool;
+pub mod gemm;
+pub mod runtime;
+pub mod telemetry;
+pub mod workload;

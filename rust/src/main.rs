@@ -1,0 +1,307 @@
+//! swsnn CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve             run the TCP inference server (native or PJRT engine)
+//!   train             drive the AOT train-step artifact from rust
+//!   bench-fig1        regenerate Figure 1 (conv speedup vs filter size)
+//!   bench-fig2        regenerate Figure 2 (dilated conv speedup)
+//!   bench-algos       regenerate TBL-A/TBL-A2 (algorithm family)
+//!   bench-pool        regenerate TBL-P (pooling)
+//!   bench-scan        regenerate TBL-S (scan substrate)
+//!   conv              run one convolution and report timing
+//!   minimizers        genomics sliding-minimum demo
+//!   artifacts         list AOT artifacts + manifest
+//!   selftest          quick cross-backend consistency check
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use swsnn::bench::{figs, BenchConfig};
+use swsnn::cli::{parse_args, Args, FlagSpec};
+use swsnn::config::{load_config, ServeConfig};
+use swsnn::conv::{conv1d, Conv1dParams, ConvBackend};
+use swsnn::coordinator::{serve_tcp, Coordinator, NativeEngine, PjrtTcnEngine};
+use swsnn::nn::Model;
+use swsnn::pool::{minimizer_positions, sliding_minimum};
+use swsnn::runtime::{ArtifactRegistry, TensorView};
+use swsnn::workload::{dna_sequence, kmer_hashes, Rng};
+
+fn main() {
+    let args = parse_args(std::env::args().skip(1), &["quick", "pjrt", "help"]);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn bench_cfg(args: &Args) -> BenchConfig {
+    if args.has("quick") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::from_env()
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(args),
+        Some("train") => cmd_train(args),
+        Some("bench-fig1") => {
+            let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
+            let (table, _) = figs::fig1(&bench_cfg(args), n, &[2, 3, 5, 7, 15, 31, 63, 127, 255]);
+            table.emit("fig1.csv");
+            Ok(())
+        }
+        Some("bench-fig2") => {
+            let (table, _) = figs::fig2(&bench_cfg(args));
+            table.emit("fig2.csv");
+            Ok(())
+        }
+        Some("bench-algos") => {
+            let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
+            let p = args.get_usize("p", 16).map_err(anyhow::Error::msg)?;
+            figs::tbl_algorithms(&bench_cfg(args), n, p, &[2, 4, 8, 12, 15]).emit("tbl_algorithms.csv");
+            figs::tbl_sliding_min(&bench_cfg(args), n, p, &[4, 8, 15]).emit("tbl_sliding_min.csv");
+            Ok(())
+        }
+        Some("bench-pool") => {
+            let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
+            figs::tbl_pooling(&bench_cfg(args), n, &[2, 4, 8, 16, 32, 64]).emit("tbl_pooling.csv");
+            Ok(())
+        }
+        Some("bench-scan") => {
+            figs::tbl_scan(&bench_cfg(args), &[1_000, 100_000, 1_000_000]).emit("tbl_scan.csv");
+            Ok(())
+        }
+        Some("conv") => cmd_conv(args),
+        Some("minimizers") => cmd_minimizers(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("selftest") => cmd_selftest(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "swsnn — Sliding Window Sum algorithms for DNNs (Snytsar 2023 reproduction)\n\n\
+         usage: swsnn <subcommand> [--flags]\n\n\
+         subcommands:\n\
+           serve         TCP inference server (--config cfg.toml | --pjrt)\n\
+           train         run the AOT SGD train step from rust (--steps N)\n\
+           bench-fig1    Figure 1: conv speedup vs filter size\n\
+           bench-fig2    Figure 2: dilated conv speedup\n\
+           bench-algos   TBL-A: the \u{00a7}3 algorithm family\n\
+           bench-pool    TBL-P: pooling via sliding sums\n\
+           bench-scan    TBL-S: prefix-sum substrate\n\
+           conv          one-off convolution timing\n\
+           minimizers    genomics sliding-minimum demo\n\
+           artifacts     list AOT artifacts\n\
+           selftest      cross-backend consistency check\n\n\
+         common flags: --quick (short bench), --help"
+    );
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let specs = [
+        FlagSpec { name: "config", value: Some("path"), help: "model TOML (native engine)" },
+        FlagSpec { name: "artifacts", value: Some("dir"), help: "artifacts dir (default artifacts/)" },
+        FlagSpec { name: "addr", value: Some("host:port"), help: "listen address (default 127.0.0.1:7878)" },
+        FlagSpec { name: "backend", value: Some("name"), help: "native conv backend (default sliding)" },
+        FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
+        FlagSpec { name: "quick", value: None, help: "" },
+    ];
+    args.reject_unknown(&specs).map_err(anyhow::Error::msg)?;
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+
+    let serve_cfg;
+    let coord = if args.has("pjrt") {
+        serve_cfg = ServeConfig::default();
+        let dir = args.get_str("artifacts", "artifacts");
+        Coordinator::start(
+            Box::new(move || Ok(Box::new(PjrtTcnEngine::from_artifacts(dir, 42)?) as _)),
+            &serve_cfg,
+        )?
+    } else {
+        let path = args.get_str("config", "configs/tcn_demo.toml");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let (mc, sc) = load_config(&text).map_err(anyhow::Error::msg)?;
+        serve_cfg = sc;
+        let backend = ConvBackend::parse(&args.get_str("backend", serve_cfg.backend.name()))
+            .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+        let mut rng = Rng::new(42);
+        let model = Model::init(&mc, &mut rng)?;
+        println!(
+            "model {} — {} layers, {} params, backend {}",
+            mc.name,
+            model.layer_count(),
+            model.param_count(),
+            backend.name()
+        );
+        Coordinator::start_native(
+            NativeEngine::new(model, backend, serve_cfg.max_batch),
+            &serve_cfg,
+        )?
+    };
+    println!(
+        "engine {} ready (in={} out={}), serving on {addr} — Ctrl-C to stop",
+        coord.engine_name(),
+        coord.input_len(),
+        coord.output_len()
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    serve_tcp(Arc::new(coord), &addr, stop, |bound| {
+        println!("listening on {bound}");
+    })
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 50).map_err(anyhow::Error::msg)?;
+    let reg = ArtifactRegistry::open(dir)?;
+    let m = reg
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("manifest.toml missing"))?
+        .clone();
+    let exe = reg.get(&format!("tcn_train_step_b8_n{}", m.seq_len))?;
+    let mut rng = Rng::new(7);
+    let mut params: Vec<TensorView> = m
+        .param_shapes()
+        .iter()
+        .map(|(name, s)| {
+            let n: usize = s.iter().product();
+            if name.contains("_b") {
+                TensorView::new(s.clone(), vec![0.0; n])
+            } else {
+                let fan_in: usize = s[1..].iter().product();
+                TensorView::new(s.clone(), rng.vec_normal(n, (2.0 / fan_in as f32).sqrt()))
+            }
+        })
+        .collect();
+    println!("training TCN ({} params) for {steps} steps on synthetic AR(1) data", m.params);
+    let start = std::time::Instant::now();
+    for step in 0..steps {
+        let mut x = vec![0.0f32; 8 * m.seq_len];
+        let mut prev = 0.0f32;
+        for v in x.iter_mut() {
+            prev = 0.9 * prev + 0.2 * rng.normal();
+            *v = prev;
+        }
+        let mut a = params.clone();
+        a.push(TensorView::new(vec![8, m.c_in, m.seq_len], x));
+        let mut out = exe.run(&a)?;
+        let loss = out.remove(0).data[0];
+        params = out;
+        if step % 10 == 0 || step == steps - 1 {
+            println!("step {step:>4}  loss {loss:.6}");
+        }
+    }
+    println!(
+        "done in {:.2}s ({:.1} steps/s)",
+        start.elapsed().as_secs_f64(),
+        steps as f64 / start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_conv(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
+    let k = args.get_usize("k", 31).map_err(anyhow::Error::msg)?;
+    let dilation = args.get_usize("dilation", 1).map_err(anyhow::Error::msg)?;
+    let backend = ConvBackend::parse(&args.get_str("backend", "sliding"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend (try sliding/im2col_gemm/direct/sliding_pair)"))?;
+    let mut rng = Rng::new(1);
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    let w = rng.vec_uniform(k, -1.0, 1.0);
+    let p = Conv1dParams::new(1, 1, n, k).with_dilation(dilation);
+    let cfg = bench_cfg(args);
+    let m = swsnn::bench::bench(&cfg, || {
+        std::hint::black_box(conv1d(backend, std::hint::black_box(&x), &w, None, &p));
+    });
+    println!(
+        "conv1d n={n} k={k} d={dilation} backend={}: median {} ({:.2} Gmac/s)",
+        backend.name(),
+        swsnn::bench::fmt_duration(m.median),
+        p.macs() as f64 / m.median_ns()
+    );
+    Ok(())
+}
+
+fn cmd_minimizers(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
+    let kmer = args.get_usize("kmer", 15).map_err(anyhow::Error::msg)?;
+    let w = args.get_usize("w", 10).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(13);
+    let seq = dna_sequence(&mut rng, n);
+    let hashes = kmer_hashes(&seq, kmer);
+    let start = std::time::Instant::now();
+    let mins = sliding_minimum(&hashes, w);
+    let dt = start.elapsed();
+    let pos = minimizer_positions(&hashes, w);
+    let distinct: std::collections::HashSet<usize> = pos.iter().copied().collect();
+    println!(
+        "sequence {n}bp, k-mer {kmer}, window {w}: {} windows in {} ({:.1} Mwin/s), {} distinct minimizers ({:.2}% density)",
+        mins.len(),
+        swsnn::bench::fmt_duration(dt),
+        mins.len() as f64 / dt.as_secs_f64() / 1e6,
+        distinct.len(),
+        100.0 * distinct.len() as f64 / hashes.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let reg = ArtifactRegistry::open(dir)?;
+    println!("platform: {} ({} devices)", reg.runtime().platform(), reg.runtime().device_count());
+    if let Some(m) = reg.manifest() {
+        println!(
+            "tcn manifest: {} params, seq_len {}, receptive field {}",
+            m.params, m.seq_len, m.receptive_field
+        );
+    }
+    for name in reg.list()? {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> anyhow::Result<()> {
+    use swsnn::ops::AddOp;
+    use swsnn::sliding::{self, Algo};
+    let mut rng = Rng::new(99);
+    let xs = rng.vec_uniform(10_000, -1.0, 1.0);
+    let want = sliding::sliding_naive(AddOp::<f32>::new(), &xs, 7);
+    for algo in Algo::ALL {
+        let got = sliding::run(algo, AddOp::<f32>::new(), &xs, 7, 16);
+        anyhow::ensure!(got.len() == want.len(), "{algo:?} length");
+        for (a, b) in got.iter().zip(&want) {
+            anyhow::ensure!((a - b).abs() < 1e-3, "{algo:?} mismatch");
+        }
+        println!("  {:<18} ok", algo.name());
+    }
+    let x = rng.vec_uniform(4096, -1.0, 1.0);
+    let w = rng.vec_uniform(9, -1.0, 1.0);
+    let p = Conv1dParams::new(1, 1, 4096, 9);
+    let want = conv1d(ConvBackend::Direct, &x, &w, None, &p);
+    for backend in ConvBackend::ALL {
+        let got = conv1d(backend, &x, &w, None, &p);
+        for (a, b) in got.iter().zip(&want) {
+            anyhow::ensure!((a - b).abs() < 1e-2, "{backend:?} mismatch: {a} vs {b}");
+        }
+        println!("  conv/{:<12} ok", backend.name());
+    }
+    println!("selftest passed");
+    Ok(())
+}

@@ -1,0 +1,312 @@
+//! Individual layers. Each layer owns its parameters and knows how to
+//! run forward on a `[batch, c, n]` activation with a chosen conv
+//! backend.
+
+use crate::conv::{conv1d, Conv1dParams, ConvBackend};
+use crate::pool::{pool1d, Pool1dParams, PoolKind};
+use crate::workload::Rng;
+
+/// Activation tensor passed between layers.
+#[derive(Clone, Debug)]
+pub struct LayerOutput {
+    pub channels: usize,
+    pub n: usize,
+    pub data: Vec<f32>, // [batch, channels, n]
+}
+
+/// A single layer with parameters.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        dilation: usize,
+        same_pad: bool,
+        relu: bool,
+        w: Vec<f32>,
+        b: Vec<f32>,
+    },
+    Pool {
+        kind: PoolKind,
+        w: usize,
+        stride: usize,
+    },
+    /// TCN residual block: two same-pad convs with shared width.
+    Residual {
+        c: usize,
+        k: usize,
+        dilation: usize,
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        w2: Vec<f32>,
+        b2: Vec<f32>,
+    },
+    /// Dense over flattened (channels × n) features.
+    Dense {
+        in_features: usize,
+        out: usize,
+        relu: bool,
+        w: Vec<f32>, // [out, in_features]
+        b: Vec<f32>,
+    },
+}
+
+fn he_init(rng: &mut Rng, fan_in: usize, n: usize) -> Vec<f32> {
+    let std = (2.0 / fan_in as f32).sqrt();
+    rng.vec_normal(n, std)
+}
+
+impl Layer {
+    pub fn conv(
+        rng: &mut Rng,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        dilation: usize,
+        same_pad: bool,
+        relu: bool,
+    ) -> Self {
+        Layer::Conv {
+            c_in,
+            c_out,
+            k,
+            stride,
+            dilation,
+            same_pad,
+            relu,
+            w: he_init(rng, c_in * k, c_out * c_in * k),
+            b: vec![0.0; c_out],
+        }
+    }
+
+    pub fn residual(rng: &mut Rng, c: usize, k: usize, dilation: usize) -> Self {
+        Layer::Residual {
+            c,
+            k,
+            dilation,
+            w1: he_init(rng, c * k, c * c * k),
+            b1: vec![0.0; c],
+            w2: he_init(rng, c * k, c * c * k),
+            b2: vec![0.0; c],
+        }
+    }
+
+    pub fn dense(rng: &mut Rng, in_features: usize, out: usize, relu: bool) -> Self {
+        Layer::Dense {
+            in_features,
+            out,
+            relu,
+            w: he_init(rng, in_features, out * in_features),
+            b: vec![0.0; out],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Conv { w, b, .. } => w.len() + b.len(),
+            Layer::Pool { .. } => 0,
+            Layer::Residual { w1, b1, w2, b2, .. } => w1.len() + b1.len() + w2.len() + b2.len(),
+            Layer::Dense { w, b, .. } => w.len() + b.len(),
+        }
+    }
+
+    /// Output (channels, n) for an input (channels, n).
+    pub fn out_shape(&self, c: usize, n: usize) -> (usize, usize) {
+        match self {
+            Layer::Conv {
+                c_out,
+                k,
+                stride,
+                dilation,
+                same_pad,
+                ..
+            } => {
+                let mut p = Conv1dParams::new(c, *c_out, n, *k)
+                    .with_stride(*stride)
+                    .with_dilation(*dilation);
+                if *same_pad {
+                    p = p.with_same_pad();
+                }
+                (*c_out, p.n_out())
+            }
+            Layer::Pool { w, stride, .. } => {
+                let p = Pool1dParams::new(c, n, *w).with_stride(*stride);
+                (c, p.n_out())
+            }
+            Layer::Residual { .. } => (c, n),
+            Layer::Dense { out, .. } => (*out, 1),
+        }
+    }
+
+    /// Forward one batch of activations.
+    pub fn forward(&self, x: &LayerOutput, batch: usize, backend: ConvBackend) -> LayerOutput {
+        match self {
+            Layer::Conv {
+                c_in,
+                c_out,
+                k,
+                stride,
+                dilation,
+                same_pad,
+                relu,
+                w,
+                b,
+            } => {
+                assert_eq!(x.channels, *c_in, "conv input channels");
+                let mut p = Conv1dParams::new(*c_in, *c_out, x.n, *k)
+                    .with_batch(batch)
+                    .with_stride(*stride)
+                    .with_dilation(*dilation);
+                if *same_pad {
+                    p = p.with_same_pad();
+                }
+                let mut y = conv1d(backend, &x.data, w, Some(b), &p);
+                if *relu {
+                    relu_inplace(&mut y);
+                }
+                LayerOutput {
+                    channels: *c_out,
+                    n: p.n_out(),
+                    data: y,
+                }
+            }
+            Layer::Pool { kind, w, stride } => {
+                let p = Pool1dParams::new(x.channels, x.n, *w)
+                    .with_batch(batch)
+                    .with_stride(*stride);
+                LayerOutput {
+                    channels: x.channels,
+                    n: p.n_out(),
+                    data: pool1d(*kind, &x.data, &p),
+                }
+            }
+            Layer::Residual {
+                c,
+                k,
+                dilation,
+                w1,
+                b1,
+                w2,
+                b2,
+            } => {
+                assert_eq!(x.channels, *c, "residual channels");
+                let p = Conv1dParams::new(*c, *c, x.n, *k)
+                    .with_batch(batch)
+                    .with_dilation(*dilation)
+                    .with_same_pad();
+                let mut r = conv1d(backend, &x.data, w1, Some(b1), &p);
+                relu_inplace(&mut r);
+                let mut r = conv1d(backend, &r, w2, Some(b2), &p);
+                relu_inplace(&mut r);
+                let mut out = x.data.clone();
+                for (o, v) in out.iter_mut().zip(&r) {
+                    *o += v;
+                }
+                LayerOutput {
+                    channels: *c,
+                    n: x.n,
+                    data: out,
+                }
+            }
+            Layer::Dense {
+                in_features,
+                out,
+                relu,
+                w,
+                b,
+            } => {
+                let feat = x.channels * x.n;
+                assert_eq!(feat, *in_features, "dense input features");
+                let mut y = vec![0.0f32; batch * out];
+                for bi in 0..batch {
+                    let xrow = &x.data[bi * feat..][..feat];
+                    let yrow = &mut y[bi * out..][..*out];
+                    for (o, yv) in yrow.iter_mut().enumerate() {
+                        let wrow = &w[o * feat..][..feat];
+                        let mut acc = b[o];
+                        for (wv, xv) in wrow.iter().zip(xrow) {
+                            acc = wv.mul_add(*xv, acc);
+                        }
+                        *yv = acc;
+                    }
+                }
+                if *relu {
+                    relu_inplace(&mut y);
+                }
+                LayerOutput {
+                    channels: *out,
+                    n: 1,
+                    data: y,
+                }
+            }
+        }
+    }
+}
+
+fn relu_inplace(xs: &mut [f32]) {
+    for v in xs {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_layer_shapes_and_relu() {
+        let mut rng = Rng::new(4);
+        let layer = Layer::conv(&mut rng, 2, 3, 3, 1, 1, true, true);
+        let x = LayerOutput {
+            channels: 2,
+            n: 16,
+            data: rng.vec_uniform(2 * 16, -1.0, 1.0),
+        };
+        let y = layer.forward(&x, 1, ConvBackend::Direct);
+        assert_eq!((y.channels, y.n), layer.out_shape(2, 16));
+        assert!(y.data.iter().all(|v| *v >= 0.0), "relu clamps");
+    }
+
+    #[test]
+    fn pool_layer_halves() {
+        let layer = Layer::Pool {
+            kind: PoolKind::Max,
+            w: 2,
+            stride: 2,
+        };
+        assert_eq!(layer.out_shape(4, 16), (4, 8));
+        assert_eq!(layer.param_count(), 0);
+    }
+
+    #[test]
+    fn residual_preserves_shape() {
+        let mut rng = Rng::new(5);
+        let layer = Layer::residual(&mut rng, 3, 3, 2);
+        let x = LayerOutput {
+            channels: 3,
+            n: 20,
+            data: rng.vec_uniform(3 * 20, -1.0, 1.0),
+        };
+        let y = layer.forward(&x, 1, ConvBackend::Sliding);
+        assert_eq!((y.channels, y.n), (3, 20));
+    }
+
+    #[test]
+    fn dense_flattens() {
+        let mut rng = Rng::new(6);
+        let layer = Layer::dense(&mut rng, 12, 5, false);
+        let x = LayerOutput {
+            channels: 3,
+            n: 4,
+            data: rng.vec_uniform(2 * 12, -1.0, 1.0),
+        };
+        let y = layer.forward(&x, 2, ConvBackend::Direct);
+        assert_eq!(y.channels, 5);
+        assert_eq!(y.data.len(), 10);
+    }
+}

@@ -1,0 +1,100 @@
+//! Composable NN layer stack executed by the rust backends.
+//!
+//! This is the "framework" face of the library: a [`Model`] is built
+//! from a [`ModelConfig`] (the TOML config system), holds its parameters,
+//! and runs forward inference with a selectable convolution backend —
+//! `Sliding` (the paper's kernels), `Im2colGemm` (the baseline), or
+//! `Direct`. The serving coordinator batches requests into model calls;
+//! the PJRT path (AOT TCN artifacts) lives in [`crate::coordinator`] as
+//! a fourth backend, sharing the same request types.
+
+mod layers;
+mod model;
+
+pub use layers::{Layer, LayerOutput};
+pub use model::{Model, TensorSpec};
+
+#[cfg(test)]
+mod tests {
+    use crate::config::load_config;
+    use crate::conv::ConvBackend;
+    use crate::workload::Rng;
+
+    use super::*;
+
+    const CFG: &str = r#"
+[model]
+name = "t"
+c_in = 1
+seq_len = 64
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 5
+
+[layer.1]
+type = "residual"
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "conv"
+c_out = 2
+k = 3
+
+[layer.4]
+type = "dense"
+out = 3
+"#;
+
+    #[test]
+    fn model_builds_and_runs_all_backends() {
+        let (mc, _) = load_config(CFG).unwrap();
+        let mut rng = Rng::new(1);
+        let model = Model::init(&mc, &mut rng).unwrap();
+        let x = rng.vec_uniform(64, -1.0, 1.0);
+        let y_direct = model.forward(&x, 1, ConvBackend::Direct).unwrap();
+        assert_eq!(y_direct.shape, vec![1, 3]);
+        for backend in [ConvBackend::Sliding, ConvBackend::Im2colGemm, ConvBackend::SlidingPair] {
+            let y = model.forward(&x, 1, backend).unwrap();
+            assert_eq!(y.shape, y_direct.shape);
+            for (a, b) in y.data.iter().zip(&y_direct.data) {
+                assert!((a - b).abs() < 1e-3, "{backend:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_forward_rows_independent() {
+        let (mc, _) = load_config(CFG).unwrap();
+        let mut rng = Rng::new(2);
+        let model = Model::init(&mc, &mut rng).unwrap();
+        let x0 = rng.vec_uniform(64, -1.0, 1.0);
+        let x1 = rng.vec_uniform(64, -1.0, 1.0);
+        let mut xb = x0.clone();
+        xb.extend_from_slice(&x1);
+        let yb = model.forward(&xb, 2, ConvBackend::Sliding).unwrap();
+        let y1 = model.forward(&x1, 1, ConvBackend::Sliding).unwrap();
+        let per = y1.data.len();
+        for (a, b) in yb.data[per..].iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn param_count_reported() {
+        let (mc, _) = load_config(CFG).unwrap();
+        let mut rng = Rng::new(3);
+        let model = Model::init(&mc, &mut rng).unwrap();
+        assert!(model.param_count() > 0);
+        // conv0: 4*1*5+4 = 24 params at least
+        assert!(model.param_count() >= 24);
+    }
+}

@@ -1,0 +1,153 @@
+//! Model: an ordered layer stack built from [`ModelConfig`].
+
+use anyhow::{bail, Result};
+
+use crate::config::{LayerConfig, ModelConfig};
+use crate::conv::ConvBackend;
+use crate::pool::PoolKind;
+use crate::workload::Rng;
+
+use super::layers::{Layer, LayerOutput};
+
+/// Output tensor of a forward pass: `shape = [batch, features…]`.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A built model: layers + the (c, n) shape trace used for validation.
+pub struct Model {
+    pub name: String,
+    pub c_in: usize,
+    pub seq_len: usize,
+    layers: Vec<Layer>,
+    /// (channels, n) after each layer.
+    shape_trace: Vec<(usize, usize)>,
+}
+
+impl Model {
+    /// Build and initialize from config (He init via the given RNG).
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Result<Self> {
+        let mut layers = Vec::new();
+        let mut c = cfg.c_in;
+        let mut n = cfg.seq_len;
+        let mut trace = Vec::new();
+        for (idx, lc) in cfg.layers.iter().enumerate() {
+            let layer = match lc {
+                LayerConfig::Conv {
+                    c_out,
+                    k,
+                    stride,
+                    dilation,
+                    same_pad,
+                    relu,
+                } => Layer::conv(rng, c, *c_out, *k, *stride, *dilation, *same_pad, *relu),
+                LayerConfig::Pool { kind, w, stride } => {
+                    let Some(kind) = PoolKind::parse(kind) else {
+                        bail!("layer {idx}: unknown pool kind {kind:?}");
+                    };
+                    Layer::Pool {
+                        kind,
+                        w: *w,
+                        stride: *stride,
+                    }
+                }
+                LayerConfig::Residual { k, dilation } => Layer::residual(rng, c, *k, *dilation),
+                LayerConfig::Dense { out, relu } => Layer::dense(rng, c * n, *out, *relu),
+            };
+            let (c2, n2) = layer.out_shape(c, n);
+            if n2 == 0 {
+                bail!("layer {idx} produces empty output (c={c}, n={n})");
+            }
+            c = c2;
+            n = n2;
+            trace.push((c, n));
+            layers.push(layer);
+        }
+        Ok(Self {
+            name: cfg.name.clone(),
+            c_in: cfg.c_in,
+            seq_len: cfg.seq_len,
+            layers,
+            shape_trace: trace,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Final (channels, n) shape per input row.
+    pub fn out_shape(&self) -> (usize, usize) {
+        *self.shape_trace.last().unwrap_or(&(self.c_in, self.seq_len))
+    }
+
+    /// Forward a batch: `x` is `[batch, c_in, seq_len]` flattened.
+    pub fn forward(&self, x: &[f32], batch: usize, backend: ConvBackend) -> Result<TensorSpec> {
+        let expect = batch * self.c_in * self.seq_len;
+        if x.len() != expect {
+            bail!(
+                "input length {} != batch {} × c_in {} × seq_len {}",
+                x.len(),
+                batch,
+                self.c_in,
+                self.seq_len
+            );
+        }
+        let mut act = LayerOutput {
+            channels: self.c_in,
+            n: self.seq_len,
+            data: x.to_vec(),
+        };
+        for layer in &self.layers {
+            act = layer.forward(&act, batch, backend);
+        }
+        let shape = if act.n == 1 {
+            vec![batch, act.channels]
+        } else {
+            vec![batch, act.channels, act.n]
+        };
+        Ok(TensorSpec {
+            shape,
+            data: act.data,
+        })
+    }
+
+    /// Total MACs per input row (for throughput reporting).
+    pub fn macs_per_row(&self) -> u64 {
+        let mut c = self.c_in;
+        let mut n = self.seq_len;
+        let mut macs = 0u64;
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv {
+                    c_out, k, ..
+                } => {
+                    let (c2, n2) = layer.out_shape(c, n);
+                    macs += (c2 * n2 * c * k) as u64;
+                    c = *c_out;
+                    n = n2;
+                }
+                Layer::Residual { k, .. } => {
+                    macs += 2 * (c * n * c * k) as u64;
+                }
+                Layer::Dense { in_features, out, .. } => {
+                    macs += (*in_features * *out) as u64;
+                    c = *out;
+                    n = 1;
+                }
+                Layer::Pool { .. } => {
+                    let (c2, n2) = layer.out_shape(c, n);
+                    c = c2;
+                    n = n2;
+                }
+            }
+        }
+        macs
+    }
+}

@@ -1,0 +1,224 @@
+//! The paper's Eq. 5–9: dot product as a prefix sum.
+//!
+//! Given vectors `a` (filter) and `b` (signal window), the dot product
+//! `c = Σ aᵢ·bᵢ` is re-expressed as a prefix sum over pairs
+//! `γᵢ = (uᵢ, vᵢ)` with the associative (but non-commutative) operator
+//!
+//! ```text
+//! (u₁, v₁) ⊕ (u₂, v₂) = (u₁·u₂,  u₂·v₁ + v₂)          (Eq. 8)
+//! ```
+//!
+//! This is the classic first-order linear-recurrence semiring (Blelloch
+//! 1993): scanning it evaluates `vₖ₊₁' = uₖ₊₁·vₖ' + vₖ₊₁`, i.e. a Horner
+//! chain of fused multiply-adds. With `uᵢ = αᵢ₋₁/αᵢ` (the filter-ratio
+//! encoding of Eq. 7) the bottom lane of the last prefix equals the dot
+//! product, computable in `log(M)` parallel FMA steps.
+
+use super::AssocOp;
+
+/// A `(u, v)` pair element (paper Eq. 7).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pair {
+    /// Multiplier component (filter-ratio chain).
+    pub u: f32,
+    /// Accumulator component.
+    pub v: f32,
+}
+
+impl Pair {
+    #[inline(always)]
+    pub const fn new(u: f32, v: f32) -> Self {
+        Self { u, v }
+    }
+}
+
+/// Eq. 8 operator. Associative, non-commutative.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvPair;
+
+impl AssocOp for ConvPair {
+    type Elem = Pair;
+
+    /// Identity is `(1, 0)`: `(1,0)⊕(u,v) = (u, v)` and
+    /// `(u,v)⊕(1,0) = (u, 1·v+0) = (u, v)`.
+    #[inline(always)]
+    fn identity(&self) -> Pair {
+        Pair::new(1.0, 0.0)
+    }
+
+    /// `(u₁,v₁) ⊕ (u₂,v₂) = (u₁u₂, u₂v₁ + v₂)` — one mul + one FMA.
+    #[inline(always)]
+    fn combine(&self, a: Pair, b: Pair) -> Pair {
+        Pair::new(a.u * b.u, b.u.mul_add(a.v, b.v))
+    }
+
+    fn is_commutative(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "conv_pair"
+    }
+}
+
+/// Encode filter `a` and signal window `b` into the γ sequence of Eq. 7.
+///
+/// Zero filter taps are patched per Eq. 5: `αᵢ = 1, βᵢ = 0` wherever
+/// `aᵢ = 0`, which leaves the dot product unchanged while keeping the
+/// ratios `αᵢ₋₁/αᵢ` finite.
+///
+/// Returns `M + 1` pairs; scanning them with [`ConvPair`] puts the dot
+/// product `Σ aᵢbᵢ` in the `v` component of the final prefix (times the
+/// trailing `u = 1` normalization pair).
+pub fn encode_gamma(a: &[f32], b: &[f32]) -> Vec<Pair> {
+    assert_eq!(a.len(), b.len(), "filter/window length mismatch");
+    let m = a.len();
+    // Eq. 5 patch.
+    let alpha = |i: usize| -> f32 {
+        if a[i] == 0.0 {
+            1.0
+        } else {
+            a[i]
+        }
+    };
+    let beta = |i: usize| -> f32 {
+        if a[i] == 0.0 {
+            0.0
+        } else {
+            b[i]
+        }
+    };
+    let mut gamma = Vec::with_capacity(m + 1);
+    for i in 0..=m {
+        let u = if i == 0 {
+            1.0
+        } else if i < m {
+            alpha(i - 1) / alpha(i)
+        } else {
+            // Final pair: u = α_{M-1}/1 folds the last ratio chain back to
+            // the raw dot product; v = 0 per Eq. 7.
+            alpha(m - 1)
+        };
+        let v = if i < m { beta(i) } else { 0.0 };
+        gamma.push(Pair::new(u, v));
+    }
+    gamma
+}
+
+/// Evaluate a dot product through the Eq. 7–9 prefix-sum formulation.
+///
+/// The γ encoding multiplies each β by the *remaining* ratio chain; after
+/// the closing pair (u = α_{M-1}, v = 0) every term has been re-scaled by
+/// exactly its own α, recovering `Σ αᵢβᵢ = Σ aᵢbᵢ` (Eq. 6).
+pub fn dot_via_prefix(a: &[f32], b: &[f32]) -> f32 {
+    let gamma = encode_gamma(a, b);
+    let op = ConvPair;
+    let mut acc = op.identity();
+    for g in &gamma {
+        acc = op.combine(acc, *g);
+    }
+    acc.v
+}
+
+/// Reference dot product (plain accumulation) for cross-checks.
+pub fn dot_reference(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Evaluate the γ scan with a log-depth tree reduce (paper: "δ_M could be
+/// evaluated using reduce algorithm in log(M) parallel steps").
+pub fn dot_via_tree_reduce(a: &[f32], b: &[f32]) -> f32 {
+    let mut gamma = encode_gamma(a, b);
+    let op = ConvPair;
+    let mut n = gamma.len();
+    while n > 1 {
+        let half = n / 2;
+        for i in 0..half {
+            gamma[i] = op.combine(gamma[2 * i], gamma[2 * i + 1]);
+        }
+        if n % 2 == 1 {
+            gamma[half] = gamma[n - 1];
+            n = half + 1;
+        } else {
+            n = half;
+        }
+    }
+    gamma[0].v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32) {
+        let tol = 1e-4 * (1.0 + a.abs().max(b.abs()));
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn identity_laws() {
+        let op = ConvPair;
+        let x = Pair::new(2.5, -3.0);
+        assert_eq!(op.combine(op.identity(), x), x);
+        assert_eq!(op.combine(x, op.identity()), x);
+    }
+
+    #[test]
+    fn associativity_exact_cases() {
+        let op = ConvPair;
+        let a = Pair::new(2.0, 1.0);
+        let b = Pair::new(0.5, -4.0);
+        let c = Pair::new(4.0, 3.0);
+        let lhs = op.combine(a, op.combine(b, c));
+        let rhs = op.combine(op.combine(a, b), c);
+        assert_close(lhs.u, rhs.u);
+        assert_close(lhs.v, rhs.v);
+    }
+
+    #[test]
+    fn dot_simple() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_close(dot_via_prefix(&a, &b), 32.0);
+        assert_close(dot_via_tree_reduce(&a, &b), 32.0);
+    }
+
+    #[test]
+    fn dot_with_zero_taps() {
+        // Eq. 5: zero filter entries must not blow up the ratio chain.
+        let a = [0.0, 2.0, 0.0, -1.5];
+        let b = [9.0, 3.0, 7.0, 2.0];
+        assert_close(dot_via_prefix(&a, &b), dot_reference(&a, &b));
+        assert_close(dot_via_tree_reduce(&a, &b), dot_reference(&a, &b));
+    }
+
+    #[test]
+    fn dot_all_zero_filter() {
+        let a = [0.0; 5];
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_close(dot_via_prefix(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn dot_single_element() {
+        assert_close(dot_via_prefix(&[3.0], &[7.0]), 21.0);
+    }
+
+    #[test]
+    fn dot_matches_reference_many() {
+        // Deterministic pseudo-random cross-check.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64) as f32 * 4.0 - 2.0
+        };
+        for m in [1usize, 2, 3, 7, 16, 33] {
+            let a: Vec<f32> = (0..m).map(|_| next()).collect();
+            let b: Vec<f32> = (0..m).map(|_| next()).collect();
+            assert_close(dot_via_prefix(&a, &b), dot_reference(&a, &b));
+            assert_close(dot_via_tree_reduce(&a, &b), dot_reference(&a, &b));
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Operator algebra for sliding-window sums.
+//!
+//! The paper's algorithm family is generic over a binary operator `⊕`.
+//! Everything below implements [`AssocOp`]: an *associative* operator with
+//! an identity element, over a copyable element type. Associativity is what
+//! licenses the `O(log w)`-depth prefix/suffix evaluation (paper §2.1–2.2);
+//! the plain `O(w)`-depth variants of the algorithms only need a monoid.
+//!
+//! The star of the show is [`ConvPair`] — the pair operator of paper Eq. 8
+//! that turns a dot product into a prefix sum, which is what lets
+//! convolution ride the same sliding-sum machinery as pooling.
+
+mod conv_pair;
+pub use conv_pair::{dot_reference, dot_via_prefix, dot_via_tree_reduce, encode_gamma, ConvPair, Pair};
+
+/// An associative binary operator with identity, over element type `T`.
+///
+/// Laws (checked by property tests in `rust/tests/proptests.rs`):
+/// * `combine(identity(), x) == x == combine(x, identity())`
+/// * `combine(a, combine(b, c)) == combine(combine(a, b), c)`
+///   (exactly for lattice/integer ops; up to FP rounding for `+`/`×`).
+pub trait AssocOp: Copy + 'static {
+    /// Element type flowing through the operator.
+    type Elem: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static;
+
+    /// Identity element: `identity ⊕ x = x ⊕ identity = x`.
+    fn identity(&self) -> Self::Elem;
+
+    /// The operator `⊕`.
+    fn combine(&self, a: Self::Elem, b: Self::Elem) -> Self::Elem;
+
+    /// Whether `⊕` also commutes. Commutativity is *not* required by any
+    /// algorithm here (Eq. 8's pair operator is non-commutative), but the
+    /// dispatcher may exploit it for cheaper suffix-sum construction.
+    fn is_commutative(&self) -> bool {
+        false
+    }
+
+    /// Whether `x ⊕ x = x` (max/min). Idempotence lets the log-depth
+    /// sliding variants cover any window size with two overlapping
+    /// power-of-two windows instead of a full binary decomposition.
+    fn is_idempotent(&self) -> bool {
+        false
+    }
+
+    /// Human-readable name for bench tables and diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+/// Scalar element suitable for the arithmetic operators below.
+pub trait Scalar:
+    Copy + PartialEq + PartialOrd + std::fmt::Debug + Send + Sync + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Smallest representable value (identity for `max`).
+    const MIN_VALUE: Self;
+    /// Largest representable value (identity for `min`).
+    const MAX_VALUE: Self;
+    fn add(self, rhs: Self) -> Self;
+    fn mul(self, rhs: Self) -> Self;
+    fn maximum(self, rhs: Self) -> Self;
+    fn minimum(self, rhs: Self) -> Self;
+}
+
+macro_rules! impl_scalar_float {
+    ($t:ty) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const MIN_VALUE: Self = <$t>::NEG_INFINITY;
+            const MAX_VALUE: Self = <$t>::INFINITY;
+            #[inline(always)]
+            fn add(self, rhs: Self) -> Self {
+                self + rhs
+            }
+            #[inline(always)]
+            fn mul(self, rhs: Self) -> Self {
+                self * rhs
+            }
+            #[inline(always)]
+            fn maximum(self, rhs: Self) -> Self {
+                if self > rhs { self } else { rhs }
+            }
+            #[inline(always)]
+            fn minimum(self, rhs: Self) -> Self {
+                if self < rhs { self } else { rhs }
+            }
+        }
+    };
+}
+
+macro_rules! impl_scalar_int {
+    ($t:ty) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0;
+            const ONE: Self = 1;
+            const MIN_VALUE: Self = <$t>::MIN;
+            const MAX_VALUE: Self = <$t>::MAX;
+            #[inline(always)]
+            fn add(self, rhs: Self) -> Self {
+                self.wrapping_add(rhs)
+            }
+            #[inline(always)]
+            fn mul(self, rhs: Self) -> Self {
+                self.wrapping_mul(rhs)
+            }
+            #[inline(always)]
+            fn maximum(self, rhs: Self) -> Self {
+                if self > rhs { self } else { rhs }
+            }
+            #[inline(always)]
+            fn minimum(self, rhs: Self) -> Self {
+                if self < rhs { self } else { rhs }
+            }
+        }
+    };
+}
+
+impl_scalar_float!(f32);
+impl_scalar_float!(f64);
+impl_scalar_int!(i32);
+impl_scalar_int!(i64);
+impl_scalar_int!(u32);
+impl_scalar_int!(u64);
+
+/// `⊕ = +` — the average-pooling / plain windowed-sum operator (paper §2.3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AddOp<T>(std::marker::PhantomData<T>);
+
+impl<T> AddOp<T> {
+    pub const fn new() -> Self {
+        Self(std::marker::PhantomData)
+    }
+}
+
+impl<T: Scalar> AssocOp for AddOp<T> {
+    type Elem = T;
+    #[inline(always)]
+    fn identity(&self) -> T {
+        T::ZERO
+    }
+    #[inline(always)]
+    fn combine(&self, a: T, b: T) -> T {
+        a.add(b)
+    }
+    fn is_commutative(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "add"
+    }
+}
+
+/// `⊕ = ×` — product windows (used by tests as a second commutative monoid).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MulOp<T>(std::marker::PhantomData<T>);
+
+impl<T> MulOp<T> {
+    pub const fn new() -> Self {
+        Self(std::marker::PhantomData)
+    }
+}
+
+impl<T: Scalar> AssocOp for MulOp<T> {
+    type Elem = T;
+    #[inline(always)]
+    fn identity(&self) -> T {
+        T::ONE
+    }
+    #[inline(always)]
+    fn combine(&self, a: T, b: T) -> T {
+        a.mul(b)
+    }
+    fn is_commutative(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "mul"
+    }
+}
+
+/// `⊕ = max` — the max-pooling operator (paper §2.3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxOp<T>(std::marker::PhantomData<T>);
+
+impl<T> MaxOp<T> {
+    pub const fn new() -> Self {
+        Self(std::marker::PhantomData)
+    }
+}
+
+impl<T: Scalar> AssocOp for MaxOp<T> {
+    type Elem = T;
+    #[inline(always)]
+    fn identity(&self) -> T {
+        T::MIN_VALUE
+    }
+    #[inline(always)]
+    fn combine(&self, a: T, b: T) -> T {
+        a.maximum(b)
+    }
+    fn is_commutative(&self) -> bool {
+        true
+    }
+    fn is_idempotent(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "max"
+    }
+}
+
+/// `⊕ = min` — sliding-window minimum, the minimizer-seed operator the
+/// paper's §3 calls out ("since min is an associative operator...").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinOp<T>(std::marker::PhantomData<T>);
+
+impl<T> MinOp<T> {
+    pub const fn new() -> Self {
+        Self(std::marker::PhantomData)
+    }
+}
+
+impl<T: Scalar> AssocOp for MinOp<T> {
+    type Elem = T;
+    #[inline(always)]
+    fn identity(&self) -> T {
+        T::MAX_VALUE
+    }
+    #[inline(always)]
+    fn combine(&self, a: T, b: T) -> T {
+        a.minimum(b)
+    }
+    fn is_commutative(&self) -> bool {
+        true
+    }
+    fn is_idempotent(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "min"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_identity_and_combine() {
+        let op = AddOp::<f32>::new();
+        assert_eq!(op.identity(), 0.0);
+        assert_eq!(op.combine(2.0, 3.5), 5.5);
+        assert!(op.is_commutative());
+    }
+
+    #[test]
+    fn mul_identity_and_combine() {
+        let op = MulOp::<f64>::new();
+        assert_eq!(op.identity(), 1.0);
+        assert_eq!(op.combine(2.0, 3.5), 7.0);
+    }
+
+    #[test]
+    fn max_identity_absorbs() {
+        let op = MaxOp::<f32>::new();
+        assert_eq!(op.combine(op.identity(), -1e30), -1e30);
+        assert_eq!(op.combine(3.0, 7.0), 7.0);
+    }
+
+    #[test]
+    fn min_identity_absorbs() {
+        let op = MinOp::<i32>::new();
+        assert_eq!(op.combine(op.identity(), i32::MAX - 1), i32::MAX - 1);
+        assert_eq!(op.combine(3, 7), 3);
+    }
+
+    #[test]
+    fn int_ops_associative_exactly() {
+        let op = AddOp::<i64>::new();
+        for (a, b, c) in [(1i64, 2, 3), (-5, 7, 11), (1 << 40, 3, -9)] {
+            assert_eq!(
+                op.combine(a, op.combine(b, c)),
+                op.combine(op.combine(a, b), c)
+            );
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(AddOp::<f32>::new().name(), "add");
+        assert_eq!(MaxOp::<f32>::new().name(), "max");
+        assert_eq!(MinOp::<f32>::new().name(), "min");
+        assert_eq!(MulOp::<f32>::new().name(), "mul");
+    }
+}

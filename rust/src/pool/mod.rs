@@ -1,0 +1,314 @@
+//! Pooling operators as sliding window sums (paper §2.3).
+//!
+//! "The average pooling operator is trivially the sliding window sum with
+//! the associative operator +. By analogy, the max pooling operator is a
+//! sliding window sum with the associative operator max."
+//!
+//! Strided pooling (the common DNN case, stride = w) decimates the dense
+//! sliding output; stride < w reuses overlapping windows — exactly where
+//! the sliding formulation beats recomputation. Also here:
+//! [`sliding_minimum`], the minimizer-seed primitive from the
+//! bioinformatics work the algorithms originated in (paper §2.2, [11]).
+
+mod pool2d;
+
+pub use pool2d::{pool2d, pool2d_naive, Pool2dParams};
+
+use crate::ops::{AddOp, MaxOp, MinOp};
+use crate::sliding::{self, Boundary};
+
+/// Pooling kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Avg,
+    Max,
+    Min,
+}
+
+impl PoolKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolKind::Avg => "avg",
+            PoolKind::Max => "max",
+            PoolKind::Min => "min",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "avg" => Some(PoolKind::Avg),
+            "max" => Some(PoolKind::Max),
+            "min" => Some(PoolKind::Min),
+            _ => None,
+        }
+    }
+}
+
+/// Pooling parameters over `[batch, channels, n]` tensors.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool1dParams {
+    pub batch: usize,
+    pub channels: usize,
+    pub n: usize,
+    pub w: usize,
+    pub stride: usize,
+    pub boundary: Boundary,
+}
+
+impl Pool1dParams {
+    pub fn new(channels: usize, n: usize, w: usize) -> Self {
+        Self {
+            batch: 1,
+            channels,
+            n,
+            w,
+            stride: 1,
+            boundary: Boundary::Valid,
+        }
+    }
+
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn with_stride(mut self, s: usize) -> Self {
+        assert!(s >= 1);
+        self.stride = s;
+        self
+    }
+
+    pub fn with_boundary(mut self, m: Boundary) -> Self {
+        self.boundary = m;
+        self
+    }
+
+    /// Dense (stride-1) output length under the boundary mode.
+    pub fn dense_len(&self) -> usize {
+        sliding::boundary::output_len(self.n, self.w, self.boundary)
+    }
+
+    /// Output length after striding.
+    pub fn n_out(&self) -> usize {
+        let d = self.dense_len();
+        if d == 0 {
+            0
+        } else {
+            (d - 1) / self.stride + 1
+        }
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.batch * self.channels * self.n_out()
+    }
+}
+
+/// 1-D pooling via the sliding-sum machinery (auto-dispatched algorithm,
+/// P = 64 logical lanes). Average pooling divides by the window size
+/// *after* the windowed sum — identical to frameworks'
+/// `count_include_pad` semantics under zero padding.
+pub fn pool1d(kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
+    assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
+    let n_out = p.n_out();
+    let mut y = vec![0.0f32; p.y_len()];
+    for b in 0..p.batch {
+        for c in 0..p.channels {
+            let xrow = &x[(b * p.channels + c) * p.n..][..p.n];
+            let dense = pool1d_row_dense(kind, xrow, p.w, p.boundary);
+            let yrow = &mut y[(b * p.channels + c) * n_out..][..n_out];
+            for (t, v) in yrow.iter_mut().enumerate() {
+                *v = dense[t * p.stride];
+            }
+        }
+    }
+    y
+}
+
+/// Dense stride-1 pooling of one row.
+pub fn pool1d_row_dense(kind: PoolKind, xrow: &[f32], w: usize, mode: Boundary) -> Vec<f32> {
+    const P: usize = 64;
+    match kind {
+        PoolKind::Avg => {
+            let op = AddOp::<f32>::new();
+            let ext = sliding::extend(op, xrow, w, mode);
+            let mut sums = sliding::auto(op, &ext, w, P);
+            let inv = 1.0 / w as f32;
+            for v in &mut sums {
+                *v *= inv;
+            }
+            sums
+        }
+        PoolKind::Max => {
+            let op = MaxOp::<f32>::new();
+            let ext = sliding::extend(op, xrow, w, mode);
+            sliding::auto(op, &ext, w, P)
+        }
+        PoolKind::Min => {
+            let op = MinOp::<f32>::new();
+            let ext = sliding::extend(op, xrow, w, mode);
+            sliding::auto(op, &ext, w, P)
+        }
+    }
+}
+
+/// Naive pooling baseline (recompute every window) for benches/tests.
+pub fn pool1d_naive(kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
+    assert_eq!(x.len(), p.batch * p.channels * p.n);
+    let n_out = p.n_out();
+    let mut y = vec![0.0f32; p.y_len()];
+    for b in 0..p.batch {
+        for c in 0..p.channels {
+            let xrow = &x[(b * p.channels + c) * p.n..][..p.n];
+            let dense = match kind {
+                PoolKind::Avg => {
+                    let op = AddOp::<f32>::new();
+                    let ext = sliding::extend(op, xrow, p.w, p.boundary);
+                    let mut s = sliding::sliding_naive(op, &ext, p.w);
+                    for v in &mut s {
+                        *v /= p.w as f32;
+                    }
+                    s
+                }
+                PoolKind::Max => {
+                    let op = MaxOp::<f32>::new();
+                    let ext = sliding::extend(op, xrow, p.w, p.boundary);
+                    sliding::sliding_naive(op, &ext, p.w)
+                }
+                PoolKind::Min => {
+                    let op = MinOp::<f32>::new();
+                    let ext = sliding::extend(op, xrow, p.w, p.boundary);
+                    sliding::sliding_naive(op, &ext, p.w)
+                }
+            };
+            let yrow = &mut y[(b * p.channels + c) * n_out..][..n_out];
+            for (t, v) in yrow.iter_mut().enumerate() {
+                *v = dense[t * p.stride];
+            }
+        }
+    }
+    y
+}
+
+/// Sliding-window minimum over integer hash values — the minimizer-seed
+/// primitive ([11]). Returns, for every window, the minimum value; the
+/// classic genomics use selects the *position* of the minimum, recovered
+/// here as well for the example binary.
+pub fn sliding_minimum(xs: &[u64], w: usize) -> Vec<u64> {
+    use crate::ops::MinOp;
+    sliding::auto(MinOp::<u64>::new(), xs, w, 64)
+}
+
+/// Positions of each window's minimum (leftmost tie-break) — minimizer
+/// sampling. O(N) via monotone deque, the classical streaming algorithm,
+/// used to cross-check the sliding-sum variant in tests.
+pub fn minimizer_positions(xs: &[u64], w: usize) -> Vec<usize> {
+    let n = xs.len();
+    if w == 0 || n < w {
+        return Vec::new();
+    }
+    let mut deque: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let mut out = Vec::with_capacity(n - w + 1);
+    for i in 0..n {
+        while let Some(&back) = deque.back() {
+            if xs[back] > xs[i] {
+                deque.pop_back();
+            } else {
+                break;
+            }
+        }
+        deque.push_back(i);
+        if let Some(&front) = deque.front() {
+            if front + w <= i {
+                deque.pop_front();
+            }
+        }
+        if i + 1 >= w {
+            out.push(*deque.front().unwrap());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_pool_basic() {
+        let p = Pool1dParams::new(1, 5, 2);
+        let y = pool1d(PoolKind::Avg, &[2.0, 4.0, 6.0, 8.0, 10.0], &p);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn max_pool_stride_equals_window() {
+        let p = Pool1dParams::new(1, 6, 2).with_stride(2);
+        let y = pool1d(PoolKind::Max, &[1.0, 5.0, 2.0, 2.0, 9.0, 0.0], &p);
+        assert_eq!(y, vec![5.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn same_boundary_preserves_len() {
+        let p = Pool1dParams::new(1, 7, 3).with_boundary(Boundary::SamePad);
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let y = pool1d(PoolKind::Max, &x, &p);
+        assert_eq!(y.len(), 7);
+        assert_eq!(y[0], 2.0); // max(-inf, 1, 2)
+        assert_eq!(y[6], 7.0);
+    }
+
+    #[test]
+    fn matches_naive_sweep() {
+        let x: Vec<f32> = (0..200).map(|i| ((i * 31 % 53) as f32) - 26.0).collect();
+        for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+            for w in [2usize, 3, 5, 8, 16] {
+                for stride in [1usize, 2, 3] {
+                    for mode in [Boundary::Valid, Boundary::SamePad] {
+                        let p = Pool1dParams::new(1, 200, w).with_stride(stride).with_boundary(mode);
+                        let a = pool1d(kind, &x, &p);
+                        let b = pool1d_naive(kind, &x, &p);
+                        assert_eq!(a.len(), b.len());
+                        for (u, v) in a.iter().zip(&b) {
+                            assert!((u - v).abs() < 1e-3, "{kind:?} w={w} s={stride} {mode:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_batched() {
+        let p = Pool1dParams::new(2, 4, 2).with_batch(2);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let y = pool1d(PoolKind::Avg, &x, &p);
+        assert_eq!(y.len(), 2 * 2 * 3);
+        assert_eq!(y[0], 0.5); // channel 0 row [0,1,2,3] → [0.5,1.5,2.5]
+        assert_eq!(y[3], 4.5); // channel 1 row starts at 4
+    }
+
+    #[test]
+    fn sliding_minimum_matches_positions() {
+        let xs: Vec<u64> = (0..100).map(|i| (i * 2654435761u64) % 1000).collect();
+        let mins = sliding_minimum(&xs, 7);
+        let pos = minimizer_positions(&xs, 7);
+        assert_eq!(mins.len(), pos.len());
+        for (m, p_) in mins.iter().zip(&pos) {
+            assert_eq!(*m, xs[*p_]);
+        }
+    }
+
+    #[test]
+    fn minimizer_positions_leftmost_tie() {
+        let xs = [5u64, 1, 1, 5, 5];
+        let pos = minimizer_positions(&xs, 3);
+        assert_eq!(pos, vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn empty_window_edge() {
+        assert!(minimizer_positions(&[1, 2], 3).is_empty());
+        let p = Pool1dParams::new(1, 2, 3);
+        assert_eq!(p.n_out(), 0);
+    }
+}

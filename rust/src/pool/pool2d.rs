@@ -1,0 +1,217 @@
+//! 2-D pooling via *separable* sliding sums: max/avg pooling windows are
+//! separable operators (`max` over a rectangle = `max` over rows then
+//! over columns; sums likewise), so a `wh×ww` pool is two 1-D sliding
+//! passes — `O(HW·(log wh + log ww))` instead of `O(HW·wh·ww)`. This is
+//! the multi-dimensional extension sketched in the paper's §5, where the
+//! arithmetic-per-load ratio "improves in the multiple dimensions".
+
+use crate::ops::{AddOp, MaxOp, MinOp};
+use crate::sliding;
+
+use super::PoolKind;
+
+/// 2-D pooling parameters over `[batch, c, h, w]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool2dParams {
+    pub batch: usize,
+    pub channels: usize,
+    pub h: usize,
+    pub w: usize,
+    pub wh: usize,
+    pub ww: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+}
+
+impl Pool2dParams {
+    pub fn new(channels: usize, h: usize, w: usize, wh: usize, ww: usize) -> Self {
+        Self {
+            batch: 1,
+            channels,
+            h,
+            w,
+            wh,
+            ww,
+            stride_h: wh,
+            stride_w: ww,
+        }
+    }
+
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn with_strides(mut self, sh: usize, sw: usize) -> Self {
+        assert!(sh >= 1 && sw >= 1);
+        self.stride_h = sh;
+        self.stride_w = sw;
+        self
+    }
+
+    pub fn h_out(&self) -> usize {
+        if self.h < self.wh {
+            0
+        } else {
+            (self.h - self.wh) / self.stride_h + 1
+        }
+    }
+
+    pub fn w_out(&self) -> usize {
+        if self.w < self.ww {
+            0
+        } else {
+            (self.w - self.ww) / self.stride_w + 1
+        }
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.batch * self.channels * self.h_out() * self.w_out()
+    }
+}
+
+/// Separable 2-D pooling (valid mode).
+pub fn pool2d(kind: PoolKind, x: &[f32], p: &Pool2dParams) -> Vec<f32> {
+    assert_eq!(x.len(), p.batch * p.channels * p.h * p.w, "input shape");
+    let (h_out, w_out) = (p.h_out(), p.w_out());
+    let mut y = vec![0.0f32; p.y_len()];
+    if h_out == 0 || w_out == 0 {
+        return y;
+    }
+    let w_dense = p.w - p.ww + 1;
+
+    // Row pass buffer: per plane, dense column windows for every row.
+    let mut rowbuf = vec![0.0f32; p.h * w_dense];
+    // Column gather buffer for the vertical pass.
+    let mut col = vec![0.0f32; p.h];
+
+    for b in 0..p.batch {
+        for c in 0..p.channels {
+            let plane = &x[((b * p.channels + c) * p.h) * p.w..][..p.h * p.w];
+            // Horizontal 1-D sliding pass per row.
+            for r in 0..p.h {
+                let row = &plane[r * p.w..][..p.w];
+                let dense = row_windows(kind, row, p.ww);
+                rowbuf[r * w_dense..(r + 1) * w_dense].copy_from_slice(&dense);
+            }
+            // Vertical 1-D sliding pass per (strided) output column.
+            let out_plane = &mut y[((b * p.channels + c) * h_out) * w_out..][..h_out * w_out];
+            for oc in 0..w_out {
+                let src_col = oc * p.stride_w;
+                for r in 0..p.h {
+                    col[r] = rowbuf[r * w_dense + src_col];
+                }
+                let dense_v = row_windows(kind, &col, p.wh);
+                for or in 0..h_out {
+                    out_plane[or * w_out + oc] = dense_v[or * p.stride_h];
+                }
+            }
+            // avg: normalize by window area (row pass summed, col pass summed).
+            if kind == PoolKind::Avg {
+                let inv = 1.0 / (p.wh * p.ww) as f32;
+                for v in out_plane.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Dense 1-D windows for the separable passes (sums stay unnormalized
+/// for avg; normalization happens once at the end).
+fn row_windows(kind: PoolKind, row: &[f32], w: usize) -> Vec<f32> {
+    match kind {
+        PoolKind::Avg => sliding::auto(AddOp::<f32>::new(), row, w, 64),
+        PoolKind::Max => sliding::auto(MaxOp::<f32>::new(), row, w, 64),
+        PoolKind::Min => sliding::auto(MinOp::<f32>::new(), row, w, 64),
+    }
+}
+
+/// Naive 2-D pooling oracle.
+pub fn pool2d_naive(kind: PoolKind, x: &[f32], p: &Pool2dParams) -> Vec<f32> {
+    assert_eq!(x.len(), p.batch * p.channels * p.h * p.w);
+    let (h_out, w_out) = (p.h_out(), p.w_out());
+    let mut y = vec![0.0f32; p.y_len()];
+    for b in 0..p.batch {
+        for c in 0..p.channels {
+            let plane = &x[((b * p.channels + c) * p.h) * p.w..][..p.h * p.w];
+            for or in 0..h_out {
+                for oc in 0..w_out {
+                    let mut acc = match kind {
+                        PoolKind::Avg => 0.0f32,
+                        PoolKind::Max => f32::NEG_INFINITY,
+                        PoolKind::Min => f32::INFINITY,
+                    };
+                    for dy in 0..p.wh {
+                        for dx in 0..p.ww {
+                            let v = plane
+                                [(or * p.stride_h + dy) * p.w + oc * p.stride_w + dx];
+                            acc = match kind {
+                                PoolKind::Avg => acc + v,
+                                PoolKind::Max => acc.max(v),
+                                PoolKind::Min => acc.min(v),
+                            };
+                        }
+                    }
+                    if kind == PoolKind::Avg {
+                        acc /= (p.wh * p.ww) as f32;
+                    }
+                    y[((b * p.channels + c) * h_out + or) * w_out + oc] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    #[test]
+    fn known_2x2_max() {
+        let p = Pool2dParams::new(1, 4, 4, 2, 2);
+        #[rustfmt::skip]
+        let x = [
+            1.0f32, 2.0, 5.0, 1.0,
+            3.0,    4.0, 0.0, 2.0,
+            9.0,    0.0, 1.0, 1.0,
+            0.0,    8.0, 1.0, 7.0,
+        ];
+        let y = pool2d(PoolKind::Max, &x, &p);
+        assert_eq!(y, vec![4.0, 5.0, 9.0, 7.0]);
+    }
+
+    #[test]
+    fn matches_naive_sweep() {
+        let mut rng = Rng::new(0x2DF);
+        for (h, w, wh, ww, sh, sw) in [
+            (8usize, 8usize, 2usize, 2usize, 2usize, 2usize),
+            (9, 7, 3, 2, 1, 1),
+            (16, 16, 4, 4, 4, 4),
+            (12, 20, 3, 5, 2, 3),
+            (6, 6, 6, 6, 1, 1),
+        ] {
+            let p = Pool2dParams::new(2, h, w, wh, ww)
+                .with_batch(2)
+                .with_strides(sh, sw);
+            let x = rng.vec_uniform(2 * 2 * h * w, -3.0, 3.0);
+            for kind in [PoolKind::Max, PoolKind::Avg, PoolKind::Min] {
+                let a = pool2d(kind, &x, &p);
+                let b = pool2d_naive(kind, &x, &p);
+                assert_eq!(a.len(), b.len(), "{kind:?} {h}x{w}");
+                for (u, v) in a.iter().zip(&b) {
+                    assert!((u - v).abs() < 1e-3, "{kind:?} {h}x{w}/{wh}x{ww}: {u} vs {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn too_small_input_is_empty() {
+        let p = Pool2dParams::new(1, 2, 2, 3, 3);
+        assert_eq!(pool2d(PoolKind::Max, &[0.0; 4], &p).len(), 0);
+    }
+}

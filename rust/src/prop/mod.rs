@@ -1,0 +1,160 @@
+//! Mini property-testing substrate (proptest is unavailable offline).
+//! Seeded generators + a case runner that reports the failing seed so
+//! any counterexample is reproducible. Shrinking is size-based: each
+//! failing case is retried at smaller sizes before reporting.
+
+use crate::workload::Rng;
+
+/// Property-test configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum collection size generators should produce.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0x5eed_cafe,
+            max_size: 200,
+        }
+    }
+}
+
+/// Per-case generation context.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Current size budget (shrinks on failure retries).
+    pub size: usize,
+}
+
+impl Gen<'_> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi.saturating_sub(lo).max(1))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(0, self.size + 1);
+        self.rng.vec_uniform(n, lo, hi)
+    }
+
+    pub fn vec_f32_len(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.rng.vec_uniform(n, lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn choose<'b, T>(&mut self, items: &'b [T]) -> &'b T {
+        &items[self.rng.below(items.len())]
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. On failure, retry at
+/// smaller sizes to find a smaller counterexample, then panic with the
+/// seed + case index + size so the exact case can be replayed.
+pub fn check<F>(cfg: PropConfig, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let run = |size: usize| -> Result<(), String> {
+            let mut rng = Rng::new(case_seed);
+            let mut gen = Gen {
+                rng: &mut rng,
+                size,
+            };
+            prop(&mut gen)
+        };
+        if let Err(msg) = run(cfg.max_size) {
+            // Size-shrink pass: find the smallest size that still fails.
+            let mut failing_size = cfg.max_size;
+            let mut failing_msg = msg;
+            let mut size = cfg.max_size / 2;
+            while size >= 1 {
+                match run(size) {
+                    Err(m) => {
+                        failing_size = size;
+                        failing_msg = m;
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {case_seed:#x}, size {failing_size}): {failing_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f32, b: f32, tol: f32, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(PropConfig::default(), "reverse twice", |g| {
+            let v = g.vec_f32(-1.0, 1.0);
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            ensure(r == v, "reverse∘reverse ≠ id")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_reports_seed() {
+        check(
+            PropConfig {
+                cases: 3,
+                ..Default::default()
+            },
+            "always fails",
+            |_g| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check(PropConfig::default(), "ranges", |g| {
+            let n = g.usize_in(3, 10);
+            ensure(n >= 3 && n < 10, format!("n={n}"))?;
+            let x = g.f32_in(-2.0, 5.0);
+            ensure((-2.0..5.0).contains(&x), format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn ensure_close_tolerance() {
+        assert!(ensure_close(1.0, 1.0 + 1e-6, 1e-4, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-4, "x").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt`, reads the
+//! `manifest.toml` the AOT exporter writes, and compiles executables
+//! lazily with a cache (one compile per model variant per process).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Executable, Runtime};
+use crate::config;
+
+/// TCN metadata from `manifest.toml` — the parameter layout contract
+/// between `python/compile/model.py` and the rust coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TcnManifest {
+    pub params: usize,
+    pub hidden: usize,
+    pub n_blocks: usize,
+    pub kernel: usize,
+    pub stem_kernel: usize,
+    pub seq_len: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub receptive_field: usize,
+}
+
+impl TcnManifest {
+    /// Ordered parameter shapes — mirrors `model.param_shapes`.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut shapes = vec![
+            ("stem_w".into(), vec![self.hidden, self.c_in, self.stem_kernel]),
+            ("stem_b".into(), vec![self.hidden]),
+        ];
+        for i in 0..self.n_blocks {
+            shapes.push((format!("block{i}_w1"), vec![self.hidden, self.hidden, self.kernel]));
+            shapes.push((format!("block{i}_b1"), vec![self.hidden]));
+            shapes.push((format!("block{i}_w2"), vec![self.hidden, self.hidden, self.kernel]));
+            shapes.push((format!("block{i}_b2"), vec![self.hidden]));
+        }
+        shapes.push(("head_w".into(), vec![self.c_out, self.hidden, 1]));
+        shapes.push(("head_b".into(), vec![self.c_out]));
+        shapes
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Registry over an artifacts directory.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    runtime: Runtime,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    manifest: Option<TcnManifest>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry rooted at `dir` (normally `artifacts/`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} not found — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let runtime = Runtime::cpu()?;
+        let manifest = Self::read_manifest(&dir.join("manifest.toml")).ok();
+        Ok(Self {
+            dir,
+            runtime,
+            cache: Mutex::new(HashMap::new()),
+            manifest,
+        })
+    }
+
+    fn read_manifest(path: &Path) -> Result<TcnManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = config::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            doc.get_int(&format!("tcn.{k}"))
+                .map(|v| v as usize)
+                .with_context(|| format!("manifest missing tcn.{k}"))
+        };
+        Ok(TcnManifest {
+            params: get("params")?,
+            hidden: get("hidden")?,
+            n_blocks: get("n_blocks")?,
+            kernel: get("kernel")?,
+            stem_kernel: get("stem_kernel")?,
+            seq_len: get("seq_len")?,
+            c_in: get("c_in")?,
+            c_out: get("c_out")?,
+            receptive_field: get("receptive_field")?,
+        })
+    }
+
+    pub fn manifest(&self) -> Option<&TcnManifest> {
+        self.manifest.as_ref()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Artifact names present on disk (sorted).
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Get (compile-once) an executable by artifact name.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.is_file() {
+            bail!(
+                "artifact {name:?} not found in {} (have: {:?})",
+                self.dir.display(),
+                self.list().unwrap_or_default()
+            );
+        }
+        let exe = std::sync::Arc::new(self.runtime.load(&path)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Whether an artifact exists without compiling it.
+    pub fn contains(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).is_file()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_param_layout_matches_python() {
+        // Mirror of model.TcnConfig(): hidden 32, 4 blocks, k 3, stem 7.
+        let m = TcnManifest {
+            params: 25121,
+            hidden: 32,
+            n_blocks: 4,
+            kernel: 3,
+            stem_kernel: 7,
+            seq_len: 512,
+            c_in: 1,
+            c_out: 1,
+            receptive_field: 67,
+        };
+        assert_eq!(m.param_count(), m.params);
+        let shapes = m.param_shapes();
+        assert_eq!(shapes.len(), 2 + 4 * 4 + 2);
+        assert_eq!(shapes[0].1, vec![32, 1, 7]);
+        assert_eq!(shapes.last().unwrap().1, vec![1]);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let err = match ArtifactRegistry::open("/definitely/missing/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,138 @@
+//! A compiled AOT artifact plus typed f32 execute helpers.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// An f32 tensor argument/result: shape + contiguous row-major data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorView {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorView {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self { shape: dims, data })
+    }
+}
+
+/// A compiled HLO artifact bound to a PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    _client: Arc<xla::PjRtClient>,
+}
+
+impl Executable {
+    /// Load HLO text, reassigning instruction ids via the text parser
+    /// (the 64-bit-id workaround), and JIT-compile it for the client.
+    pub fn load(client: Arc<xla::PjRtClient>, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default()
+            .trim_end_matches(".hlo")
+            .to_string();
+        Ok(Self {
+            exe,
+            name,
+            _client: client,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 tensors; returns the flattened tuple elements.
+    /// (All artifacts are lowered with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?;
+        let lit = first.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.is_empty() {
+            bail!("artifact {} returned an empty tuple", self.name);
+        }
+        parts.iter().map(TensorView::from_literal).collect()
+    }
+
+    /// Execute expecting exactly one output tensor.
+    pub fn run1(&self, inputs: &[TensorView]) -> Result<TensorView> {
+        let mut out = self.run(inputs)?;
+        if out.len() != 1 {
+            bail!(
+                "artifact {} returned {} outputs, expected 1",
+                self.name,
+                out.len()
+            );
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_view_shape_checks() {
+        let t = TensorView::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.element_count(), 6);
+        let s = TensorView::scalar(1.5);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_view_mismatch_panics() {
+        TensorView::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,52 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the rust request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos). All artifacts are lowered with
+//! `return_tuple=True`, so results always unwrap through a tuple.
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArtifactRegistry, TcnManifest};
+pub use executable::{Executable, TensorView};
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client. Creating a client is expensive (spins up the
+/// TFRT runtime); share one per process.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client: Arc::new(client),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(&self, path: &std::path::Path) -> Result<Executable> {
+        Executable::load(Arc::clone(&self.client), path)
+    }
+}
+
+/// Convenience used by smoke tests.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}

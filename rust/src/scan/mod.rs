@@ -1,0 +1,278 @@
+//! Prefix-sum substrate (paper §2.1).
+//!
+//! A prefix sum over an associative `⊕` can be computed in `O(log N)`
+//! parallel steps (Blelloch 1993 — the paper's [3]). This module provides
+//! the scan/reduce toolbox the sliding-window algorithms build on:
+//!
+//! * [`scan_inclusive`] / [`scan_exclusive`] — sequential recurrences
+//!   (Eq. 2), the work-optimal baseline.
+//! * [`scan_hillis_steele`] — log-depth, `O(N log N)` work; the shape used
+//!   *inside* a vector register.
+//! * [`scan_blelloch`] — log-depth, `O(N)` work (up-sweep/down-sweep).
+//! * [`reduce_tree`] — log-depth reduction (paper §2.4 evaluates δ_M
+//!   this way).
+//! * [`suffix_scan_inclusive`] — the mirrored scan the vector-input
+//!   algorithm needs for its `Y1` register.
+//! * [`scan_windowed`] — per-window prefix restart, a building block for
+//!   the strided variants.
+
+use crate::ops::AssocOp;
+
+/// Sequential inclusive scan: `out[i] = x₀ ⊕ … ⊕ xᵢ` (paper Eq. 1–2).
+pub fn scan_inclusive<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = op.identity();
+    for &x in xs {
+        acc = op.combine(acc, x);
+        out.push(acc);
+    }
+    out
+}
+
+/// Sequential exclusive scan: `out[i] = x₀ ⊕ … ⊕ xᵢ₋₁`, `out[0] = id`.
+pub fn scan_exclusive<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = op.identity();
+    for &x in xs {
+        out.push(acc);
+        acc = op.combine(acc, x);
+    }
+    out
+}
+
+/// Hillis–Steele inclusive scan: `⌈log₂ N⌉` sweeps, each a full-width
+/// shifted combine. `O(N log N)` work but every sweep is a perfectly
+/// vectorizable loop — this is the in-register scan shape.
+pub fn scan_hillis_steele<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let n = xs.len();
+    let mut cur = xs.to_vec();
+    let mut nxt = vec![op.identity(); n];
+    let mut d = 1;
+    while d < n {
+        // nxt[i] = cur[i-d] ⊕ cur[i] for i >= d, else cur[i]
+        nxt[..d].copy_from_slice(&cur[..d]);
+        for i in d..n {
+            nxt[i] = op.combine(cur[i - d], cur[i]);
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        d <<= 1;
+    }
+    cur
+}
+
+/// Blelloch work-efficient scan (up-sweep + down-sweep), returned
+/// *inclusive* to match the other scans. `O(N)` work, `2⌈log₂ N⌉` depth.
+pub fn scan_blelloch<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let n = xs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = n.next_power_of_two();
+    let mut tree = vec![op.identity(); m];
+    tree[..n].copy_from_slice(xs);
+
+    // Up-sweep (reduce).
+    let mut d = 1;
+    while d < m {
+        let stride = d * 2;
+        let mut i = stride - 1;
+        while i < m {
+            tree[i] = op.combine(tree[i - d], tree[i]);
+            i += stride;
+        }
+        d = stride;
+    }
+
+    // Down-sweep producing an exclusive scan.
+    tree[m - 1] = op.identity();
+    let mut d = m / 2;
+    while d >= 1 {
+        let stride = d * 2;
+        let mut i = stride - 1;
+        while i < m {
+            let left = tree[i - d];
+            tree[i - d] = tree[i];
+            tree[i] = op.combine(tree[i], left);
+            i += stride;
+        }
+        d /= 2;
+    }
+
+    // Inclusive = exclusive ⊕ input.
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(op.combine(tree[i], xs[i]));
+    }
+    out
+}
+
+/// Log-depth tree reduction of the whole slice.
+pub fn reduce_tree<O: AssocOp>(op: O, xs: &[O::Elem]) -> O::Elem {
+    match xs.len() {
+        0 => op.identity(),
+        1 => xs[0],
+        n => {
+            let mid = n / 2;
+            // Recursion depth is log N; the two halves are independent
+            // (this is the parallel shape even though we run sequentially).
+            op.combine(reduce_tree(op, &xs[..mid]), reduce_tree(op, &xs[mid..]))
+        }
+    }
+}
+
+/// Sequential reduction (the work-optimal baseline for benches).
+pub fn reduce_seq<O: AssocOp>(op: O, xs: &[O::Elem]) -> O::Elem {
+    let mut acc = op.identity();
+    for &x in xs {
+        acc = op.combine(acc, x);
+    }
+    acc
+}
+
+/// Inclusive *suffix* scan: `out[i] = xᵢ ⊕ … ⊕ x_{N-1}`.
+///
+/// Note `⊕` may be non-commutative (ConvPair!), so operand order matters:
+/// the accumulator goes on the *right*.
+pub fn suffix_scan_inclusive<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let n = xs.len();
+    let mut out = vec![op.identity(); n];
+    let mut acc = op.identity();
+    for i in (0..n).rev() {
+        acc = op.combine(xs[i], acc);
+        out[i] = acc;
+    }
+    out
+}
+
+/// Windowed prefix restart: the scan restarts at every multiple of `w`.
+/// `out[i] = x_{⌊i/w⌋·w} ⊕ … ⊕ xᵢ`. Used by the block-decomposed sliding
+/// variants and by tests as an oracle for in-register partial scans.
+pub fn scan_windowed<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
+    assert!(w >= 1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = op.identity();
+    for (i, &x) in xs.iter().enumerate() {
+        if i % w == 0 {
+            acc = op.identity();
+        }
+        acc = op.combine(acc, x);
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, MinOp, Pair};
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 * (1.0 + x.abs().max(y.abs())),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn inclusive_exclusive_relationship() {
+        let xs = [1f32, 2.0, 3.0, 4.0];
+        let inc = scan_inclusive(AddOp::<f32>::new(), &xs);
+        let exc = scan_exclusive(AddOp::<f32>::new(), &xs);
+        assert_eq!(inc, vec![1.0, 3.0, 6.0, 10.0]);
+        assert_eq!(exc, vec![0.0, 1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn hillis_steele_matches_sequential() {
+        for n in [0usize, 1, 2, 3, 7, 8, 16, 31, 100] {
+            let xs: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 3.0).collect();
+            close(
+                &scan_hillis_steele(AddOp::<f32>::new(), &xs),
+                &scan_inclusive(AddOp::<f32>::new(), &xs),
+            );
+        }
+    }
+
+    #[test]
+    fn blelloch_matches_sequential() {
+        for n in [0usize, 1, 2, 3, 7, 8, 16, 31, 100, 257] {
+            let xs: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 13) as f32 - 6.0).collect();
+            close(
+                &scan_blelloch(AddOp::<f32>::new(), &xs),
+                &scan_inclusive(AddOp::<f32>::new(), &xs),
+            );
+        }
+    }
+
+    #[test]
+    fn blelloch_max_exact() {
+        let xs: Vec<i64> = vec![3, -1, 7, 7, 2, 9, 0, 9, 1];
+        assert_eq!(
+            scan_blelloch(MaxOp::<i64>::new(), &xs),
+            scan_inclusive(MaxOp::<i64>::new(), &xs)
+        );
+    }
+
+    #[test]
+    fn scans_handle_noncommutative_convpair() {
+        // ConvPair is associative but NOT commutative — the log-depth scans
+        // must still agree with the sequential recurrence.
+        let xs: Vec<Pair> = (0..17)
+            .map(|i| Pair::new(1.0 + 0.1 * i as f32, 0.5 * i as f32 - 2.0))
+            .collect();
+        let seq = scan_inclusive(ConvPair, &xs);
+        let hs = scan_hillis_steele(ConvPair, &xs);
+        let bl = scan_blelloch(ConvPair, &xs);
+        for i in 0..xs.len() {
+            assert!((seq[i].u - hs[i].u).abs() < 1e-2, "hs u at {i}");
+            assert!((seq[i].v - hs[i].v).abs() < 1e-2, "hs v at {i}");
+            assert!((seq[i].u - bl[i].u).abs() < 1e-2, "bl u at {i}");
+            assert!((seq[i].v - bl[i].v).abs() < 1e-2, "bl v at {i}");
+        }
+    }
+
+    #[test]
+    fn reduce_tree_matches_seq() {
+        let xs: Vec<i64> = (0..101).map(|i| (i * 31 % 17) - 8).collect();
+        assert_eq!(
+            reduce_tree(AddOp::<i64>::new(), &xs),
+            reduce_seq(AddOp::<i64>::new(), &xs)
+        );
+        assert_eq!(reduce_tree(AddOp::<i64>::new(), &[]), 0);
+        assert_eq!(reduce_tree(MinOp::<i64>::new(), &[5]), 5);
+    }
+
+    #[test]
+    fn suffix_scan_mirrors_prefix() {
+        let xs = [1f32, 2.0, 3.0, 4.0];
+        let suf = suffix_scan_inclusive(AddOp::<f32>::new(), &xs);
+        assert_eq!(suf, vec![10.0, 9.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn suffix_scan_noncommutative_order() {
+        // For non-commutative ⊕ the suffix must be x_i ⊕ (x_{i+1} ⊕ ...).
+        let xs = [Pair::new(2.0, 1.0), Pair::new(3.0, -1.0), Pair::new(0.5, 4.0)];
+        let suf = suffix_scan_inclusive(ConvPair, &xs);
+        let manual = ConvPair.combine(xs[0], ConvPair.combine(xs[1], xs[2]));
+        assert!((suf[0].u - manual.u).abs() < 1e-6);
+        assert!((suf[0].v - manual.v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn windowed_scan_restarts() {
+        let xs = [1f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let out = scan_windowed(AddOp::<f32>::new(), &xs, 3);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(scan_inclusive(AddOp::<f32>::new(), &[]).is_empty());
+        assert!(scan_blelloch(AddOp::<f32>::new(), &[]).is_empty());
+        assert!(suffix_scan_inclusive(AddOp::<f32>::new(), &[]).is_empty());
+    }
+}

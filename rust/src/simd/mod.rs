@@ -1,0 +1,42 @@
+//! Software vector machine — the substrate for the paper's Algorithms 1–4.
+//!
+//! The paper is written against a CPU vector ISA: a register of `P` lanes
+//! supporting broadcast, element shift (`≪`), lane-wise `⊕`, and the
+//! `Slide` operation (SVE `EXT` / RISC-V `vslideup`/`vslidedown` /
+//! AVX-512 `vperm*2ps`). This module provides exactly that abstraction as
+//! a fixed-capacity lane array. The lane loops are written branch-free
+//! over `P` contiguous elements so LLVM auto-vectorizes them to the host's
+//! real SIMD (verified by the `tbl_scan`/`tbl_algorithms` benches); `P` is
+//! a runtime-chosen *logical* width ≤ [`MAX_LANES`], letting the benches
+//! sweep the paper's `O(P/w)` scaling law.
+
+mod vector;
+pub use vector::VecReg;
+
+/// Maximum logical lane count of the software vector machine.
+pub const MAX_LANES: usize = 64;
+
+/// Supported logical widths (powers of two, matching real ISAs:
+/// 8 ≈ AVX2 f32, 16 ≈ AVX-512 f32, 32/64 ≈ SVE-1024/RVV LMUL>1).
+pub const WIDTHS: [usize; 4] = [8, 16, 32, 64];
+
+/// Validates a logical width.
+pub fn is_valid_width(p: usize) -> bool {
+    WIDTHS.contains(&p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_are_powers_of_two_and_bounded() {
+        for w in WIDTHS {
+            assert!(w.is_power_of_two());
+            assert!(w <= MAX_LANES);
+            assert!(is_valid_width(w));
+        }
+        assert!(!is_valid_width(7));
+        assert!(!is_valid_width(128));
+    }
+}

@@ -1,0 +1,299 @@
+//! A `P`-lane vector register over an arbitrary element type.
+//!
+//! All mutating primitives correspond 1:1 to the vector-ISA operations the
+//! paper's Algorithms 1–4 are expressed in:
+//!
+//! | paper                | here                         | hardware           |
+//! |----------------------|------------------------------|--------------------|
+//! | `X ← (x,x,…,x,0,…)`  | [`VecReg::broadcast_prefix`] | `vbroadcast`+mask  |
+//! | `Y ← Y ⊕ X`          | [`VecReg::combine_assign`]   | lane-wise op       |
+//! | `Y ≪ k`              | [`VecReg::shift_left`]       | `valign`/`EXT`     |
+//! | `Slide(Y1,Y2,off)`   | [`VecReg::slide`]            | SVE `EXT`, `vslide`|
+//! | load / store         | [`VecReg::load`]/[`store`]   | `vle`/`vse`        |
+//!
+//! [`store`]: VecReg::store
+
+use crate::ops::AssocOp;
+use crate::simd::MAX_LANES;
+
+/// Fixed-capacity vector register with logical width `p ≤ MAX_LANES`.
+///
+/// Lanes `p..MAX_LANES` always hold the operator identity so that a wider
+/// physical register can carry a narrower logical computation — the same
+/// trick masked ISAs (SVE predicates, AVX-512 `k` registers) use.
+#[derive(Clone, Debug)]
+pub struct VecReg<T: Copy> {
+    lanes: [T; MAX_LANES],
+    p: usize,
+}
+
+impl<T: Copy + PartialEq + std::fmt::Debug> VecReg<T> {
+    /// A register of logical width `p` filled with `fill` (normally the
+    /// operator identity).
+    pub fn splat(p: usize, fill: T) -> Self {
+        assert!(p >= 1 && p <= MAX_LANES, "width {p} out of range");
+        Self {
+            lanes: [fill; MAX_LANES],
+            p,
+        }
+    }
+
+    /// Logical width `P`.
+    #[inline(always)]
+    pub fn width(&self) -> usize {
+        self.p
+    }
+
+    /// Load `min(p, src.len())` contiguous elements; remaining lanes get
+    /// `pad` (vector load with tail predication).
+    pub fn load(p: usize, src: &[T], pad: T) -> Self {
+        let mut r = Self::splat(p, pad);
+        let n = src.len().min(p);
+        r.lanes[..n].copy_from_slice(&src[..n]);
+        r
+    }
+
+    /// Store the first `min(p, dst.len())` lanes into `dst`.
+    pub fn store(&self, dst: &mut [T]) {
+        let n = dst.len().min(self.p);
+        dst[..n].copy_from_slice(&self.lanes[..n]);
+    }
+
+    /// Lane accessor (`Y[i]`).
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> T {
+        debug_assert!(i < self.p);
+        self.lanes[i]
+    }
+
+    /// Lane mutator.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, v: T) {
+        debug_assert!(i < self.p);
+        self.lanes[i] = v;
+    }
+
+    /// First `k` lanes as a slice.
+    pub fn prefix(&self, k: usize) -> &[T] {
+        debug_assert!(k <= self.p);
+        &self.lanes[..k]
+    }
+
+    /// Paper Alg 1: `X ← (x, x, …, x, id, …, id)` — broadcast `x` to the
+    /// first `k` lanes, identity elsewhere.
+    pub fn broadcast_prefix(p: usize, x: T, k: usize, id: T) -> Self {
+        let mut r = Self::splat(p, id);
+        let k = k.min(p);
+        for lane in &mut r.lanes[..k] {
+            *lane = x;
+        }
+        r
+    }
+
+    /// `Y ← Y ⊕ X`, lane-wise. Written as a single contiguous loop over
+    /// the physical register so LLVM vectorizes it.
+    #[inline]
+    pub fn combine_assign<O: AssocOp<Elem = T>>(&mut self, op: O, rhs: &Self) {
+        debug_assert_eq!(self.p, rhs.p);
+        for i in 0..self.p {
+            self.lanes[i] = op.combine(self.lanes[i], rhs.lanes[i]);
+        }
+    }
+
+    /// `Y ← Y ≪ k`: shift lanes left by `k`, filling vacated tail lanes
+    /// with `fill` (the operator identity in the paper's algorithms).
+    pub fn shift_left(&mut self, k: usize, fill: T) {
+        let p = self.p;
+        let k = k.min(p);
+        self.lanes.copy_within(k..p, 0);
+        for lane in &mut self.lanes[p - k..p] {
+            *lane = fill;
+        }
+    }
+
+    /// `Slide(a, b, offset)` (paper Alg 4): lanes `offset..offset+P` of
+    /// the concatenation `a ∥ b`. Maps to SVE `EXT` / RISC-V `vslide` /
+    /// AVX-512 `vperm*2ps`.
+    pub fn slide(a: &Self, b: &Self, offset: usize) -> Self {
+        debug_assert_eq!(a.p, b.p);
+        let p = a.p;
+        debug_assert!(offset <= p, "slide offset {offset} > width {p}");
+        let mut r = Self::splat(p, a.lanes[0]);
+        let head = p - offset;
+        r.lanes[..head].copy_from_slice(&a.lanes[offset..p]);
+        r.lanes[head..p].copy_from_slice(&b.lanes[..offset]);
+        r
+    }
+
+    /// In-register *inclusive prefix scan* of the first `k` lanes:
+    /// lane i ← x₀ ⊕ … ⊕ xᵢ. Log-depth shift-and-combine (Hillis–Steele),
+    /// the paper's "[3]" in-register scan. `O(log k)` vector ops.
+    pub fn prefix_scan_inclusive<O: AssocOp<Elem = T>>(&mut self, op: O, k: usize) {
+        let k = k.min(self.p);
+        let id = op.identity();
+        let mut d = 1;
+        while d < k {
+            // lane i gets lanes[i-d] ⊕ lanes[i] for i >= d.
+            let snapshot = self.lanes;
+            for i in d..k {
+                self.lanes[i] = op.combine(snapshot[i - d], snapshot[i]);
+            }
+            let _ = id;
+            d <<= 1;
+        }
+    }
+
+    /// In-register *suffix scan* of lanes `lo..hi`: lane i ← xᵢ ⊕ … ⊕ x_{hi-1}.
+    pub fn suffix_scan_inclusive<O: AssocOp<Elem = T>>(&mut self, op: O, lo: usize, hi: usize) {
+        let hi = hi.min(self.p);
+        if lo >= hi {
+            return;
+        }
+        let mut d = 1;
+        while d < hi - lo {
+            let snapshot = self.lanes;
+            for i in lo..hi - d {
+                self.lanes[i] = op.combine(snapshot[i], snapshot[i + d]);
+            }
+            d <<= 1;
+        }
+    }
+
+    /// Tree-reduce the first `k` lanes to a single value. `O(log k)` steps.
+    pub fn reduce<O: AssocOp<Elem = T>>(&self, op: O, k: usize) -> T {
+        let k = k.min(self.p);
+        if k == 0 {
+            return op.identity();
+        }
+        let mut buf = self.lanes;
+        let mut n = k;
+        while n > 1 {
+            let half = n / 2;
+            for i in 0..half {
+                buf[i] = op.combine(buf[2 * i], buf[2 * i + 1]);
+            }
+            if n % 2 == 1 {
+                buf[half] = buf[n - 1];
+                n = half + 1;
+            } else {
+                n = half;
+            }
+        }
+        buf[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, MaxOp};
+
+    #[test]
+    fn splat_and_width() {
+        let v = VecReg::splat(8, 1.5f32);
+        assert_eq!(v.width(), 8);
+        for i in 0..8 {
+            assert_eq!(v.get(i), 1.5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_width_panics() {
+        let _ = VecReg::splat(0, 0f32);
+    }
+
+    #[test]
+    fn load_store_roundtrip_with_tail() {
+        let src = [1f32, 2.0, 3.0];
+        let v = VecReg::load(8, &src, 0.0);
+        assert_eq!(v.get(0), 1.0);
+        assert_eq!(v.get(2), 3.0);
+        assert_eq!(v.get(3), 0.0); // tail pad
+        let mut dst = [9f32; 5];
+        v.store(&mut dst);
+        assert_eq!(dst, [1.0, 2.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn broadcast_prefix_masks_tail() {
+        let v = VecReg::broadcast_prefix(8, 7f32, 3, 0.0);
+        assert_eq!(v.prefix(8), &[7.0, 7.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn combine_assign_lanewise() {
+        let mut a = VecReg::load(8, &[1f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 0.0);
+        let b = VecReg::load(8, &[10f32; 8], 0.0);
+        a.combine_assign(AddOp::<f32>::new(), &b);
+        assert_eq!(a.prefix(4), &[11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn shift_left_fills_identity() {
+        let mut v = VecReg::load(8, &[1f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 0.0);
+        v.shift_left(3, 0.0);
+        assert_eq!(v.prefix(8), &[4.0, 5.0, 6.0, 7.0, 8.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shift_by_zero_is_noop() {
+        let mut v = VecReg::load(8, &[1f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 0.0);
+        v.shift_left(0, 0.0);
+        assert_eq!(v.get(0), 1.0);
+        assert_eq!(v.get(7), 8.0);
+    }
+
+    #[test]
+    fn slide_concatenates() {
+        let a = VecReg::load(8, &[0f32, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], 0.0);
+        let b = VecReg::load(8, &[8f32, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0], 0.0);
+        let s = VecReg::slide(&a, &b, 3);
+        assert_eq!(s.prefix(8), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        // offset 0 == a, offset P == b
+        assert_eq!(VecReg::slide(&a, &b, 0).prefix(8), a.prefix(8));
+        assert_eq!(VecReg::slide(&a, &b, 8).prefix(8), b.prefix(8));
+    }
+
+    #[test]
+    fn prefix_scan_matches_sequential() {
+        let data: Vec<f32> = (1..=16).map(|x| x as f32).collect();
+        let mut v = VecReg::load(16, &data, 0.0);
+        v.prefix_scan_inclusive(AddOp::<f32>::new(), 16);
+        let mut acc = 0.0;
+        for i in 0..16 {
+            acc += data[i];
+            assert!((v.get(i) - acc).abs() < 1e-4, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn prefix_scan_partial_k_leaves_tail() {
+        let data: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        let mut v = VecReg::load(8, &data, 0.0);
+        v.prefix_scan_inclusive(AddOp::<f32>::new(), 4);
+        assert_eq!(v.get(3), 10.0);
+        assert_eq!(v.get(4), 5.0); // untouched
+    }
+
+    #[test]
+    fn suffix_scan_matches_sequential() {
+        let data: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        let mut v = VecReg::load(8, &data, 0.0);
+        v.suffix_scan_inclusive(AddOp::<f32>::new(), 2, 8);
+        // lane i = sum of data[i..8] for i in 2..8
+        for i in 2..8 {
+            let expect: f32 = data[i..8].iter().sum();
+            assert!((v.get(i) - expect).abs() < 1e-4, "lane {i}");
+        }
+        assert_eq!(v.get(0), 1.0); // untouched below lo
+    }
+
+    #[test]
+    fn reduce_max() {
+        let v = VecReg::load(8, &[3f32, 9.0, -2.0, 7.0, 9.5, 0.0, 1.0, 2.0], f32::NEG_INFINITY);
+        assert_eq!(v.reduce(MaxOp::<f32>::new(), 8), 9.5);
+        assert_eq!(v.reduce(MaxOp::<f32>::new(), 3), 9.0);
+        assert_eq!(v.reduce(MaxOp::<f32>::new(), 0), f32::NEG_INFINITY);
+    }
+}

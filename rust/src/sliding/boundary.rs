@@ -1,0 +1,157 @@
+//! Boundary conditions for sliding windows (paper §3: "padding,
+//! mirroring, or periodicity").
+//!
+//! The algorithm family computes *valid-mode* windows. DNN layers need
+//! `same`-size outputs, which we obtain by extending the input before the
+//! sweep. Extension is `O(w)` extra memory — negligible against the
+//! `O(N·w)` im2col expansion the paper is displacing.
+
+use crate::ops::AssocOp;
+
+/// How to synthesize elements beyond the input ends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundary {
+    /// No extension; output has `N − w + 1` elements.
+    Valid,
+    /// Pad both ends with the operator identity (zero padding for `+`,
+    /// `−∞` for max …) so the output has `N` elements (`same` mode):
+    /// `⌊(w−1)/2⌋` leading, `⌈(w−1)/2⌉` trailing pads.
+    SamePad,
+    /// Reflect without repeating the edge element (`abcd` → `cb|abcd|cb`).
+    Mirror,
+    /// Wrap around (`abcd` → `cd|abcd|ab`).
+    Periodic,
+}
+
+impl Boundary {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Boundary::Valid => "valid",
+            Boundary::SamePad => "same",
+            Boundary::Mirror => "mirror",
+            Boundary::Periodic => "periodic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "valid" => Some(Boundary::Valid),
+            "same" => Some(Boundary::SamePad),
+            "mirror" => Some(Boundary::Mirror),
+            "periodic" => Some(Boundary::Periodic),
+            _ => None,
+        }
+    }
+}
+
+/// Extend `xs` for window `w` under `mode`. Returns the extended sequence;
+/// running a valid-mode sliding sum over it yields exactly `xs.len()`
+/// outputs for the non-valid modes (and `xs` unchanged for `Valid`).
+pub fn extend<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, mode: Boundary) -> Vec<O::Elem> {
+    let n = xs.len();
+    if mode == Boundary::Valid || w <= 1 || n == 0 {
+        return xs.to_vec();
+    }
+    let lead = (w - 1) / 2;
+    let trail = w - 1 - lead;
+    let mut out = Vec::with_capacity(n + w - 1);
+    match mode {
+        Boundary::Valid => unreachable!(),
+        Boundary::SamePad => {
+            out.extend(std::iter::repeat(op.identity()).take(lead));
+            out.extend_from_slice(xs);
+            out.extend(std::iter::repeat(op.identity()).take(trail));
+        }
+        Boundary::Mirror => {
+            for k in 0..lead {
+                // element at virtual index -(lead-k): reflect about 0
+                // without repeating the edge: index (lead - k) clamped.
+                let idx = (lead - k).min(n - 1);
+                out.push(xs[idx]);
+            }
+            out.extend_from_slice(xs);
+            for k in 0..trail {
+                // virtual index n + k reflects to n-2-k.
+                let idx = n.saturating_sub(2 + k).min(n - 1);
+                out.push(xs[idx]);
+            }
+        }
+        Boundary::Periodic => {
+            for k in 0..lead {
+                out.push(xs[(n - (lead - k) % n) % n]);
+            }
+            out.extend_from_slice(xs);
+            for k in 0..trail {
+                out.push(xs[k % n]);
+            }
+        }
+    }
+    out
+}
+
+/// Output length for a given input length/window/mode.
+pub fn output_len(n: usize, w: usize, mode: Boundary) -> usize {
+    match mode {
+        Boundary::Valid => super::out_len(n, w),
+        _ => n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, MaxOp};
+    use crate::sliding::sliding_naive;
+
+    #[test]
+    fn same_pad_lengths() {
+        let xs = [1f32, 2.0, 3.0, 4.0, 5.0];
+        for w in [2usize, 3, 4, 5] {
+            let ext = extend(AddOp::<f32>::new(), &xs, w, Boundary::SamePad);
+            assert_eq!(ext.len(), xs.len() + w - 1);
+            let out = sliding_naive(AddOp::<f32>::new(), &ext, w);
+            assert_eq!(out.len(), xs.len(), "w={w}");
+        }
+    }
+
+    #[test]
+    fn same_pad_w3_values() {
+        let xs = [1f32, 2.0, 3.0];
+        let ext = extend(AddOp::<f32>::new(), &xs, 3, Boundary::SamePad);
+        assert_eq!(ext, vec![0.0, 1.0, 2.0, 3.0, 0.0]);
+        let out = sliding_naive(AddOp::<f32>::new(), &ext, 3);
+        assert_eq!(out, vec![3.0, 6.0, 5.0]);
+    }
+
+    #[test]
+    fn max_pad_uses_neg_inf_identity() {
+        let xs = [5f32, -2.0];
+        let ext = extend(MaxOp::<f32>::new(), &xs, 3, Boundary::SamePad);
+        assert_eq!(ext[0], f32::NEG_INFINITY);
+        let out = sliding_naive(MaxOp::<f32>::new(), &ext, 3);
+        assert_eq!(out, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn mirror_reflects_without_edge_repeat() {
+        let xs = [1f32, 2.0, 3.0, 4.0];
+        let ext = extend(AddOp::<f32>::new(), &xs, 3, Boundary::Mirror);
+        // lead=1 → reflect of index 1 = 2.0; trail=1 → reflect = 3.0
+        assert_eq!(ext, vec![2.0, 1.0, 2.0, 3.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn periodic_wraps() {
+        let xs = [1f32, 2.0, 3.0, 4.0];
+        let ext = extend(AddOp::<f32>::new(), &xs, 3, Boundary::Periodic);
+        assert_eq!(ext, vec![4.0, 1.0, 2.0, 3.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn valid_is_identity() {
+        let xs = [1f32, 2.0];
+        assert_eq!(extend(AddOp::<f32>::new(), &xs, 3, Boundary::Valid), xs.to_vec());
+        assert_eq!(output_len(10, 3, Boundary::Valid), 8);
+        assert_eq!(output_len(10, 3, Boundary::SamePad), 10);
+    }
+}

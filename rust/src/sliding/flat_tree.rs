@@ -1,0 +1,194 @@
+//! Production realization of the log-depth sliding sum on flat buffers.
+//!
+//! The `VecReg`-based functions in this module's siblings are the
+//! paper-faithful register-streaming algorithms (and what TBL-A
+//! benches); this file is the same mathematics laid out for a memory-
+//! resident input: a doubling ladder of whole arrays,
+//!
+//! ```text
+//! D₀ = x                      (windows of size 1 starting at i)
+//! D_{t+1}[i] = D_t[i] ⊕ D_t[i + 2^t]   (windows of size 2^{t+1})
+//! ```
+//!
+//! `⌈log₂ w⌉` passes, each a unit-stride elementwise combine that LLVM
+//! auto-vectorizes — no lane shuffles at all (the `Slide` becomes an
+//! address offset, which is the whole advantage of operating on memory
+//! rather than registers). Non-power-of-two windows finish with either
+//! one overlapping combine (idempotent ⊕) or the binary decomposition
+//! of `w` over the saved ladder levels (general associative ⊕).
+//! `O(N log w)` work, `O(N log w)` scratch in the general case,
+//! `O(N)` for idempotent/power-of-two.
+
+use crate::ops::AssocOp;
+
+use super::out_len;
+
+/// Log-depth sliding sum over a flat buffer (associative `⊕`).
+pub fn sliding_flat_tree<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
+    let n = xs.len();
+    let m = out_len(n, w);
+    if m == 0 {
+        return Vec::new();
+    }
+    if w == 1 {
+        return xs.to_vec();
+    }
+
+    let t_max = usize::BITS - 1 - w.leading_zeros(); // floor(log2 w)
+    let top = 1usize << t_max;
+
+    if w == top || op.is_idempotent() {
+        // Single ladder, in place: ascending i never rereads a written
+        // slot (writes at i, reads at i+size > i).
+        let mut d = xs.to_vec();
+        let mut size = 1usize;
+        let mut live = n; // valid prefix length of d
+        while size < top {
+            let next_live = live - size;
+            for i in 0..next_live {
+                d[i] = op.combine(d[i], d[i + size]);
+            }
+            live = next_live;
+            size <<= 1;
+        }
+        if w == top {
+            d.truncate(m);
+            return d;
+        }
+        // Idempotent overlap: window w = [i, i+top) ∪ [i+w-top, i+w).
+        let shift = w - top;
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            out.push(op.combine(d[i], d[i + shift]));
+        }
+        return out;
+    }
+
+    // General associative: fold the binary decomposition of w as the
+    // ladder climbs, so only TWO buffers live at once (the in-place
+    // ladder `d` and the output). Levels arrive smallest-first, i.e.
+    // rightmost chunk first; each new (earlier) chunk is combined on the
+    // LEFT, preserving order for non-commutative ⊕. The §Perf pass
+    // measured the per-level-buffer version 5× slower (page faults on
+    // log w fresh multi-MB allocations).
+    let mut d = xs.to_vec();
+    let mut out: Option<Vec<O::Elem>> = None;
+    let mut live = n; // valid prefix of d
+    let mut suffix = 0usize; // total size of chunks already folded
+    let mut size = 1usize;
+    loop {
+        if w & size != 0 {
+            // Chunk of `size` ending `suffix` before the window end:
+            // starts at i + w − suffix − size.
+            let off = w - suffix - size;
+            match out.as_mut() {
+                None => {
+                    out = Some(d[off..off + m].to_vec());
+                }
+                Some(o) => {
+                    for (i, ov) in o.iter_mut().enumerate() {
+                        *ov = op.combine(d[off + i], *ov);
+                    }
+                }
+            }
+            suffix += size;
+        }
+        if size >= top {
+            break;
+        }
+        // In-place doubling step (safe ascending: reads are ahead of
+        // writes).
+        let next_live = live - size;
+        for i in 0..next_live {
+            d[i] = op.combine(d[i], d[i + size]);
+        }
+        live = next_live;
+        size <<= 1;
+    }
+    out.expect("w >= 1 has at least one set bit")
+}
+
+/// Window-2 special case: one combine pass (used by the dispatcher).
+pub fn sliding_w2<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    let m = out_len(xs.len(), 2);
+    let mut out = Vec::with_capacity(m);
+    for i in 0..m {
+        out.push(op.combine(xs[i], xs[i + 1]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, MinOp, MulOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    #[test]
+    fn matches_naive_add_all_window_sizes() {
+        let xs: Vec<f32> = (0..257).map(|i| ((i * 37 % 101) as f32) * 0.1 - 5.0).collect();
+        for w in 1..=40 {
+            let got = sliding_flat_tree(AddOp::<f32>::new(), &xs, w);
+            let want = sliding_naive(AddOp::<f32>::new(), &xs, w);
+            assert_eq!(got.len(), want.len(), "w={w}");
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "w={w} idx={i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_max_min_exact() {
+        let xs: Vec<f32> = (0..300).map(|i| ((i * 89 % 211) as f32) - 100.0).collect();
+        for w in [2usize, 3, 5, 7, 8, 13, 16, 31, 33, 64, 100] {
+            assert_eq!(
+                sliding_flat_tree(MaxOp::<f32>::new(), &xs, w),
+                sliding_naive(MaxOp::<f32>::new(), &xs, w),
+                "max w={w}"
+            );
+            assert_eq!(
+                sliding_flat_tree(MinOp::<f32>::new(), &xs, w),
+                sliding_naive(MinOp::<f32>::new(), &xs, w),
+                "min w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_mul() {
+        let xs: Vec<f32> = (0..120).map(|i| 1.0 + 0.02 * ((i % 7) as f32)).collect();
+        for w in [3usize, 6, 11, 17] {
+            let got = sliding_flat_tree(MulOp::<f32>::new(), &xs, w);
+            let want = sliding_naive(MulOp::<f32>::new(), &xs, w);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3 * b.abs(), "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_pairs_supported() {
+        let xs: Vec<Pair> = (0..90)
+            .map(|i| Pair::new(1.0 + 0.03 * ((i % 5) as f32), 0.1 * (i as f32) - 4.0))
+            .collect();
+        for w in [2usize, 3, 5, 6, 7, 12] {
+            let got = sliding_flat_tree(ConvPair, &xs, w);
+            let want = sliding_naive(ConvPair, &xs, w);
+            for (g, t) in got.iter().zip(&want) {
+                assert!(
+                    (g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3,
+                    "w={w}: {g:?} vs {t:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edge_cases() {
+        let xs = [1f32, 2.0, 3.0];
+        assert!(sliding_flat_tree(AddOp::<f32>::new(), &xs, 4).is_empty());
+        assert_eq!(sliding_flat_tree(AddOp::<f32>::new(), &xs, 1), xs.to_vec());
+        assert_eq!(sliding_w2(AddOp::<f32>::new(), &xs), vec![3.0, 5.0]);
+        assert!(sliding_w2(AddOp::<f32>::new(), &xs[..1]).is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! The paper's contribution: the sliding-window-sum algorithm family (§3).
+//!
+//! Given operator `⊕`, window `w`, and input `x₀…x_{N-1}`, compute
+//! `yᵢ = xᵢ ⊕ xᵢ₊₁ ⊕ … ⊕ xᵢ₊w₋₁` for all `N − w + 1` valid positions
+//! (Eq. 3). Implementations:
+//!
+//! | fn | paper | complexity | requires |
+//! |----|-------|-----------|----------|
+//! | [`naive::sliding_naive`] | baseline | `O(wN)` | monoid |
+//! | [`scalar_input::sliding_scalar_input`] | Alg 1 | `O(N)` vector steps | monoid |
+//! | [`vector_input::sliding_vector_input`] | Alg 2 | `O(N·w/P)` | monoid |
+//! | [`vector_input::sliding_vector_input_log`] | Alg 2 + [3] | `O(N·log w/P)` | associative |
+//! | [`ping_pong::sliding_ping_pong`] | Alg 3 | `O(N·w/P)`, ~30–50 % faster | monoid |
+//! | [`vector_slide::sliding_vector_slide`] | Alg 4 | `O(N·w/P)` | monoid |
+//! | [`vector_slide::sliding_vector_slide_tree`] | Alg 4 + reduction | `O(N·log w/P)` | associative |
+//! | [`auto`] | dispatcher | best available | — |
+//!
+//! All functions compute *valid-mode* windows; [`boundary`] wraps them
+//! with the padding/mirroring/periodic extensions DNN layers need.
+
+pub mod boundary;
+pub mod flat_tree;
+pub mod naive;
+pub mod ping_pong;
+pub mod scalar_input;
+pub mod streaming;
+pub mod vector_input;
+pub mod vector_slide;
+
+pub use boundary::{extend, Boundary};
+pub use flat_tree::{sliding_flat_tree, sliding_w2};
+pub use naive::sliding_naive;
+pub use ping_pong::sliding_ping_pong;
+pub use scalar_input::sliding_scalar_input;
+pub use streaming::StreamingSlidingSum;
+pub use vector_input::{sliding_vector_input, sliding_vector_input_log};
+pub use vector_slide::{sliding_vector_slide, sliding_vector_slide_tree};
+
+use crate::ops::AssocOp;
+
+/// Number of valid output windows, or 0 if the input is shorter than `w`.
+#[inline]
+pub fn out_len(n: usize, w: usize) -> usize {
+    if w == 0 || n < w {
+        0
+    } else {
+        n - w + 1
+    }
+}
+
+/// Algorithm selector for [`auto`] and the bench harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Naive,
+    ScalarInput,
+    VectorInput,
+    VectorInputLog,
+    PingPong,
+    VectorSlide,
+    VectorSlideTree,
+    /// Memory-resident doubling ladder (production dispatcher path).
+    FlatTree,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 8] = [
+        Algo::Naive,
+        Algo::ScalarInput,
+        Algo::VectorInput,
+        Algo::VectorInputLog,
+        Algo::PingPong,
+        Algo::VectorSlide,
+        Algo::VectorSlideTree,
+        Algo::FlatTree,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Naive => "naive",
+            Algo::ScalarInput => "scalar_input",
+            Algo::VectorInput => "vector_input",
+            Algo::VectorInputLog => "vector_input_log",
+            Algo::PingPong => "ping_pong",
+            Algo::VectorSlide => "vector_slide",
+            Algo::VectorSlideTree => "vector_slide_tree",
+            Algo::FlatTree => "flat_tree",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        Algo::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+/// Run a specific algorithm.
+pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    match algo {
+        Algo::Naive => sliding_naive(op, xs, w),
+        Algo::ScalarInput => sliding_scalar_input(op, xs, w, p),
+        Algo::VectorInput => sliding_vector_input(op, xs, w, p),
+        Algo::VectorInputLog => sliding_vector_input_log(op, xs, w, p),
+        Algo::PingPong => sliding_ping_pong(op, xs, w, p),
+        Algo::VectorSlide => sliding_vector_slide(op, xs, w, p),
+        Algo::VectorSlideTree => sliding_vector_slide_tree(op, xs, w, p),
+        Algo::FlatTree => sliding_flat_tree(op, xs, w),
+    }
+}
+
+/// Dispatcher: pick the best implementation for `(w, P)` on a
+/// memory-resident input.
+///
+/// Heuristics measured by `tbl_algorithms` (EXPERIMENTS.md TBL-A/§Perf):
+/// * degenerate `w == 1` → copy; `w == 2` → one combine pass;
+/// * otherwise the flat-buffer doubling ladder
+///   ([`sliding_flat_tree`]) — the memory-resident realization of the
+///   paper's log-depth algorithm; it beat every register-streaming
+///   variant at all window sizes in the §Perf pass (the `Slide` becomes
+///   an address offset). The register algorithms remain available via
+///   [`run`] for streaming inputs and for the TBL-A reproduction.
+pub fn auto<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, _p: usize) -> Vec<O::Elem> {
+    match w {
+        1 => xs.to_vec(),
+        2 => sliding_w2(op, xs),
+        _ => sliding_flat_tree(op, xs, w),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::AddOp;
+
+    #[test]
+    fn out_len_edges() {
+        assert_eq!(out_len(10, 3), 8);
+        assert_eq!(out_len(3, 3), 1);
+        assert_eq!(out_len(2, 3), 0);
+        assert_eq!(out_len(0, 1), 0);
+        assert_eq!(out_len(5, 0), 0);
+    }
+
+    #[test]
+    fn algo_name_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("bogus"), None);
+    }
+
+    #[test]
+    fn auto_w1_is_copy() {
+        let xs = [5f32, 6.0, 7.0];
+        assert_eq!(auto(AddOp::<f32>::new(), &xs, 1, 8), xs.to_vec());
+    }
+}

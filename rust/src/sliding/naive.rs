@@ -1,0 +1,56 @@
+//! `O(wN)` baseline: evaluate every window independently (paper §2.2,
+//! "the asymptotic complexity of a naive sliding sum algorithm is O(wN)").
+
+use crate::ops::AssocOp;
+
+use super::out_len;
+
+/// Direct evaluation of Eq. 3. Works for any monoid; this is the
+/// correctness oracle every other algorithm is tested against, and the
+/// baseline the TBL-A bench normalizes speedups to.
+pub fn sliding_naive<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
+    let m = out_len(xs.len(), w);
+    let mut out = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut acc = op.identity();
+        for &x in &xs[i..i + w] {
+            acc = op.combine(acc, x);
+        }
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, MaxOp};
+
+    #[test]
+    fn basic_sums() {
+        let xs = [1f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(sliding_naive(AddOp::<f32>::new(), &xs, 2), vec![3.0, 5.0, 7.0, 9.0]);
+        assert_eq!(sliding_naive(AddOp::<f32>::new(), &xs, 5), vec![15.0]);
+    }
+
+    #[test]
+    fn window_larger_than_input_is_empty() {
+        let xs = [1f32, 2.0];
+        assert!(sliding_naive(AddOp::<f32>::new(), &xs, 3).is_empty());
+    }
+
+    #[test]
+    fn max_windows() {
+        let xs = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        assert_eq!(
+            sliding_naive(MaxOp::<i32>::new(), &xs, 3),
+            vec![4, 4, 5, 9, 9, 9]
+        );
+    }
+
+    #[test]
+    fn w1_is_identity_map() {
+        let xs = [7f32, -2.0, 0.5];
+        assert_eq!(sliding_naive(AddOp::<f32>::new(), &xs, 1), xs.to_vec());
+    }
+}

@@ -1,0 +1,201 @@
+//! Paper Algorithm 3 — *Ping Pong*.
+//!
+//! Algorithm 2 wastes `P−(w−1)` lanes of its suffix register. Ping Pong
+//! loads *two* registers per iteration and lets both the suffix-sum and
+//! prefix-sum registers emit output lanes, producing `2P−w+1` outputs per
+//! iteration. No asymptotic change, but the paper measures it 30–50 %
+//! faster in practice. The cost: loads stride by `2P−w+1`, which is not
+//! `P`-aligned — exactly the boundary-handling nuisance §3 warns about.
+//!
+//! Per iteration over chunk `x_i … x_{i+2P-1}` (registers `Y`, `X`):
+//!
+//! ```text
+//! Y1[j] = Y[j] ⊕ … ⊕ Y[min(j+w-1, P-1)]     capped suffix sums of Y
+//! emit y_i … y_{i+P-w}      = Y1[0 … P-w]    (windows inside Y)
+//! Y1 ≪ (P-w+1)                               (truncated suffixes to front)
+//! X1[j] = X[max(0, j-w+1)] ⊕ … ⊕ X[j]       capped prefix sums of X
+//! emit y_{i+P-w+1} … y_{i+2P-w} = (Y1 ⊕ X1)[0 … P-1]  (boundary + inside X)
+//! ```
+
+use crate::ops::AssocOp;
+use crate::simd::{VecReg, MAX_LANES};
+
+use super::{out_len, sliding_scalar_input};
+
+/// Capped suffix sums: `out[j] = X[j] ⊕ … ⊕ X[min(j+w-1, hi-1)]`,
+/// lanes `hi..` identity. Linear construction (`w−1` slides), safe for
+/// non-commutative `⊕` (later elements folded on the right).
+fn capped_suffix_linear<O: AssocOp>(
+    op: O,
+    x: &VecReg<O::Elem>,
+    w: usize,
+    hi: usize,
+) -> VecReg<O::Elem> {
+    let p = x.width();
+    let id = op.identity();
+    let idreg = VecReg::splat(p, id);
+    let mut acc = x.clone();
+    // Mask lanes ≥ hi to identity.
+    for j in hi..p {
+        acc.set(j, id);
+    }
+    let masked = acc.clone();
+    for k in 1..w {
+        // shifted[j] = X[j+k] (identity beyond hi) — fold later elements
+        // onto the right of the accumulator.
+        let shifted = VecReg::slide(&masked, &idreg, k);
+        acc.combine_assign(op, &shifted);
+    }
+    acc
+}
+
+/// Algorithm 3. Any monoid; `O(N·w/P)` with a ~2× lower loop overhead
+/// than Algorithm 2 (two emits per two loads, no wasted suffix lanes).
+pub fn sliding_ping_pong<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    if w > p || w > MAX_LANES || w <= 1 {
+        return sliding_scalar_input(op, xs, w, p);
+    }
+    let n = xs.len();
+    let m = out_len(n, w);
+    let mut out = vec![op.identity(); m];
+    if m == 0 {
+        return out;
+    }
+    let id = op.identity();
+    let step = 2 * p - w + 1; // outputs per full iteration
+
+    let mut i = 0usize; // window-start cursor
+    while i < m {
+        // Y covers x_i .. x_{i+P-1}; X covers the next P elements.
+        let take_y = p.min(n - i);
+        let y = VecReg::load(p, &xs[i..i + take_y], id);
+        let x_lo = i + take_y;
+        let take_x = if x_lo < n { p.min(n - x_lo) } else { 0 };
+        let x = if take_x > 0 {
+            VecReg::load(p, &xs[x_lo..x_lo + take_x], id)
+        } else {
+            VecReg::splat(p, id)
+        };
+
+        // Phase 1: windows fully inside Y — capped suffix sums.
+        let mut y1 = capped_suffix_linear(op, &y, w, take_y);
+        let full_in_y = take_y.saturating_sub(w - 1); // lanes 0..=take_y-w hold full windows
+        let emit1 = full_in_y.min(m - i);
+        for j in 0..emit1 {
+            out[i + j] = y1.get(j);
+        }
+
+        // Phase 2: boundary windows (truncated Y-suffixes ⊕ X-prefixes)
+        // plus windows fully inside X.
+        if take_x > 0 {
+            y1.shift_left(full_in_y, id); // truncated suffixes to lanes 0..w-2
+            let x1 = capped_prefix_linear_pp(op, &x, w, take_x);
+            let mut o = y1;
+            o.combine_assign(op, &x1);
+            let base = i + full_in_y; // first boundary window start
+            let emit2 = (take_x).min(m.saturating_sub(base));
+            for j in 0..emit2 {
+                out[base + j] = o.get(j);
+            }
+        }
+        i += step.min(m - i).max(1);
+        // Full iterations advance by exactly `step`; the final ragged
+        // iteration just terminates the loop.
+        if take_y < p || take_x < p {
+            break;
+        }
+    }
+
+    // Ragged tail (input not a multiple of the 2P−w+1 stride): finish with
+    // the scalar-input recurrence over the remaining suffix. This is the
+    // paper's "two memory loads per iteration present a challenge while
+    // implementing boundary conditions" caveat made concrete.
+    if i < m {
+        let tail_start = i;
+        let tail = sliding_scalar_input(op, &xs[tail_start..], w, p);
+        out[tail_start..m].copy_from_slice(&tail[..m - tail_start]);
+    }
+    out
+}
+
+/// Capped prefix sums over the first `hi` lanes (identity-padded), linear.
+fn capped_prefix_linear_pp<O: AssocOp>(
+    op: O,
+    x: &VecReg<O::Elem>,
+    w: usize,
+    hi: usize,
+) -> VecReg<O::Elem> {
+    let p = x.width();
+    let id = op.identity();
+    let idreg = VecReg::splat(p, id);
+    let mut masked = x.clone();
+    for j in hi..p {
+        masked.set(j, id);
+    }
+    let mut acc = VecReg::slide(&idreg, &masked, p - (w - 1));
+    for k in (0..w - 1).rev() {
+        let shifted = VecReg::slide(&idreg, &masked, p - k);
+        acc.combine_assign(op, &shifted);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    fn check<O: AssocOp<Elem = f32>>(op: O, xs: &[f32], w: usize, p: usize) {
+        let got = sliding_ping_pong(op, xs, w, p);
+        let want = sliding_naive(op, xs, w);
+        assert_eq!(got.len(), want.len(), "len w={w} p={p} n={}", xs.len());
+        for (i, (g, t)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - t).abs() <= 1e-3 * (1.0 + t.abs()),
+                "w={w} p={p} n={} idx={i}: {g} vs {t}",
+                xs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_add_sweep() {
+        let xs: Vec<f32> = (0..259).map(|i| ((i * 19 % 41) as f32) * 0.25 - 5.0).collect();
+        for p in [8usize, 16, 32] {
+            for w in [2usize, 3, 5, 7] {
+                if w < p {
+                    check(AddOp::<f32>::new(), &xs, w, p);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_max() {
+        let xs: Vec<f32> = (0..300).map(|i| ((i * 53 % 97) as f32) - 48.0).collect();
+        for w in [2usize, 4, 6, 10] {
+            check(MaxOp::<f32>::new(), &xs, w, 16);
+        }
+    }
+
+    #[test]
+    fn ragged_lengths() {
+        for n in [5usize, 16, 17, 29, 32, 33, 61, 64, 65, 127] {
+            let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+            check(AddOp::<f32>::new(), &xs, 3, 16);
+        }
+    }
+
+    #[test]
+    fn noncommutative_safe() {
+        let xs: Vec<Pair> = (0..90)
+            .map(|i| Pair::new(1.0 + 0.02 * (i % 9) as f32, 0.1 * i as f32 - 4.0))
+            .collect();
+        let got = sliding_ping_pong(ConvPair, &xs, 5, 16);
+        let want = sliding_naive(ConvPair, &xs, 5);
+        for (g, t) in got.iter().zip(&want) {
+            assert!((g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Paper Algorithm 1 — *Scalar Input*.
+//!
+//! The input arrives one element at a time; a single vector register `Y`
+//! of suffix sums is maintained. Per element: broadcast, one vector `⊕`,
+//! emit lane 0, shift left. `O(N)` vector steps for any monoid — no
+//! associativity needed, because every window is accumulated strictly
+//! left-to-right.
+//!
+//! ```text
+//! Y ← (Σ_{j=0}^{w-2} xⱼ, Σ_{j=1}^{w-2} xⱼ, …, x_{w-2}, id, …, id)
+//! for i = w-1 .. N-1:
+//!     X ← (xᵢ ×w, id …)        # broadcast to first w lanes
+//!     Y ← Y ⊕ X
+//!     emit Y[0]
+//!     Y ← Y ≪ 1
+//! ```
+
+use crate::ops::AssocOp;
+use crate::simd::{VecReg, MAX_LANES};
+
+use super::out_len;
+
+/// Algorithm 1 over the software vector machine. Requires `w ≤ P`;
+/// for larger windows use [`sliding_scalar_input_unbounded`], which is the
+/// identical recurrence on a multi-register (heap) working set.
+pub fn sliding_scalar_input<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
+    if w > p || w > MAX_LANES {
+        return sliding_scalar_input_unbounded(op, xs, w);
+    }
+    let m = out_len(xs.len(), w);
+    let mut out = Vec::with_capacity(m);
+    if m == 0 {
+        return out;
+    }
+    let id = op.identity();
+
+    // Initialize Y with the suffix sums of the first w-1 elements:
+    // Y[l] = x_l ⊕ … ⊕ x_{w-2}.
+    let mut y = VecReg::splat(p, id);
+    for l in 0..w.saturating_sub(1) {
+        let mut acc = op.identity();
+        for &x in &xs[l..w - 1] {
+            acc = op.combine(acc, x);
+        }
+        y.set(l, acc);
+    }
+
+    for i in (w - 1)..xs.len() {
+        let x = VecReg::broadcast_prefix(p, xs[i], w, id);
+        y.combine_assign(op, &x);
+        out.push(y.get(0));
+        y.shift_left(1, id);
+    }
+    out
+}
+
+/// Algorithm 1's recurrence on an unbounded working set (window larger
+/// than the physical register). Each inner loop is the same lane-parallel
+/// `⊕`/shift, just longer than one register — on real hardware this is
+/// the multi-register strip-mined form.
+pub fn sliding_scalar_input_unbounded<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+) -> Vec<O::Elem> {
+    let m = out_len(xs.len(), w);
+    let mut out = Vec::with_capacity(m);
+    if m == 0 {
+        return out;
+    }
+    // Ring buffer of w-1 suffix accumulators; logical lane l of the paper's
+    // register lives at ring[(head + l) % (w-1)] — the ≪1 becomes a head
+    // bump instead of a data move.
+    if w == 1 {
+        out.extend_from_slice(xs);
+        return out;
+    }
+    let cap = w - 1;
+    let mut ring = vec![op.identity(); cap];
+    for l in 0..cap {
+        let mut acc = op.identity();
+        for &x in &xs[l..w - 1] {
+            acc = op.combine(acc, x);
+        }
+        ring[l] = acc;
+    }
+    let mut head = 0usize;
+    for i in (w - 1)..xs.len() {
+        let xi = xs[i];
+        // Y ⊕ broadcast(x_i) over the live lanes, emit lane 0, shift.
+        let front = op.combine(ring[head], xi);
+        out.push(front);
+        // The vacated slot becomes the youngest suffix lane: its
+        // accumulation starts with x_i itself (the broadcast in Alg 1
+        // touches the identity lane w-1 too, seeding the next window).
+        ring[head] = xi;
+        for l in 1..cap {
+            let idx = (head + l) % cap;
+            ring[idx] = op.combine(ring[idx], xi);
+        }
+        head = (head + 1) % cap;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    #[test]
+    fn matches_naive_add() {
+        let xs: Vec<f32> = (0..40).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        for w in [1usize, 2, 3, 5, 8] {
+            assert_eq!(
+                sliding_scalar_input(AddOp::<f32>::new(), &xs, w, 16),
+                sliding_naive(AddOp::<f32>::new(), &xs, w),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_max() {
+        let xs: Vec<i64> = (0..50).map(|i| (i * 37 % 23) as i64 - 11).collect();
+        for w in [2usize, 4, 7] {
+            assert_eq!(
+                sliding_scalar_input(MaxOp::<i64>::new(), &xs, w, 8),
+                sliding_naive(MaxOp::<i64>::new(), &xs, w)
+            );
+        }
+    }
+
+    #[test]
+    fn noncommutative_operand_order_preserved() {
+        let xs: Vec<Pair> = (0..20)
+            .map(|i| Pair::new(1.0 + 0.05 * i as f32, (i as f32) * 0.3 - 1.0))
+            .collect();
+        let got = sliding_scalar_input(ConvPair, &xs, 4, 8);
+        let want = sliding_naive(ConvPair, &xs, 4);
+        for (g, w_) in got.iter().zip(&want) {
+            assert!((g.u - w_.u).abs() < 1e-4 && (g.v - w_.v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn unbounded_path_matches_naive() {
+        let xs: Vec<f32> = (0..300).map(|i| ((i * 13 % 31) as f32) - 15.0).collect();
+        for w in [65usize, 100, 128] {
+            assert_eq!(
+                sliding_scalar_input(AddOp::<f32>::new(), &xs, w, 8),
+                sliding_naive(AddOp::<f32>::new(), &xs, w),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let xs: [f32; 0] = [];
+        assert!(sliding_scalar_input(AddOp::<f32>::new(), &xs, 3, 8).is_empty());
+        let xs = [1f32, 2.0];
+        assert!(sliding_scalar_input(AddOp::<f32>::new(), &xs, 3, 8).is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Streaming (online) sliding sums — Algorithm 1 as a push-based
+//! iterator, for inputs that arrive one element (or one packet) at a
+//! time: sensor streams, audio frames, network telemetry. This is the
+//! paper's "input sequence elements become available one by one" setting
+//! verbatim; state is the suffix-sum ring of [`sliding_scalar_input`],
+//! so each push is `O(w)` lane work / `O(1)` vector steps and no history
+//! buffer is kept.
+//!
+//! [`sliding_scalar_input`]: super::sliding_scalar_input
+
+use crate::ops::AssocOp;
+
+/// Online sliding-window accumulator: push elements, pop window sums.
+pub struct StreamingSlidingSum<O: AssocOp> {
+    op: O,
+    w: usize,
+    /// Suffix accumulators; logical lane `l` lives at `(head + l) % cap`.
+    ring: Vec<O::Elem>,
+    head: usize,
+    /// Elements consumed so far (windows start emitting at `w`).
+    seen: usize,
+}
+
+impl<O: AssocOp> StreamingSlidingSum<O> {
+    pub fn new(op: O, w: usize) -> Self {
+        assert!(w >= 1, "window must be positive");
+        Self {
+            op,
+            w,
+            ring: vec![op.identity(); w.max(2) - 1],
+            head: 0,
+            seen: 0,
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.w
+    }
+
+    /// Elements pushed so far.
+    pub fn len_seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Push one element; returns the completed window sum once `w`
+    /// elements have been seen (i.e. from the `w`-th push onward).
+    pub fn push(&mut self, x: O::Elem) -> Option<O::Elem> {
+        self.seen += 1;
+        if self.w == 1 {
+            return Some(x);
+        }
+        let cap = self.ring.len();
+        let front = self.op.combine(self.ring[self.head], x);
+        // Broadcast x into every live suffix lane; the vacated slot
+        // becomes the youngest lane seeded with x (Alg 1's broadcast
+        // touches lane w-1 too).
+        self.ring[self.head] = x;
+        for l in 1..cap {
+            let idx = (self.head + l) % cap;
+            self.ring[idx] = self.op.combine(self.ring[idx], x);
+        }
+        self.head = (self.head + 1) % cap;
+        if self.seen >= self.w {
+            Some(front)
+        } else {
+            None
+        }
+    }
+
+    /// Push a packet; collects completed sums (vector-input usage shape).
+    pub fn push_slice(&mut self, xs: &[O::Elem]) -> Vec<O::Elem> {
+        let mut out = Vec::with_capacity(xs.len());
+        for &x in xs {
+            if let Some(y) = self.push(x) {
+                out.push(y);
+            }
+        }
+        out
+    }
+
+    /// Reset to the empty-stream state.
+    pub fn reset(&mut self) {
+        for v in &mut self.ring {
+            *v = self.op.identity();
+        }
+        self.head = 0;
+        self.seen = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    #[test]
+    fn streaming_matches_batch() {
+        let xs: Vec<f32> = (0..100).map(|i| ((i * 13 % 31) as f32) - 15.0).collect();
+        for w in [1usize, 2, 3, 7, 16, 63] {
+            let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
+            let got = s.push_slice(&xs);
+            let want = sliding_naive(AddOp::<f32>::new(), &xs, w);
+            assert_eq!(got.len(), want.len(), "w={w}");
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn emits_nothing_before_w_elements() {
+        let mut s = StreamingSlidingSum::new(MaxOp::<f32>::new(), 4);
+        assert!(s.push(1.0).is_none());
+        assert!(s.push(5.0).is_none());
+        assert!(s.push(2.0).is_none());
+        assert_eq!(s.push(3.0), Some(5.0));
+        assert_eq!(s.push(0.0), Some(5.0)); // window [5,2,3,0]
+    }
+
+    #[test]
+    fn packets_split_arbitrarily() {
+        let xs: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let want = sliding_naive(AddOp::<f32>::new(), &xs, 5);
+        let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), 5);
+        let mut got = Vec::new();
+        for chunk in xs.chunks(7) {
+            got.extend(s.push_slice(chunk));
+        }
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn noncommutative_stream_order() {
+        let xs: Vec<Pair> = (0..30)
+            .map(|i| Pair::new(1.0 + 0.05 * ((i % 4) as f32), 0.2 * i as f32 - 3.0))
+            .collect();
+        let mut s = StreamingSlidingSum::new(ConvPair, 6);
+        let got = s.push_slice(&xs);
+        let want = sliding_naive(ConvPair, &xs, 6);
+        for (g, t) in got.iter().zip(&want) {
+            assert!((g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn reset_restarts_stream() {
+        let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), 3);
+        s.push_slice(&[1.0, 2.0, 3.0]);
+        s.reset();
+        assert_eq!(s.len_seen(), 0);
+        assert!(s.push(1.0).is_none());
+        assert!(s.push(1.0).is_none());
+        assert_eq!(s.push(1.0), Some(3.0));
+    }
+}

@@ -1,0 +1,275 @@
+//! Paper Algorithm 2 — *Vector Input*.
+//!
+//! The input arrives packed `P` elements per load. Per iteration the
+//! register `X1` of *capped prefix sums* (windows growing to size `w`,
+//! then sliding) is combined with the carry register `Y` of suffix sums
+//! from the previous iteration, emitting `P` outputs at once:
+//!
+//! ```text
+//! Y[l] = x_{i-w+1+l} ⊕ … ⊕ x_{i-1}      l < w-1   (carry invariant)
+//! X1[j] = x_{i+max(0,j-w+1)} ⊕ … ⊕ x_{i+j}        (capped prefix)
+//! out[j] = Y[j] ⊕ X1[j]                            (P outputs)
+//! Y' [l] = x_{i+P-w+1+l} ⊕ … ⊕ x_{i+P-1}          (new carry = suffixes)
+//! ```
+//!
+//! Linear variant: `X1` is built with `w−1` shifted combines →
+//! `O(N·w/P)`. Log variant: `X1` and the carry are built with the
+//! block-scan decomposition of [3] in `⌈log₂ w⌉` sweeps → `O(N·log w/P)`
+//! (associative `⊕` required). Speedups `O(P/w)` → `O(P/log w)`, the
+//! paper's headline complexity claims.
+
+use crate::ops::AssocOp;
+use crate::simd::{VecReg, MAX_LANES};
+
+use super::{out_len, sliding_scalar_input};
+
+/// Build the capped-prefix register `X1` from `X` with `w-1` shifted
+/// combines (the linear, any-monoid construction).
+///
+/// `X1[j] = X[max(0,j-w+1)] ⊕ … ⊕ X[j]`, accumulated left-to-right so
+/// non-commutative operators are safe: iterate tap `k = w-1 … 0`, each
+/// step appending `X[j-k]`... wait, ordering: we must combine the
+/// *earliest* element first, so we start from the slid copy with the
+/// largest backward offset and fold toward offset 0.
+fn capped_prefix_linear<O: AssocOp>(op: O, x: &VecReg<O::Elem>, w: usize) -> VecReg<O::Elem> {
+    let p = x.width();
+    let id = op.identity();
+    // acc[j] starts as the farthest-back contribution X[j-(w-1)] (identity
+    // where j < w-1), then folds X[j-k] for k = w-2 … 0 on the right.
+    let idreg = VecReg::splat(p, id);
+    let mut acc = VecReg::slide(&idreg, x, p.saturating_sub(w - 1).max(0));
+    // ^ slide(id, X, p-(w-1)): lane j = X[j-(w-1)] for j ≥ w-1, id below.
+    for k in (0..w - 1).rev() {
+        let shifted = VecReg::slide(&idreg, x, p - k);
+        acc.combine_assign(op, &shifted);
+    }
+    acc
+}
+
+/// Log-depth capped-prefix: doubling sweeps building windows of size
+/// `2^t` ending at each lane, then a binary-decomposition fold for
+/// non-power-of-two `w`. Requires associativity (always true for
+/// [`AssocOp`]); uses the idempotence shortcut when available.
+fn capped_prefix_log<O: AssocOp>(op: O, x: &VecReg<O::Elem>, w: usize) -> VecReg<O::Elem> {
+    let p = x.width();
+    let id = op.identity();
+    let idreg = VecReg::splat(p, id);
+    debug_assert!(w >= 1 && w <= p);
+    if w == 1 {
+        return x.clone();
+    }
+    // d[t]: lane j holds X[j-2^t+1 ..= j] (identity-padded below lane 0).
+    let mut win = x.clone(); // window size 1
+    let mut size = 1usize;
+    let t_max = (w as f64).log2().floor() as u32;
+    let target = 1usize << t_max;
+    while size < target {
+        // win2[j] = win[j-size] ⊕ win[j]
+        let shifted = VecReg::slide(&idreg, &win, p - size);
+        let mut win2 = shifted;
+        win2.combine_assign(op, &win);
+        win = win2;
+        size *= 2;
+    }
+    if size == w {
+        return win;
+    }
+    if op.is_idempotent() {
+        // Overlapping union covers size w exactly for idempotent ops:
+        // [j-w+1, j-w+size] ∪ [j-size+1, j] = [j-w+1, j] since 2·size ≥ w.
+        let shifted = VecReg::slide(&idreg, &win, p - (w - size));
+        let mut out = shifted;
+        out.combine_assign(op, &win);
+        return out;
+    }
+    // General associative: fold the remaining w-size elements using the
+    // binary decomposition of (w - size) over the power-of-two windows we
+    // can rebuild on the way down. Simpler equivalent: recurse.
+    let rest = capped_prefix_log(op, x, w - size);
+    // out[j] = rest[j-size] ⊕ win[j]  (earlier block ⊕ later block)
+    let shifted_rest = VecReg::slide(&idreg, &rest, p - size);
+    let mut out = shifted_rest;
+    out.combine_assign(op, &win);
+    out
+}
+
+fn vector_input_impl<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    log_variant: bool,
+) -> Vec<O::Elem> {
+    // The vector algorithms require w ≤ P (paper precondition P > w).
+    if w > p || w > MAX_LANES || w <= 1 {
+        return sliding_scalar_input(op, xs, w, p);
+    }
+    let n = xs.len();
+    let m = out_len(n, w);
+    let mut out = vec![op.identity(); m];
+    if m == 0 {
+        return out;
+    }
+    let id = op.identity();
+
+    // Carry register: Y[l] = x_l ⊕ … ⊕ x_{w-2} initially (suffixes of the
+    // first w-1 elements), identity in lanes ≥ w-1.
+    let mut y = VecReg::splat(p, id);
+    for l in 0..w - 1 {
+        let mut acc = op.identity();
+        for &x in &xs[l..w - 1] {
+            acc = op.combine(acc, x);
+        }
+        y.set(l, acc);
+    }
+
+    let mut i = w - 1; // input cursor: iteration consumes x_i .. x_{i+P-1}
+    let mut emitted = 0usize;
+    while emitted < m {
+        let take = p.min(n - i);
+        let x = VecReg::load(p, &xs[i..i + take], id);
+        let x1 = if log_variant {
+            capped_prefix_log(op, &x, w)
+        } else {
+            capped_prefix_linear(op, &x, w)
+        };
+        // out[j] = Y[j] ⊕ X1[j]
+        let mut o = y.clone();
+        o.combine_assign(op, &x1);
+        let emit = take.min(m - emitted);
+        o.store(&mut out[emitted..emitted + emit]);
+        emitted += emit;
+
+        // New carry: suffix sums of the last w-1 loaded elements,
+        // Y'[l] = X[take-w+1+l] ⊕ … ⊕ X[take-1]. Built log-depth in
+        // register via suffix_scan (associative) or linearly otherwise —
+        // both are O(w) lanes of the register, matching the paper's Y1.
+        let mut carry = x.clone();
+        if take >= w {
+            carry.suffix_scan_inclusive(op, take + 1 - w, take);
+            let mut y2 = VecReg::splat(p, id);
+            for l in 0..w - 1 {
+                y2.set(l, carry.get(take + 1 - w + l));
+            }
+            y = y2;
+        } else {
+            // Tail iteration shorter than a register; nothing left to emit
+            // after this pass, carry unused.
+        }
+        i += take;
+    }
+    out
+}
+
+/// Algorithm 2 (linear in-register construction): `O(N·w/P)`, speedup
+/// `O(P/w)`, any monoid.
+pub fn sliding_vector_input<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    vector_input_impl(op, xs, w, p, false)
+}
+
+/// Algorithm 2 with the log-depth prefix construction of [3]:
+/// `O(N·log w/P)`, speedup `O(P/log w)`, associative `⊕`.
+pub fn sliding_vector_input_log<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
+    vector_input_impl(op, xs, w, p, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, MinOp, MulOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    fn check_f32<O: AssocOp<Elem = f32>>(op: O, xs: &[f32], w: usize, p: usize, log: bool) {
+        let got = vector_input_impl(op, xs, w, p, log);
+        let want = sliding_naive(op, xs, w);
+        assert_eq!(got.len(), want.len(), "len w={w} p={p} log={log}");
+        for (i, (g, t)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - t).abs() <= 1e-3 * (1.0 + t.abs()),
+                "w={w} p={p} log={log} idx={i}: {g} vs {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_matches_naive_add_sweep() {
+        let xs: Vec<f32> = (0..137).map(|i| ((i * 17 % 29) as f32) * 0.3 - 4.0).collect();
+        for p in [8usize, 16, 32] {
+            for w in [2usize, 3, 4, 5, 7, 8] {
+                if w < p {
+                    check_f32(AddOp::<f32>::new(), &xs, w, p, false);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn log_matches_naive_add_sweep() {
+        let xs: Vec<f32> = (0..137).map(|i| ((i * 11 % 37) as f32) * 0.2 - 3.0).collect();
+        for p in [16usize, 32, 64] {
+            for w in [2usize, 3, 4, 6, 8, 11, 15, 16] {
+                if w < p {
+                    check_f32(AddOp::<f32>::new(), &xs, w, p, true);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn log_idempotent_path_max_min() {
+        let xs: Vec<f32> = (0..200).map(|i| ((i * 73 % 101) as f32) - 50.0).collect();
+        for w in [2usize, 3, 5, 6, 7, 12, 13] {
+            check_f32(MaxOp::<f32>::new(), &xs, w, 16, true);
+            check_f32(MinOp::<f32>::new(), &xs, w, 16, true);
+        }
+    }
+
+    #[test]
+    fn product_windows_nonzero() {
+        let xs: Vec<f32> = (0..60).map(|i| 1.0 + 0.01 * (i % 7) as f32).collect();
+        for w in [2usize, 5, 9] {
+            check_f32(MulOp::<f32>::new(), &xs, w, 16, false);
+            check_f32(MulOp::<f32>::new(), &xs, w, 16, true);
+        }
+    }
+
+    #[test]
+    fn noncommutative_pairs_both_variants() {
+        let xs: Vec<Pair> = (0..70)
+            .map(|i| Pair::new(1.0 + 0.03 * (i % 5) as f32, 0.2 * i as f32 - 7.0))
+            .collect();
+        for w in [2usize, 3, 5, 8] {
+            for log in [false, true] {
+                let got = vector_input_impl(ConvPair, &xs, w, 16, log);
+                let want = sliding_naive(ConvPair, &xs, w);
+                assert_eq!(got.len(), want.len());
+                for (g, t) in got.iter().zip(&want) {
+                    assert!(
+                        (g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3,
+                        "w={w} log={log}: {g:?} vs {t:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn input_not_multiple_of_p() {
+        for n in [17usize, 31, 33, 63, 65, 100] {
+            let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            check_f32(AddOp::<f32>::new(), &xs, 4, 16, false);
+            check_f32(AddOp::<f32>::new(), &xs, 4, 16, true);
+        }
+    }
+
+    #[test]
+    fn w_equal_p_falls_back() {
+        let xs: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        check_f32(AddOp::<f32>::new(), &xs, 16, 16, false);
+    }
+}

@@ -1,0 +1,303 @@
+//! Paper Algorithm 4 — *Vector Slide*.
+//!
+//! The simplest vector formulation: keep the previous register `Y` and
+//! the current register `Y1`; every window sum ending inside `Y1` is the
+//! fold of `w` slid views of the pair (`Slide` = SVE `EXT`, RISC-V
+//! `vslideup/down`, AVX-512 `vperm*2ps`):
+//!
+//! ```text
+//! for k = w-1 … 0:   X ⊕= Slide(Y, Y1, P-k)     # lane j = x_{i+j-k}
+//! emit X[0 … P-1]  =  y_{i-w+1} … y_{i+P-w}
+//! ```
+//!
+//! (The paper iterates k ascending; we fold descending so the earliest
+//! element enters the accumulator first, making the algorithm valid for
+//! non-commutative operators such as [`ConvPair`].)
+//!
+//! `sliding_vector_slide_tree` replaces the `w−1`-step inner loop with a
+//! doubling ladder — `⌈log₂ w⌉` slide+combine steps per register, the
+//! paper's "inner loop could be replaced by the parallel reduction for
+//! maximum parallel speedup".
+//!
+//! [`ConvPair`]: crate::ops::ConvPair
+
+use crate::ops::AssocOp;
+use crate::simd::{VecReg, MAX_LANES};
+
+use super::{out_len, sliding_scalar_input};
+
+/// Algorithm 4, linear inner loop: `O(N·w/P)`, any monoid.
+pub fn sliding_vector_slide<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    if w > p || w > MAX_LANES || w <= 1 {
+        return sliding_scalar_input(op, xs, w, p);
+    }
+    let n = xs.len();
+    let m = out_len(n, w);
+    let mut out = vec![op.identity(); m];
+    if m == 0 {
+        return out;
+    }
+    let id = op.identity();
+
+    // Pre-pad the stream with w-1 identities so the first register pair
+    // already has a full backward horizon: y holds x_{i-P}..x_{i-1}.
+    let mut y = VecReg::splat(p, id);
+    let mut i = 0usize; // index of the first element in the current load
+    let mut emitted = 0usize;
+    while emitted < m {
+        let take = p.min(n - i);
+        let y1 = VecReg::load(p, &xs[i..i + take], id);
+        // Fold slid views, earliest offset first.
+        let mut x = VecReg::slide(&y, &y1, p - (w - 1));
+        for k in (0..w - 1).rev() {
+            let v = VecReg::slide(&y, &y1, p - k);
+            x.combine_assign(op, &v);
+        }
+        // Lane j holds the window ending at x_{i+j}, i.e. y_{i+j-w+1}.
+        // Valid outputs need i+j-w+1 ≥ 0 and i+j ≤ n-1.
+        let lane_lo = if i == 0 { w - 1 } else { 0 };
+        let start = i + lane_lo + 1 - w; // output index of lane_lo
+        let avail = take.saturating_sub(lane_lo);
+        let emit = avail.min(m - start);
+        for j in 0..emit {
+            out[start + j] = x.get(lane_lo + j);
+        }
+        emitted = start + emit;
+        y = y1;
+        i += take;
+        if take < p {
+            break;
+        }
+    }
+    debug_assert_eq!(emitted, m);
+    out
+}
+
+/// Algorithm 4 with a log-depth doubling ladder: `O(N·log w/P)`,
+/// associative `⊕` (idempotent shortcut for max/min).
+///
+/// Level `t` maintains a register pair `(prev_t, cur_t)` where lane `j`
+/// holds the window of size `2^t` ending at stream position `j` of that
+/// register. Doubling: `cur_{t+1} = Slide(prev_t, cur_t, P−2^t) ⊕ cur_t`.
+/// For non-power-of-two `w = 2^T + r` the result folds the size-`r`
+/// ladder output (computed the same way) slid back by `2^T`; idempotent
+/// operators instead overlap two size-`2^T` windows.
+pub fn sliding_vector_slide_tree<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
+    if w > p || w > MAX_LANES || w <= 1 {
+        return sliding_scalar_input(op, xs, w, p);
+    }
+    // Required ladder sizes: the binary decomposition of w, folded from
+    // the most significant chunk (earliest stream positions) down.
+    // window_w(end j) = window_hi(end j - lo_total) ⊕ window_rest(end j).
+    // We precompute for each register the full ladder up to 2^T and reuse
+    // sub-windows for the remainder chain.
+    let n = xs.len();
+    let m = out_len(n, w);
+    let mut out = vec![op.identity(); m];
+    if m == 0 {
+        return out;
+    }
+    let id = op.identity();
+
+    // Decompose w into chunk sizes (powers of two, descending), e.g.
+    // w=13 → [8,4,1]. Idempotent ops use two overlapping chunks instead.
+    let t_max = usize::BITS - 1 - w.leading_zeros(); // floor(log2 w)
+    let top = 1usize << t_max;
+    let chunks: Vec<usize> = if w == top {
+        vec![top]
+    } else if op.is_idempotent() {
+        vec![top, top] // two overlapping windows of size 2^T
+    } else {
+        let mut c = Vec::new();
+        let rem = w;
+        let mut bit = top;
+        while bit > 0 {
+            if rem & bit != 0 {
+                c.push(bit);
+            }
+            bit >>= 1;
+        }
+        debug_assert_eq!(c.iter().sum::<usize>(), w);
+        c
+    };
+
+    let mut prev_ladder: Vec<VecReg<O::Elem>> = Vec::new(); // per level t
+    let mut i = 0usize;
+    let mut emitted = 0usize;
+    while emitted < m {
+        let take = p.min(n - i);
+        let cur0 = VecReg::load(p, &xs[i..i + take], id);
+        // Build the doubling ladder for the current register.
+        let mut cur_ladder = Vec::with_capacity(t_max as usize + 1);
+        cur_ladder.push(cur0.clone());
+        for t in 0..t_max as usize {
+            let size = 1usize << t;
+            let prev_t = prev_ladder
+                .get(t)
+                .cloned()
+                .unwrap_or_else(|| VecReg::splat(p, id));
+            let slid = VecReg::slide(&prev_t, &cur_ladder[t], p - size);
+            let mut next = slid;
+            next.combine_assign(op, &cur_ladder[t]);
+            cur_ladder.push(next);
+        }
+
+        // Fold the chunks: window of size w ending at lane j.
+        // Offsets accumulate from the tail: the last chunk ends at j, the
+        // one before it ends at j - (sum of later chunk sizes)…
+        let level_of = |size: usize| size.trailing_zeros() as usize;
+        let mut offset = 0usize; // distance from window end to chunk end
+        let mut acc: Option<VecReg<O::Elem>> = None;
+        if op.is_idempotent() && w != top {
+            // chunks = [top, top] overlapping: ends at j-(w-top) and j.
+            let a = &cur_ladder[level_of(top)];
+            let prev_a = prev_ladder
+                .get(level_of(top))
+                .cloned()
+                .unwrap_or_else(|| VecReg::splat(p, id));
+            let mut v = VecReg::slide(&prev_a, a, p - (w - top));
+            v.combine_assign(op, a);
+            acc = Some(v);
+        } else {
+            for &size in chunks.iter().rev() {
+                let lvl = level_of(size);
+                let reg = &cur_ladder[lvl];
+                let prev_reg = prev_ladder
+                    .get(lvl)
+                    .cloned()
+                    .unwrap_or_else(|| VecReg::splat(p, id));
+                let slid = if offset == 0 {
+                    reg.clone()
+                } else {
+                    VecReg::slide(&prev_reg, reg, p - offset)
+                };
+                acc = Some(match acc {
+                    // Earlier chunk (larger offset) goes on the LEFT.
+                    Some(a) => {
+                        let mut s = slid;
+                        s.combine_assign(op, &a);
+                        s
+                    }
+                    None => slid,
+                });
+                offset += size;
+            }
+        }
+        let x = acc.unwrap();
+
+        let lane_lo = if i == 0 { w - 1 } else { 0 };
+        let start = i + lane_lo + 1 - w;
+        let avail = take.saturating_sub(lane_lo);
+        let emit = avail.min(m - start);
+        for j in 0..emit {
+            out[start + j] = x.get(lane_lo + j);
+        }
+        emitted = start + emit;
+        prev_ladder = cur_ladder;
+        i += take;
+        if take < p {
+            break;
+        }
+    }
+    debug_assert_eq!(emitted, m);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{AddOp, ConvPair, MaxOp, MinOp, Pair};
+    use crate::sliding::sliding_naive;
+
+    fn check<O: AssocOp<Elem = f32>>(op: O, xs: &[f32], w: usize, p: usize, tree: bool) {
+        let got = if tree {
+            sliding_vector_slide_tree(op, xs, w, p)
+        } else {
+            sliding_vector_slide(op, xs, w, p)
+        };
+        let want = sliding_naive(op, xs, w);
+        assert_eq!(got.len(), want.len(), "len w={w} p={p} tree={tree}");
+        for (idx, (g, t)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - t).abs() <= 1e-3 * (1.0 + t.abs()),
+                "w={w} p={p} tree={tree} n={} idx={idx}: {g} vs {t}",
+                xs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn linear_matches_naive_sweep() {
+        let xs: Vec<f32> = (0..211).map(|i| ((i * 31 % 53) as f32) * 0.2 - 5.0).collect();
+        for p in [8usize, 16, 32] {
+            for w in [2usize, 3, 5, 7] {
+                if w < p {
+                    check(AddOp::<f32>::new(), &xs, w, p, false);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_matches_naive_sweep_pow2_and_not() {
+        let xs: Vec<f32> = (0..211).map(|i| ((i * 13 % 61) as f32) * 0.3 - 9.0).collect();
+        for w in [2usize, 3, 4, 5, 6, 7, 8, 11, 13, 15] {
+            check(AddOp::<f32>::new(), &xs, w, 16, true);
+        }
+    }
+
+    #[test]
+    fn tree_idempotent_overlap_path() {
+        let xs: Vec<f32> = (0..301).map(|i| ((i * 89 % 127) as f32) - 60.0).collect();
+        for w in [3usize, 5, 6, 7, 9, 12, 15] {
+            check(MaxOp::<f32>::new(), &xs, w, 16, true);
+            check(MinOp::<f32>::new(), &xs, w, 16, true);
+        }
+    }
+
+    #[test]
+    fn ragged_lengths_both() {
+        for n in [4usize, 16, 17, 31, 32, 33, 63, 64, 65, 100] {
+            let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.7 - 2.0).collect();
+            if n >= 4 {
+                check(AddOp::<f32>::new(), &xs, 4, 16, false);
+                check(AddOp::<f32>::new(), &xs, 4, 16, true);
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_pairs_both() {
+        let xs: Vec<Pair> = (0..77)
+            .map(|i| Pair::new(1.0 + 0.04 * (i % 6) as f32, 0.15 * i as f32 - 3.0))
+            .collect();
+        for w in [2usize, 3, 5, 6] {
+            for tree in [false, true] {
+                let got = if tree {
+                    sliding_vector_slide_tree(ConvPair, &xs, w, 16)
+                } else {
+                    sliding_vector_slide(ConvPair, &xs, w, 16)
+                };
+                let want = sliding_naive(ConvPair, &xs, w);
+                for (g, t) in got.iter().zip(&want) {
+                    assert!(
+                        (g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3,
+                        "w={w} tree={tree}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_w_falls_back() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        check(AddOp::<f32>::new(), &xs, 20, 16, false); // w > p → fallback
+        check(AddOp::<f32>::new(), &xs, 20, 16, true);
+    }
+}

@@ -1,0 +1,207 @@
+//! Metrics substrate: counters, log-bucketed latency histograms, timers.
+//! Used by the coordinator (per-request latency, batch sizes, queue
+//! depth) and the bench harness (percentile reporting).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic counter, shareable across threads.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed histogram of nanosecond durations: bucket `i` covers
+/// `[2^i, 2^{i+1})` ns. 64 buckets span ns → ~584 years; quantiles are
+/// estimated at bucket midpoints (≤ 2× relative error, fine for latency
+/// reporting; the bench harness uses exact sample sets instead).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (64 - ns.max(1).leading_zeros() as usize).saturating_sub(1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile (`q ∈ [0,1]`) in nanoseconds.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                // Midpoint of [2^i, 2^{i+1}).
+                return 1.5 * (1u64 << i) as f64;
+            }
+        }
+        1.5 * (1u64 << 63) as f64
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean_us: self.mean_ns() / 1_000.0,
+            p50_us: self.quantile_ns(0.50) / 1_000.0,
+            p95_us: self.quantile_ns(0.95) / 1_000.0,
+            p99_us: self.quantile_ns(0.99) / 1_000.0,
+        }
+    }
+}
+
+/// Point-in-time histogram summary (microseconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl std::fmt::Display for HistogramSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us
+        )
+    }
+}
+
+/// Scope timer recording into a histogram on drop.
+pub struct ScopedTimer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(hist: &'a Histogram) -> Self {
+        Self {
+            hist,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_records_and_means() {
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(1000));
+        h.record(Duration::from_nanos(3000));
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_ns() - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_nanos(i * 100));
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p95 = h.quantile_ns(0.95);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log-bucket estimate within 2× of true (50_000 ns)
+        assert!(p50 > 25_000.0 && p50 < 100_000.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn empty_histogram_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.9), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn scoped_timer_records() {
+        let h = Histogram::new();
+        {
+            let _t = ScopedTimer::new(&h);
+            std::hint::black_box(42);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn snapshot_display() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(5));
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert!(format!("{s}").contains("n=1"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic workload generation for benches, examples and the serving
+//! driver — replaces the paper's proprietary inputs (DESIGN.md §2
+//! substitutions table).
+
+pub mod rng;
+
+pub use rng::Rng;
+
+use crate::conv::Conv1dParams;
+
+/// A Fig-1-style workload: one long 1-D signal and a filter of size `k`.
+pub fn fig1_signal(rng: &mut Rng, n: usize) -> Vec<f32> {
+    // Smooth-ish signal: AR(1) noise, mimicking audio/sensor streams the
+    // paper's intro motivates.
+    let mut x = vec![0.0f32; n];
+    let mut prev = 0.0f32;
+    for v in x.iter_mut() {
+        prev = 0.95 * prev + 0.3 * rng.normal();
+        *v = prev;
+    }
+    x
+}
+
+/// The Chaudhary et al. [4] dilated-conv scenario recreated synthetically:
+/// layer shapes spanning their published sweep (seq 2k–32k, kernels 3–127,
+/// dilations 1–64). Returns (name, params) rows for Fig 2.
+pub fn chaudhary_dilated_suite() -> Vec<(String, Conv1dParams)> {
+    let mut rows = Vec::new();
+    // "Small data set" — short sequences, large dilated receptive fields
+    // (where the paper reports up to 6.8×).
+    for (n, k, d) in [
+        (2048usize, 15usize, 8usize),
+        (2048, 31, 8),
+        (2048, 63, 16),
+        (4096, 31, 16),
+        (4096, 63, 16),
+    ] {
+        rows.push((
+            format!("small/n{n}_k{k}_d{d}"),
+            Conv1dParams::new(1, 1, n, k).with_dilation(d).with_same_pad(),
+        ));
+    }
+    // "Across the board" — longer sequences, multi-channel, mixed dilation
+    // (where the paper reports ≈4×).
+    for (n, c, k, d) in [
+        (8192usize, 4usize, 7usize, 2usize),
+        (8192, 4, 15, 4),
+        (16384, 8, 31, 8),
+        (16384, 8, 63, 32),
+        (32768, 4, 127, 64),
+        (32768, 8, 15, 16),
+    ] {
+        rows.push((
+            format!("board/n{n}_c{c}_k{k}_d{d}"),
+            Conv1dParams::new(c, c, n, k).with_dilation(d).with_same_pad(),
+        ));
+    }
+    rows
+}
+
+/// Random DNA sequence (A/C/G/T) for the minimizer example.
+pub fn dna_sequence(rng: &mut Rng, n: usize) -> Vec<u8> {
+    const BASES: [u8; 4] = *b"ACGT";
+    (0..n).map(|_| BASES[rng.below(4)]).collect()
+}
+
+/// 2-bit pack + rolling k-mer hash (invertible multiply), the standard
+/// minimizer-seed prep.
+pub fn kmer_hashes(seq: &[u8], k: usize) -> Vec<u64> {
+    if seq.len() < k {
+        return Vec::new();
+    }
+    let code = |b: u8| -> u64 {
+        match b {
+            b'A' => 0,
+            b'C' => 1,
+            b'G' => 2,
+            b'T' => 3,
+            _ => 0,
+        }
+    };
+    let mask = if 2 * k >= 64 { u64::MAX } else { (1u64 << (2 * k)) - 1 };
+    let mut h = 0u64;
+    let mut out = Vec::with_capacity(seq.len() - k + 1);
+    for (i, &b) in seq.iter().enumerate() {
+        h = ((h << 2) | code(b)) & mask;
+        if i + 1 >= k {
+            // Finalizer (splitmix-style) decorrelates lexicographic order.
+            let mut z = h.wrapping_add(0x9e3779b97f4a7c15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            out.push(z ^ (z >> 31));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_signal_is_deterministic() {
+        let a = fig1_signal(&mut Rng::new(5), 100);
+        let b = fig1_signal(&mut Rng::new(5), 100);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    fn chaudhary_suite_shapes_valid() {
+        let suite = chaudhary_dilated_suite();
+        assert!(suite.len() >= 10);
+        for (name, p) in &suite {
+            assert!(p.n_out() > 0, "{name}");
+            assert_eq!(p.n_out(), p.n, "{name} same-pad must preserve length");
+        }
+    }
+
+    #[test]
+    fn dna_and_kmers() {
+        let seq = dna_sequence(&mut Rng::new(9), 64);
+        assert!(seq.iter().all(|b| b"ACGT".contains(b)));
+        let hashes = kmer_hashes(&seq, 15);
+        assert_eq!(hashes.len(), 64 - 15 + 1);
+        // same k-mer → same hash
+        let h2 = kmer_hashes(&seq, 15);
+        assert_eq!(hashes, h2);
+    }
+
+    #[test]
+    fn kmer_short_input_empty() {
+        assert!(kmer_hashes(b"ACG", 15).is_empty());
+    }
+}

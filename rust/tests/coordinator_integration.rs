@@ -1,0 +1,294 @@
+//! Coordinator integration: batching behaviour, backpressure, shape
+//! validation, TCP front-end, and the PJRT-engine serving path.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use swsnn::config::{load_config, ServeConfig};
+use swsnn::conv::ConvBackend;
+use swsnn::coordinator::{
+    serve_tcp, Coordinator, Engine, NativeEngine, PjrtTcnEngine, SubmitError, TcpClient,
+};
+use swsnn::nn::Model;
+use swsnn::workload::Rng;
+
+const CFG: &str = r#"
+[model]
+name = "itest"
+c_in = 1
+seq_len = 32
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 3
+
+[layer.1]
+type = "conv"
+c_out = 1
+k = 3
+"#;
+
+fn native_coordinator(serve: &ServeConfig) -> Coordinator {
+    let (mc, _) = load_config(CFG).unwrap();
+    let mut rng = Rng::new(1);
+    let model = Model::init(&mc, &mut rng).unwrap();
+    let engine = NativeEngine::new(model, ConvBackend::Sliding, serve.max_batch);
+    Coordinator::start_native(engine, serve).unwrap()
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let coord = native_coordinator(&ServeConfig::default());
+    let mut rng = Rng::new(2);
+    let out = coord.infer(rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    assert_eq!(out.len(), 32);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn bad_shape_rejected_immediately() {
+    let coord = native_coordinator(&ServeConfig::default());
+    match coord.try_submit(vec![0.0; 31]) {
+        Err(SubmitError::BadShape { expected: 32, got: 31 }) => {}
+        other => panic!("{other:?}"),
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn responses_match_unbatched_reference() {
+    // Whatever batches form, each row's response must equal the
+    // single-row forward of the same engine.
+    let (mc, _) = load_config(CFG).unwrap();
+    let mut rng = Rng::new(3);
+    let model = Model::init(&mc, &mut rng).unwrap();
+    let reference = Model::init(&mc, &mut Rng::new(3)).unwrap(); // same seed → same params
+
+    let serve = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 2000,
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_native(NativeEngine::new(model, ConvBackend::Sliding, 4), &serve)
+            .unwrap();
+
+    let mut rng2 = Rng::new(77);
+    let inputs: Vec<Vec<f32>> = (0..10).map(|_| rng2.vec_uniform(32, -1.0, 1.0)).collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| coord.submit(x.clone()).unwrap())
+        .collect();
+    for (x, t) in inputs.iter().zip(tickets) {
+        let got = t.wait().unwrap();
+        let want = reference.forward(x, 1, ConvBackend::Sliding).unwrap().data;
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 10);
+    assert!(stats.batches <= 10);
+}
+
+#[test]
+fn deadline_batching_aggregates() {
+    // Concurrent submitters with a long deadline should form
+    // multi-row batches.
+    let serve = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 20_000,
+        ..Default::default()
+    };
+    let coord = Arc::new(native_coordinator(&serve));
+    let mut handles = Vec::new();
+    for i in 0..16 {
+        let c = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + i);
+            c.infer(rng.vec_uniform(32, -1.0, 1.0)).unwrap()
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 16);
+    assert!(
+        stats.mean_batch > 1.0,
+        "expected batching, got mean batch {}",
+        stats.mean_batch
+    );
+}
+
+#[test]
+fn backpressure_overload_signal() {
+    // An engine that blocks until released fills the queue; try_submit
+    // must report Overloaded rather than deadlocking.
+    struct StuckEngine(Arc<AtomicBool>);
+    impl Engine for StuckEngine {
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            4
+        }
+        fn batch_buckets(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            while !self.0.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Ok(x.to_vec())
+        }
+        fn name(&self) -> String {
+            "stuck".into()
+        }
+    }
+    let release = Arc::new(AtomicBool::new(false));
+    let serve = ServeConfig {
+        max_batch: 1,
+        queue_capacity: 2,
+        batch_deadline_us: 0,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(StuckEngine(Arc::clone(&release)), &serve).unwrap();
+    // One in-flight + fill the queue, then overload.
+    let _t0 = coord.submit(vec![0.0; 4]).unwrap();
+    std::thread::sleep(Duration::from_millis(20)); // let worker pick t0
+    let _t1 = coord.submit(vec![0.0; 4]).unwrap();
+    let _t2 = coord.submit(vec![0.0; 4]).unwrap();
+    let mut saw_overload = false;
+    for _ in 0..50 {
+        match coord.try_submit(vec![0.0; 4]) {
+            Err(SubmitError::Overloaded) => {
+                saw_overload = true;
+                break;
+            }
+            Ok(_) => continue,
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert!(saw_overload, "queue never signalled backpressure");
+    release.store(true, Ordering::SeqCst);
+}
+
+#[test]
+fn engine_error_propagates_to_all_waiters() {
+    struct FailEngine;
+    impl Engine for FailEngine {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn batch_buckets(&self) -> Vec<usize> {
+            vec![4]
+        }
+        fn infer(&self, _x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("numerical explosion")
+        }
+        fn name(&self) -> String {
+            "fail".into()
+        }
+    }
+    let serve = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 5_000,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(FailEngine, &serve).unwrap();
+    let t1 = coord.submit(vec![0.0; 2]).unwrap();
+    let t2 = coord.submit(vec![0.0; 2]).unwrap();
+    for t in [t1, t2] {
+        let err = t.wait().unwrap_err();
+        assert!(err.contains("numerical explosion"), "{err}");
+    }
+}
+
+#[test]
+fn factory_error_fails_start() {
+    let serve = ServeConfig::default();
+    let res = Coordinator::start(Box::new(|| anyhow::bail!("no artifacts here")), &serve);
+    assert!(res.is_err());
+    assert!(res.err().unwrap().to_string().contains("no artifacts"));
+}
+
+#[test]
+fn tcp_roundtrip_and_error_frames() {
+    let coord = Arc::new(native_coordinator(&ServeConfig::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp(coord, "127.0.0.1:0", stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut client = TcpClient::connect(addr).unwrap();
+    let mut rng = Rng::new(9);
+    let out = client.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    assert_eq!(out.len(), 32);
+    // Wrong shape → server-side error frame, connection stays usable.
+    let err = client.infer(&[1.0, 2.0]).unwrap_err();
+    assert!(err.to_string().contains("bad input shape"), "{err}");
+    let out2 = client.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    assert_eq!(out2.len(), 32);
+
+    stop.store(true, Ordering::SeqCst);
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn pjrt_engine_serves_requests() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.is_dir() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let serve = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 3_000,
+        ..Default::default()
+    };
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        Box::new(move || Ok(Box::new(PjrtTcnEngine::from_artifacts(dir2, 42)?) as _)),
+        &serve,
+    )
+    .unwrap();
+    assert!(coord.engine_name().starts_with("pjrt/"));
+    assert_eq!(coord.input_len(), 512);
+
+    let done = Arc::new(AtomicUsize::new(0));
+    let coord = Arc::new(coord);
+    let mut handles = Vec::new();
+    for i in 0..12u64 {
+        let c = Arc::clone(&coord);
+        let d = Arc::clone(&done);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + i);
+            let out = c.infer(rng.vec_uniform(512, -1.0, 1.0)).unwrap();
+            assert_eq!(out.len(), 512);
+            assert!(out.iter().all(|v| v.is_finite()));
+            d.fetch_add(1, Ordering::SeqCst);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(done.load(Ordering::SeqCst), 12);
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 12);
+}

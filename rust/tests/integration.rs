@@ -1,0 +1,227 @@
+//! Cross-module integration: config → model → conv backends → pooling →
+//! algorithm family, plus the experiment *shape* assertions from
+//! DESIGN.md §4 (fast variants of the Fig 1 / Fig 2 win criteria).
+
+use swsnn::bench::{bench, BenchConfig};
+use swsnn::config::load_config;
+use swsnn::conv::{conv1d, conv1d_pair_tree, Conv1dParams, ConvBackend};
+use swsnn::nn::Model;
+use swsnn::ops::{AddOp, ConvPair, MaxOp, MinOp, MulOp};
+use swsnn::pool::{pool1d, pool1d_naive, Pool1dParams, PoolKind};
+use swsnn::sliding::{self, Algo, Boundary};
+use swsnn::workload::{chaudhary_dilated_suite, Rng};
+
+/// Every algorithm × every operator × assorted (w, P, N) — the full
+/// compatibility matrix in one sweep.
+#[test]
+fn algorithm_operator_matrix() {
+    let mut rng = Rng::new(0xA11);
+    for n in [50usize, 333, 1024] {
+        let xs = rng.vec_uniform(n, -2.0, 2.0);
+        for w in [2usize, 3, 7, 13] {
+            for p in [16usize, 64] {
+                let add = AddOp::<f32>::new();
+                let max = MaxOp::<f32>::new();
+                let min = MinOp::<f32>::new();
+                let want_add = sliding::sliding_naive(add, &xs, w);
+                let want_max = sliding::sliding_naive(max, &xs, w);
+                let want_min = sliding::sliding_naive(min, &xs, w);
+                for algo in Algo::ALL {
+                    let got = sliding::run(algo, add, &xs, w, p);
+                    assert_eq!(got.len(), want_add.len());
+                    for (a, b) in got.iter().zip(&want_add) {
+                        assert!((a - b).abs() < 1e-3, "{algo:?} add n={n} w={w} p={p}");
+                    }
+                    let got = sliding::run(algo, max, &xs, w, p);
+                    assert_eq!(got, want_max, "{algo:?} max n={n} w={w} p={p}");
+                    let got = sliding::run(algo, min, &xs, w, p);
+                    assert_eq!(got, want_min, "{algo:?} min n={n} w={w} p={p}");
+                }
+            }
+        }
+    }
+}
+
+/// Positive-product windows survive every algorithm (MulOp is the
+/// non-idempotent non-add monoid in the matrix).
+#[test]
+fn product_windows_all_algorithms() {
+    let mut rng = Rng::new(0xA12);
+    let xs: Vec<f32> = (0..200).map(|_| rng.uniform(0.9, 1.1)).collect();
+    let op = MulOp::<f32>::new();
+    let want = sliding::sliding_naive(op, &xs, 6);
+    for algo in Algo::ALL {
+        let got = sliding::run(algo, op, &xs, 6, 32);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{algo:?}");
+        }
+    }
+}
+
+/// The γ-pair evaluation (literal Eq. 7–9) agrees with direct conv on
+/// both linear and tree folds, across dilation/stride/pad.
+#[test]
+fn pair_formulation_full_hyperparameter_grid() {
+    let mut rng = Rng::new(0xA13);
+    for (k, d, s, pad) in [
+        (3usize, 1usize, 1usize, 0usize),
+        (4, 2, 1, 3),
+        (5, 3, 2, 6),
+        (7, 1, 1, 3),
+    ] {
+        let p = Conv1dParams::new(1, 1, 96, k)
+            .with_dilation(d)
+            .with_stride(s)
+            .with_pad(pad);
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let want = conv1d(ConvBackend::Direct, &x, &w, None, &p);
+        for (name, got) in [
+            ("pair", conv1d(ConvBackend::SlidingPair, &x, &w, None, &p)),
+            ("pair_tree", conv1d_pair_tree(&x, &w, None, &p)),
+        ] {
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 5e-2 * (1.0 + b.abs()), "{name} k={k} d={d} s={s}");
+            }
+        }
+    }
+}
+
+/// Boundary modes compose with the algorithm family (same-length output,
+/// correct edge values).
+#[test]
+fn boundary_modes_compose_with_algorithms() {
+    let mut rng = Rng::new(0xA14);
+    let xs = rng.vec_uniform(64, -1.0, 1.0);
+    let op = MaxOp::<f32>::new();
+    for mode in [Boundary::SamePad, Boundary::Mirror, Boundary::Periodic] {
+        let ext = sliding::extend(op, &xs, 5, mode);
+        let want = sliding::sliding_naive(op, &ext, 5);
+        assert_eq!(want.len(), 64, "{mode:?}");
+        for algo in [Algo::VectorSlide, Algo::PingPong, Algo::VectorInputLog] {
+            let got = sliding::run(algo, op, &ext, 5, 32);
+            assert_eq!(got, want, "{mode:?} {algo:?}");
+        }
+    }
+}
+
+/// Config-driven model runs identically on all conv backends — the
+/// "backend router can swap engines without changing results" guarantee
+/// the coordinator relies on.
+#[test]
+fn model_backend_equivalence_from_config() {
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/audio_classifier.toml"),
+    )
+    .unwrap();
+    let (mc, _) = load_config(&text).unwrap();
+    let mut rng = Rng::new(0xA15);
+    let model = Model::init(&mc, &mut rng).unwrap();
+    let x = rng.vec_uniform(mc.seq_len, -1.0, 1.0);
+    let want = model.forward(&x, 1, ConvBackend::Direct).unwrap();
+    for backend in [ConvBackend::Sliding, ConvBackend::Im2colGemm] {
+        let got = model.forward(&x, 1, backend).unwrap();
+        assert_eq!(got.shape, want.shape);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{backend:?}");
+        }
+    }
+}
+
+/// FIG1 shape criterion (quick variant): sliding beats im2col+GEMM at
+/// moderate k, and the advantage grows with k.
+#[test]
+fn fig1_shape_sliding_wins_and_grows() {
+    let cfg = BenchConfig::quick();
+    let mut rng = Rng::new(0xF1);
+    let n = 200_000;
+    let x = rng.vec_uniform(n, -1.0, 1.0);
+    let mut speedups = Vec::new();
+    for k in [7usize, 63] {
+        let w = rng.vec_uniform(k, -1.0, 1.0);
+        let p = Conv1dParams::new(1, 1, n, k);
+        let mg = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Im2colGemm, std::hint::black_box(&x), &w, None, &p));
+        });
+        let ms = bench(&cfg, || {
+            std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, &p));
+        });
+        speedups.push(mg.median_ns() / ms.median_ns());
+    }
+    assert!(speedups[0] > 1.0, "sliding must win at k=7: {speedups:?}");
+    assert!(
+        speedups[1] > speedups[0],
+        "speedup must grow with k: {speedups:?}"
+    );
+}
+
+/// FIG2 shape criterion (quick variant): sliding wins on the dilated
+/// small-set workloads.
+#[test]
+fn fig2_shape_dilated_small_set_wins() {
+    let cfg = BenchConfig::quick();
+    let mut rng = Rng::new(0xF2);
+    let suite = chaudhary_dilated_suite();
+    let (name, p) = suite
+        .iter()
+        .find(|(name, _)| name.starts_with("small/"))
+        .unwrap();
+    let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+    let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+    let mg = bench(&cfg, || {
+        std::hint::black_box(conv1d(ConvBackend::Im2colGemm, std::hint::black_box(&x), &w, None, p));
+    });
+    let ms = bench(&cfg, || {
+        std::hint::black_box(conv1d(ConvBackend::Sliding, std::hint::black_box(&x), &w, None, p));
+    });
+    let speedup = mg.median_ns() / ms.median_ns();
+    assert!(speedup > 1.5, "{name}: dilated sliding speedup {speedup:.2} ≤ 1.5");
+}
+
+/// TBL-P shape criterion: sliding pooling beats naive recomputation for
+/// large windows.
+#[test]
+fn pooling_shape_sliding_beats_naive_at_large_w() {
+    let cfg = BenchConfig::quick();
+    let mut rng = Rng::new(0xF3);
+    let x = rng.vec_uniform(200_000, -1.0, 1.0);
+    let p = Pool1dParams::new(1, 200_000, 32);
+    let mn = bench(&cfg, || {
+        std::hint::black_box(pool1d_naive(PoolKind::Max, std::hint::black_box(&x), &p));
+    });
+    let ms = bench(&cfg, || {
+        std::hint::black_box(pool1d(PoolKind::Max, std::hint::black_box(&x), &p));
+    });
+    let speedup = mn.median_ns() / ms.median_ns();
+    assert!(speedup > 2.0, "pooling speedup {speedup:.2} ≤ 2 at w=32");
+}
+
+/// ConvPair associativity at the integration level: folding γ chains in
+/// different association orders gives the same dot product.
+#[test]
+fn conv_pair_association_orders_agree() {
+    use swsnn::ops::AssocOp;
+    let mut rng = Rng::new(0xF4);
+    for m in [2usize, 5, 9, 16] {
+        let gammas: Vec<swsnn::ops::Pair> = (0..m)
+            .map(|_| swsnn::ops::Pair::new(rng.uniform(0.5, 2.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let op = ConvPair;
+        // Left fold.
+        let mut left = op.identity();
+        for g in &gammas {
+            left = op.combine(left, *g);
+        }
+        // Right fold.
+        let mut right = op.identity();
+        for g in gammas.iter().rev() {
+            right = op.combine(*g, right);
+        }
+        // Balanced tree via scan module.
+        let tree = swsnn::scan::reduce_tree(op, &gammas);
+        assert!((left.v - right.v).abs() < 1e-3, "m={m}");
+        assert!((left.v - tree.v).abs() < 1e-3, "m={m}");
+        assert!((left.u - tree.u).abs() < 1e-3 * left.u.abs().max(1.0), "m={m}");
+    }
+}

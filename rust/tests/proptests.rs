@@ -1,0 +1,333 @@
+//! Property tests (mini-harness in `swsnn::prop`): operator laws, the
+//! full algorithm family vs the naive oracle under random inputs, conv
+//! backend agreement, boundary-mode invariants, and coordinator
+//! batching invariants under randomized load.
+
+use swsnn::config::ServeConfig;
+use swsnn::conv::{conv1d, Conv1dParams, ConvBackend};
+use swsnn::coordinator::{Coordinator, Engine};
+use swsnn::ops::{
+    dot_reference, dot_via_prefix, dot_via_tree_reduce, AddOp, AssocOp, ConvPair, MaxOp, MinOp,
+    Pair,
+};
+use swsnn::pool::{minimizer_positions, sliding_minimum};
+use swsnn::prop::{check, ensure, ensure_close, PropConfig};
+use swsnn::sliding::{self, Algo, Boundary};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..Default::default()
+    }
+}
+
+// ───────────────────────── operator laws ─────────────────────────────
+
+#[test]
+fn prop_assoc_ops_identity_and_associativity() {
+    check(cfg(200), "monoid laws", |g| {
+        let a = g.f32_in(-10.0, 10.0);
+        let b = g.f32_in(-10.0, 10.0);
+        let c = g.f32_in(-10.0, 10.0);
+        // max/min: exact laws
+        let max = MaxOp::<f32>::new();
+        ensure(max.combine(max.identity(), a) == a, "max identity")?;
+        ensure(
+            max.combine(a, max.combine(b, c)) == max.combine(max.combine(a, b), c),
+            "max assoc",
+        )?;
+        let min = MinOp::<f32>::new();
+        ensure(min.combine(a, min.identity()) == a, "min identity")?;
+        // add: identity exact, associativity within FP tolerance
+        let add = AddOp::<f32>::new();
+        ensure(add.combine(add.identity(), a) == a, "add identity")?;
+        ensure_close(
+            add.combine(a, add.combine(b, c)),
+            add.combine(add.combine(a, b), c),
+            1e-5,
+            "add assoc",
+        )
+    });
+}
+
+#[test]
+fn prop_conv_pair_is_associative_and_noncommutative_in_general() {
+    check(cfg(300), "ConvPair laws", |g| {
+        let op = ConvPair;
+        let mk = |g: &mut swsnn::prop::Gen| {
+            Pair::new(g.f32_in(0.25, 4.0), g.f32_in(-3.0, 3.0))
+        };
+        let a = mk(g);
+        let b = mk(g);
+        let c = mk(g);
+        let lhs = op.combine(a, op.combine(b, c));
+        let rhs = op.combine(op.combine(a, b), c);
+        ensure_close(lhs.u, rhs.u, 1e-4, "u assoc")?;
+        ensure_close(lhs.v, rhs.v, 1e-3, "v assoc")?;
+        // identity both sides
+        let idl = op.combine(op.identity(), a);
+        let idr = op.combine(a, op.identity());
+        ensure(idl == a && idr == a, "identity")
+    });
+}
+
+#[test]
+fn prop_dot_product_prefix_formulation() {
+    check(cfg(200), "Eq. 5-9 dot product", |g| {
+        let m = g.usize_in(1, 48);
+        // Mix in exact zeros to exercise the Eq. 5 patch.
+        let mut a = g.vec_f32_len(m, -2.0, 2.0);
+        for v in a.iter_mut() {
+            if g.bool() && g.bool() {
+                *v = 0.0;
+            }
+        }
+        let b = g.vec_f32_len(m, -2.0, 2.0);
+        let want = dot_reference(&a, &b);
+        ensure_close(dot_via_prefix(&a, &b), want, 1e-2, "linear scan")?;
+        ensure_close(dot_via_tree_reduce(&a, &b), want, 1e-2, "tree reduce")
+    });
+}
+
+// ──────────────────── algorithm family invariants ────────────────────
+
+#[test]
+fn prop_all_algorithms_match_naive_random_inputs() {
+    check(cfg(120), "family vs naive", |g| {
+        let n = g.usize_in(1, 180);
+        let xs = g.vec_f32_len(n, -5.0, 5.0);
+        let w = g.usize_in(1, 20);
+        let p = *g.choose(&[8usize, 16, 32, 64]);
+        let op = AddOp::<f32>::new();
+        let want = sliding::sliding_naive(op, &xs, w);
+        for algo in Algo::ALL {
+            let got = sliding::run(algo, op, &xs, w, p);
+            ensure(
+                got.len() == want.len(),
+                format!("{algo:?} len {} vs {}", got.len(), want.len()),
+            )?;
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                ensure_close(*a, *b, 1e-3, &format!("{algo:?} n={n} w={w} p={p} idx={i}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_windows_are_exact_under_all_algorithms() {
+    // max is exact in FP — no tolerance allowed.
+    check(cfg(120), "max exactness", |g| {
+        let n = g.usize_in(1, 150);
+        let xs = g.vec_f32_len(n, -100.0, 100.0);
+        let w = g.usize_in(1, 16);
+        let op = MaxOp::<f32>::new();
+        let want = sliding::sliding_naive(op, &xs, w);
+        for algo in Algo::ALL {
+            let got = sliding::run(algo, op, &xs, w, 32);
+            ensure(got == want, format!("{algo:?} n={n} w={w}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_count_formula() {
+    check(cfg(200), "output length", |g| {
+        let n = g.usize_in(0, 200);
+        let w = g.usize_in(1, 40);
+        let xs = g.vec_f32_len(n, -1.0, 1.0);
+        let got = sliding::sliding_naive(AddOp::<f32>::new(), &xs, w).len();
+        let want = if n >= w { n - w + 1 } else { 0 };
+        ensure(got == want, format!("n={n} w={w}: {got} vs {want}"))
+    });
+}
+
+#[test]
+fn prop_boundary_extension_lengths() {
+    check(cfg(150), "boundary lengths", |g| {
+        let n = g.usize_in(1, 120);
+        let w = g.usize_in(1, 15.min(n + 2));
+        let xs = g.vec_f32_len(n, -1.0, 1.0);
+        let op = AddOp::<f32>::new();
+        for mode in [Boundary::SamePad, Boundary::Mirror, Boundary::Periodic] {
+            let ext = sliding::extend(op, &xs, w, mode);
+            ensure(
+                ext.len() == n + w - 1,
+                format!("{mode:?} n={n} w={w}: ext {}", ext.len()),
+            )?;
+            let out = sliding::sliding_naive(op, &ext, w);
+            ensure(out.len() == n, format!("{mode:?} output length"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sliding_minimum_matches_deque_minimizers() {
+    check(cfg(100), "minimizer agreement", |g| {
+        let n = g.usize_in(1, 300);
+        let w = g.usize_in(1, 24);
+        let xs: Vec<u64> = (0..n).map(|_| g.rng.next_u64() % 1000).collect();
+        if n < w {
+            return Ok(());
+        }
+        let mins = sliding_minimum(&xs, w);
+        let pos = minimizer_positions(&xs, w);
+        ensure(mins.len() == pos.len(), "length")?;
+        for (m, p) in mins.iter().zip(&pos) {
+            ensure(*m == xs[*p], format!("min {m} vs xs[{p}]"))?;
+        }
+        Ok(())
+    });
+}
+
+// ───────────────────── conv backend agreement ────────────────────────
+
+#[test]
+fn prop_conv_backends_agree_random_hyperparams() {
+    check(cfg(60), "conv backends", |g| {
+        let k = g.usize_in(1, 9);
+        let dilation = g.usize_in(1, 4);
+        let stride = g.usize_in(1, 3);
+        let c_in = g.usize_in(1, 3);
+        let c_out = g.usize_in(1, 3);
+        let batch = g.usize_in(1, 2);
+        let eff = (k - 1) * dilation + 1;
+        let n = g.usize_in(eff, eff + 80);
+        let pad = g.usize_in(0, eff);
+        let p = Conv1dParams::new(c_in, c_out, n, k)
+            .with_batch(batch)
+            .with_dilation(dilation)
+            .with_stride(stride)
+            .with_pad(pad);
+        if p.n_out() == 0 {
+            return Ok(());
+        }
+        let x = g.vec_f32_len(p.x_len(), -1.0, 1.0);
+        let w = g.vec_f32_len(p.w_len(), -1.0, 1.0);
+        let want = conv1d(ConvBackend::Direct, &x, &w, None, &p);
+        for backend in [ConvBackend::Sliding, ConvBackend::Im2colGemm, ConvBackend::SlidingPair] {
+            let got = conv1d(backend, &x, &w, None, &p);
+            ensure(got.len() == want.len(), format!("{backend:?} len"))?;
+            for (a, b) in got.iter().zip(&want) {
+                ensure_close(*a, *b, 3e-2, &format!("{backend:?} {p:?}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ─────────────────── coordinator invariants ──────────────────────────
+
+/// Echo engine: output = input row. Lets properties check routing
+/// (response i belongs to request i) under random batch formation.
+struct EchoEngine {
+    row: usize,
+}
+
+impl Engine for EchoEngine {
+    fn input_len(&self) -> usize {
+        self.row
+    }
+    fn output_len(&self) -> usize {
+        self.row
+    }
+    fn batch_buckets(&self) -> Vec<usize> {
+        vec![8]
+    }
+    fn infer(&self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(x.len(), batch * self.row);
+        Ok(x.to_vec())
+    }
+    fn name(&self) -> String {
+        "echo".into()
+    }
+}
+
+#[test]
+fn prop_coordinator_routes_responses_to_correct_requests() {
+    check(cfg(12), "batcher routing", |g| {
+        let row = g.usize_in(1, 16);
+        let n_req = g.usize_in(1, 40);
+        let deadline = g.usize_in(0, 2000) as u64;
+        let serve = ServeConfig {
+            max_batch: *g.choose(&[1usize, 3, 8]),
+            batch_deadline_us: deadline,
+            ..Default::default()
+        };
+        let coord = Coordinator::start_native(EchoEngine { row }, &serve)
+            .map_err(|e| e.to_string())?;
+        let inputs: Vec<Vec<f32>> = (0..n_req).map(|_| g.vec_f32_len(row, -9.0, 9.0)).collect();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|x| coord.submit(x.clone()).map_err(|e| e.to_string()))
+            .collect::<Result<_, _>>()?;
+        for (x, t) in inputs.iter().zip(tickets) {
+            let y = t.wait().map_err(|e| e.to_string())?;
+            ensure(y == *x, "echo mismatch — response routed to wrong request")?;
+        }
+        let stats = coord.shutdown();
+        ensure(
+            stats.completed == n_req as u64,
+            format!("completed {} vs {}", stats.completed, n_req),
+        )?;
+        ensure(stats.rejected == 0, "unexpected rejections")
+    });
+}
+
+#[test]
+fn prop_coordinator_never_exceeds_max_batch() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    struct MaxTracker {
+        row: usize,
+        max_seen: Arc<AtomicUsize>,
+        cap: usize,
+    }
+    impl Engine for MaxTracker {
+        fn input_len(&self) -> usize {
+            self.row
+        }
+        fn output_len(&self) -> usize {
+            self.row
+        }
+        fn batch_buckets(&self) -> Vec<usize> {
+            vec![self.cap]
+        }
+        fn infer(&self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+            self.max_seen.fetch_max(batch, Ordering::SeqCst);
+            Ok(x.to_vec())
+        }
+        fn name(&self) -> String {
+            "tracker".into()
+        }
+    }
+    check(cfg(8), "max batch bound", |g| {
+        let cap = g.usize_in(1, 6);
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let serve = ServeConfig {
+            max_batch: cap,
+            batch_deadline_us: 500,
+            ..Default::default()
+        };
+        let coord = Coordinator::start_native(
+            MaxTracker {
+                row: 4,
+                max_seen: Arc::clone(&max_seen),
+                cap,
+            },
+            &serve,
+        )
+        .map_err(|e| e.to_string())?;
+        let tickets: Vec<_> = (0..30)
+            .map(|_| coord.submit(g.vec_f32_len(4, 0.0, 1.0)))
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        for t in tickets {
+            t.wait().map_err(|e| e.to_string())?;
+        }
+        let seen = max_seen.load(Ordering::SeqCst);
+        ensure(seen <= cap, format!("batch {seen} exceeded cap {cap}"))
+    });
+}

@@ -1,0 +1,202 @@
+//! Integration: rust runtime executes the AOT artifacts produced by
+//! `python/compile/aot.py` and agrees with the rust-native conv/pool
+//! implementations — the cross-language correctness seam of the stack.
+//!
+//! Requires `make artifacts` (skips cleanly if the directory is absent,
+//! so `cargo test` stays green in a fresh checkout).
+
+use swsnn::conv::{conv1d_sliding, Conv1dParams};
+use swsnn::pool::{pool1d, Pool1dParams, PoolKind};
+use swsnn::runtime::{ArtifactRegistry, TensorView};
+use swsnn::workload::Rng;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.is_dir() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRegistry::open(dir).expect("open registry"))
+}
+
+#[test]
+fn lists_expected_artifacts() {
+    let Some(reg) = registry() else { return };
+    let names = reg.list().unwrap();
+    for expect in [
+        "conv1d_sliding_k3_n4096",
+        "conv1d_sliding_k31_n4096",
+        "pool_max_w8_n4096",
+        "tcn_forward_b1_n512",
+        "tcn_train_step_b8_n512",
+    ] {
+        assert!(names.iter().any(|n| n == expect), "missing {expect}: {names:?}");
+    }
+}
+
+#[test]
+fn manifest_matches_python_layout() {
+    let Some(reg) = registry() else { return };
+    let m = reg.manifest().expect("manifest.toml");
+    assert_eq!(m.param_count(), m.params, "layout drifted from model.py");
+    assert_eq!(m.seq_len, 512);
+}
+
+#[test]
+fn conv_artifact_matches_rust_conv() {
+    let Some(reg) = registry() else { return };
+    for k in [3usize, 7, 15, 31] {
+        let name = format!("conv1d_sliding_k{k}_n4096");
+        let exe = reg.get(&name).expect("compile artifact");
+        let mut rng = Rng::new(42 + k as u64);
+        let x = rng.vec_uniform(4096, -1.0, 1.0);
+        let w = rng.vec_uniform(k, -1.0, 1.0);
+        let b = rng.vec_uniform(1, -0.5, 0.5);
+
+        let out = exe
+            .run1(&[
+                TensorView::new(vec![1, 1, 4096], x.clone()),
+                TensorView::new(vec![1, 1, k], w.clone()),
+                TensorView::new(vec![1], b.clone()),
+            ])
+            .expect("execute");
+        assert_eq!(out.shape, vec![1, 1, 4096], "same-pad output");
+
+        let p = Conv1dParams::new(1, 1, 4096, k).with_pad((k - 1) / 2);
+        let want = conv1d_sliding(&x, &w, Some(&b), &p);
+        assert_eq!(want.len(), out.data.len());
+        let mut max_diff = 0f32;
+        for (a, c) in out.data.iter().zip(&want) {
+            max_diff = max_diff.max((a - c).abs());
+        }
+        assert!(max_diff < 1e-3, "k={k} max diff {max_diff}");
+    }
+}
+
+#[test]
+fn dilated_conv_artifact_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.get("conv1d_sliding_k31_d16_n8192").expect("compile");
+    let mut rng = Rng::new(7);
+    let x = rng.vec_uniform(8192, -1.0, 1.0);
+    let w = rng.vec_uniform(31, -1.0, 1.0);
+    let b = vec![0.25f32];
+    let out = exe
+        .run1(&[
+            TensorView::new(vec![1, 1, 8192], x.clone()),
+            TensorView::new(vec![1, 1, 31], w.clone()),
+            TensorView::new(vec![1], b.clone()),
+        ])
+        .expect("execute");
+    let p = Conv1dParams::new(1, 1, 8192, 31)
+        .with_dilation(16)
+        .with_pad((31 - 1) * 16 / 2);
+    let want = conv1d_sliding(&x, &w, Some(&b), &p);
+    assert_eq!(out.data.len(), want.len());
+    for (i, (a, c)) in out.data.iter().zip(&want).enumerate() {
+        assert!((a - c).abs() < 1e-3, "idx {i}: {a} vs {c}");
+    }
+}
+
+#[test]
+fn pool_artifacts_match_rust_pool() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::new(11);
+    let x = rng.vec_uniform(4 * 4096, -2.0, 2.0);
+    for (name, kind) in [
+        ("pool_max_w8_n4096", PoolKind::Max),
+        ("pool_avg_w8_n4096", PoolKind::Avg),
+    ] {
+        let exe = reg.get(name).expect("compile");
+        let out = exe
+            .run1(&[TensorView::new(vec![1, 4, 4096], x.clone())])
+            .expect("execute");
+        let p = Pool1dParams::new(4, 4096, 8).with_stride(8);
+        let want = pool1d(kind, &x, &p);
+        assert_eq!(out.data.len(), want.len(), "{name}");
+        for (a, c) in out.data.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-4, "{name}: {a} vs {c}");
+        }
+    }
+}
+
+#[test]
+fn tcn_forward_executes_and_is_batch_consistent() {
+    let Some(reg) = registry() else { return };
+    let m = reg.manifest().expect("manifest").clone();
+    let mut rng = Rng::new(3);
+    let params: Vec<TensorView> = m
+        .param_shapes()
+        .iter()
+        .map(|(_, s)| {
+            let n: usize = s.iter().product();
+            TensorView::new(s.clone(), rng.vec_normal(n, 0.1))
+        })
+        .collect();
+
+    let x1 = rng.vec_uniform(m.seq_len, -1.0, 1.0);
+    let mut args1 = params.clone();
+    args1.push(TensorView::new(vec![1, m.c_in, m.seq_len], x1.clone()));
+    let exe1 = reg.get("tcn_forward_b1_n512").expect("b1");
+    let y1 = exe1.run1(&args1).expect("run b1");
+    assert_eq!(y1.shape, vec![1, m.c_out, m.seq_len]);
+    assert!(y1.data.iter().all(|v| v.is_finite()));
+
+    // Batch 4 with row 2 = x1 must reproduce y1 in row 2.
+    let exe4 = reg.get("tcn_forward_b4_n512").expect("b4");
+    let mut xb = rng.vec_uniform(4 * m.seq_len, -1.0, 1.0);
+    xb[2 * m.seq_len..3 * m.seq_len].copy_from_slice(&x1);
+    let mut args4 = params.clone();
+    args4.push(TensorView::new(vec![4, m.c_in, m.seq_len], xb));
+    let y4 = exe4.run1(&args4).expect("run b4");
+    let row = &y4.data[2 * m.seq_len..3 * m.seq_len];
+    for (a, c) in row.iter().zip(&y1.data) {
+        assert!((a - c).abs() < 1e-4, "batch row mismatch: {a} vs {c}");
+    }
+}
+
+#[test]
+fn tcn_train_step_reduces_loss() {
+    let Some(reg) = registry() else { return };
+    let m = reg.manifest().expect("manifest").clone();
+    let exe = reg.get("tcn_train_step_b8_n512").expect("train step");
+    let mut rng = Rng::new(5);
+    let mut params: Vec<TensorView> = m
+        .param_shapes()
+        .iter()
+        .map(|(name, s)| {
+            let n: usize = s.iter().product();
+            if name.ends_with('b') || name.contains("_b") {
+                TensorView::new(s.clone(), vec![0.0; n])
+            } else {
+                let fan_in: usize = s[1..].iter().product();
+                TensorView::new(s.clone(), rng.vec_normal(n, (2.0 / fan_in as f32).sqrt()))
+            }
+        })
+        .collect();
+
+    // Smooth AR(1) batch — same family as the python tests.
+    let mut x = vec![0.0f32; 8 * m.seq_len];
+    let mut prev = 0.0f32;
+    for v in x.iter_mut() {
+        prev = 0.9 * prev + 0.2 * rng.normal();
+        *v = prev;
+    }
+
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let mut args = params.clone();
+        args.push(TensorView::new(vec![8, m.c_in, m.seq_len], x.clone()));
+        let mut out = exe.run(&args).expect("train step");
+        assert_eq!(out.len(), 1 + params.len(), "loss + new params");
+        let loss = out.remove(0);
+        assert!(loss.shape.is_empty());
+        losses.push(loss.data[0]);
+        params = out;
+    }
+    assert!(
+        losses[4] < losses[0],
+        "loss should fall across steps: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+}
