@@ -52,10 +52,11 @@ fn main() -> anyhow::Result<()> {
     );
     let seq_len = mc.seq_len;
 
-    let coord = Arc::new(Coordinator::start_native(
+    let coord = Arc::new(Coordinator::start_replicated(
         NativeEngine::new(model, ConvBackend::Sliding, sc.max_batch),
         &sc,
     )?);
+    println!("coordinator: {} engine workers", coord.worker_count());
 
     // Drive 200 requests from 4 concurrent clients; the (untrained)
     // network's logits are meaningless but the pipeline — batching,

@@ -1,7 +1,9 @@
 //! Regenerates paper Figure 1: speedup of sliding 1-D convolution over
 //! the im2col+GEMM (MlasConv-style) baseline across filter sizes on a
 //! large 1-D input. Shape criterion: sliding wins from small k and the
-//! speedup grows ≈ log k (EXPERIMENTS.md §FIG1).
+//! speedup grows ≈ log k (EXPERIMENTS.md §FIG1). Also emits Fig 1b, the
+//! measured worker-pool thread scaling of the same kernel — the paper's
+//! `P` axis.
 use swsnn::bench::{figs, BenchConfig};
 
 fn main() {
@@ -15,4 +17,11 @@ fn main() {
     let last = rows.last().unwrap().speedup;
     println!("speedup k={}: {:.2}x → k={}: {:.2}x (growth {:.2}x)",
         rows.first().unwrap().k, first, rows.last().unwrap().k, last, last / first);
+
+    // Fig 1b: thread scaling on the k=63 hot shape.
+    let (scaling, srows) = figs::fig1_scaling(&cfg, n, 63, &[1, 2, 4, 8]);
+    scaling.emit("fig1_scaling.csv");
+    if let Some(r4) = srows.iter().find(|r| r.threads == 4) {
+        println!("thread scaling at 4T: {:.2}x vs 1T (target ≥ 2x)", r4.speedup);
+    }
 }

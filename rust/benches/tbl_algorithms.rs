@@ -1,6 +1,7 @@
 //! TBL-A: the §3 sliding-sum algorithm family (Algorithms 1–4, linear vs
 //! log-depth variants) against the O(wN) naive baseline, plus the
-//! sliding-minimum table (the paper's associative-speedup example).
+//! sliding-minimum table (the paper's associative-speedup example) and
+//! TBL-A3, the worker-pool thread scaling of the chunk+halo dispatch.
 use swsnn::bench::{figs, BenchConfig};
 
 fn main() {
@@ -11,4 +12,6 @@ fn main() {
             .emit(&format!("tbl_algorithms_p{p}.csv"));
     }
     figs::tbl_sliding_min(&cfg, n, 64, &[4, 8, 15, 31, 63]).emit("tbl_sliding_min.csv");
+    figs::tbl_sliding_scaling(&cfg, 4_000_000, 15, &[1, 2, 4, 8])
+        .emit("tbl_algorithms_scaling.csv");
 }

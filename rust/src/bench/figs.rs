@@ -7,12 +7,31 @@
 //! `rust/tests/integration.rs` and recorded in EXPERIMENTS.md.
 
 use crate::bench::{bench, BenchConfig, Table};
-use crate::conv::{conv1d, Conv1dParams, ConvBackend};
+use crate::conv::{conv1d, conv1d_sliding_with, Conv1dParams, ConvBackend};
+use crate::exec::Executor;
 use crate::ops::{AddOp, MaxOp, MinOp};
-use crate::pool::{pool1d, pool1d_naive, Pool1dParams, PoolKind};
+use crate::pool::{pool1d_naive, pool1d_with, Pool1dParams, PoolKind};
 use crate::scan;
 use crate::sliding::{self, Algo};
 use crate::workload::{chaudhary_dilated_suite, fig1_signal, Rng};
+
+/// Run one conv backend with kernel parallelism pinned to a single
+/// thread. The paper-reproduction tables (Fig 1/2, ABL-B) compare
+/// *algorithms*, so the sliding kernel must not get a multicore edge
+/// over the serial im2col baseline — the worker-pool axis is measured
+/// separately by [`fig1_scaling`] / [`tbl_sliding_scaling`].
+fn conv1d_1t(
+    ex1: &Executor,
+    backend: ConvBackend,
+    x: &[f32],
+    w: &[f32],
+    p: &Conv1dParams,
+) -> Vec<f32> {
+    match backend {
+        ConvBackend::Sliding => conv1d_sliding_with(ex1, x, w, None, p),
+        other => conv1d(other, x, w, None, p),
+    }
+}
 
 /// One Fig-1 row: filter size → im2col/sliding times and speedup.
 #[derive(Clone, Debug)]
@@ -29,9 +48,10 @@ pub struct Fig1Row {
 /// size".
 pub fn fig1(cfg: &BenchConfig, n: usize, ks: &[usize]) -> (Table, Vec<Fig1Row>) {
     let mut rng = Rng::new(0xF161);
+    let ex1 = Executor::new(1);
     let x = fig1_signal(&mut rng, n);
     let mut table = Table::new(
-        &format!("Fig 1 — 1-D convolution speedup vs MlasConv-style im2col+GEMM (N={n})"),
+        &format!("Fig 1 — 1-D convolution speedup vs MlasConv-style im2col+GEMM (N={n}, 1 thread)"),
         &["k", "im2col+gemm", "sliding", "speedup", "Gmac/s sliding"],
     );
     let mut rows = Vec::new();
@@ -41,20 +61,20 @@ pub fn fig1(cfg: &BenchConfig, n: usize, ks: &[usize]) -> (Table, Vec<Fig1Row>) 
         let macs = p.macs() as f64;
 
         let m_gemm = bench(cfg, || {
-            std::hint::black_box(conv1d(
+            std::hint::black_box(conv1d_1t(
+                &ex1,
                 ConvBackend::Im2colGemm,
                 std::hint::black_box(&x),
                 &w,
-                None,
                 &p,
             ));
         });
         let m_slide = bench(cfg, || {
-            std::hint::black_box(conv1d(
+            std::hint::black_box(conv1d_1t(
+                &ex1,
                 ConvBackend::Sliding,
                 std::hint::black_box(&x),
                 &w,
-                None,
                 &p,
             ));
         });
@@ -76,6 +96,128 @@ pub fn fig1(cfg: &BenchConfig, n: usize, ks: &[usize]) -> (Table, Vec<Fig1Row>) 
     (table, rows)
 }
 
+/// One thread-scaling row.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub threads: usize,
+    pub median_ns: f64,
+    /// Speedup vs the 1-thread row (the paper's `P` axis, measured).
+    pub speedup: f64,
+}
+
+/// Fig 1b — thread scaling of the sliding conv hot path on the Fig-1
+/// shape (single row, long signal: the worst case for row-parallelism,
+/// covered by within-row column segmentation). Reports measured speedup
+/// vs 1 thread; the paper's model predicts ~linear in P until the memory
+/// bandwidth roof.
+pub fn fig1_scaling(
+    cfg: &BenchConfig,
+    n: usize,
+    k: usize,
+    threads: &[usize],
+) -> (Table, Vec<ScalingRow>) {
+    let mut rng = Rng::new(0xF163);
+    let x = fig1_signal(&mut rng, n);
+    let w = rng.vec_uniform(k, -1.0, 1.0);
+    let p = Conv1dParams::new(1, 1, n, k);
+    let macs = p.macs() as f64;
+    let mut table = Table::new(
+        &format!("Fig 1b — conv1d sliding thread scaling (N={n}, k={k})"),
+        &["threads", "median", "Gmac/s", "speedup vs 1T"],
+    );
+    let mut measured = Vec::new();
+    for &t in threads {
+        let ex = Executor::new(t);
+        let m = bench(cfg, || {
+            std::hint::black_box(conv1d_sliding_with(
+                &ex,
+                std::hint::black_box(&x),
+                &w,
+                None,
+                &p,
+            ));
+        });
+        measured.push((t, m));
+    }
+    let base_ns = scaling_base_ns(&measured);
+    let mut rows = Vec::new();
+    for (t, m) in measured {
+        let speedup = base_ns / m.median_ns();
+        table.row(vec![
+            t.to_string(),
+            crate::bench::fmt_duration(m.median),
+            format!("{:.2}", macs / m.median_ns()),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(ScalingRow {
+            threads: t,
+            median_ns: m.median_ns(),
+            speedup,
+        });
+    }
+    (table, rows)
+}
+
+/// Baseline for "speedup vs 1T" columns: the `threads == 1` row's
+/// median, falling back to the first row if the sweep omits 1.
+fn scaling_base_ns(measured: &[(usize, crate::bench::Measurement)]) -> f64 {
+    measured
+        .iter()
+        .find(|(t, _)| *t == 1)
+        .or_else(|| measured.first())
+        .map(|(_, m)| m.median_ns())
+        .unwrap_or(f64::NAN)
+}
+
+/// TBL-A3 — thread scaling of the chunk+halo parallel sliding-sum
+/// dispatch (flat_tree and the auto dispatcher) on one operator.
+pub fn tbl_sliding_scaling(
+    cfg: &BenchConfig,
+    n: usize,
+    w: usize,
+    threads: &[usize],
+) -> Table {
+    let mut rng = Rng::new(0xA163);
+    let xs = rng.vec_uniform(n, -1.0, 1.0);
+    let op = AddOp::<f32>::new();
+    let mut table = Table::new(
+        &format!("TBL-A3 — sliding-sum thread scaling (op=add, N={n}, w={w})"),
+        &["threads", "flat_tree", "auto", "flat_tree speedup vs 1T"],
+    );
+    let mut measured = Vec::new();
+    for &t in threads {
+        let ex = Executor::new(t);
+        let m_ft = bench(cfg, || {
+            std::hint::black_box(sliding::run_with(
+                &ex,
+                Algo::FlatTree,
+                op,
+                std::hint::black_box(&xs),
+                w,
+                64,
+            ));
+        });
+        let m_auto = bench(cfg, || {
+            std::hint::black_box(sliding::auto_with(&ex, op, std::hint::black_box(&xs), w, 64));
+        });
+        measured.push((t, m_ft, m_auto));
+    }
+    let base_ns = {
+        let fts: Vec<(usize, crate::bench::Measurement)> =
+            measured.iter().map(|(t, ft, _)| (*t, ft.clone())).collect();
+        scaling_base_ns(&fts)
+    };
+    for (t, m_ft, m_auto) in measured {
+        table.row(vec![
+            t.to_string(),
+            crate::bench::fmt_duration(m_ft.median),
+            crate::bench::fmt_duration(m_auto.median),
+            format!("{:.2}x", base_ns / m_ft.median_ns()),
+        ]);
+    }
+    table
+}
+
 /// One Fig-2 row.
 #[derive(Clone, Debug)]
 pub struct Fig2Row {
@@ -89,8 +231,9 @@ pub struct Fig2Row {
 /// board.
 pub fn fig2(cfg: &BenchConfig) -> (Table, Vec<Fig2Row>) {
     let mut rng = Rng::new(0xF162);
+    let ex1 = Executor::new(1);
     let mut table = Table::new(
-        "Fig 2 — dilated convolution speedup (Chaudhary scenario)",
+        "Fig 2 — dilated convolution speedup (Chaudhary scenario, 1 thread)",
         &["workload", "im2col+gemm", "sliding", "speedup"],
     );
     let mut rows = Vec::new();
@@ -98,20 +241,20 @@ pub fn fig2(cfg: &BenchConfig) -> (Table, Vec<Fig2Row>) {
         let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
         let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
         let m_gemm = bench(cfg, || {
-            std::hint::black_box(conv1d(
+            std::hint::black_box(conv1d_1t(
+                &ex1,
                 ConvBackend::Im2colGemm,
                 std::hint::black_box(&x),
                 &w,
-                None,
                 &p,
             ));
         });
         let m_slide = bench(cfg, || {
-            std::hint::black_box(conv1d(
+            std::hint::black_box(conv1d_1t(
+                &ex1,
                 ConvBackend::Sliding,
                 std::hint::black_box(&x),
                 &w,
-                None,
                 &p,
             ));
         });
@@ -135,18 +278,24 @@ pub fn fig2(cfg: &BenchConfig) -> (Table, Vec<Fig2Row>) {
 /// element for each algorithm across window sizes, normalized speedup vs
 /// naive. Also demonstrates the `O(P/w)` → `O(P/log w)` gap (linear vs
 /// log variants at large w).
+/// Every algorithm runs serially here: `run` would give the chunk-safe
+/// algorithms a multicore edge the vector-input/ping-pong family cannot
+/// have (they are excluded from parallel dispatch), which would corrupt
+/// the intra-family comparison. The worker-pool axis is measured by
+/// [`tbl_sliding_scaling`].
 pub fn tbl_algorithms(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize]) -> Table {
     let mut rng = Rng::new(0xA160);
     let xs = rng.vec_uniform(n, -1.0, 1.0);
     let op = AddOp::<f32>::new();
     let mut table = Table::new(
-        &format!("TBL-A — sliding-sum algorithms (op=add, N={n}, P={p_width})"),
+        &format!("TBL-A — sliding-sum algorithms (op=add, N={n}, P={p_width}, 1 thread)"),
         &["w", "naive", "scalar_input", "vector_input", "vector_input_log", "ping_pong", "vector_slide", "vector_slide_tree", "flat_tree", "best_speedup"],
     );
     for &w in ws {
         let mut cells = vec![w.to_string()];
         let naive_m = bench(cfg, || {
-            std::hint::black_box(sliding::run(Algo::Naive, op, std::hint::black_box(&xs), w, p_width));
+            let xs = std::hint::black_box(&xs);
+            std::hint::black_box(sliding::run_serial(Algo::Naive, op, xs, w, p_width));
         });
         cells.push(crate::bench::fmt_duration(naive_m.median));
         let mut best = f64::INFINITY;
@@ -160,7 +309,8 @@ pub fn tbl_algorithms(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize])
             Algo::FlatTree,
         ] {
             let m = bench(cfg, || {
-                std::hint::black_box(sliding::run(algo, op, std::hint::black_box(&xs), w, p_width));
+                let xs = std::hint::black_box(&xs);
+                std::hint::black_box(sliding::run_serial(algo, op, xs, w, p_width));
             });
             best = best.min(m.median_ns());
             cells.push(crate::bench::fmt_duration(m.median));
@@ -179,21 +329,25 @@ pub fn tbl_sliding_min(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize]
     let xs = rng.vec_uniform(n, -100.0, 100.0);
     let op = MinOp::<f32>::new();
     let mut table = Table::new(
-        &format!("TBL-A2 — sliding minimum (op=min, N={n}, P={p_width})"),
+        &format!("TBL-A2 — sliding minimum (op=min, N={n}, P={p_width}, 1 thread)"),
         &["w", "naive", "vector_slide", "vector_slide_tree", "flat_tree", "tree_vs_naive"],
     );
     for &w in ws {
         let naive_m = bench(cfg, || {
-            std::hint::black_box(sliding::run(Algo::Naive, op, std::hint::black_box(&xs), w, p_width));
+            let xs = std::hint::black_box(&xs);
+            std::hint::black_box(sliding::run_serial(Algo::Naive, op, xs, w, p_width));
         });
         let lin_m = bench(cfg, || {
-            std::hint::black_box(sliding::run(Algo::VectorSlide, op, std::hint::black_box(&xs), w, p_width));
+            let xs = std::hint::black_box(&xs);
+            std::hint::black_box(sliding::run_serial(Algo::VectorSlide, op, xs, w, p_width));
         });
         let tree_m = bench(cfg, || {
-            std::hint::black_box(sliding::run(Algo::VectorSlideTree, op, std::hint::black_box(&xs), w, p_width));
+            let xs = std::hint::black_box(&xs);
+            std::hint::black_box(sliding::run_serial(Algo::VectorSlideTree, op, xs, w, p_width));
         });
         let flat_m = bench(cfg, || {
-            std::hint::black_box(sliding::run(Algo::FlatTree, op, std::hint::black_box(&xs), w, p_width));
+            let xs = std::hint::black_box(&xs);
+            std::hint::black_box(sliding::run_serial(Algo::FlatTree, op, xs, w, p_width));
         });
         table.row(vec![
             w.to_string(),
@@ -207,12 +361,15 @@ pub fn tbl_sliding_min(cfg: &BenchConfig, n: usize, p_width: usize, ws: &[usize]
     table
 }
 
-/// TBL-P — pooling via sliding sums vs naive recomputation (§2.3).
+/// TBL-P — pooling via sliding sums vs naive recomputation (§2.3),
+/// single-threaded so the comparison isolates the algorithm (the naive
+/// baseline is serial).
 pub fn tbl_pooling(cfg: &BenchConfig, n: usize, ws: &[usize]) -> Table {
     let mut rng = Rng::new(0xB001);
+    let ex1 = Executor::new(1);
     let x = rng.vec_uniform(n, -1.0, 1.0);
     let mut table = Table::new(
-        &format!("TBL-P — pooling as sliding sum vs naive (N={n}, stride=1)"),
+        &format!("TBL-P — pooling as sliding sum vs naive (N={n}, stride=1, 1 thread)"),
         &["kind", "w", "naive", "sliding", "speedup"],
     );
     for kind in [PoolKind::Avg, PoolKind::Max] {
@@ -222,7 +379,7 @@ pub fn tbl_pooling(cfg: &BenchConfig, n: usize, ws: &[usize]) -> Table {
                 std::hint::black_box(pool1d_naive(kind, std::hint::black_box(&x), &p));
             });
             let m_slide = bench(cfg, || {
-                std::hint::black_box(pool1d(kind, std::hint::black_box(&x), &p));
+                std::hint::black_box(pool1d_with(&ex1, kind, std::hint::black_box(&x), &p));
             });
             table.row(vec![
                 kind.name().to_string(),
@@ -275,12 +432,14 @@ pub fn tbl_scan(cfg: &BenchConfig, ns: &[usize]) -> Table {
 }
 
 /// ABL-B — backend ablation at a fixed shape: all four conv backends,
-/// including the literal pair-operator formulation.
+/// including the literal pair-operator formulation. Single-threaded,
+/// like every cross-algorithm table.
 pub fn tbl_backends(cfg: &BenchConfig, n: usize, ks: &[usize]) -> Table {
     let mut rng = Rng::new(0xAB1E);
+    let ex1 = Executor::new(1);
     let x = rng.vec_uniform(n, -1.0, 1.0);
     let mut table = Table::new(
-        &format!("ABL-B — conv backend ablation (N={n})"),
+        &format!("ABL-B — conv backend ablation (N={n}, 1 thread)"),
         &["k", "direct", "im2col_gemm", "sliding", "sliding_pair"],
     );
     for &k in ks {
@@ -289,7 +448,7 @@ pub fn tbl_backends(cfg: &BenchConfig, n: usize, ks: &[usize]) -> Table {
         let mut cells = vec![k.to_string()];
         for backend in ConvBackend::ALL {
             let m = bench(cfg, || {
-                std::hint::black_box(conv1d(backend, std::hint::black_box(&x), &w, None, &p));
+                std::hint::black_box(conv1d_1t(&ex1, backend, std::hint::black_box(&x), &w, &p));
             });
             cells.push(crate::bench::fmt_duration(m.median));
         }

@@ -56,7 +56,12 @@ pub enum LayerConfig {
 pub struct ServeConfig {
     pub max_batch: usize,
     pub batch_deadline_us: u64,
+    /// Engine workers draining the request queue (each owns an engine).
     pub workers: usize,
+    /// Kernel data-parallelism: worker-pool threads the conv/pool/
+    /// sliding kernels fan out on. `0` = auto (all cores). Applied to
+    /// the process-global [`crate::exec::Executor`] at serve startup.
+    pub threads: usize,
     pub backend: ConvBackend,
     pub queue_capacity: usize,
 }
@@ -67,6 +72,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_deadline_us: 500,
             workers: 1,
+            threads: 0,
             backend: ConvBackend::Sliding,
             queue_capacity: 1024,
         }
@@ -146,16 +152,23 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
         None => d.backend,
         Some(s) => ConvBackend::parse(s).ok_or_else(|| format!("unknown backend {s:?}"))?,
     };
+    // Counts must not wrap through `as usize` (a negative TOML value
+    // would become ~2^64 and e.g. spawn threads until the process dies).
+    let count = |key: &str| -> Result<Option<usize>, String> {
+        match doc.get_int(key) {
+            None => Ok(None),
+            Some(v) if v < 0 => Err(format!("{key} must be >= 0, got {v}")),
+            Some(v) => Ok(Some(v as usize)),
+        }
+    };
     Ok(ServeConfig {
-        max_batch: doc.get_int("serve.max_batch").unwrap_or(d.max_batch as i64) as usize,
-        batch_deadline_us: doc
-            .get_int("serve.batch_deadline_us")
-            .unwrap_or(d.batch_deadline_us as i64) as u64,
-        workers: doc.get_int("serve.workers").unwrap_or(d.workers as i64) as usize,
+        max_batch: count("serve.max_batch")?.unwrap_or(d.max_batch),
+        batch_deadline_us: count("serve.batch_deadline_us")?.unwrap_or(d.batch_deadline_us as usize)
+            as u64,
+        workers: count("serve.workers")?.unwrap_or(d.workers),
+        threads: count("serve.threads")?.unwrap_or(d.threads),
         backend,
-        queue_capacity: doc
-            .get_int("serve.queue_capacity")
-            .unwrap_or(d.queue_capacity as i64) as usize,
+        queue_capacity: count("serve.queue_capacity")?.unwrap_or(d.queue_capacity),
     })
 }
 
@@ -202,6 +215,23 @@ backend = "sliding"
         assert_eq!(s.max_batch, 16);
         assert_eq!(s.backend, ConvBackend::Sliding);
         assert_eq!(s.workers, 1); // default
+        assert_eq!(s.threads, 0); // default = auto
+    }
+
+    #[test]
+    fn parses_workers_and_threads() {
+        let text = format!("{EXAMPLE}\nworkers = 4\nthreads = 8\n");
+        let (_, s) = load_config(&text).unwrap();
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.threads, 8);
+    }
+
+    #[test]
+    fn negative_counts_rejected_not_wrapped() {
+        let bad = format!("{EXAMPLE}\nthreads = -1\n");
+        assert!(load_config(&bad).unwrap_err().contains("threads"));
+        let bad = format!("{EXAMPLE}\nworkers = -4\n");
+        assert!(load_config(&bad).unwrap_err().contains("workers"));
     }
 
     #[test]

@@ -153,42 +153,93 @@ pub fn conv2d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv2dParam
 
 /// Sliding 2-D convolution: per output row, `kh·kw` slid unit-stride FMA
 /// passes over the unmodified input (stride 1) or clipped strided passes.
+/// Parallel over `(batch × c_out)` output planes (and groups of output
+/// rows within a plane) on the shared worker pool; outputs are
+/// bit-identical to the serial schedule for every partitioning.
 pub fn conv2d_sliding(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv2dParams) -> Vec<f32> {
+    conv2d_sliding_with(crate::exec::Executor::global(), x, w, bias, p)
+}
+
+/// [`conv2d_sliding`] on an explicit executor (scaling benches / parity
+/// tests).
+pub fn conv2d_sliding_with(
+    ex: &crate::exec::Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+) -> Vec<f32> {
     p.validate(x, w, bias);
     let (h_out, w_out) = (p.h_out(), p.w_out());
     let mut y = vec![0.0f32; p.y_len()];
     if h_out == 0 || w_out == 0 {
         return y;
     }
-    for b in 0..p.batch {
-        for co in 0..p.c_out {
-            let bias_v = bias.map_or(0.0, |bv| bv[co]);
-            let ybase = (b * p.c_out + co) * h_out * w_out;
-            y[ybase..ybase + h_out * w_out].fill(bias_v);
-            for ci in 0..p.c_in {
-                let plane = &x[((b * p.c_in + ci) * p.h) * p.w..][..p.h * p.w];
-                let filt = &w[((co * p.c_in + ci) * p.kh) * p.kw..][..p.kh * p.kw];
-                for oy in 0..h_out {
-                    let yrow = &mut y[ybase + oy * w_out..][..w_out];
-                    for fy in 0..p.kh {
-                        let iy = (oy * p.stride + fy) as isize - p.pad as isize;
-                        if iy < 0 || iy as usize >= p.h {
-                            continue;
-                        }
-                        let xrow = &plane[iy as usize * p.w..][..p.w];
-                        for fx in 0..p.kw {
-                            let wk = filt[fy * p.kw + fx];
-                            if wk == 0.0 {
-                                continue;
-                            }
-                            accumulate_row(yrow, xrow, wk, fx, p.stride, p.pad, w_out);
-                        }
+    let planes = p.batch * p.c_out;
+    let plane_len = h_out * w_out;
+    // Tiny problems: the boxed-job + latch overhead beats the work, so
+    // run the per-plane body directly on the caller.
+    if ex.threads() <= 1 || planes * plane_len < crate::exec::PAR_MIN_FANOUT {
+        for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
+            conv2d_plane_rows(yplane, plane_idx, 0, x, w, bias, p);
+        }
+        return y;
+    }
+    // Group output rows so the pool sees ~4 tasks per thread even when
+    // there are few planes.
+    let group_rows = h_out
+        .div_ceil((ex.threads() * 4).div_ceil(planes))
+        .max(1);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
+        for (gi, yrows) in yplane.chunks_mut(group_rows * w_out).enumerate() {
+            let oy0 = gi * group_rows;
+            jobs.push(Box::new(move || {
+                conv2d_plane_rows(yrows, plane_idx, oy0, x, w, bias, p);
+            }));
+        }
+    }
+    ex.scope(jobs);
+    y
+}
+
+/// Compute output rows `[oy0, oy0 + yrows.len()/w_out)` of one
+/// `(b, c_out)` plane — the per-task body of the fan-out above.
+fn conv2d_plane_rows(
+    yrows: &mut [f32],
+    plane_idx: usize,
+    oy0: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+) {
+    let w_out = p.w_out();
+    let b = plane_idx / p.c_out;
+    let co = plane_idx % p.c_out;
+    let bias_v = bias.map_or(0.0, |bv| bv[co]);
+    yrows.fill(bias_v);
+    for ci in 0..p.c_in {
+        let plane_x = &x[((b * p.c_in + ci) * p.h) * p.w..][..p.h * p.w];
+        let filt = &w[((co * p.c_in + ci) * p.kh) * p.kw..][..p.kh * p.kw];
+        for (j, yrow) in yrows.chunks_mut(w_out).enumerate() {
+            let oy = oy0 + j;
+            for fy in 0..p.kh {
+                let iy = (oy * p.stride + fy) as isize - p.pad as isize;
+                if iy < 0 || iy as usize >= p.h {
+                    continue;
+                }
+                let xrow = &plane_x[iy as usize * p.w..][..p.w];
+                for fx in 0..p.kw {
+                    let wk = filt[fy * p.kw + fx];
+                    if wk == 0.0 {
+                        continue;
                     }
+                    accumulate_row(yrow, xrow, wk, fx, p.stride, p.pad, w_out);
                 }
             }
         }
     }
-    y
 }
 
 /// One slid FMA pass: `yrow[t] += wk · xrow[t·stride + fx − pad]`, range

@@ -28,14 +28,14 @@ mod params;
 mod sliding;
 mod small_k;
 
-pub use conv2d::{conv2d_direct, conv2d_im2col, conv2d_sliding, Conv2dParams};
+pub use conv2d::{conv2d_direct, conv2d_im2col, conv2d_sliding, conv2d_sliding_with, Conv2dParams};
 pub use direct::conv1d_direct;
 pub use matmul_reform::conv1d_tap_gemm;
 pub use quantized::{conv1d_quantized, QuantParams};
 pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k};
 pub use im2col::{conv1d_im2col, im2col_expand};
 pub use params::{Conv1dParams, ConvBackend};
-pub use sliding::{conv1d_pair, conv1d_pair_tree, conv1d_sliding};
+pub use sliding::{conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_with};
 
 /// Dispatch a 1-D convolution to the selected backend.
 ///

@@ -20,40 +20,135 @@
 //!
 //! [`ConvPair`]: crate::ops::ConvPair
 
+use crate::exec::{Executor, PAR_MIN_FANOUT};
 use crate::ops::{AssocOp, ConvPair, Pair};
 
 use super::Conv1dParams;
 
-/// Sliding-window convolution, broadcast-FMA schedule (Algorithm 4).
+/// Sliding-window convolution, broadcast-FMA schedule (Algorithm 4),
+/// data-parallel over the shared worker pool ([`Executor::global`]).
 ///
 /// Layout `[b, c_in, n] ⊛ [c_out, c_in, k] → [b, c_out, n_out]`.
 /// Stride 1 runs the slid-accumulate over the full row; stride > 1
 /// accumulates into the strided output gather (still one pass per tap).
 pub fn conv1d_sliding(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
+    conv1d_sliding_with(Executor::global(), x, w, bias, p)
+}
+
+/// Minimum output-column segment when splitting inside a row.
+const PAR_MIN_SEG: usize = 8192;
+
+/// How many column segments to cut each output row into: 1 unless the
+/// row count alone cannot feed the pool (the Fig-1 shape is a single
+/// `batch=1, c_out=1` row over 1M columns).
+fn column_segments(ex: &Executor, rows: usize, n_out: usize) -> usize {
+    let target = ex.threads() * 4;
+    if ex.threads() <= 1 || rows >= target || n_out < 2 * PAR_MIN_SEG {
+        1
+    } else {
+        target.div_ceil(rows).min(n_out.div_ceil(PAR_MIN_SEG)).max(1)
+    }
+}
+
+/// [`conv1d_sliding`] on an explicit executor (thread-scaling benches and
+/// parity tests). Work is partitioned over `(batch × c_out)` output rows
+/// and, when rows are scarce, over output-column segments within a row.
+/// Each output element accumulates its taps in exactly the serial order,
+/// so results are **bit-identical** to the serial path for every
+/// partitioning (and therefore for every thread count).
+pub fn conv1d_sliding_with(
+    ex: &Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Vec<f32> {
     p.validate(x, w, bias);
     let n_out = p.n_out();
     let mut y = vec![0.0f32; p.y_len()];
     if n_out == 0 {
         return y;
     }
-    for b in 0..p.batch {
-        for co in 0..p.c_out {
-            let yrow = &mut y[(b * p.c_out + co) * n_out..][..n_out];
-            if let Some(bv) = bias {
-                yrow.fill(bv[co]);
-            }
-            for ci in 0..p.c_in {
-                let xrow = &x[(b * p.c_in + ci) * p.n..][..p.n];
-                let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
-                if p.stride == 1 && p.pad == 0 {
-                    accumulate_taps_unit(yrow, xrow, wrow, p.dilation);
-                } else {
-                    accumulate_taps_general(yrow, xrow, wrow, p);
-                }
-            }
+    let rows = p.batch * p.c_out;
+    if rows == 0 {
+        return y;
+    }
+    let segs = column_segments(ex, rows, n_out);
+    if ex.threads() <= 1 || (segs == 1 && (rows == 1 || rows * n_out < PAR_MIN_FANOUT)) {
+        for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+            compute_row_segment(yrow, 0, r, x, w, bias, p);
+        }
+        return y;
+    }
+    let seg_len = n_out.div_ceil(segs);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows * segs);
+    for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+        for (si, yseg) in yrow.chunks_mut(seg_len).enumerate() {
+            let t0 = si * seg_len;
+            jobs.push(Box::new(move || {
+                compute_row_segment(yseg, t0, r, x, w, bias, p);
+            }));
         }
     }
+    ex.scope(jobs);
     y
+}
+
+/// Compute output columns `[t0, t0 + yseg.len())` of flat output row
+/// `row = b·c_out + co` — the per-task body of both the serial loop and
+/// the parallel fan-out.
+fn compute_row_segment(
+    yseg: &mut [f32],
+    t0: usize,
+    row: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) {
+    let b = row / p.c_out;
+    let co = row % p.c_out;
+    if let Some(bv) = bias {
+        yseg.fill(bv[co]);
+    }
+    for ci in 0..p.c_in {
+        let xrow = &x[(b * p.c_in + ci) * p.n..][..p.n];
+        let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
+        accumulate_row_segment(yseg, t0, xrow, wrow, p);
+    }
+}
+
+/// Accumulate one channel's taps into global output range
+/// `[t0, t0 + yseg.len())`: unit fast path when stride 1 / no pad,
+/// interior/edge split when padded, clipped per-tap loop otherwise.
+fn accumulate_row_segment(
+    yseg: &mut [f32],
+    t0: usize,
+    xrow: &[f32],
+    wrow: &[f32],
+    p: &Conv1dParams,
+) {
+    let t1 = t0 + yseg.len();
+    if p.stride == 1 && p.pad == 0 {
+        accumulate_taps_unit(yseg, &xrow[t0..], wrow, p.dilation);
+        return;
+    }
+    if p.stride == 1 {
+        let k = wrow.len();
+        let n = xrow.len();
+        // Interior: 0 ≤ t + tap·d − pad < n for all taps ⇔
+        // t ∈ [pad, n − (k−1)·d + pad), intersected with this segment.
+        let lo = p.pad.clamp(t0, t1);
+        let hi = (n + p.pad).saturating_sub((k - 1) * p.dilation).clamp(t0, t1);
+        if lo < hi {
+            let interior = &mut yseg[lo - t0..hi - t0];
+            accumulate_taps_unit(interior, &xrow[lo - p.pad..], wrow, p.dilation);
+            edge_taps(yseg, t0, xrow, wrow, p, t0, lo);
+            edge_taps(yseg, t0, xrow, wrow, p, hi, t1);
+            return;
+        }
+    }
+    edge_taps(yseg, t0, xrow, wrow, p, t0, t1);
 }
 
 /// Hot loop, stride 1 / no pad: for each tap, `y[t] += w_k · x[t + k·d]`
@@ -135,33 +230,13 @@ fn accumulate_taps_unit(yrow: &mut [f32], xrow: &[f32], wrow: &[f32], dilation: 
     }
 }
 
-/// General path: stride/padding handled per tap with range clipping.
-/// For stride 1 the *interior* (where every tap is in-bounds) is handed
-/// to the blocked/unrolled fast loop — only the `O(k·d)` edge columns
-/// pay the clipping cost, so same-pad dilated workloads (all of Fig 2)
-/// run at the fast-path rate (§Perf: board geomean 2.5× → see log).
-fn accumulate_taps_general(yrow: &mut [f32], xrow: &[f32], wrow: &[f32], p: &Conv1dParams) {
-    let n_out = yrow.len();
-    let n = xrow.len();
-    if p.stride == 1 {
-        let k = wrow.len();
-        // Interior: 0 ≤ t + tap·d − pad < n for all taps ⇔
-        // t ∈ [pad, n − (k−1)·d + pad).
-        let lo = p.pad.min(n_out);
-        let hi = (n + p.pad).saturating_sub((k - 1) * p.dilation).min(n_out);
-        if lo < hi {
-            accumulate_taps_unit(&mut yrow[lo..hi], xrow, wrow, p.dilation);
-            edge_taps(yrow, xrow, wrow, p, 0, lo);
-            edge_taps(yrow, xrow, wrow, p, hi, n_out);
-            return;
-        }
-    }
-    edge_taps(yrow, xrow, wrow, p, 0, n_out);
-}
-
-/// Clipped per-tap accumulation restricted to output range `[r_lo, r_hi)`.
+/// Clipped per-tap accumulation restricted to the *global* output range
+/// `[r_lo, r_hi)`; `yseg[0]` holds global output index `seg_off`. The
+/// per-output tap order is identical to the fast path, so edge columns
+/// and interior columns compose bit-identically however the row is cut.
 fn edge_taps(
-    yrow: &mut [f32],
+    yseg: &mut [f32],
+    seg_off: usize,
     xrow: &[f32],
     wrow: &[f32],
     p: &Conv1dParams,
@@ -171,7 +246,6 @@ fn edge_taps(
     if r_lo >= r_hi {
         return;
     }
-    let n_out = r_hi;
     let n = xrow.len();
     for (tap, &wk) in wrow.iter().enumerate() {
         // x index for output t: t·stride + tap·dilation − pad ∈ [0, n)
@@ -187,7 +261,7 @@ fn edge_taps(
         let t_hi_excl = if (n as isize) <= base {
             0usize
         } else {
-            (((n as isize - base) as usize).div_ceil(p.stride)).min(n_out)
+            (((n as isize - base) as usize).div_ceil(p.stride)).min(r_hi)
         };
         if t_lo >= t_hi_excl {
             continue;
@@ -198,7 +272,7 @@ fn edge_taps(
             // blocks LLVM's vectorizer and costs ~25× — see §Perf log).
             let len = t_hi_excl - t_lo;
             let x_off = (t_lo as isize + base) as usize;
-            let ys = &mut yrow[t_lo..t_hi_excl];
+            let ys = &mut yseg[t_lo - seg_off..t_hi_excl - seg_off];
             let xs = &xrow[x_off..x_off + len];
             for (y, &xv) in ys.iter_mut().zip(xs) {
                 *y = wk.mul_add(xv, *y);
@@ -206,7 +280,8 @@ fn edge_taps(
         } else {
             let mut xi = (t_lo as isize * p.stride as isize + base) as usize;
             for t in t_lo..t_hi_excl {
-                yrow[t] = wk.mul_add(xrow[xi], yrow[t]);
+                let yv = &mut yseg[t - seg_off];
+                *yv = wk.mul_add(xrow[xi], *yv);
                 xi += p.stride;
             }
         }
@@ -476,5 +551,39 @@ mod tests {
         let p = Conv1dParams::new(1, 1, 3, 5);
         assert!(conv1d_sliding(&[0.0; 3], &[0.0; 5], None, &p).is_empty());
         assert!(conv1d_pair(&[0.0; 3], &[0.0; 5], None, &p).is_empty());
+    }
+
+    /// Audit for the tap-unrolled fast path: n_out straddling the 4096
+    /// cache block (±1 and one extra block), every k mod 8 residue, and
+    /// dilation > 1 (which demotes the 8-tap unroll to the 4-tap path).
+    #[test]
+    fn sliding_block_and_unroll_edges() {
+        for k in 8usize..=16 {
+            for &n_out in &[4095usize, 4096, 4097, 8193] {
+                let p = Conv1dParams::new(1, 1, n_out + k - 1, k);
+                check_backend(&p, false, false, 1e-3);
+            }
+        }
+        for d in [2usize, 3, 5] {
+            for k in [4usize, 8, 9, 12, 15] {
+                let n = 4097 + (k - 1) * d;
+                let p = Conv1dParams::new(1, 1, n, k).with_dilation(d);
+                check_backend(&p, false, false, 1e-3);
+            }
+        }
+    }
+
+    /// Final-block bounds with padding: the interior/edge split must stop
+    /// the fast loop exactly where a tap would run past the input.
+    #[test]
+    fn sliding_padded_block_edges() {
+        for k in [8usize, 9, 15, 16] {
+            let p = Conv1dParams::new(1, 1, 4100, k).with_same_pad();
+            check_backend(&p, true, false, 1e-3);
+        }
+        for d in [2usize, 4] {
+            let p = Conv1dParams::new(1, 1, 4099, 9).with_dilation(d).with_same_pad();
+            check_backend(&p, false, false, 1e-3);
+        }
     }
 }

@@ -61,75 +61,155 @@ pub struct CoordinatorStats {
     pub e2e_p99_us: f64,
 }
 
-/// The running coordinator. Submit rows, get [`Ticket`]s; a background
-/// worker (which owns the engine — PJRT types are not `Send`) drains the
-/// queue in deadline-bounded batches.
+/// The running coordinator. Submit rows, get [`Ticket`]s; N background
+/// workers (each owning its engine instance — PJRT types are not `Send`,
+/// so every engine is constructed *on* its worker thread) drain a shared
+/// MPMC queue in deadline-bounded batches, so a burst is served with up
+/// to N batches in flight.
 pub struct Coordinator {
     queue: Arc<Channel<Request>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     input_len: usize,
     output_len: usize,
     engine_name: String,
 }
 
 impl Coordinator {
-    /// Start the worker thread; the engine is constructed *on* it via the
-    /// factory (fails fast if the factory errors).
+    /// Start with a single worker thread; the engine is constructed *on*
+    /// it via the factory (fails fast if the factory errors). For N
+    /// workers use [`Coordinator::start_multi`] /
+    /// [`Coordinator::start_replicated`].
     pub fn start(factory: EngineFactory, cfg: &ServeConfig) -> anyhow::Result<Self> {
+        Self::start_multi(vec![factory], cfg)
+    }
+
+    /// Start one worker per factory, all draining the shared request
+    /// queue. Every factory must produce an engine of the same deployed
+    /// shape — the shapes are cross-checked at startup and a mismatch
+    /// (like any engine-construction failure) tears everything down and
+    /// returns the error.
+    pub fn start_multi(factories: Vec<EngineFactory>, cfg: &ServeConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(!factories.is_empty(), "need at least one engine factory");
         let queue: Arc<Channel<Request>> = Channel::new(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (meta_tx, meta_rx) = std::sync::mpsc::channel::<anyhow::Result<(usize, usize, String)>>();
+        let (meta_tx, meta_rx) =
+            std::sync::mpsc::channel::<anyhow::Result<(usize, usize, String)>>();
 
-        let worker = {
+        let n_workers = factories.len();
+        let mut workers = Vec::with_capacity(n_workers);
+        for (wi, factory) in factories.into_iter().enumerate() {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let shutdown = Arc::clone(&shutdown);
+            let meta_tx = meta_tx.clone();
             let max_batch = cfg.max_batch.max(1);
             let deadline = Duration::from_micros(cfg.batch_deadline_us);
-            std::thread::Builder::new()
-                .name("swsnn-batcher".into())
-                .spawn(move || {
-                    let engine = match factory() {
-                        Ok(e) => {
-                            let _ = meta_tx.send(Ok((e.input_len(), e.output_len(), e.name())));
-                            e
-                        }
-                        Err(err) => {
-                            let _ = meta_tx.send(Err(err));
-                            return;
-                        }
-                    };
-                    batch_loop(queue, engine, metrics, shutdown, max_batch, deadline)
-                })
-                .expect("spawn batcher")
-        };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("swsnn-batcher-{wi}"))
+                    .spawn(move || {
+                        let engine = match factory() {
+                            Ok(e) => {
+                                let _ =
+                                    meta_tx.send(Ok((e.input_len(), e.output_len(), e.name())));
+                                e
+                            }
+                            Err(err) => {
+                                let _ = meta_tx.send(Err(err));
+                                return;
+                            }
+                        };
+                        drop(meta_tx);
+                        batch_loop(queue, engine, metrics, shutdown, max_batch, deadline)
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+        drop(meta_tx);
 
-        let (input_len, output_len, engine_name) = meta_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during construction"))??;
+        // One meta message per worker (or a channel hangup if its thread
+        // died); fail fast on the first engine-construction error, and on
+        // any shape disagreement between workers — the router validates
+        // against a single deployed shape, so mixed shapes would hand
+        // some batches to an engine expecting different row lengths.
+        let mut meta: Option<(usize, usize, String)> = None;
+        let mut error: Option<anyhow::Error> = None;
+        for _ in 0..n_workers {
+            match meta_rx.recv() {
+                Ok(Ok(m)) => match &meta {
+                    None => meta = Some(m),
+                    Some(first) => {
+                        if (first.0, first.1) != (m.0, m.1) && error.is_none() {
+                            error = Some(anyhow::anyhow!(
+                                "engine shape mismatch across workers: in/out ({}, {}) vs ({}, {})",
+                                first.0,
+                                first.1,
+                                m.0,
+                                m.1
+                            ));
+                        }
+                    }
+                },
+                Ok(Err(e)) => {
+                    if error.is_none() {
+                        error = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if error.is_none() {
+                        error = Some(anyhow::anyhow!("engine thread died during construction"));
+                    }
+                }
+            }
+        }
+        if let Some(err) = error {
+            shutdown.store(true, Ordering::SeqCst);
+            queue.close();
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(err);
+        }
+        let (input_len, output_len, engine_name) = meta.expect("workers reported no metadata");
 
         Ok(Self {
             queue,
             metrics,
             next_id: AtomicU64::new(1),
             shutdown,
-            worker: Some(worker),
+            workers,
             input_len,
             output_len,
             engine_name,
         })
     }
 
-    /// Convenience for engines that are already `Send` (rust-native).
+    /// Convenience for engines that are already `Send` (rust-native):
+    /// a single worker owning the given engine.
     pub fn start_native(
         engine: impl Engine + Send + 'static,
         cfg: &ServeConfig,
     ) -> anyhow::Result<Self> {
         Self::start(Box::new(move || Ok(Box::new(engine) as Box<dyn Engine>)), cfg)
+    }
+
+    /// `cfg.workers` workers, each owning a clone of the given engine —
+    /// the N-worker serving path for rust-native (cloneable) engines.
+    pub fn start_replicated<E>(engine: E, cfg: &ServeConfig) -> anyhow::Result<Self>
+    where
+        E: Engine + Clone + Send + 'static,
+    {
+        let n = cfg.workers.max(1);
+        let mut factories: Vec<EngineFactory> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let e = engine.clone();
+            factories.push(Box::new(move || Ok(Box::new(e) as Box<dyn Engine>)));
+        }
+        Self::start_multi(factories, cfg)
     }
 
     /// Blocking submit (applies backpressure by waiting).
@@ -225,7 +305,12 @@ impl Coordinator {
         }
     }
 
-    /// Graceful shutdown: drain the queue, stop the worker.
+    /// Number of engine workers draining the queue.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful shutdown: drain the queue, stop all workers.
     pub fn shutdown(mut self) -> CoordinatorStats {
         self.shutdown_inner();
         self.stats()
@@ -234,7 +319,7 @@ impl Coordinator {
     fn shutdown_inner(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.queue.close();
-        if let Some(h) = self.worker.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -259,12 +344,10 @@ fn batch_loop(
     let row = engine.input_len();
     let out_row = engine.output_len();
     loop {
-        // Block for the first request.
+        // Block for the first request. `None` means the queue is closed
+        // *and* drained — nothing will ever arrive again.
         let Some(first) = queue.recv() else {
-            if shutdown.load(Ordering::SeqCst) {
-                return;
-            }
-            continue;
+            return;
         };
         let mut batch = vec![first];
         // Fill until deadline or max_batch.

@@ -29,6 +29,9 @@ pub trait Engine {
 }
 
 /// Rust-native engine: the [`Model`] layer stack on a conv backend.
+/// `Clone` replicates the model so N coordinator workers can each own an
+/// instance ([`crate::coordinator::Coordinator::start_replicated`]).
+#[derive(Clone)]
 pub struct NativeEngine {
     model: Model,
     backend: ConvBackend,

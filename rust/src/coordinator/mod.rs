@@ -1,5 +1,6 @@
 //! L3 serving coordinator: request queue → shape-checked router →
-//! deadline-based dynamic batcher → worker → response distribution.
+//! deadline-based dynamic batcher → N engine workers → response
+//! distribution.
 //!
 //! The paper's contribution is the kernel, so the coordinator's job is to
 //! make the kernel *deployable*: it owns the event loop, batches

@@ -1,10 +1,13 @@
 //! Thread/channel execution substrate (tokio is unavailable offline; the
 //! request path is CPU-bound anyway, so blocking workers + bounded
-//! channels are the right shape). Provides a bounded MPMC channel and a
-//! small worker pool used by the coordinator.
+//! channels are the right shape). Provides a bounded MPMC channel, a
+//! small joinable [`WorkerPool`] helper, and the shared data-parallel
+//! [`Executor`] the kernels fan out on — the paper's `P` made real
+//! (speedup `O(P/w)`, `O(P/log w)` for associative `⊕`).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Error returned by channel operations after close.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -169,6 +172,247 @@ impl WorkerPool {
     }
 }
 
+// ───────────────────────── data-parallel executor ─────────────────────
+
+/// A boxed unit of work executed on a pool worker.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared fan-out floor: below this many total output elements the
+/// boxed-job + latch overhead beats the kernel work, so the conv/pool
+/// dispatchers run inline instead of scoping jobs onto the pool.
+pub const PAR_MIN_FANOUT: usize = 4096;
+
+thread_local! {
+    /// Set on executor worker threads so nested fan-out runs inline
+    /// (prevents pool-starvation deadlock and oversubscription).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Completion latch for one [`Executor::scope`] call: counts outstanding
+/// jobs and carries the first panic message back to the caller.
+struct ScopeSync {
+    state: Mutex<ScopeState>,
+    done: Condvar,
+}
+
+struct ScopeState {
+    remaining: usize,
+    panic: Option<String>,
+}
+
+impl ScopeSync {
+    fn new(n: usize) -> Self {
+        Self {
+            state: Mutex::new(ScopeState {
+                remaining: n,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<String>) {
+        let mut g = self.state.lock().unwrap();
+        g.remaining -= 1;
+        if g.panic.is_none() {
+            g.panic = panic;
+        }
+        if g.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<String> {
+        let mut g = self.state.lock().unwrap();
+        while g.remaining > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+        g.panic.take()
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Shared scoped worker pool: persistent threads fed through the bounded
+/// MPMC [`Channel`], executing *borrowed* closures batch-at-a-time.
+///
+/// [`Executor::scope`] is the primitive: submit a batch of jobs that may
+/// borrow the caller's stack (including disjoint `&mut` output chunks),
+/// block until every job completes. Safety rests on that blocking — the
+/// pool threads are `'static`, but no job outlives its scope call.
+///
+/// The process-wide instance ([`Executor::global`]) is lazily initialized
+/// from `--threads` / `serve.threads` / `SWSNN_THREADS`, defaulting to
+/// all cores. Kernels with a `_with` variant also accept a local
+/// executor, which is what the thread-scaling benches use.
+pub struct Executor {
+    injector: Arc<Channel<Job>>,
+    threads: usize,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+static GLOBAL_EXECUTOR: OnceLock<Executor> = OnceLock::new();
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SWSNN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Pin the global executor's parallelism before first use. Returns
+/// `false` (no-op) if the pool is already running — the pool cannot be
+/// resized once threads exist.
+pub fn set_global_threads(threads: usize) -> bool {
+    let mut applied = false;
+    GLOBAL_EXECUTOR.get_or_init(|| {
+        applied = true;
+        Executor::new(threads)
+    });
+    applied
+}
+
+impl Executor {
+    /// A pool with `threads` degree of parallelism. `threads <= 1` spawns
+    /// no workers; every scope then runs inline on the caller. The count
+    /// is clamped to a sane ceiling so a misconfigured value can never
+    /// turn into a thread bomb.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.clamp(1, 1024);
+        let injector: Arc<Channel<Job>> = Channel::new((threads * 64).max(1024));
+        let workers = if threads > 1 {
+            (0..threads)
+                .map(|i| {
+                    let inj = Arc::clone(&injector);
+                    std::thread::Builder::new()
+                        .name(format!("swsnn-exec-{i}"))
+                        .spawn(move || {
+                            IN_POOL_WORKER.with(|f| f.set(true));
+                            while let Some(job) = inj.recv() {
+                                job();
+                            }
+                        })
+                        .expect("spawn executor worker")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Self {
+            injector,
+            threads,
+            workers,
+        }
+    }
+
+    /// The lazily-initialized process-wide pool.
+    pub fn global() -> &'static Executor {
+        GLOBAL_EXECUTOR.get_or_init(|| Executor::new(default_threads()))
+    }
+
+    /// Degree of parallelism (worker count; 1 = inline execution).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of borrowed jobs to completion. Jobs may mutably
+    /// borrow disjoint parts of the caller's data; this call does not
+    /// return until every job has finished. A panicking job does not
+    /// kill its worker; the panic message is re-raised here.
+    pub fn scope<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        // Inline when there is nothing to fan out to, or when already on
+        // a pool worker (a blocked worker could starve the pool).
+        if self.threads <= 1 || n == 1 || IN_POOL_WORKER.with(|f| f.get()) {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let sync = Arc::new(ScopeSync::new(n));
+        for job in jobs {
+            // SAFETY: the transmute only erases the borrow lifetime `'a`.
+            // `sync.wait()` below blocks until every submitted job has run
+            // (the completion callback fires even on panic), so no job —
+            // and nothing it borrows — outlives this stack frame.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send>>(job)
+            };
+            let sync2 = Arc::clone(&sync);
+            let task: Job = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                sync2.complete(result.err().map(|e| panic_message(&*e)));
+            });
+            match self.injector.try_send(task) {
+                Ok(()) => {}
+                // Queue full (or pool shutting down): caller runs it.
+                Err((task, _)) => task(),
+            }
+        }
+        if let Some(msg) = sync.wait() {
+            panic!("executor task panicked: {msg}");
+        }
+    }
+
+    /// Apply `f` to consecutive `chunk_len`-sized mutable chunks of
+    /// `data` in parallel; `f` receives the chunk index and the chunk.
+    pub fn parallel_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() || chunk_len == 0 {
+            return;
+        }
+        let fref: &(dyn Fn(usize, &mut [T]) + Sync) = &f;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(data.len().div_ceil(chunk_len));
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            jobs.push(Box::new(move || fref(i, chunk)));
+        }
+        self.scope(jobs);
+    }
+
+    /// Run `f(0) … f(n-1)` in parallel (read-only fan-out).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+        for i in 0..n {
+            jobs.push(Box::new(move || fref(i)));
+        }
+        self.scope(jobs);
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.injector.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +494,84 @@ mod tests {
         });
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn executor_parallel_chunks_cover_all_data() {
+        for threads in [1usize, 2, 4, 8] {
+            let ex = Executor::new(threads);
+            let mut data = vec![0u32; 10_007];
+            ex.parallel_chunks_mut(&mut data, 1024, |ci, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 1024 + j) as u32;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_parallel_for_runs_every_index() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ex = Executor::new(4);
+        let hits = AtomicUsize::new(0);
+        ex.parallel_for(137, |_i| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 137);
+    }
+
+    #[test]
+    fn executor_scope_borrows_disjoint_chunks() {
+        let ex = Executor::new(3);
+        let mut data = vec![1.0f32; 9000];
+        let chunk = 2500;
+        ex.parallel_chunks_mut(&mut data, chunk, |_ci, c| {
+            for v in c.iter_mut() {
+                *v *= 2.0;
+            }
+        });
+        assert!(data.iter().all(|v| *v == 2.0));
+    }
+
+    #[test]
+    fn executor_nested_scope_runs_inline() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ex = Arc::new(Executor::new(2));
+        let total = AtomicUsize::new(0);
+        // Outer fan-out; inner fan-out from pool workers must not
+        // deadlock (it runs inline on the worker).
+        ex.parallel_for(4, |_| {
+            ex.parallel_for(4, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "executor task panicked")]
+    fn executor_propagates_job_panics() {
+        let ex = Executor::new(4);
+        ex.parallel_for(8, |i| {
+            if i == 5 {
+                panic!("boom in job");
+            }
+        });
+    }
+
+    #[test]
+    fn executor_single_thread_is_inline() {
+        let ex = Executor::new(1);
+        assert_eq!(ex.threads(), 1);
+        let mut acc = 0u64;
+        // Inline execution can mutate captured state through a scope of
+        // one job (no Sync requirement exercised).
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        jobs.push(Box::new(|| acc += 7));
+        ex.scope(jobs);
+        assert_eq!(acc, 7);
     }
 }

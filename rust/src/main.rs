@@ -47,6 +47,15 @@ fn bench_cfg(args: &Args) -> BenchConfig {
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
+    // Global kernel parallelism: must be pinned before the first kernel
+    // touches the shared worker pool.
+    if let Some(t) = args.get("threads") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {t:?}"))?;
+        anyhow::ensure!(t >= 1, "--threads must be >= 1");
+        swsnn::exec::set_global_threads(t);
+    }
     match args.command.as_deref() {
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
@@ -54,6 +63,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let n = args.get_usize("n", 1_000_000).map_err(anyhow::Error::msg)?;
             let (table, _) = figs::fig1(&bench_cfg(args), n, &[2, 3, 5, 7, 15, 31, 63, 127, 255]);
             table.emit("fig1.csv");
+            let (scaling, _) = figs::fig1_scaling(&bench_cfg(args), n, 63, &[1, 2, 4, 8]);
+            scaling.emit("fig1_scaling.csv");
             Ok(())
         }
         Some("bench-fig2") => {
@@ -108,7 +119,7 @@ fn print_help() {
            minimizers    genomics sliding-minimum demo\n\
            artifacts     list AOT artifacts\n\
            selftest      cross-backend consistency check\n\n\
-         common flags: --quick (short bench), --help"
+         common flags: --threads N (kernel worker-pool width), --quick (short bench), --help"
     );
 }
 
@@ -118,6 +129,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         FlagSpec { name: "artifacts", value: Some("dir"), help: "artifacts dir (default artifacts/)" },
         FlagSpec { name: "addr", value: Some("host:port"), help: "listen address (default 127.0.0.1:7878)" },
         FlagSpec { name: "backend", value: Some("name"), help: "native conv backend (default sliding)" },
+        FlagSpec { name: "threads", value: Some("n"), help: "kernel worker-pool threads (default: all cores)" },
+        FlagSpec { name: "workers", value: Some("n"), help: "engine workers (default: serve.workers)" },
         FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
         FlagSpec { name: "quick", value: None, help: "" },
     ];
@@ -126,7 +139,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let serve_cfg;
     let coord = if args.has("pjrt") {
-        serve_cfg = ServeConfig::default();
+        let d = ServeConfig::default();
+        serve_cfg = ServeConfig {
+            workers: args.get_usize("workers", d.workers).map_err(anyhow::Error::msg)?,
+            ..d
+        };
+        // PJRT engines share one runtime and are constructed on a single
+        // worker thread; reject a silently-ignored --workers > 1.
+        anyhow::ensure!(
+            serve_cfg.workers <= 1,
+            "--pjrt serving is single-worker for now (one PJRT engine per process); drop --workers"
+        );
         let dir = args.get_str("artifacts", "artifacts");
         Coordinator::start(
             Box::new(move || Ok(Box::new(PjrtTcnEngine::from_artifacts(dir, 42)?) as _)),
@@ -136,7 +159,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let path = args.get_str("config", "configs/tcn_demo.toml");
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-        let (mc, sc) = load_config(&text).map_err(anyhow::Error::msg)?;
+        let (mc, mut sc) = load_config(&text).map_err(anyhow::Error::msg)?;
+        sc.workers = args.get_usize("workers", sc.workers).map_err(anyhow::Error::msg)?;
+        // --threads (handled globally) wins; otherwise serve.threads > 0
+        // pins the kernel pool width before the first forward pass.
+        if args.get("threads").is_none() && sc.threads > 0 {
+            swsnn::exec::set_global_threads(sc.threads);
+        }
         serve_cfg = sc;
         let backend = ConvBackend::parse(&args.get_str("backend", serve_cfg.backend.name()))
             .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
@@ -149,16 +178,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             model.param_count(),
             backend.name()
         );
-        Coordinator::start_native(
+        Coordinator::start_replicated(
             NativeEngine::new(model, backend, serve_cfg.max_batch),
             &serve_cfg,
         )?
     };
     println!(
-        "engine {} ready (in={} out={}), serving on {addr} — Ctrl-C to stop",
+        "engine {} ready (in={} out={}, {} engine workers, {} kernel threads), serving on {addr} — Ctrl-C to stop",
         coord.engine_name(),
         coord.input_len(),
-        coord.output_len()
+        coord.output_len(),
+        coord.worker_count(),
+        swsnn::exec::Executor::global().threads()
     );
     let stop = Arc::new(AtomicBool::new(false));
     serve_tcp(Arc::new(coord), &addr, stop, |bound| {

@@ -17,6 +17,9 @@ pub struct TensorSpec {
 }
 
 /// A built model: layers + the (c, n) shape trace used for validation.
+/// `Clone` replicates the parameters — used to hand one engine instance
+/// to each coordinator worker.
+#[derive(Clone)]
 pub struct Model {
     pub name: String,
     pub c_in: usize,

@@ -19,7 +19,11 @@ pub use conv_pair::{dot_reference, dot_via_prefix, dot_via_tree_reduce, encode_g
 /// * `combine(identity(), x) == x == combine(x, identity())`
 /// * `combine(a, combine(b, c)) == combine(combine(a, b), c)`
 ///   (exactly for lattice/integer ops; up to FP rounding for `+`/`×`).
-pub trait AssocOp: Copy + 'static {
+///
+/// Operators are value-semantic descriptors (`Copy + Send + Sync`), so
+/// the data-parallel dispatch in [`crate::sliding`] can share them
+/// across worker-pool threads.
+pub trait AssocOp: Copy + Send + Sync + 'static {
     /// Element type flowing through the operator.
     type Elem: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static;
 

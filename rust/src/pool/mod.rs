@@ -12,8 +12,9 @@
 
 mod pool2d;
 
-pub use pool2d::{pool2d, pool2d_naive, Pool2dParams};
+pub use pool2d::{pool2d, pool2d_naive, pool2d_with, Pool2dParams};
 
+use crate::exec::{Executor, PAR_MIN_FANOUT};
 use crate::ops::{AddOp, MaxOp, MinOp};
 use crate::sliding::{self, Boundary};
 
@@ -104,34 +105,78 @@ impl Pool1dParams {
 }
 
 /// 1-D pooling via the sliding-sum machinery (auto-dispatched algorithm,
-/// P = 64 logical lanes). Average pooling divides by the window size
+/// P = 64 logical lanes), parallel over `(batch × channel)` rows on the
+/// shared worker pool. Average pooling divides by the window size
 /// *after* the windowed sum — identical to frameworks'
 /// `count_include_pad` semantics under zero padding.
 pub fn pool1d(kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
+    pool1d_with(Executor::global(), kind, x, p)
+}
+
+/// [`pool1d`] on an explicit executor (scaling benches / parity tests).
+/// One task per `(batch, channel)` row; the single-row case instead
+/// parallelizes inside the row through [`sliding::auto_with`]'s
+/// chunk+halo dispatch on the same executor. Either way results are
+/// bit-identical to the serial sweep.
+pub fn pool1d_with(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
     assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
     let n_out = p.n_out();
     let mut y = vec![0.0f32; p.y_len()];
-    for b in 0..p.batch {
-        for c in 0..p.channels {
-            let xrow = &x[(b * p.channels + c) * p.n..][..p.n];
-            let dense = pool1d_row_dense(kind, xrow, p.w, p.boundary);
-            let yrow = &mut y[(b * p.channels + c) * n_out..][..n_out];
-            for (t, v) in yrow.iter_mut().enumerate() {
-                *v = dense[t * p.stride];
-            }
-        }
+    if n_out == 0 {
+        return y;
     }
+    let rows = p.batch * p.channels;
+    if ex.threads() <= 1 || rows == 1 || rows * n_out < PAR_MIN_FANOUT {
+        for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+            pool1d_row(ex, kind, x, p, r, yrow);
+        }
+        return y;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows);
+    for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+        jobs.push(Box::new(move || pool1d_row(ex, kind, x, p, r, yrow)));
+    }
+    ex.scope(jobs);
     y
 }
 
-/// Dense stride-1 pooling of one row.
+/// One `(batch, channel)` row: dense sliding pass + stride decimation.
+fn pool1d_row(
+    ex: &Executor,
+    kind: PoolKind,
+    x: &[f32],
+    p: &Pool1dParams,
+    r: usize,
+    yrow: &mut [f32],
+) {
+    let xrow = &x[r * p.n..][..p.n];
+    let dense = pool1d_row_dense_with(ex, kind, xrow, p.w, p.boundary);
+    for (t, v) in yrow.iter_mut().enumerate() {
+        *v = dense[t * p.stride];
+    }
+}
+
+/// Dense stride-1 pooling of one row (shared worker pool).
 pub fn pool1d_row_dense(kind: PoolKind, xrow: &[f32], w: usize, mode: Boundary) -> Vec<f32> {
+    pool1d_row_dense_with(Executor::global(), kind, xrow, w, mode)
+}
+
+/// [`pool1d_row_dense`] on an explicit executor, so thread-scaling
+/// measurements and parity tests control *all* parallelism, including
+/// the in-row chunk+halo dispatch.
+pub fn pool1d_row_dense_with(
+    ex: &Executor,
+    kind: PoolKind,
+    xrow: &[f32],
+    w: usize,
+    mode: Boundary,
+) -> Vec<f32> {
     const P: usize = 64;
     match kind {
         PoolKind::Avg => {
             let op = AddOp::<f32>::new();
             let ext = sliding::extend(op, xrow, w, mode);
-            let mut sums = sliding::auto(op, &ext, w, P);
+            let mut sums = sliding::auto_with(ex, op, &ext, w, P);
             let inv = 1.0 / w as f32;
             for v in &mut sums {
                 *v *= inv;
@@ -141,12 +186,12 @@ pub fn pool1d_row_dense(kind: PoolKind, xrow: &[f32], w: usize, mode: Boundary) 
         PoolKind::Max => {
             let op = MaxOp::<f32>::new();
             let ext = sliding::extend(op, xrow, w, mode);
-            sliding::auto(op, &ext, w, P)
+            sliding::auto_with(ex, op, &ext, w, P)
         }
         PoolKind::Min => {
             let op = MinOp::<f32>::new();
             let ext = sliding::extend(op, xrow, w, mode);
-            sliding::auto(op, &ext, w, P)
+            sliding::auto_with(ex, op, &ext, w, P)
         }
     }
 }

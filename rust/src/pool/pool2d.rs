@@ -70,61 +70,110 @@ impl Pool2dParams {
     }
 }
 
-/// Separable 2-D pooling (valid mode).
+/// Separable 2-D pooling (valid mode), parallel over `(batch × channel)`
+/// planes on the shared worker pool.
 pub fn pool2d(kind: PoolKind, x: &[f32], p: &Pool2dParams) -> Vec<f32> {
+    pool2d_with(crate::exec::Executor::global(), kind, x, p)
+}
+
+/// [`pool2d`] on an explicit executor (scaling benches / parity tests).
+/// Planes are independent, so any partitioning is bit-identical to the
+/// serial sweep.
+pub fn pool2d_with(
+    ex: &crate::exec::Executor,
+    kind: PoolKind,
+    x: &[f32],
+    p: &Pool2dParams,
+) -> Vec<f32> {
     assert_eq!(x.len(), p.batch * p.channels * p.h * p.w, "input shape");
     let (h_out, w_out) = (p.h_out(), p.w_out());
     let mut y = vec![0.0f32; p.y_len()];
     if h_out == 0 || w_out == 0 {
         return y;
     }
-    let w_dense = p.w - p.ww + 1;
-
-    // Row pass buffer: per plane, dense column windows for every row.
-    let mut rowbuf = vec![0.0f32; p.h * w_dense];
-    // Column gather buffer for the vertical pass.
-    let mut col = vec![0.0f32; p.h];
-
-    for b in 0..p.batch {
-        for c in 0..p.channels {
-            let plane = &x[((b * p.channels + c) * p.h) * p.w..][..p.h * p.w];
-            // Horizontal 1-D sliding pass per row.
-            for r in 0..p.h {
-                let row = &plane[r * p.w..][..p.w];
-                let dense = row_windows(kind, row, p.ww);
-                rowbuf[r * w_dense..(r + 1) * w_dense].copy_from_slice(&dense);
-            }
-            // Vertical 1-D sliding pass per (strided) output column.
-            let out_plane = &mut y[((b * p.channels + c) * h_out) * w_out..][..h_out * w_out];
-            for oc in 0..w_out {
-                let src_col = oc * p.stride_w;
-                for r in 0..p.h {
-                    col[r] = rowbuf[r * w_dense + src_col];
-                }
-                let dense_v = row_windows(kind, &col, p.wh);
-                for or in 0..h_out {
-                    out_plane[or * w_out + oc] = dense_v[or * p.stride_h];
-                }
-            }
-            // avg: normalize by window area (row pass summed, col pass summed).
-            if kind == PoolKind::Avg {
-                let inv = 1.0 / (p.wh * p.ww) as f32;
-                for v in out_plane.iter_mut() {
-                    *v *= inv;
-                }
-            }
+    let plane_len = h_out * w_out;
+    if ex.threads() <= 1 || y.len() < crate::exec::PAR_MIN_FANOUT {
+        // Serial path reuses one pair of scratch buffers across planes.
+        let mut scratch = PlaneScratch::default();
+        for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
+            pool2d_plane(ex, kind, x, p, pi, out_plane, &mut scratch);
         }
+        return y;
     }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(p.batch * p.channels);
+    for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
+        jobs.push(Box::new(move || {
+            let mut scratch = PlaneScratch::default();
+            pool2d_plane(ex, kind, x, p, pi, out_plane, &mut scratch);
+        }));
+    }
+    ex.scope(jobs);
     y
 }
 
+/// Reusable per-plane scratch: row-pass buffer + column gather buffer.
+#[derive(Default)]
+struct PlaneScratch {
+    rowbuf: Vec<f32>,
+    col: Vec<f32>,
+}
+
+/// One `(batch, channel)` plane: separable row pass then column pass.
+fn pool2d_plane(
+    ex: &crate::exec::Executor,
+    kind: PoolKind,
+    x: &[f32],
+    p: &Pool2dParams,
+    pi: usize,
+    out_plane: &mut [f32],
+    scratch: &mut PlaneScratch,
+) {
+    let (h_out, w_out) = (p.h_out(), p.w_out());
+    let w_dense = p.w - p.ww + 1;
+    let plane = &x[pi * p.h * p.w..][..p.h * p.w];
+    // Row pass buffer: dense column windows for every row. `resize`
+    // reuses capacity when the scratch is shared across planes; every
+    // element is overwritten below, so the fill value is irrelevant.
+    let rowbuf = &mut scratch.rowbuf;
+    rowbuf.resize(p.h * w_dense, 0.0);
+    // Column gather buffer for the vertical pass.
+    let col = &mut scratch.col;
+    col.resize(p.h, 0.0);
+    // Horizontal 1-D sliding pass per row.
+    for r in 0..p.h {
+        let row = &plane[r * p.w..][..p.w];
+        let dense = row_windows(ex, kind, row, p.ww);
+        rowbuf[r * w_dense..(r + 1) * w_dense].copy_from_slice(&dense);
+    }
+    // Vertical 1-D sliding pass per (strided) output column.
+    for oc in 0..w_out {
+        let src_col = oc * p.stride_w;
+        for r in 0..p.h {
+            col[r] = rowbuf[r * w_dense + src_col];
+        }
+        let dense_v = row_windows(ex, kind, &col, p.wh);
+        for or in 0..h_out {
+            out_plane[or * w_out + oc] = dense_v[or * p.stride_h];
+        }
+    }
+    // avg: normalize by window area (both passes summed).
+    if kind == PoolKind::Avg {
+        let inv = 1.0 / (p.wh * p.ww) as f32;
+        for v in out_plane.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
 /// Dense 1-D windows for the separable passes (sums stay unnormalized
-/// for avg; normalization happens once at the end).
-fn row_windows(kind: PoolKind, row: &[f32], w: usize) -> Vec<f32> {
+/// for avg; normalization happens once at the end). Uses the caller's
+/// executor so scaling benches / parity tests control all parallelism.
+fn row_windows(ex: &crate::exec::Executor, kind: PoolKind, row: &[f32], w: usize) -> Vec<f32> {
     match kind {
-        PoolKind::Avg => sliding::auto(AddOp::<f32>::new(), row, w, 64),
-        PoolKind::Max => sliding::auto(MaxOp::<f32>::new(), row, w, 64),
-        PoolKind::Min => sliding::auto(MinOp::<f32>::new(), row, w, 64),
+        PoolKind::Avg => sliding::auto_with(ex, AddOp::<f32>::new(), row, w, 64),
+        PoolKind::Max => sliding::auto_with(ex, MaxOp::<f32>::new(), row, w, 64),
+        PoolKind::Min => sliding::auto_with(ex, MinOp::<f32>::new(), row, w, 64),
     }
 }
 

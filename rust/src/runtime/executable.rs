@@ -1,9 +1,8 @@
-//! A compiled AOT artifact plus typed f32 execute helpers.
+//! A compiled AOT artifact plus typed f32 execute helpers. The xla-bound
+//! half is gated behind the `pjrt` feature; [`TensorView`] itself is
+//! plain rust and always available (the coordinator and tests use it).
 
-use std::path::Path;
-use std::sync::Arc;
-
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 /// An f32 tensor argument/result: shape + contiguous row-major data.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +29,7 @@ impl TensorView {
         self.data.len()
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {
@@ -41,6 +41,7 @@ impl TensorView {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -50,16 +51,19 @@ impl TensorView {
 }
 
 /// A compiled HLO artifact bound to a PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     name: String,
-    _client: Arc<xla::PjRtClient>,
+    _client: std::sync::Arc<xla::PjRtClient>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Load HLO text, reassigning instruction ids via the text parser
     /// (the 64-bit-id workaround), and JIT-compile it for the client.
-    pub fn load(client: Arc<xla::PjRtClient>, path: &Path) -> Result<Self> {
+    pub fn load(client: std::sync::Arc<xla::PjRtClient>, path: &std::path::Path) -> Result<Self> {
+        use anyhow::Context;
         let proto = xla::HloModuleProto::from_text_file(path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -86,6 +90,7 @@ impl Executable {
     /// Execute with f32 tensors; returns the flattened tuple elements.
     /// (All artifacts are lowered with `return_tuple=True`.)
     pub fn run(&self, inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+        use anyhow::{bail, Context};
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
@@ -105,6 +110,7 @@ impl Executable {
 
     /// Execute expecting exactly one output tensor.
     pub fn run1(&self, inputs: &[TensorView]) -> Result<TensorView> {
+        use anyhow::bail;
         let mut out = self.run(inputs)?;
         if out.len() != 1 {
             bail!(
@@ -114,6 +120,35 @@ impl Executable {
             );
         }
         Ok(out.pop().unwrap())
+    }
+}
+
+/// Stub executable compiled without the `pjrt` feature. Never actually
+/// constructed (the stub [`super::Runtime`] errors first); it exists so
+/// code holding `Arc<Executable>` type-checks either way.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    name: String,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn run(&self, _inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+        anyhow::bail!(
+            "artifact {}: PJRT execution unavailable (built without the `pjrt` feature)",
+            self.name
+        )
+    }
+
+    pub fn run1(&self, _inputs: &[TensorView]) -> Result<TensorView> {
+        anyhow::bail!(
+            "artifact {}: PJRT execution unavailable (built without the `pjrt` feature)",
+            self.name
+        )
     }
 }
 

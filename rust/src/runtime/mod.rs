@@ -6,6 +6,12 @@
 //! HLO **text** is the interchange format (xla_extension 0.5.1 rejects
 //! jax≥0.5 serialized protos). All artifacts are lowered with
 //! `return_tuple=True`, so results always unwrap through a tuple.
+//!
+//! The `xla` bindings are native and unavailable in offline/CI builds,
+//! so everything touching them is gated behind the `pjrt` cargo feature.
+//! Without it, this module compiles std-only stubs with the same API
+//! that fail with a clear error at runtime — the rest of the crate (the
+//! paper's kernels, the coordinator, the benches) is fully functional.
 
 mod artifacts;
 mod executable;
@@ -13,22 +19,23 @@ mod executable;
 pub use artifacts::{ArtifactRegistry, TcnManifest};
 pub use executable::{Executable, TensorView};
 
-use std::sync::Arc;
-
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Shared PJRT CPU client. Creating a client is expensive (spins up the
 /// TFRT runtime); share one per process.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
-    client: Arc<xla::PjRtClient>,
+    client: std::sync::Arc<xla::PjRtClient>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU-backed runtime.
     pub fn cpu() -> Result<Self> {
+        use anyhow::Context;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
-            client: Arc::new(client),
+            client: std::sync::Arc::new(client),
         })
     }
 
@@ -42,11 +49,41 @@ impl Runtime {
 
     /// Load and compile one HLO-text artifact.
     pub fn load(&self, path: &std::path::Path) -> Result<Executable> {
-        Executable::load(Arc::clone(&self.client), path)
+        Executable::load(std::sync::Arc::clone(&self.client), path)
     }
 }
 
 /// Convenience used by smoke tests.
+#[cfg(feature = "pjrt")]
 pub fn cpu_client() -> Result<xla::PjRtClient> {
     Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Stub runtime compiled without the `pjrt` feature: construction fails
+/// with an actionable error instead of a missing native dependency.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: swsnn was built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and a vendored xla crate)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn load(&self, _path: &std::path::Path) -> Result<Executable> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
 }

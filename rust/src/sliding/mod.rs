@@ -13,10 +13,22 @@
 //! | [`ping_pong::sliding_ping_pong`] | Alg 3 | `O(N·w/P)`, ~30–50 % faster | monoid |
 //! | [`vector_slide::sliding_vector_slide`] | Alg 4 | `O(N·w/P)` | monoid |
 //! | [`vector_slide::sliding_vector_slide_tree`] | Alg 4 + reduction | `O(N·log w/P)` | associative |
-//! | [`auto`] | dispatcher | best available | — |
+//! | [`auto`] | dispatcher | best available, chunk+halo parallel | — |
 //!
 //! All functions compute *valid-mode* windows; [`boundary`] wraps them
 //! with the padding/mirroring/periodic extensions DNN layers need.
+//!
+//! **Parallel dispatch:** [`run`] and [`auto`] partition large inputs
+//! into output chunks with `w − 1` input elements of halo overlap and
+//! evaluate the chunks concurrently on the shared worker pool
+//! ([`crate::exec::Executor`]) — the paper's multi-processor `P` on top
+//! of the per-core vector `P`. Only algorithms whose per-window combine
+//! tree is independent of absolute position are chunked (see
+//! [`Algo::chunk_parallel_safe`]); those stay **bit-identical** to the
+//! serial sweep. The rest ([`Algo::VectorInput`], [`Algo::VectorInputLog`],
+//! [`Algo::PingPong`]) build their first-iteration carry differently from
+//! steady state, so chunking would perturb f32 rounding — they always run
+//! serially.
 
 pub mod boundary;
 pub mod flat_tree;
@@ -36,6 +48,7 @@ pub use streaming::StreamingSlidingSum;
 pub use vector_input::{sliding_vector_input, sliding_vector_input_log};
 pub use vector_slide::{sliding_vector_slide, sliding_vector_slide_tree};
 
+use crate::exec::Executor;
 use crate::ops::AssocOp;
 
 /// Number of valid output windows, or 0 if the input is shorter than `w`.
@@ -90,10 +103,38 @@ impl Algo {
     pub fn parse(s: &str) -> Option<Algo> {
         Algo::ALL.iter().copied().find(|a| a.name() == s)
     }
+
+    /// Whether chunk+halo data-parallel evaluation reproduces this
+    /// algorithm's serial output bit-for-bit.
+    ///
+    /// True when every window is combined with a tree whose shape depends
+    /// only on `w` (strict left folds, or the fixed doubling ladder) —
+    /// then a chunk starting anywhere evaluates each window identically.
+    /// The vector-input family and ping-pong build their first-iteration
+    /// carry with a different association than steady state, making the
+    /// combine tree a function of absolute position; chunking them would
+    /// change f32 rounding, so they are excluded from parallel dispatch.
+    pub fn chunk_parallel_safe(&self) -> bool {
+        matches!(
+            self,
+            Algo::Naive
+                | Algo::ScalarInput
+                | Algo::VectorSlide
+                | Algo::VectorSlideTree
+                | Algo::FlatTree
+        )
+    }
 }
 
-/// Run a specific algorithm.
-pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+/// Run a specific algorithm serially (no worker-pool dispatch) — the
+/// reference the parallel path is tested bit-identical against.
+pub fn run_serial<O: AssocOp>(
+    algo: Algo,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
     match algo {
         Algo::Naive => sliding_naive(op, xs, w),
         Algo::ScalarInput => sliding_scalar_input(op, xs, w, p),
@@ -106,8 +147,30 @@ pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) ->
     }
 }
 
+/// Run a specific algorithm, fanning large inputs out over the shared
+/// worker pool when the algorithm is chunk-parallel safe.
+pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    run_with(Executor::global(), algo, op, xs, w, p)
+}
+
+/// [`run`] on an explicit executor (scaling benches / parity tests).
+pub fn run_with<O: AssocOp>(
+    ex: &Executor,
+    algo: Algo,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
+    if algo.chunk_parallel_safe() {
+        chunked_halo(ex, op, xs, w, move |sub| run_serial(algo, op, sub, w, p))
+    } else {
+        run_serial(algo, op, xs, w, p)
+    }
+}
+
 /// Dispatcher: pick the best implementation for `(w, P)` on a
-/// memory-resident input.
+/// memory-resident input, serial sweep.
 ///
 /// Heuristics measured by `tbl_algorithms` (EXPERIMENTS.md TBL-A/§Perf):
 /// * degenerate `w == 1` → copy; `w == 2` → one combine pass;
@@ -117,12 +180,58 @@ pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) ->
 ///   variant at all window sizes in the §Perf pass (the `Slide` becomes
 ///   an address offset). The register algorithms remain available via
 ///   [`run`] for streaming inputs and for the TBL-A reproduction.
-pub fn auto<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, _p: usize) -> Vec<O::Elem> {
+pub fn auto_serial<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, _p: usize) -> Vec<O::Elem> {
     match w {
         1 => xs.to_vec(),
         2 => sliding_w2(op, xs),
         _ => sliding_flat_tree(op, xs, w),
     }
+}
+
+/// [`auto_serial`] with chunk+halo dispatch over the shared worker pool
+/// (all of its paths are chunk-parallel safe). Bit-identical to the
+/// serial sweep for every thread count.
+pub fn auto<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    auto_with(Executor::global(), op, xs, w, p)
+}
+
+/// [`auto`] on an explicit executor.
+pub fn auto_with<O: AssocOp>(
+    ex: &Executor,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+) -> Vec<O::Elem> {
+    chunked_halo(ex, op, xs, w, move |sub| auto_serial(op, sub, w, p))
+}
+
+/// Minimum output elements per parallel chunk — below 2× this the
+/// dispatch overhead beats the win and the sweep stays serial.
+const PAR_MIN_CHUNK: usize = 32 * 1024;
+
+/// Chunk+halo evaluation: split the output range into per-thread chunks;
+/// each chunk re-runs `serial` on its input slice extended by `w − 1`
+/// halo elements, so chunk `c`'s windows see exactly the same elements
+/// as in the monolithic sweep.
+fn chunked_halo<O, F>(ex: &Executor, op: O, xs: &[O::Elem], w: usize, serial: F) -> Vec<O::Elem>
+where
+    O: AssocOp,
+    F: Fn(&[O::Elem]) -> Vec<O::Elem> + Sync,
+{
+    let m = out_len(xs.len(), w);
+    if ex.threads() <= 1 || m < 2 * PAR_MIN_CHUNK {
+        return serial(xs);
+    }
+    let chunks = ex.threads().min(m.div_ceil(PAR_MIN_CHUNK));
+    let chunk_len = m.div_ceil(chunks);
+    let mut out = vec![op.identity(); m];
+    ex.parallel_chunks_mut(&mut out, chunk_len, |ci, dst| {
+        let start = ci * chunk_len;
+        let res = serial(&xs[start..start + dst.len() + w - 1]);
+        dst.copy_from_slice(&res);
+    });
+    out
 }
 
 #[cfg(test)]

@@ -37,7 +37,7 @@ fn capped_prefix_linear<O: AssocOp>(op: O, x: &VecReg<O::Elem>, w: usize) -> Vec
     // acc[j] starts as the farthest-back contribution X[j-(w-1)] (identity
     // where j < w-1), then folds X[j-k] for k = w-2 … 0 on the right.
     let idreg = VecReg::splat(p, id);
-    let mut acc = VecReg::slide(&idreg, x, p.saturating_sub(w - 1).max(0));
+    let mut acc = VecReg::slide(&idreg, x, p.saturating_sub(w - 1));
     // ^ slide(id, X, p-(w-1)): lane j = X[j-(w-1)] for j ≥ w-1, id below.
     for k in (0..w - 1).rev() {
         let shifted = VecReg::slide(&idreg, x, p - k);

@@ -220,6 +220,142 @@ fn factory_error_fails_start() {
 }
 
 #[test]
+fn factory_error_fails_start_multi_and_tears_down() {
+    let serve = ServeConfig::default();
+    let factories: Vec<swsnn::coordinator::EngineFactory> = vec![
+        Box::new(|| {
+            Ok(Box::new(IdEngine) as Box<dyn Engine>)
+        }),
+        Box::new(|| anyhow::bail!("second engine exploded")),
+    ];
+    let res = Coordinator::start_multi(factories, &serve);
+    let err = res.err().expect("must fail").to_string();
+    assert!(err.contains("second engine exploded"), "{err}");
+}
+
+#[test]
+fn mismatched_engine_shapes_fail_start_multi() {
+    struct WideEngine;
+    impl Engine for WideEngine {
+        fn input_len(&self) -> usize {
+            8
+        }
+        fn output_len(&self) -> usize {
+            8
+        }
+        fn batch_buckets(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            Ok(x.to_vec())
+        }
+        fn name(&self) -> String {
+            "wide".into()
+        }
+    }
+    let serve = ServeConfig::default();
+    let factories: Vec<swsnn::coordinator::EngineFactory> = vec![
+        Box::new(|| Ok(Box::new(IdEngine) as Box<dyn Engine>)),
+        Box::new(|| Ok(Box::new(WideEngine) as Box<dyn Engine>)),
+    ];
+    let err = Coordinator::start_multi(factories, &serve)
+        .err()
+        .expect("shape mismatch must fail startup")
+        .to_string();
+    assert!(err.contains("shape mismatch"), "{err}");
+}
+
+/// Identity engine used by the multi-worker tests.
+#[derive(Clone)]
+struct IdEngine;
+
+impl Engine for IdEngine {
+    fn input_len(&self) -> usize {
+        4
+    }
+    fn output_len(&self) -> usize {
+        4
+    }
+    fn batch_buckets(&self) -> Vec<usize> {
+        vec![4]
+    }
+    fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(x.iter().map(|v| v * 2.0 + 1.0).collect())
+    }
+    fn name(&self) -> String {
+        "affine".into()
+    }
+}
+
+/// N workers drain a burst without dropping or duplicating tickets:
+/// every response must be the transform of *its own* request, and the
+/// completion count must match exactly.
+#[test]
+fn multi_worker_pool_drains_burst_without_loss() {
+    let serve = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 200,
+        workers: 4,
+        queue_capacity: 512,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_replicated(IdEngine, &serve).unwrap();
+    assert_eq!(coord.worker_count(), 4);
+
+    let inputs: Vec<Vec<f32>> = (0..200)
+        .map(|i| vec![i as f32, i as f32 + 0.25, -(i as f32), 0.5])
+        .collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| coord.submit(x.clone()).unwrap())
+        .collect();
+    for (x, t) in inputs.iter().zip(tickets) {
+        let y = t.wait().unwrap();
+        assert_eq!(y.len(), 4);
+        for (a, b) in y.iter().zip(x) {
+            assert_eq!(*a, b * 2.0 + 1.0, "response routed to wrong request");
+        }
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.submitted, 200);
+    assert_eq!(stats.completed, 200, "burst dropped or duplicated tickets");
+    assert_eq!(stats.rejected, 0);
+}
+
+/// Concurrent clients against N workers: with several engines draining,
+/// a long-deadline burst still completes exactly once per request.
+#[test]
+fn multi_worker_concurrent_clients() {
+    let serve = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 2_000,
+        workers: 3,
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start_replicated(IdEngine, &serve).unwrap());
+    let mut handles = Vec::new();
+    for c in 0..6u64 {
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + c);
+            for _ in 0..25 {
+                let x = rng.vec_uniform(4, -1.0, 1.0);
+                let y = coord.infer(x.clone()).unwrap();
+                for (a, b) in y.iter().zip(&x) {
+                    assert_eq!(*a, b * 2.0 + 1.0);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 150);
+    assert_eq!(stats.rejected, 0);
+}
+
+#[test]
 fn tcp_roundtrip_and_error_frames() {
     let coord = Arc::new(native_coordinator(&ServeConfig::default()));
     let stop = Arc::new(AtomicBool::new(false));

@@ -1,0 +1,234 @@
+//! Parallel/serial parity: the worker-pool fan-out added to the conv,
+//! pool, and sliding kernels must be **bit-identical** to the serial
+//! sweep for every thread count — partitioning may only change *where*
+//! an output is computed, never the per-output combine order. All
+//! comparisons here are exact (`assert_eq!` on the f32 vectors).
+
+use swsnn::conv::{
+    conv1d_direct, conv1d_sliding_with, conv2d_direct, conv2d_sliding_with, Conv1dParams,
+    Conv2dParams,
+};
+use swsnn::exec::Executor;
+use swsnn::ops::{AddOp, MaxOp, MinOp, MulOp};
+use swsnn::pool::{pool1d_naive, pool1d_with, pool2d_naive, pool2d_with, Pool1dParams,
+    Pool2dParams, PoolKind};
+use swsnn::sliding::{self, Algo, Boundary};
+use swsnn::workload::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn conv1d_case(p: &Conv1dParams, with_bias: bool, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+    let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+    let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+    let bias = with_bias.then_some(b.as_slice());
+    let serial = conv1d_sliding_with(&Executor::new(1), &x, &w, bias, p);
+    for t in THREADS {
+        let ex = Executor::new(t);
+        let got = conv1d_sliding_with(&ex, &x, &w, bias, p);
+        assert_eq!(got, serial, "conv1d parity threads={t} {p:?}");
+    }
+    // Sanity anchor: the serial reference itself agrees with direct.
+    let want = conv1d_direct(&x, &w, bias, p);
+    assert_eq!(serial.len(), want.len());
+    for (i, (a, c)) in serial.iter().zip(&want).enumerate() {
+        assert!(
+            (a - c).abs() <= 1e-3 * (1.0 + c.abs()),
+            "{p:?} idx {i}: {a} vs {c}"
+        );
+    }
+}
+
+#[test]
+fn conv1d_parallel_bit_identical_single_row() {
+    // The Fig-1 shape: one output row, parallel only via column segments.
+    conv1d_case(&Conv1dParams::new(1, 1, 200_000, 9), false, 0x51);
+    conv1d_case(&Conv1dParams::new(1, 1, 120_000, 63), true, 0x52);
+}
+
+#[test]
+fn conv1d_parallel_bit_identical_multi_row() {
+    conv1d_case(&Conv1dParams::new(2, 3, 9_000, 5).with_batch(2), true, 0x53);
+    conv1d_case(&Conv1dParams::new(4, 8, 5_000, 7), false, 0x54);
+}
+
+#[test]
+fn conv1d_parallel_bit_identical_hyperparams() {
+    conv1d_case(&Conv1dParams::new(1, 2, 50_000, 7).with_same_pad(), true, 0x55);
+    conv1d_case(
+        &Conv1dParams::new(2, 2, 40_000, 5).with_stride(2).with_pad(3),
+        false,
+        0x56,
+    );
+    conv1d_case(
+        &Conv1dParams::new(1, 1, 60_000, 9).with_dilation(4).with_same_pad(),
+        true,
+        0x57,
+    );
+}
+
+/// Segment boundaries vs the 4096-element cache block vs the 8/4/1 tap
+/// unroll: every k mod 8 residue over an n_out that forces within-row
+/// segmentation, with and without dilation.
+#[test]
+fn conv1d_parallel_bit_identical_block_edges() {
+    for k in 8usize..=16 {
+        let n_out = 3 * 8192 + 5;
+        conv1d_case(&Conv1dParams::new(1, 1, n_out + k - 1, k), false, 0x60 + k as u64);
+    }
+    for d in [2usize, 3] {
+        let k = 9;
+        let n_out = 2 * 8192 + 1;
+        conv1d_case(
+            &Conv1dParams::new(1, 1, n_out + (k - 1) * d, k).with_dilation(d),
+            true,
+            0x80 + d as u64,
+        );
+    }
+}
+
+#[test]
+fn conv2d_parallel_bit_identical() {
+    let mut rng = Rng::new(0x2D2);
+    for p in [
+        Conv2dParams::new(2, 4, 64, 64, 3, 3).with_same_pad(),
+        Conv2dParams::new(1, 1, 96, 96, 5, 5),
+        Conv2dParams::new(2, 2, 48, 40, 3, 3).with_stride(2).with_pad(1).with_batch(2),
+    ] {
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+        let serial = conv2d_sliding_with(&Executor::new(1), &x, &w, Some(&b), &p);
+        for t in THREADS {
+            let ex = Executor::new(t);
+            let got = conv2d_sliding_with(&ex, &x, &w, Some(&b), &p);
+            assert_eq!(got, serial, "conv2d parity threads={t} {p:?}");
+        }
+        let want = conv2d_direct(&x, &w, Some(&b), &p);
+        for (a, c) in serial.iter().zip(&want) {
+            assert!((a - c).abs() <= 1e-3 * (1.0 + c.abs()), "{p:?}");
+        }
+    }
+}
+
+#[test]
+fn pool1d_parallel_bit_identical() {
+    let mut rng = Rng::new(0x1D90011);
+    for (channels, batch, n) in [(1usize, 1usize, 150_000usize), (8, 2, 4_000)] {
+        let x = rng.vec_uniform(batch * channels * n, -2.0, 2.0);
+        for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+            for mode in [Boundary::Valid, Boundary::SamePad] {
+                for stride in [1usize, 4] {
+                    let p = Pool1dParams::new(channels, n, 16)
+                        .with_batch(batch)
+                        .with_stride(stride)
+                        .with_boundary(mode);
+                    let serial = pool1d_with(&Executor::new(1), kind, &x, &p);
+                    for t in THREADS {
+                        let ex = Executor::new(t);
+                        let got = pool1d_with(&ex, kind, &x, &p);
+                        assert_eq!(
+                            got, serial,
+                            "pool1d parity threads={t} {kind:?} {mode:?} s={stride}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // Anchor one configuration against the naive oracle.
+    let n = 2_000;
+    let x = rng.vec_uniform(n, -2.0, 2.0);
+    let p = Pool1dParams::new(1, n, 8).with_stride(2);
+    let got = pool1d_with(&Executor::new(4), PoolKind::Max, &x, &p);
+    let want = pool1d_naive(PoolKind::Max, &x, &p);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn pool2d_parallel_bit_identical() {
+    let mut rng = Rng::new(0x2D90012);
+    let p = Pool2dParams::new(4, 64, 64, 3, 3).with_batch(2).with_strides(2, 2);
+    let x = rng.vec_uniform(2 * 4 * 64 * 64, -3.0, 3.0);
+    for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+        let serial = pool2d_with(&Executor::new(1), kind, &x, &p);
+        for t in THREADS {
+            let ex = Executor::new(t);
+            let got = pool2d_with(&ex, kind, &x, &p);
+            assert_eq!(got, serial, "pool2d parity threads={t} {kind:?}");
+        }
+        let want = pool2d_naive(kind, &x, &p);
+        for (a, c) in serial.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-3, "{kind:?}");
+        }
+    }
+}
+
+/// Every algorithm, every thread count: `run_with` must equal
+/// `run_serial` exactly. Chunk-parallel-safe algorithms are dispatched
+/// with halo chunking; the rest must fall back to the serial sweep.
+#[test]
+fn sliding_run_bit_identical_all_algorithms() {
+    let mut rng = Rng::new(0x5A11);
+    let xs = rng.vec_uniform(150_000, -1.0, 1.0);
+    let op = AddOp::<f32>::new();
+    for w in [3usize, 7, 16] {
+        for algo in Algo::ALL {
+            let serial = sliding::run_serial(algo, op, &xs, w, 16);
+            for t in THREADS {
+                let ex = Executor::new(t);
+                let got = sliding::run_with(&ex, algo, op, &xs, w, 16);
+                assert_eq!(got, serial, "{algo:?} add w={w} threads={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sliding_run_bit_identical_lattice_and_integer_ops() {
+    let mut rng = Rng::new(0x5A12);
+    let xs = rng.vec_uniform(140_000, -100.0, 100.0);
+    let ints: Vec<u64> = (0..140_000u64).map(|_| rng.next_u64() % 10_000).collect();
+    for algo in [Algo::VectorSlide, Algo::VectorSlideTree, Algo::FlatTree] {
+        let want_max = sliding::run_serial(algo, MaxOp::<f32>::new(), &xs, 9, 32);
+        let want_min = sliding::run_serial(algo, MinOp::<u64>::new(), &ints, 9, 32);
+        for t in THREADS {
+            let ex = Executor::new(t);
+            assert_eq!(
+                sliding::run_with(&ex, algo, MaxOp::<f32>::new(), &xs, 9, 32),
+                want_max,
+                "{algo:?} max threads={t}"
+            );
+            assert_eq!(
+                sliding::run_with(&ex, algo, MinOp::<u64>::new(), &ints, 9, 32),
+                want_min,
+                "{algo:?} min threads={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sliding_auto_bit_identical_across_threads() {
+    let mut rng = Rng::new(0x5A13);
+    let xs = rng.vec_uniform(150_000, -1.0, 1.0);
+    let mul_xs: Vec<f32> = xs.iter().map(|v| 1.0 + 0.001 * v).collect();
+    for w in [1usize, 2, 5, 64] {
+        let serial = sliding::auto_serial(AddOp::<f32>::new(), &xs, w, 64);
+        let serial_mul = sliding::auto_serial(MulOp::<f32>::new(), &mul_xs, w, 64);
+        for t in THREADS {
+            let ex = Executor::new(t);
+            assert_eq!(
+                sliding::auto_with(&ex, AddOp::<f32>::new(), &xs, w, 64),
+                serial,
+                "auto add w={w} threads={t}"
+            );
+            assert_eq!(
+                sliding::auto_with(&ex, MulOp::<f32>::new(), &mul_xs, w, 64),
+                serial_mul,
+                "auto mul w={w} threads={t}"
+            );
+        }
+    }
+}
