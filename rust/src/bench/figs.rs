@@ -7,7 +7,7 @@
 //! `rust/tests/integration.rs` and recorded in EXPERIMENTS.md.
 
 use crate::bench::{bench, BenchConfig, Table};
-use crate::conv::{conv1d, conv1d_sliding_with, Conv1dParams, ConvBackend};
+use crate::conv::{conv1d, conv1d_im2col_with, conv1d_sliding_with, Conv1dParams, ConvBackend};
 use crate::exec::Executor;
 use crate::ops::{AddOp, MaxOp, MinOp};
 use crate::pool::{pool1d_naive, pool1d_with, Pool1dParams, PoolKind};
@@ -29,6 +29,9 @@ fn conv1d_1t(
 ) -> Vec<f32> {
     match backend {
         ConvBackend::Sliding => conv1d_sliding_with(ex1, x, w, None, p),
+        // The GEMM under im2col is row-parallel on the global pool now,
+        // so the baseline must be pinned to the same executor too.
+        ConvBackend::Im2colGemm => conv1d_im2col_with(ex1, x, w, None, p),
         other => conv1d(other, x, w, None, p),
     }
 }

@@ -39,12 +39,21 @@ impl BenchConfig {
 
     /// Honor `SWSNN_BENCH_QUICK=1` for fast smoke runs.
     pub fn from_env() -> Self {
-        if std::env::var("SWSNN_BENCH_QUICK").map_or(false, |v| v == "1") {
+        if std::env::var("SWSNN_BENCH_QUICK").is_ok_and(|v| v == "1") {
             Self::quick()
         } else {
             Self::default()
         }
     }
+}
+
+/// Whether machine-readable JSON output was requested: a `--json` argv
+/// flag on the bench target / CLI subcommand, or `SWSNN_BENCH_JSON=1`.
+/// When on, [`Table::emit`] also writes `bench_results/BENCH_<table>.json`
+/// so the perf trajectory can be tracked across PRs.
+pub fn json_enabled() -> bool {
+    std::env::args().any(|a| a == "--json")
+        || std::env::var("SWSNN_BENCH_JSON").is_ok_and(|v| v == "1")
 }
 
 /// One benchmark's result.
@@ -188,8 +197,40 @@ impl Table {
         out
     }
 
-    /// Print markdown to stdout and write CSV next to the bench target
-    /// (under `bench_results/`).
+    /// Machine-readable JSON (`{"title", "headers", "rows"}`), hand
+    /// rolled because serde is unavailable offline.
+    pub fn json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for ch in s.chars() {
+                match ch {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let list = |cells: &[String]| -> String {
+            let quoted: Vec<String> = cells.iter().map(|c| format!("\"{}\"", esc(c))).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| list(r)).collect();
+        format!(
+            "{{\"title\":\"{}\",\"headers\":{},\"rows\":[{}]}}\n",
+            esc(&self.title),
+            list(&self.headers),
+            rows.join(",")
+        )
+    }
+
+    /// Print markdown to stdout and write CSV (plus, with `--json` /
+    /// `SWSNN_BENCH_JSON=1`, a `BENCH_<table>.json` twin) under
+    /// `bench_results/`.
     pub fn emit(&self, csv_name: &str) {
         println!("{}", self.markdown());
         let dir = std::path::Path::new("bench_results");
@@ -199,6 +240,15 @@ impl Table {
                 eprintln!("warn: could not write {}: {e}", path.display());
             } else {
                 println!("(csv written to {})", path.display());
+            }
+            if json_enabled() {
+                let stem = csv_name.strip_suffix(".csv").unwrap_or(csv_name);
+                let jpath = dir.join(format!("BENCH_{stem}.json"));
+                if let Err(e) = std::fs::write(&jpath, self.json()) {
+                    eprintln!("warn: could not write {}: {e}", jpath.display());
+                } else {
+                    println!("(json written to {})", jpath.display());
+                }
             }
         }
     }
@@ -255,6 +305,18 @@ mod tests {
         assert!(md.contains("## Demo"));
         assert!(md.contains("| a  | bb |") || md.contains("| a | bb |"));
         assert_eq!(t.csv(), "a,bb\n1,2\n");
+    }
+
+    #[test]
+    fn table_json_escapes_and_structures() {
+        let mut t = Table::new("Fig \"1\" — spe\\edup", &["k", "t"]);
+        t.row(vec!["3".into(), "1.2µs".into()]);
+        t.row(vec!["5".into(), "2.4µs".into()]);
+        let j = t.json();
+        assert!(j.starts_with('{') && j.ends_with("}\n"), "{j}");
+        assert!(j.contains("\"title\":\"Fig \\\"1\\\" — spe\\\\edup\""), "{j}");
+        assert!(j.contains("\"headers\":[\"k\",\"t\"]"), "{j}");
+        assert!(j.contains("\"rows\":[[\"3\",\"1.2µs\"],[\"5\",\"2.4µs\"]]"), "{j}");
     }
 
     #[test]

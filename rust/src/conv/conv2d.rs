@@ -169,11 +169,39 @@ pub fn conv2d_sliding_with(
     bias: Option<&[f32]>,
     p: &Conv2dParams,
 ) -> Vec<f32> {
-    p.validate(x, w, bias);
-    let (h_out, w_out) = (p.h_out(), p.w_out());
     let mut y = vec![0.0f32; p.y_len()];
+    conv2d_sliding_with_into(ex, x, w, bias, p, &mut y);
+    y
+}
+
+/// [`conv2d_sliding`] writing into a caller-provided buffer of length
+/// [`Conv2dParams::y_len`]. Every output element is overwritten, so the
+/// buffer may hold stale data from a previous request.
+pub fn conv2d_sliding_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    y: &mut [f32],
+) {
+    conv2d_sliding_with_into(crate::exec::Executor::global(), x, w, bias, p, y)
+}
+
+/// The core kernel: explicit executor and caller-provided destination;
+/// workers write disjoint `&mut` row groups of `y` directly.
+pub fn conv2d_sliding_with_into(
+    ex: &crate::exec::Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv2dParams,
+    y: &mut [f32],
+) {
+    p.validate(x, w, bias);
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let (h_out, w_out) = (p.h_out(), p.w_out());
     if h_out == 0 || w_out == 0 {
-        return y;
+        return;
     }
     let planes = p.batch * p.c_out;
     let plane_len = h_out * w_out;
@@ -183,13 +211,11 @@ pub fn conv2d_sliding_with(
         for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
             conv2d_plane_rows(yplane, plane_idx, 0, x, w, bias, p);
         }
-        return y;
+        return;
     }
     // Group output rows so the pool sees ~4 tasks per thread even when
     // there are few planes.
-    let group_rows = h_out
-        .div_ceil((ex.threads() * 4).div_ceil(planes))
-        .max(1);
+    let group_rows = h_out.div_ceil((ex.threads() * 4).div_ceil(planes)).max(1);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
         for (gi, yrows) in yplane.chunks_mut(group_rows * w_out).enumerate() {
@@ -200,7 +226,6 @@ pub fn conv2d_sliding_with(
         }
     }
     ex.scope(jobs);
-    y
 }
 
 /// Compute output rows `[oy0, oy0 + yrows.len()/w_out)` of one

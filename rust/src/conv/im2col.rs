@@ -38,7 +38,21 @@ pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
 
 /// Convolution via im2col + blocked GEMM:
 /// `Y[c_out, n_out] = W[c_out, c_in·k] · cols[c_in·k, n_out]`.
+/// The GEMM fans out over output rows (and, skinny, column segments) on
+/// the shared worker pool so the baseline stays honest at high `P`.
 pub fn conv1d_im2col(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
+    conv1d_im2col_with(crate::exec::Executor::global(), x, w, bias, p)
+}
+
+/// [`conv1d_im2col`] on an explicit executor (the single-thread paper
+/// tables pin both comparands to one thread through this).
+pub fn conv1d_im2col_with(
+    ex: &crate::exec::Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+) -> Vec<f32> {
     p.validate(x, w, bias);
     let n_out = p.n_out();
     let rows = p.c_in * p.k;
@@ -48,8 +62,8 @@ pub fn conv1d_im2col(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParam
         let cols = im2col_expand(xb, p);
         let yb = &mut y[b * p.c_out * n_out..][..p.c_out * n_out];
         match bias {
-            Some(bv) => gemm::gemm_bias(p.c_out, rows, n_out, w, &cols, bv, yb),
-            None => gemm::gemm(p.c_out, rows, n_out, w, &cols, yb),
+            Some(bv) => gemm::gemm_bias_with(ex, p.c_out, rows, n_out, w, &cols, bv, yb),
+            None => gemm::gemm_with(ex, p.c_out, rows, n_out, w, &cols, yb),
         }
     }
     y

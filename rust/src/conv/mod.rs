@@ -28,14 +28,20 @@ mod params;
 mod sliding;
 mod small_k;
 
-pub use conv2d::{conv2d_direct, conv2d_im2col, conv2d_sliding, conv2d_sliding_with, Conv2dParams};
+pub use conv2d::{
+    conv2d_direct, conv2d_im2col, conv2d_sliding, conv2d_sliding_into, conv2d_sliding_with,
+    conv2d_sliding_with_into, Conv2dParams,
+};
 pub use direct::conv1d_direct;
+pub use im2col::{conv1d_im2col, conv1d_im2col_with, im2col_expand};
 pub use matmul_reform::conv1d_tap_gemm;
-pub use quantized::{conv1d_quantized, QuantParams};
-pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k};
-pub use im2col::{conv1d_im2col, im2col_expand};
 pub use params::{Conv1dParams, ConvBackend};
-pub use sliding::{conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_with};
+pub use quantized::{conv1d_quantized, QuantParams};
+pub use sliding::{
+    conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_into, conv1d_sliding_with,
+    conv1d_sliding_with_into,
+};
+pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k};
 
 /// Dispatch a 1-D convolution to the selected backend.
 ///
@@ -53,6 +59,28 @@ pub fn conv1d(
         ConvBackend::Im2colGemm => conv1d_im2col(x, w, bias, p),
         ConvBackend::Sliding => conv1d_sliding(x, w, bias, p),
         ConvBackend::SlidingPair => conv1d_pair(x, w, bias, p),
+    }
+}
+
+/// [`conv1d`] writing into a caller-provided buffer (resized to
+/// [`Conv1dParams::y_len`]). The sliding backend writes in place with no
+/// intermediate allocation; the other backends compute into a fresh
+/// vector and move it into `y` (their allocation is the baseline being
+/// measured, not a hot path worth rewriting).
+pub fn conv1d_into(
+    backend: ConvBackend,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    y: &mut Vec<f32>,
+) {
+    match backend {
+        ConvBackend::Sliding => {
+            y.resize(p.y_len(), 0.0);
+            conv1d_sliding_into(x, w, bias, p, y);
+        }
+        other => *y = conv1d(other, x, w, bias, p),
     }
 }
 

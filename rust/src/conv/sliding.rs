@@ -35,6 +35,19 @@ pub fn conv1d_sliding(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dPara
     conv1d_sliding_with(Executor::global(), x, w, bias, p)
 }
 
+/// [`conv1d_sliding`] writing into a caller-provided buffer of length
+/// [`Conv1dParams::y_len`] (zero allocation on the hot path). Every
+/// output element is overwritten — the buffer may hold stale data.
+pub fn conv1d_sliding_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    y: &mut [f32],
+) {
+    conv1d_sliding_with_into(Executor::global(), x, w, bias, p, y)
+}
+
 /// Minimum output-column segment when splitting inside a row.
 const PAR_MIN_SEG: usize = 8192;
 
@@ -51,11 +64,7 @@ fn column_segments(ex: &Executor, rows: usize, n_out: usize) -> usize {
 }
 
 /// [`conv1d_sliding`] on an explicit executor (thread-scaling benches and
-/// parity tests). Work is partitioned over `(batch × c_out)` output rows
-/// and, when rows are scarce, over output-column segments within a row.
-/// Each output element accumulates its taps in exactly the serial order,
-/// so results are **bit-identical** to the serial path for every
-/// partitioning (and therefore for every thread count).
+/// parity tests).
 pub fn conv1d_sliding_with(
     ex: &Executor,
     x: &[f32],
@@ -63,22 +72,42 @@ pub fn conv1d_sliding_with(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Vec<f32> {
-    p.validate(x, w, bias);
-    let n_out = p.n_out();
     let mut y = vec![0.0f32; p.y_len()];
+    conv1d_sliding_with_into(ex, x, w, bias, p, &mut y);
+    y
+}
+
+/// The core kernel: explicit executor *and* caller-provided destination.
+/// Work is partitioned over `(batch × c_out)` output rows and, when rows
+/// are scarce, over output-column segments within a row — each worker
+/// writes a disjoint `&mut` sub-slice of `y` directly. Each output
+/// element accumulates its taps in exactly the serial order, so results
+/// are **bit-identical** to the serial path for every partitioning (and
+/// therefore for every thread count).
+pub fn conv1d_sliding_with_into(
+    ex: &Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    y: &mut [f32],
+) {
+    p.validate(x, w, bias);
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let n_out = p.n_out();
     if n_out == 0 {
-        return y;
+        return;
     }
     let rows = p.batch * p.c_out;
     if rows == 0 {
-        return y;
+        return;
     }
     let segs = column_segments(ex, rows, n_out);
     if ex.threads() <= 1 || (segs == 1 && (rows == 1 || rows * n_out < PAR_MIN_FANOUT)) {
         for (r, yrow) in y.chunks_mut(n_out).enumerate() {
             compute_row_segment(yrow, 0, r, x, w, bias, p);
         }
-        return y;
+        return;
     }
     let seg_len = n_out.div_ceil(segs);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows * segs);
@@ -91,7 +120,6 @@ pub fn conv1d_sliding_with(
         }
     }
     ex.scope(jobs);
-    y
 }
 
 /// Compute output columns `[t0, t0 + yseg.len())` of flat output row
@@ -108,9 +136,9 @@ fn compute_row_segment(
 ) {
     let b = row / p.c_out;
     let co = row % p.c_out;
-    if let Some(bv) = bias {
-        yseg.fill(bv[co]);
-    }
+    // Seed with bias (or zero) unconditionally: the destination may be a
+    // recycled buffer holding stale values.
+    yseg.fill(bias.map_or(0.0, |bv| bv[co]));
     for ci in 0..p.c_in {
         let xrow = &x[(b * p.c_in + ci) * p.n..][..p.n];
         let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
@@ -152,12 +180,60 @@ fn accumulate_row_segment(
 }
 
 /// Hot loop, stride 1 / no pad: for each tap, `y[t] += w_k · x[t + k·d]`
-/// over the whole row — a unit-stride slid view, perfectly vectorizable,
-/// zero shuffles. This is `Slide(Y, Y1, P−k)` with the slide amount
-/// absorbed into the load address (the "memory slide" available to CPUs
-/// that the in-register formulation emulates).
+/// over the whole row — a unit-stride slid view, zero shuffles. This is
+/// `Slide(Y, Y1, P−k)` with the slide amount absorbed into the load
+/// address (the "memory slide" available to CPUs that the in-register
+/// formulation emulates).
+///
+/// Unit dilation on a fused-FMA SIMD tier (AVX2+FMA / NEON) takes the
+/// explicit-intrinsics path; everything else runs the generic code.
+/// Both fold each output's taps in ascending order with one fused
+/// multiply-add per tap, so the paths are bit-identical.
 #[inline]
 fn accumulate_taps_unit(yrow: &mut [f32], xrow: &[f32], wrow: &[f32], dilation: usize) {
+    if dilation == 1 && crate::simd::tier().has_fused_fma() {
+        accumulate_taps_unit_simd(yrow, xrow, wrow);
+        return;
+    }
+    accumulate_taps_unit_generic(yrow, xrow, wrow, dilation);
+}
+
+/// Fused-SIMD realization of the unit-stride hot loop: same 4096-element
+/// output block (y tile stays L1-resident across all taps), taps grouped
+/// ×4 through [`crate::simd::fma_tap4_f32`] and singly through
+/// [`crate::simd::fma_tap1_f32`]. Tap grouping never changes the
+/// per-output accumulation chain, so any grouping is bit-identical to
+/// the generic 8/4/1 unroll.
+fn accumulate_taps_unit_simd(yrow: &mut [f32], xrow: &[f32], wrow: &[f32]) {
+    const BLOCK: usize = 4096;
+    let n_out = yrow.len();
+    let k = wrow.len();
+    let mut t0 = 0;
+    while t0 < n_out {
+        let bl = BLOCK.min(n_out - t0);
+        let yb = &mut yrow[t0..t0 + bl];
+        let mut tap = 0;
+        while tap + 4 <= k {
+            let base = t0 + tap;
+            crate::simd::fma_tap4_f32(
+                yb,
+                &xrow[base..base + bl + 3],
+                [wrow[tap], wrow[tap + 1], wrow[tap + 2], wrow[tap + 3]],
+            );
+            tap += 4;
+        }
+        while tap < k {
+            let base = t0 + tap;
+            crate::simd::fma_tap1_f32(yb, &xrow[base..base + bl], wrow[tap]);
+            tap += 1;
+        }
+        t0 += bl;
+    }
+}
+
+/// Portable fallback (and the SIMD parity oracle): blocked, taps
+/// unrolled ×8/×4 so each loaded x lane feeds multiple FMAs.
+fn accumulate_taps_unit_generic(yrow: &mut [f32], xrow: &[f32], wrow: &[f32], dilation: usize) {
     // Cache-block the output so the y tile stays L1-resident across all
     // k taps (one y stream instead of k — §Perf: 3.2 → 9+ Gmac/s at
     // k=63), and unroll taps ×4 so each loaded x lane feeds 4 FMAs.

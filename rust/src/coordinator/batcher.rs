@@ -335,7 +335,7 @@ impl Drop for Coordinator {
 /// deadline for more, capped at `max_batch`), run the engine, distribute.
 fn batch_loop(
     queue: Arc<Channel<Request>>,
-    engine: Box<dyn Engine>,
+    mut engine: Box<dyn Engine>,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     max_batch: usize,
@@ -343,6 +343,12 @@ fn batch_loop(
 ) {
     let row = engine.input_len();
     let out_row = engine.output_len();
+    // Per-worker buffer pool: the gathered input batch and the output
+    // tensor recycle their allocations across requests (the engine's
+    // `infer_into` recycles the intermediate activations too) instead of
+    // a fresh `vec![0.0; n]` per call.
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut ybuf: Vec<f32> = Vec::new();
     loop {
         // Block for the first request. `None` means the queue is closed
         // *and* drained — nothing will ever arrive again.
@@ -377,25 +383,26 @@ fn batch_loop(
                 .queue_wait
                 .record(infer_start.duration_since(req.enqueued));
         }
-        let mut x = Vec::with_capacity(b * row);
+        xbuf.clear();
+        xbuf.reserve(b * row);
         for req in &batch {
-            x.extend_from_slice(&req.input);
+            xbuf.extend_from_slice(&req.input);
         }
-        let result = engine.infer(&x, b);
+        let result = engine.infer_into(&xbuf, b, &mut ybuf);
         metrics.inference.record(infer_start.elapsed());
         metrics.batches.inc();
         metrics.batched_rows.add(b as u64);
 
         match result {
-            Ok(y) => {
-                debug_assert_eq!(y.len(), b * out_row);
+            Ok(()) => {
+                debug_assert_eq!(ybuf.len(), b * out_row);
                 for (i, req) in batch.iter().enumerate() {
                     // Record metrics BEFORE waking the waiter so stats()
                     // observed after wait() always include this request.
                     metrics.completed.inc();
                     metrics.e2e.record(req.enqueued.elapsed());
                     req.slot
-                        .fill(Ok(y[i * out_row..(i + 1) * out_row].to_vec()));
+                        .fill(Ok(ybuf[i * out_row..(i + 1) * out_row].to_vec()));
                 }
             }
             Err(e) => {

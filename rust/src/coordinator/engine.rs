@@ -6,7 +6,7 @@ use anyhow::{bail, Context, Result};
 pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send + 'static>;
 
 use crate::conv::ConvBackend;
-use crate::nn::Model;
+use crate::nn::{ForwardScratch, Model};
 use crate::runtime::{ArtifactRegistry, TensorView};
 
 /// A batched inference engine with a fixed per-row input/output shape.
@@ -24,6 +24,15 @@ pub trait Engine {
     fn batch_buckets(&self) -> Vec<usize>;
     /// Run `batch` rows (input length `batch * input_len()`).
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+    /// Run `batch` rows into a reusable output buffer (resized to
+    /// `batch * output_len()`; stale contents are overwritten). The
+    /// default delegates to [`Engine::infer`]; engines with
+    /// allocation-free forward paths override it so one output tensor
+    /// and all intermediate activations recycle across requests.
+    fn infer_into(&mut self, x: &[f32], batch: usize, y: &mut Vec<f32>) -> Result<()> {
+        *y = self.infer(x, batch)?;
+        Ok(())
+    }
     /// Human-readable backend tag for metrics/logs.
     fn name(&self) -> String;
 }
@@ -36,6 +45,10 @@ pub struct NativeEngine {
     model: Model,
     backend: ConvBackend,
     max_batch: usize,
+    /// Per-engine activation buffer pool (each coordinator worker owns
+    /// its engine, so the scratch recycles across that worker's
+    /// requests without synchronization).
+    scratch: ForwardScratch,
 }
 
 impl NativeEngine {
@@ -44,6 +57,7 @@ impl NativeEngine {
             model,
             backend,
             max_batch: max_batch.max(1),
+            scratch: ForwardScratch::default(),
         }
     }
 
@@ -69,6 +83,12 @@ impl Engine for NativeEngine {
 
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
         Ok(self.model.forward(x, batch, self.backend)?.data)
+    }
+
+    fn infer_into(&mut self, x: &[f32], batch: usize, y: &mut Vec<f32>) -> Result<()> {
+        self.model
+            .forward_into(x, batch, self.backend, &mut self.scratch, y)?;
+        Ok(())
     }
 
     fn name(&self) -> String {

@@ -6,6 +6,8 @@
 //! shape that fits L1/L2 on commodity x86; they are parameters so the
 //! bench harness can expose the blocking ablation (TBL-A in DESIGN.md).
 
+use crate::exec::{Executor, PAR_MIN_FANOUT};
+
 use super::GemmShape;
 
 /// Register microkernel tile: MR×NR accumulator block.
@@ -29,16 +31,38 @@ impl Default for GemmBlocking {
     }
 }
 
-/// `c[m×n] += a[m×k]·b[k×n]` with default blocking.
+/// `c[m×n] += a[m×k]·b[k×n]` with default blocking, parallel over output
+/// rows on the shared worker pool.
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    gemm_blocked(GemmShape { m, k, n }, GemmBlocking::default(), a, b, c)
+    gemm_with(Executor::global(), m, k, n, a, b, c)
+}
+
+/// [`gemm`] on an explicit executor (thread-pinned benches / parity
+/// tests).
+pub fn gemm_with(ex: &Executor, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_blocked_with(ex, GemmShape { m, k, n }, GemmBlocking::default(), a, b, c)
 }
 
 /// GEMM followed by a broadcast bias add over rows: `c[i][j] += bias[i]`.
 /// (Conv layers use one bias per output channel = per row of the
 /// filter-matrix product.)
 pub fn gemm_bias(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: &[f32], c: &mut [f32]) {
-    gemm(m, k, n, a, b, c);
+    gemm_bias_with(Executor::global(), m, k, n, a, b, bias, c)
+}
+
+/// [`gemm_bias`] on an explicit executor.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_with(
+    ex: &Executor,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+) {
+    gemm_with(ex, m, k, n, a, b, c);
     assert_eq!(bias.len(), m);
     for i in 0..m {
         let row = &mut c[i * n..(i + 1) * n];
@@ -49,7 +73,75 @@ pub fn gemm_bias(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: &[f32
     }
 }
 
-/// Fully parameterized entry point.
+/// Data-parallel entry point: partitions C (and A) into disjoint bands of
+/// output rows and runs the serial blocked GEMM on each band concurrently
+/// — every C element is computed by identical code on identical inputs,
+/// so results are **bit-identical** to [`gemm_blocked`] for every thread
+/// count (the honesty requirement for the Fig-1 im2col baseline). The
+/// skinny-M case (fewer rows than a microtile, e.g. the single-row Fig-1
+/// shape) parallelizes over output-column segments within each row
+/// instead.
+pub fn gemm_blocked_with(
+    ex: &Executor,
+    shape: GemmShape,
+    blk: GemmBlocking,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let GemmShape { m, k, n } = shape;
+    let threads = ex.threads();
+    if threads <= 1 || m * n < PAR_MIN_FANOUT || k == 0 {
+        return gemm_blocked(shape, blk, a, b, c);
+    }
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    if m < MR {
+        // Skinny rows (gemv-like): split each C row into column segments.
+        let seg = n.div_ceil(threads * 2).max(1024);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (i, crow) in c.chunks_mut(n).enumerate() {
+            let arow = &a[i * k..(i + 1) * k];
+            for (si, cseg) in crow.chunks_mut(seg).enumerate() {
+                let j0 = si * seg;
+                jobs.push(Box::new(move || skinny_row_segment(arow, b, n, j0, cseg)));
+            }
+        }
+        ex.scope(jobs);
+        return;
+    }
+    // Row bands sized to ~2 jobs per thread, rounded to microtile rows.
+    // The per-row accumulation in the packed microkernel is independent
+    // of which band (and which micro-panel within it) a row lands in, so
+    // any banding of ≥ MR rows reproduces the serial result bitwise. A
+    // band *smaller* than MR would take the skinny gemv path instead of
+    // the microkernel the serial reference uses — so the last band
+    // absorbs any sub-MR tail rather than leaving them as their own job.
+    let rows_per_job = m.div_ceil(threads * 2).div_ceil(MR) * MR;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    let mut c_rest = c;
+    let mut r0 = 0usize;
+    while r0 < m {
+        let remaining = m - r0;
+        let rows = if remaining < rows_per_job + MR {
+            remaining
+        } else {
+            rows_per_job
+        };
+        let (band, rest) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
+        let a_rows = &a[r0 * k..(r0 + rows) * k];
+        jobs.push(Box::new(move || {
+            gemm_blocked(GemmShape { m: rows, k, n }, blk, a_rows, b, band)
+        }));
+        c_rest = rest;
+        r0 += rows;
+    }
+    ex.scope(jobs);
+}
+
+/// Fully parameterized *serial* entry point — the reference the
+/// row-parallel dispatch is bit-identical to.
 pub fn gemm_blocked(shape: GemmShape, blk: GemmBlocking, a: &[f32], b: &[f32], c: &mut [f32]) {
     let GemmShape { m, k, n } = shape;
     assert_eq!(a.len(), m * k, "a shape");
@@ -66,15 +158,7 @@ pub fn gemm_blocked(shape: GemmShape, blk: GemmBlocking, a: &[f32], b: &[f32], c
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut c[i * n..(i + 1) * n];
-            for (p, &ap) in arow.iter().enumerate() {
-                if ap == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] = ap.mul_add(brow[j], crow[j]);
-                }
-            }
+            skinny_row_segment(arow, b, n, 0, crow);
         }
         return;
     }
@@ -106,6 +190,21 @@ pub fn gemm_blocked(shape: GemmShape, blk: GemmBlocking, a: &[f32], b: &[f32], c
     }
 }
 
+/// One gemv-like row segment of the skinny-M path: accumulate
+/// `cseg[j] += arow[p] · b[p][j0 + j]` over the full depth, skipping
+/// zero taps (identically in the serial and parallel schedules).
+fn skinny_row_segment(arow: &[f32], b: &[f32], ldb: usize, j0: usize, cseg: &mut [f32]) {
+    for (p, &ap) in arow.iter().enumerate() {
+        if ap == 0.0 {
+            continue;
+        }
+        let brow = &b[p * ldb + j0..][..cseg.len()];
+        for (cv, &bv) in cseg.iter_mut().zip(brow) {
+            *cv = ap.mul_add(bv, *cv);
+        }
+    }
+}
+
 /// Pack an MC×KC block of A into MR-row micro-panels (column-major within
 /// each panel) so the microkernel streams it contiguously.
 fn pack_a(dst: &mut [f32], a: &[f32], lda: usize, ic: usize, pc: usize, mc: usize, kc: usize) {
@@ -129,7 +228,17 @@ fn pack_a(dst: &mut [f32], a: &[f32], lda: usize, ic: usize, pc: usize, mc: usiz
 
 /// Pack a KC×NC block of B into NR-column micro-panels (row-major within
 /// each panel).
-fn pack_b(dst: &mut [f32], b: &[f32], _ldbk: usize, ldb: usize, pc: usize, jc: usize, kc: usize, nc: usize) {
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    dst: &mut [f32],
+    b: &[f32],
+    _ldbk: usize,
+    ldb: usize,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+) {
     let mut out = 0;
     let mut jr = 0;
     while jr < nc {
@@ -294,6 +403,30 @@ mod tests {
         gemm_naive(m, k, n, &a, &b, &mut c2);
         for i in 0..m * n {
             assert!((c1[i] - c2[i]).abs() <= 1e-3 * (1.0 + c2[i].abs()));
+        }
+    }
+
+    #[test]
+    fn parallel_bands_bit_identical_including_sub_microtile_tail() {
+        // m=9 with threads>1 once split into an 8-row band plus a 1-row
+        // tail that took the skinny gemv path; bands must stay ≥ MR rows
+        // so every row goes through the same microkernel as the serial
+        // reference. Also covers the skinny (m < MR) column-segment path.
+        for (m, k, n) in [(9usize, 64usize, 1000usize), (17, 33, 700), (4, 16, 4096)] {
+            let mut seed = 0xC0FFEE ^ ((m * 31 + k) as u64);
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            xorshift_fill(&mut a, &mut seed);
+            xorshift_fill(&mut b, &mut seed);
+            let shape = GemmShape { m, k, n };
+            let mut want = vec![0.0f32; m * n];
+            gemm_blocked(shape, GemmBlocking::default(), &a, &b, &mut want);
+            for t in [2usize, 3, 4, 8] {
+                let ex = Executor::new(t);
+                let mut got = vec![0.0f32; m * n];
+                gemm_blocked_with(&ex, shape, GemmBlocking::default(), &a, &b, &mut got);
+                assert_eq!(got, want, "m={m} k={k} n={n} threads={t}");
+            }
         }
     }
 

@@ -12,7 +12,9 @@
 mod blocked;
 mod naive;
 
-pub use blocked::{gemm, gemm_bias, GemmBlocking};
+pub use blocked::{
+    gemm, gemm_bias, gemm_bias_with, gemm_blocked, gemm_blocked_with, gemm_with, GemmBlocking,
+};
 pub use naive::gemm_naive;
 
 /// Row-major matrix view dims: `a` is m×k, `b` is k×n, `c` is m×n.

@@ -27,7 +27,7 @@ use swsnn::runtime::{ArtifactRegistry, TensorView};
 use swsnn::workload::{dna_sequence, kmer_hashes, Rng};
 
 fn main() {
-    let args = parse_args(std::env::args().skip(1), &["quick", "pjrt", "help"]);
+    let args = parse_args(std::env::args().skip(1), &["quick", "pjrt", "help", "json"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -119,7 +119,9 @@ fn print_help() {
            minimizers    genomics sliding-minimum demo\n\
            artifacts     list AOT artifacts\n\
            selftest      cross-backend consistency check\n\n\
-         common flags: --threads N (kernel worker-pool width), --quick (short bench), --help"
+         common flags: --threads N (kernel worker-pool width), --quick (short bench),\n\
+                       --json (also write bench_results/BENCH_<table>.json), --help\n\
+         env: SWSNN_THREADS, SWSNN_SIMD=off|generic|sse2|avx2|neon, SWSNN_BENCH_QUICK, SWSNN_BENCH_JSON"
     );
 }
 

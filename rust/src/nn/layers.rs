@@ -2,8 +2,8 @@
 //! run forward on a `[batch, c, n]` activation with a chosen conv
 //! backend.
 
-use crate::conv::{conv1d, Conv1dParams, ConvBackend};
-use crate::pool::{pool1d, Pool1dParams, PoolKind};
+use crate::conv::{conv1d_into, Conv1dParams, ConvBackend};
+use crate::pool::{pool1d_into, Pool1dParams, PoolKind};
 use crate::workload::Rng;
 
 /// Activation tensor passed between layers.
@@ -141,8 +141,37 @@ impl Layer {
         }
     }
 
-    /// Forward one batch of activations.
+    /// Forward one batch of activations (allocating wrapper over
+    /// [`Layer::forward_into`]).
     pub fn forward(&self, x: &LayerOutput, batch: usize, backend: ConvBackend) -> LayerOutput {
+        let mut y = Vec::new();
+        let mut tmp = Vec::new();
+        let (c2, n2) =
+            self.forward_into(&x.data, x.channels, x.n, batch, backend, &mut y, &mut tmp);
+        LayerOutput {
+            channels: c2,
+            n: n2,
+            data: y,
+        }
+    }
+
+    /// Forward one batch from `x` (flattened `[batch, c, n]`) into `y`,
+    /// reusing `tmp` for intermediate activations (residual blocks).
+    /// Both buffers are resized as needed and every output element is
+    /// overwritten, so they can be recycled dirty across calls. Returns
+    /// the output `(channels, n)`. Numerically identical to
+    /// [`Layer::forward`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        c: usize,
+        n: usize,
+        batch: usize,
+        backend: ConvBackend,
+        y: &mut Vec<f32>,
+        tmp: &mut Vec<f32>,
+    ) -> (usize, usize) {
         match self {
             Layer::Conv {
                 c_in,
@@ -155,36 +184,30 @@ impl Layer {
                 w,
                 b,
             } => {
-                assert_eq!(x.channels, *c_in, "conv input channels");
-                let mut p = Conv1dParams::new(*c_in, *c_out, x.n, *k)
+                assert_eq!(c, *c_in, "conv input channels");
+                let mut p = Conv1dParams::new(*c_in, *c_out, n, *k)
                     .with_batch(batch)
                     .with_stride(*stride)
                     .with_dilation(*dilation);
                 if *same_pad {
                     p = p.with_same_pad();
                 }
-                let mut y = conv1d(backend, &x.data, w, Some(b), &p);
+                conv1d_into(backend, x, w, Some(b), &p, y);
                 if *relu {
-                    relu_inplace(&mut y);
+                    relu_inplace(y);
                 }
-                LayerOutput {
-                    channels: *c_out,
-                    n: p.n_out(),
-                    data: y,
-                }
+                (*c_out, p.n_out())
             }
             Layer::Pool { kind, w, stride } => {
-                let p = Pool1dParams::new(x.channels, x.n, *w)
+                let p = Pool1dParams::new(c, n, *w)
                     .with_batch(batch)
                     .with_stride(*stride);
-                LayerOutput {
-                    channels: x.channels,
-                    n: p.n_out(),
-                    data: pool1d(*kind, &x.data, &p),
-                }
+                y.resize(p.y_len(), 0.0);
+                pool1d_into(*kind, x, &p, y);
+                (c, p.n_out())
             }
             Layer::Residual {
-                c,
+                c: cr,
                 k,
                 dilation,
                 w1,
@@ -192,24 +215,19 @@ impl Layer {
                 w2,
                 b2,
             } => {
-                assert_eq!(x.channels, *c, "residual channels");
-                let p = Conv1dParams::new(*c, *c, x.n, *k)
+                assert_eq!(c, *cr, "residual channels");
+                let p = Conv1dParams::new(*cr, *cr, n, *k)
                     .with_batch(batch)
                     .with_dilation(*dilation)
                     .with_same_pad();
-                let mut r = conv1d(backend, &x.data, w1, Some(b1), &p);
-                relu_inplace(&mut r);
-                let mut r = conv1d(backend, &r, w2, Some(b2), &p);
-                relu_inplace(&mut r);
-                let mut out = x.data.clone();
-                for (o, v) in out.iter_mut().zip(&r) {
-                    *o += v;
+                conv1d_into(backend, x, w1, Some(b1), &p, tmp);
+                relu_inplace(tmp);
+                conv1d_into(backend, tmp, w2, Some(b2), &p, y);
+                relu_inplace(y);
+                for (o, xv) in y.iter_mut().zip(x) {
+                    *o += xv;
                 }
-                LayerOutput {
-                    channels: *c,
-                    n: x.n,
-                    data: out,
-                }
+                (c, n)
             }
             Layer::Dense {
                 in_features,
@@ -218,11 +236,11 @@ impl Layer {
                 w,
                 b,
             } => {
-                let feat = x.channels * x.n;
+                let feat = c * n;
                 assert_eq!(feat, *in_features, "dense input features");
-                let mut y = vec![0.0f32; batch * out];
+                y.resize(batch * out, 0.0);
                 for bi in 0..batch {
-                    let xrow = &x.data[bi * feat..][..feat];
+                    let xrow = &x[bi * feat..][..feat];
                     let yrow = &mut y[bi * out..][..*out];
                     for (o, yv) in yrow.iter_mut().enumerate() {
                         let wrow = &w[o * feat..][..feat];
@@ -234,13 +252,9 @@ impl Layer {
                     }
                 }
                 if *relu {
-                    relu_inplace(&mut y);
+                    relu_inplace(y);
                 }
-                LayerOutput {
-                    channels: *out,
-                    n: 1,
-                    data: y,
-                }
+                (*out, 1)
             }
         }
     }

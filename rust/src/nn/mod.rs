@@ -12,7 +12,7 @@ mod layers;
 mod model;
 
 pub use layers::{Layer, LayerOutput};
-pub use model::{Model, TensorSpec};
+pub use model::{ForwardScratch, Model, TensorSpec};
 
 #[cfg(test)]
 mod tests {

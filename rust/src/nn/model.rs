@@ -7,13 +7,24 @@ use crate::conv::ConvBackend;
 use crate::pool::PoolKind;
 use crate::workload::Rng;
 
-use super::layers::{Layer, LayerOutput};
+use super::layers::Layer;
 
 /// Output tensor of a forward pass: `shape = [batch, features…]`.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+/// Reusable activation buffers for [`Model::forward_into`]: ping/pong
+/// activations plus a residual-block temp. One scratch per engine
+/// worker recycles every intermediate tensor across requests — after
+/// warm-up a forward pass allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardScratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    tmp: Vec<f32>,
 }
 
 /// A built model: layers + the (c, n) shape trace used for validation.
@@ -91,7 +102,31 @@ impl Model {
     }
 
     /// Forward a batch: `x` is `[batch, c_in, seq_len]` flattened.
+    /// Allocating wrapper over [`Model::forward_into`].
     pub fn forward(&self, x: &[f32], batch: usize, backend: ConvBackend) -> Result<TensorSpec> {
+        let mut scratch = ForwardScratch::default();
+        let mut data = Vec::new();
+        let (c, n) = self.forward_into(x, batch, backend, &mut scratch, &mut data)?;
+        let shape = if n == 1 {
+            vec![batch, c]
+        } else {
+            vec![batch, c, n]
+        };
+        Ok(TensorSpec { shape, data })
+    }
+
+    /// Forward a batch into a reusable output buffer, recycling every
+    /// intermediate activation through `scratch`. Returns the per-row
+    /// output `(channels, n)`; `out` holds `[batch, channels, n]`
+    /// flattened. Numerically identical to [`Model::forward`].
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        batch: usize,
+        backend: ConvBackend,
+        scratch: &mut ForwardScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize)> {
         let expect = batch * self.c_in * self.seq_len;
         if x.len() != expect {
             bail!(
@@ -102,23 +137,27 @@ impl Model {
                 self.seq_len
             );
         }
-        let mut act = LayerOutput {
-            channels: self.c_in,
-            n: self.seq_len,
-            data: x.to_vec(),
-        };
+        scratch.ping.clear();
+        scratch.ping.extend_from_slice(x);
+        let (mut c, mut n) = (self.c_in, self.seq_len);
         for layer in &self.layers {
-            act = layer.forward(&act, batch, backend);
+            let (c2, n2) = layer.forward_into(
+                &scratch.ping,
+                c,
+                n,
+                batch,
+                backend,
+                &mut scratch.pong,
+                &mut scratch.tmp,
+            );
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+            c = c2;
+            n = n2;
         }
-        let shape = if act.n == 1 {
-            vec![batch, act.channels]
-        } else {
-            vec![batch, act.channels, act.n]
-        };
-        Ok(TensorSpec {
-            shape,
-            data: act.data,
-        })
+        // Hand the result out and recycle the caller's old buffer as the
+        // next pass's scratch — no copy either way.
+        std::mem::swap(out, &mut scratch.ping);
+        Ok((c, n))
     }
 
     /// Total MACs per input row (for throughput reporting).

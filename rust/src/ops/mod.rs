@@ -33,6 +33,21 @@ pub trait AssocOp: Copy + Send + Sync + 'static {
     /// The operator `⊕`.
     fn combine(&self, a: Self::Elem, b: Self::Elem) -> Self::Elem;
 
+    /// Lane-wise `dst[i] ← dst[i] ⊕ src[i]` over
+    /// `min(dst.len(), src.len())` — the inner loop of
+    /// [`crate::simd::VecReg::combine_assign`] and the flat-tree doubling
+    /// ladder. The default is the plain fold loop; the `f32`
+    /// instantiations of add/max/min override it with the
+    /// runtime-dispatched `std::arch` kernels in [`crate::simd`].
+    /// Overrides must stay bit-identical to this default (asserted by
+    /// `tests/simd_parity.rs`).
+    #[inline]
+    fn combine_assign_slices(&self, dst: &mut [Self::Elem], src: &[Self::Elem]) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.combine(*d, *s);
+        }
+    }
+
     /// Whether `⊕` also commutes. Commutativity is *not* required by any
     /// algorithm here (Eq. 8's pair operator is non-commutative), but the
     /// dispatcher may exploit it for cheaper suffix-sum construction.
@@ -148,6 +163,16 @@ impl<T: Scalar> AssocOp for AddOp<T> {
     fn combine(&self, a: T, b: T) -> T {
         a.add(b)
     }
+    #[inline]
+    fn combine_assign_slices(&self, dst: &mut [T], src: &[T]) {
+        if let (Some(d), Some(s)) = (crate::simd::as_f32_mut(dst), crate::simd::as_f32(src)) {
+            crate::simd::add_assign_f32(d, s);
+            return;
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.combine(*d, *s);
+        }
+    }
     fn is_commutative(&self) -> bool {
         true
     }
@@ -204,6 +229,16 @@ impl<T: Scalar> AssocOp for MaxOp<T> {
     fn combine(&self, a: T, b: T) -> T {
         a.maximum(b)
     }
+    #[inline]
+    fn combine_assign_slices(&self, dst: &mut [T], src: &[T]) {
+        if let (Some(d), Some(s)) = (crate::simd::as_f32_mut(dst), crate::simd::as_f32(src)) {
+            crate::simd::max_assign_f32(d, s);
+            return;
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.combine(*d, *s);
+        }
+    }
     fn is_commutative(&self) -> bool {
         true
     }
@@ -235,6 +270,16 @@ impl<T: Scalar> AssocOp for MinOp<T> {
     #[inline(always)]
     fn combine(&self, a: T, b: T) -> T {
         a.minimum(b)
+    }
+    #[inline]
+    fn combine_assign_slices(&self, dst: &mut [T], src: &[T]) {
+        if let (Some(d), Some(s)) = (crate::simd::as_f32_mut(dst), crate::simd::as_f32(src)) {
+            crate::simd::min_assign_f32(d, s);
+            return;
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = self.combine(*d, *s);
+        }
     }
     fn is_commutative(&self) -> bool {
         true

@@ -12,10 +12,10 @@
 
 mod pool2d;
 
-pub use pool2d::{pool2d, pool2d_naive, pool2d_with, Pool2dParams};
+pub use pool2d::{pool2d, pool2d_into, pool2d_naive, pool2d_with, pool2d_with_into, Pool2dParams};
 
 use crate::exec::{Executor, PAR_MIN_FANOUT};
-use crate::ops::{AddOp, MaxOp, MinOp};
+use crate::ops::{AddOp, AssocOp, MaxOp, MinOp};
 use crate::sliding::{self, Boundary};
 
 /// Pooling kind.
@@ -113,34 +113,50 @@ pub fn pool1d(kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
     pool1d_with(Executor::global(), kind, x, p)
 }
 
+/// [`pool1d`] writing into a caller-provided buffer of length
+/// [`Pool1dParams::y_len`] (every element overwritten — the buffer may
+/// be recycled dirty across requests).
+pub fn pool1d_into(kind: PoolKind, x: &[f32], p: &Pool1dParams, y: &mut [f32]) {
+    pool1d_with_into(Executor::global(), kind, x, p, y)
+}
+
 /// [`pool1d`] on an explicit executor (scaling benches / parity tests).
-/// One task per `(batch, channel)` row; the single-row case instead
-/// parallelizes inside the row through [`sliding::auto_with`]'s
-/// chunk+halo dispatch on the same executor. Either way results are
-/// bit-identical to the serial sweep.
 pub fn pool1d_with(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
-    assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
-    let n_out = p.n_out();
     let mut y = vec![0.0f32; p.y_len()];
+    pool1d_with_into(ex, kind, x, p, &mut y);
+    y
+}
+
+/// The core kernel: explicit executor and caller-provided destination.
+/// One task per `(batch, channel)` row, each writing its disjoint `&mut`
+/// row of `y` directly; the single-row case instead parallelizes inside
+/// the row through [`sliding::auto_with_into`]'s chunk+halo dispatch on
+/// the same executor. Either way results are bit-identical to the serial
+/// sweep.
+pub fn pool1d_with_into(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams, y: &mut [f32]) {
+    assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let n_out = p.n_out();
     if n_out == 0 {
-        return y;
+        return;
     }
     let rows = p.batch * p.channels;
     if ex.threads() <= 1 || rows == 1 || rows * n_out < PAR_MIN_FANOUT {
         for (r, yrow) in y.chunks_mut(n_out).enumerate() {
             pool1d_row(ex, kind, x, p, r, yrow);
         }
-        return y;
+        return;
     }
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows);
     for (r, yrow) in y.chunks_mut(n_out).enumerate() {
         jobs.push(Box::new(move || pool1d_row(ex, kind, x, p, r, yrow)));
     }
     ex.scope(jobs);
-    y
 }
 
 /// One `(batch, channel)` row: dense sliding pass + stride decimation.
+/// Stride 1 writes the dense pass straight into the output row; larger
+/// strides need the dense scratch before decimating.
 fn pool1d_row(
     ex: &Executor,
     kind: PoolKind,
@@ -150,6 +166,10 @@ fn pool1d_row(
     yrow: &mut [f32],
 ) {
     let xrow = &x[r * p.n..][..p.n];
+    if p.stride == 1 {
+        pool1d_row_dense_into(ex, kind, xrow, p.w, p.boundary, yrow);
+        return;
+    }
     let dense = pool1d_row_dense_with(ex, kind, xrow, p.w, p.boundary);
     for (t, v) in yrow.iter_mut().enumerate() {
         *v = dense[t * p.stride];
@@ -171,29 +191,55 @@ pub fn pool1d_row_dense_with(
     w: usize,
     mode: Boundary,
 ) -> Vec<f32> {
-    const P: usize = 64;
+    let mut dst = vec![0.0f32; sliding::boundary::output_len(xrow.len(), w, mode)];
+    pool1d_row_dense_into(ex, kind, xrow, w, mode, &mut dst);
+    dst
+}
+
+/// [`pool1d_row_dense`] into a caller-provided buffer. Valid mode reads
+/// the row in place; the other boundary modes materialize the `O(w)`
+/// extension before the sweep.
+pub fn pool1d_row_dense_into(
+    ex: &Executor,
+    kind: PoolKind,
+    xrow: &[f32],
+    w: usize,
+    mode: Boundary,
+    dst: &mut [f32],
+) {
     match kind {
         PoolKind::Avg => {
-            let op = AddOp::<f32>::new();
-            let ext = sliding::extend(op, xrow, w, mode);
-            let mut sums = sliding::auto_with(ex, op, &ext, w, P);
+            extend_then_sweep(ex, AddOp::<f32>::new(), xrow, w, mode, dst);
             let inv = 1.0 / w as f32;
-            for v in &mut sums {
+            for v in dst.iter_mut() {
                 *v *= inv;
             }
-            sums
         }
-        PoolKind::Max => {
-            let op = MaxOp::<f32>::new();
-            let ext = sliding::extend(op, xrow, w, mode);
-            sliding::auto_with(ex, op, &ext, w, P)
-        }
-        PoolKind::Min => {
-            let op = MinOp::<f32>::new();
-            let ext = sliding::extend(op, xrow, w, mode);
-            sliding::auto_with(ex, op, &ext, w, P)
-        }
+        PoolKind::Max => extend_then_sweep(ex, MaxOp::<f32>::new(), xrow, w, mode, dst),
+        PoolKind::Min => extend_then_sweep(ex, MinOp::<f32>::new(), xrow, w, mode, dst),
     }
+}
+
+/// Boundary-extend (borrowing the row in place for `Valid`) and run the
+/// auto-dispatched sliding sweep into `dst` — the shared body of every
+/// pooling kind.
+fn extend_then_sweep<O: AssocOp<Elem = f32>>(
+    ex: &Executor,
+    op: O,
+    xrow: &[f32],
+    w: usize,
+    mode: Boundary,
+    dst: &mut [f32],
+) {
+    const P: usize = 64;
+    let ext_store;
+    let ext: &[f32] = if mode == Boundary::Valid {
+        xrow
+    } else {
+        ext_store = sliding::extend(op, xrow, w, mode);
+        &ext_store
+    };
+    sliding::auto_with_into(ex, op, ext, w, P, dst);
 }
 
 /// Naive pooling baseline (recompute every window) for benches/tests.

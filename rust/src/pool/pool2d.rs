@@ -76,32 +76,51 @@ pub fn pool2d(kind: PoolKind, x: &[f32], p: &Pool2dParams) -> Vec<f32> {
     pool2d_with(crate::exec::Executor::global(), kind, x, p)
 }
 
+/// [`pool2d`] writing into a caller-provided buffer of length
+/// [`Pool2dParams::y_len`] (every element overwritten).
+pub fn pool2d_into(kind: PoolKind, x: &[f32], p: &Pool2dParams, y: &mut [f32]) {
+    pool2d_with_into(crate::exec::Executor::global(), kind, x, p, y)
+}
+
 /// [`pool2d`] on an explicit executor (scaling benches / parity tests).
-/// Planes are independent, so any partitioning is bit-identical to the
-/// serial sweep.
 pub fn pool2d_with(
     ex: &crate::exec::Executor,
     kind: PoolKind,
     x: &[f32],
     p: &Pool2dParams,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), p.batch * p.channels * p.h * p.w, "input shape");
-    let (h_out, w_out) = (p.h_out(), p.w_out());
     let mut y = vec![0.0f32; p.y_len()];
+    pool2d_with_into(ex, kind, x, p, &mut y);
+    y
+}
+
+/// The core kernel: explicit executor and caller-provided destination.
+/// Planes are independent and each worker writes its disjoint `&mut`
+/// plane of `y` directly, so any partitioning is bit-identical to the
+/// serial sweep.
+pub fn pool2d_with_into(
+    ex: &crate::exec::Executor,
+    kind: PoolKind,
+    x: &[f32],
+    p: &Pool2dParams,
+    y: &mut [f32],
+) {
+    assert_eq!(x.len(), p.batch * p.channels * p.h * p.w, "input shape");
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let (h_out, w_out) = (p.h_out(), p.w_out());
     if h_out == 0 || w_out == 0 {
-        return y;
+        return;
     }
     let plane_len = h_out * w_out;
     if ex.threads() <= 1 || y.len() < crate::exec::PAR_MIN_FANOUT {
-        // Serial path reuses one pair of scratch buffers across planes.
+        // Serial path reuses one set of scratch buffers across planes.
         let mut scratch = PlaneScratch::default();
         for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
             pool2d_plane(ex, kind, x, p, pi, out_plane, &mut scratch);
         }
-        return y;
+        return;
     }
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-        Vec::with_capacity(p.batch * p.channels);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(p.batch * p.channels);
     for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
         jobs.push(Box::new(move || {
             let mut scratch = PlaneScratch::default();
@@ -109,14 +128,15 @@ pub fn pool2d_with(
         }));
     }
     ex.scope(jobs);
-    y
 }
 
-/// Reusable per-plane scratch: row-pass buffer + column gather buffer.
+/// Reusable per-plane scratch: row-pass buffer, column gather buffer,
+/// and the vertical dense-window buffer.
 #[derive(Default)]
 struct PlaneScratch {
     rowbuf: Vec<f32>,
     col: Vec<f32>,
+    dense_v: Vec<f32>,
 }
 
 /// One `(batch, channel)` plane: separable row pass then column pass.
@@ -140,19 +160,21 @@ fn pool2d_plane(
     // Column gather buffer for the vertical pass.
     let col = &mut scratch.col;
     col.resize(p.h, 0.0);
-    // Horizontal 1-D sliding pass per row.
+    // Horizontal 1-D sliding pass per row, written straight into the
+    // reusable row buffer (no per-row Vec).
     for r in 0..p.h {
         let row = &plane[r * p.w..][..p.w];
-        let dense = row_windows(ex, kind, row, p.ww);
-        rowbuf[r * w_dense..(r + 1) * w_dense].copy_from_slice(&dense);
+        row_windows_into(ex, kind, row, p.ww, &mut rowbuf[r * w_dense..(r + 1) * w_dense]);
     }
     // Vertical 1-D sliding pass per (strided) output column.
+    let dense_v = &mut scratch.dense_v;
+    dense_v.resize(p.h - p.wh + 1, 0.0);
     for oc in 0..w_out {
         let src_col = oc * p.stride_w;
         for r in 0..p.h {
             col[r] = rowbuf[r * w_dense + src_col];
         }
-        let dense_v = row_windows(ex, kind, &col, p.wh);
+        row_windows_into(ex, kind, col, p.wh, dense_v);
         for or in 0..h_out {
             out_plane[or * w_out + oc] = dense_v[or * p.stride_h];
         }
@@ -166,14 +188,21 @@ fn pool2d_plane(
     }
 }
 
-/// Dense 1-D windows for the separable passes (sums stay unnormalized
-/// for avg; normalization happens once at the end). Uses the caller's
-/// executor so scaling benches / parity tests control all parallelism.
-fn row_windows(ex: &crate::exec::Executor, kind: PoolKind, row: &[f32], w: usize) -> Vec<f32> {
+/// Dense 1-D windows for the separable passes, written into the reusable
+/// destination (sums stay unnormalized for avg; normalization happens
+/// once at the end). Uses the caller's executor so scaling benches /
+/// parity tests control all parallelism.
+fn row_windows_into(
+    ex: &crate::exec::Executor,
+    kind: PoolKind,
+    row: &[f32],
+    w: usize,
+    dst: &mut [f32],
+) {
     match kind {
-        PoolKind::Avg => sliding::auto_with(ex, AddOp::<f32>::new(), row, w, 64),
-        PoolKind::Max => sliding::auto_with(ex, MaxOp::<f32>::new(), row, w, 64),
-        PoolKind::Min => sliding::auto_with(ex, MinOp::<f32>::new(), row, w, 64),
+        PoolKind::Avg => sliding::auto_with_into(ex, AddOp::<f32>::new(), row, w, 64, dst),
+        PoolKind::Max => sliding::auto_with_into(ex, MaxOp::<f32>::new(), row, w, 64, dst),
+        PoolKind::Min => sliding::auto_with_into(ex, MinOp::<f32>::new(), row, w, 64, dst),
     }
 }
 

@@ -1,0 +1,578 @@
+//! Runtime SIMD dispatch for the f32 hot loops.
+//!
+//! The generic kernels in this crate are written so LLVM *can*
+//! auto-vectorize them, but the guarantee is only as strong as the
+//! optimizer's alias analysis on any given day. This module pins the
+//! inner loops down with explicit `std::arch` intrinsics, selected once
+//! at startup by runtime feature detection:
+//!
+//! | tier | ISA | used by |
+//! |------|-----|---------|
+//! | [`SimdTier::Avx2`] | x86_64 AVX2 + FMA | add/max/min combine, fused conv taps |
+//! | [`SimdTier::Sse2`] | x86_64 baseline SSE2 | add/max/min combine (no fused ops) |
+//! | [`SimdTier::Neon`] | aarch64 NEON | add/max/min combine, fused conv taps |
+//! | [`SimdTier::Generic`] | portable scalar | everything (fallback + parity oracle) |
+//!
+//! Every specialized kernel is **bit-identical** to its generic
+//! counterpart for non-NaN inputs (asserted by `tests/simd_parity.rs`):
+//! the add/max/min lane ops have identical rounding on every ISA, and
+//! the conv kernels only run where a *fused* multiply-add exists
+//! (AVX2+FMA, NEON), matching the scalar `f32::mul_add` chain. SSE2 has
+//! no fused multiply-add, so the conv taps stay generic under that tier
+//! rather than silently changing rounding.
+//!
+//! Set `SWSNN_SIMD=off` (or `generic`) to force the portable fallback
+//! for debugging; `avx2` / `sse2` / `neon` pin a specific tier when the
+//! host supports it. [`force_tier`] overrides the choice at runtime
+//! (used by the parity tests).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// SIMD implementation tier, ordered best-first per architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// x86_64 AVX2 + FMA: 8 f32 lanes with fused multiply-add.
+    Avx2,
+    /// x86_64 baseline SSE2: 4 f32 lanes, no fused ops (conv taps fall
+    /// back to the generic path under this tier).
+    Sse2,
+    /// aarch64 NEON: 4 f32 lanes with fused multiply-add.
+    Neon,
+    /// Portable scalar/auto-vectorized code — the parity oracle.
+    Generic,
+}
+
+impl SimdTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Neon => "neon",
+            SimdTier::Generic => "generic",
+        }
+    }
+
+    /// Parse an `SWSNN_SIMD` value. `off` is an alias for `generic`.
+    pub fn parse(s: &str) -> Option<SimdTier> {
+        match s {
+            "avx2" => Some(SimdTier::Avx2),
+            "sse2" => Some(SimdTier::Sse2),
+            "neon" => Some(SimdTier::Neon),
+            "generic" | "off" => Some(SimdTier::Generic),
+            _ => None,
+        }
+    }
+
+    /// Whether the current host can execute this tier.
+    pub fn is_supported(&self) -> bool {
+        match self {
+            SimdTier::Avx2 => avx2_fma_available(),
+            SimdTier::Sse2 => cfg!(target_arch = "x86_64"),
+            SimdTier::Neon => cfg!(target_arch = "aarch64"),
+            SimdTier::Generic => true,
+        }
+    }
+
+    /// Whether the tier provides a *fused* vector multiply-add. Only
+    /// fused tiers may take the SIMD conv-tap path: an unfused mul+add
+    /// would change rounding vs the scalar `f32::mul_add` chain.
+    pub fn has_fused_fma(&self) -> bool {
+        matches!(self, SimdTier::Avx2 | SimdTier::Neon)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_available() -> bool {
+    false
+}
+
+/// Forced-tier encoding for the atomic override: 0 = auto-detect.
+const FORCE_AUTO: u8 = 0;
+
+static FORCED: AtomicU8 = AtomicU8::new(FORCE_AUTO);
+
+fn encode(t: SimdTier) -> u8 {
+    match t {
+        SimdTier::Avx2 => 1,
+        SimdTier::Sse2 => 2,
+        SimdTier::Neon => 3,
+        SimdTier::Generic => 4,
+    }
+}
+
+fn decode(v: u8) -> Option<SimdTier> {
+    match v {
+        1 => Some(SimdTier::Avx2),
+        2 => Some(SimdTier::Sse2),
+        3 => Some(SimdTier::Neon),
+        4 => Some(SimdTier::Generic),
+        _ => None,
+    }
+}
+
+/// Override the dispatched tier (`None` restores auto-detection).
+/// Forcing an unsupported tier is ignored — executing its kernels would
+/// fault. Intended for parity tests and debugging; the production path
+/// uses the `SWSNN_SIMD` environment variable instead.
+pub fn force_tier(t: Option<SimdTier>) {
+    let v = match t {
+        Some(t) if t.is_supported() => encode(t),
+        _ => FORCE_AUTO,
+    };
+    FORCED.store(v, Ordering::SeqCst);
+}
+
+/// The active SIMD tier: the [`force_tier`] override if set, else the
+/// startup detection (honoring `SWSNN_SIMD`), cached after first use.
+pub fn tier() -> SimdTier {
+    if let Some(t) = decode(FORCED.load(Ordering::Relaxed)) {
+        return t;
+    }
+    detected()
+}
+
+fn detected() -> SimdTier {
+    static DETECTED: OnceLock<SimdTier> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if let Ok(v) = std::env::var("SWSNN_SIMD") {
+            if let Some(t) = SimdTier::parse(&v) {
+                if t.is_supported() {
+                    return t;
+                }
+            }
+        }
+        best_available()
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_available() -> SimdTier {
+    if avx2_fma_available() {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best_available() -> SimdTier {
+    SimdTier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best_available() -> SimdTier {
+    SimdTier::Generic
+}
+
+// ───────────────────────── element downcasts ──────────────────────────
+
+/// View a generic element slice as `&[f32]` when `T` *is* `f32`
+/// (runtime type check; resolved at monomorphization time). Lets the
+/// generic operator code route its f32 instantiations to the SIMD
+/// kernels without specialization.
+pub fn as_f32<T: 'static>(xs: &[T]) -> Option<&[f32]> {
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<f32>() {
+        // SAFETY: T and f32 are the same type, so layout and validity
+        // invariants are identical; lifetimes are preserved.
+        Some(unsafe { &*(xs as *const [T] as *const [f32]) })
+    } else {
+        None
+    }
+}
+
+/// Mutable variant of [`as_f32`].
+pub fn as_f32_mut<T: 'static>(xs: &mut [T]) -> Option<&mut [f32]> {
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<f32>() {
+        // SAFETY: see `as_f32`.
+        Some(unsafe { &mut *(xs as *mut [T] as *mut [f32]) })
+    } else {
+        None
+    }
+}
+
+// ───────────────────────── combine kernels ────────────────────────────
+//
+// dst[i] ← dst[i] ⊕ src[i] over min(dst.len(), src.len()). The scalar
+// semantics match `Scalar::{add, maximum, minimum}` exactly: `maximum`
+// is `if a > b { a } else { b }`, which is precisely x86 `maxps`.
+
+/// Lane-wise `dst[i] += src[i]`, runtime-dispatched.
+pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { x86::add_assign_avx2(dst, src) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::add_assign_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::add_assign_neon(dst, src) },
+        _ => add_assign_f32_generic(dst, src),
+    }
+}
+
+/// Lane-wise `dst[i] = max(dst[i], src[i])`, runtime-dispatched.
+pub fn max_assign_f32(dst: &mut [f32], src: &[f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { x86::max_assign_avx2(dst, src) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::max_assign_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::max_assign_neon(dst, src) },
+        _ => max_assign_f32_generic(dst, src),
+    }
+}
+
+/// Lane-wise `dst[i] = min(dst[i], src[i])`, runtime-dispatched.
+pub fn min_assign_f32(dst: &mut [f32], src: &[f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { x86::min_assign_avx2(dst, src) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::min_assign_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::min_assign_neon(dst, src) },
+        _ => min_assign_f32_generic(dst, src),
+    }
+}
+
+/// Portable oracle for [`add_assign_f32`].
+pub fn add_assign_f32_generic(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// Portable oracle for [`max_assign_f32`] (`maxps` select semantics).
+pub fn max_assign_f32_generic(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = if *d > *s { *d } else { *s };
+    }
+}
+
+/// Portable oracle for [`min_assign_f32`] (`minps` select semantics).
+pub fn min_assign_f32_generic(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = if *d < *s { *d } else { *s };
+    }
+}
+
+// ───────────────────────── fused conv-tap kernels ─────────────────────
+//
+// One slid FMA pass of the sliding convolution's hot loop. Every output
+// folds its taps in ascending order with one *fused* multiply-add per
+// tap, so any tap grouping composes to the same per-output chain as the
+// scalar `f32::mul_add` code — bit-identical across tiers.
+
+/// `yb[t] = wk.mul_add(xs[t], yb[t])` for every output.
+/// Requires `xs.len() >= yb.len()`.
+pub fn fma_tap1_f32(yb: &mut [f32], xs: &[f32], wk: f32) {
+    debug_assert!(xs.len() >= yb.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { x86::fma_tap1_avx2(yb, xs, wk) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::fma_tap1_neon(yb, xs, wk) },
+        _ => fma_tap1_f32_generic(yb, xs, wk),
+    }
+}
+
+/// Four contiguous taps: `yb[t]` folds `w[j]·xs[t+j]` for `j = 0..4`,
+/// fused, ascending. Requires `xs.len() >= yb.len() + 3`.
+pub fn fma_tap4_f32(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
+    debug_assert!(xs.len() >= yb.len() + 3);
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { x86::fma_tap4_avx2(yb, xs, w) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::fma_tap4_neon(yb, xs, w) },
+        _ => fma_tap4_f32_generic(yb, xs, w),
+    }
+}
+
+/// Portable oracle for [`fma_tap1_f32`].
+pub fn fma_tap1_f32_generic(yb: &mut [f32], xs: &[f32], wk: f32) {
+    for (y, &x) in yb.iter_mut().zip(xs) {
+        *y = wk.mul_add(x, *y);
+    }
+}
+
+/// Portable oracle for [`fma_tap4_f32`].
+pub fn fma_tap4_f32_generic(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
+    for (t, y) in yb.iter_mut().enumerate() {
+        let acc = w[0].mul_add(xs[t], *y);
+        let acc = w[1].mul_add(xs[t + 1], acc);
+        let acc = w[2].mul_add(xs[t + 2], acc);
+        *y = w[3].mul_add(xs[t + 3], acc);
+    }
+}
+
+// ───────────────────────── x86_64 back ends ───────────────────────────
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    macro_rules! assign_avx {
+        ($name:ident, $vop:ident, $scalar:expr) => {
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
+                let n = dst.len().min(src.len());
+                let dp = dst.as_mut_ptr();
+                let sp = src.as_ptr();
+                let mut i = 0;
+                while i + 8 <= n {
+                    let d = _mm256_loadu_ps(dp.add(i));
+                    let s = _mm256_loadu_ps(sp.add(i));
+                    _mm256_storeu_ps(dp.add(i), $vop(d, s));
+                    i += 8;
+                }
+                while i < n {
+                    let f: fn(f32, f32) -> f32 = $scalar;
+                    dst[i] = f(dst[i], src[i]);
+                    i += 1;
+                }
+            }
+        };
+    }
+
+    macro_rules! assign_sse {
+        ($name:ident, $vop:ident, $scalar:expr) => {
+            #[target_feature(enable = "sse2")]
+            pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
+                let n = dst.len().min(src.len());
+                let dp = dst.as_mut_ptr();
+                let sp = src.as_ptr();
+                let mut i = 0;
+                while i + 4 <= n {
+                    let d = _mm_loadu_ps(dp.add(i));
+                    let s = _mm_loadu_ps(sp.add(i));
+                    _mm_storeu_ps(dp.add(i), $vop(d, s));
+                    i += 4;
+                }
+                while i < n {
+                    let f: fn(f32, f32) -> f32 = $scalar;
+                    dst[i] = f(dst[i], src[i]);
+                    i += 1;
+                }
+            }
+        };
+    }
+
+    assign_avx!(add_assign_avx2, _mm256_add_ps, |a, b| a + b);
+    assign_avx!(max_assign_avx2, _mm256_max_ps, |a, b| if a > b { a } else { b });
+    assign_avx!(min_assign_avx2, _mm256_min_ps, |a, b| if a < b { a } else { b });
+    assign_sse!(add_assign_sse2, _mm_add_ps, |a, b| a + b);
+    assign_sse!(max_assign_sse2, _mm_max_ps, |a, b| if a > b { a } else { b });
+    assign_sse!(min_assign_sse2, _mm_min_ps, |a, b| if a < b { a } else { b });
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fma_tap1_avx2(yb: &mut [f32], xs: &[f32], wk: f32) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let wv = _mm256_set1_ps(wk);
+        let mut t = 0;
+        while t + 8 <= n {
+            let acc = _mm256_loadu_ps(yp.add(t));
+            let x = _mm256_loadu_ps(xp.add(t));
+            _mm256_storeu_ps(yp.add(t), _mm256_fmadd_ps(wv, x, acc));
+            t += 8;
+        }
+        while t < n {
+            yb[t] = wk.mul_add(xs[t], yb[t]);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fma_tap4_avx2(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let w0 = _mm256_set1_ps(w[0]);
+        let w1 = _mm256_set1_ps(w[1]);
+        let w2 = _mm256_set1_ps(w[2]);
+        let w3 = _mm256_set1_ps(w[3]);
+        let mut t = 0;
+        while t + 8 <= n {
+            let mut acc = _mm256_loadu_ps(yp.add(t));
+            acc = _mm256_fmadd_ps(w0, _mm256_loadu_ps(xp.add(t)), acc);
+            acc = _mm256_fmadd_ps(w1, _mm256_loadu_ps(xp.add(t + 1)), acc);
+            acc = _mm256_fmadd_ps(w2, _mm256_loadu_ps(xp.add(t + 2)), acc);
+            acc = _mm256_fmadd_ps(w3, _mm256_loadu_ps(xp.add(t + 3)), acc);
+            _mm256_storeu_ps(yp.add(t), acc);
+            t += 8;
+        }
+        while t < n {
+            let acc = w[0].mul_add(xs[t], yb[t]);
+            let acc = w[1].mul_add(xs[t + 1], acc);
+            let acc = w[2].mul_add(xs[t + 2], acc);
+            yb[t] = w[3].mul_add(xs[t + 3], acc);
+            t += 1;
+        }
+    }
+}
+
+// ───────────────────────── aarch64 back end ───────────────────────────
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    macro_rules! assign_neon {
+        ($name:ident, $vop:ident, $scalar:expr) => {
+            #[target_feature(enable = "neon")]
+            pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
+                let n = dst.len().min(src.len());
+                let dp = dst.as_mut_ptr();
+                let sp = src.as_ptr();
+                let mut i = 0;
+                while i + 4 <= n {
+                    let d = vld1q_f32(dp.add(i));
+                    let s = vld1q_f32(sp.add(i));
+                    vst1q_f32(dp.add(i), $vop(d, s));
+                    i += 4;
+                }
+                while i < n {
+                    let f: fn(f32, f32) -> f32 = $scalar;
+                    dst[i] = f(dst[i], src[i]);
+                    i += 1;
+                }
+            }
+        };
+    }
+
+    assign_neon!(add_assign_neon, vaddq_f32, |a, b| a + b);
+    assign_neon!(max_assign_neon, vmaxq_f32, |a, b| if a > b { a } else { b });
+    assign_neon!(min_assign_neon, vminq_f32, |a, b| if a < b { a } else { b });
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma_tap1_neon(yb: &mut [f32], xs: &[f32], wk: f32) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let mut t = 0;
+        while t + 4 <= n {
+            let acc = vld1q_f32(yp.add(t));
+            let x = vld1q_f32(xp.add(t));
+            vst1q_f32(yp.add(t), vfmaq_n_f32(acc, x, wk));
+            t += 4;
+        }
+        while t < n {
+            yb[t] = wk.mul_add(xs[t], yb[t]);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma_tap4_neon(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let mut t = 0;
+        while t + 4 <= n {
+            let mut acc = vld1q_f32(yp.add(t));
+            acc = vfmaq_n_f32(acc, vld1q_f32(xp.add(t)), w[0]);
+            acc = vfmaq_n_f32(acc, vld1q_f32(xp.add(t + 1)), w[1]);
+            acc = vfmaq_n_f32(acc, vld1q_f32(xp.add(t + 2)), w[2]);
+            acc = vfmaq_n_f32(acc, vld1q_f32(xp.add(t + 3)), w[3]);
+            vst1q_f32(yp.add(t), acc);
+            t += 4;
+        }
+        while t < n {
+            let acc = w[0].mul_add(xs[t], yb[t]);
+            let acc = w[1].mul_add(xs[t + 1], acc);
+            let acc = w[2].mul_add(xs[t + 2], acc);
+            yb[t] = w[3].mul_add(xs[t + 3], acc);
+            t += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon, SimdTier::Generic] {
+            assert_eq!(SimdTier::parse(t.name()), Some(t));
+        }
+        assert_eq!(SimdTier::parse("off"), Some(SimdTier::Generic));
+        assert_eq!(SimdTier::parse("avx512"), None);
+    }
+
+    #[test]
+    fn generic_tier_always_supported() {
+        assert!(SimdTier::Generic.is_supported());
+        assert!(!SimdTier::Generic.has_fused_fma());
+        assert!(tier().is_supported());
+    }
+
+    #[test]
+    fn as_f32_downcasts_only_f32() {
+        let xs = [1.0f32, 2.0];
+        assert_eq!(as_f32(&xs), Some(&xs[..]));
+        let ys = [1.0f64, 2.0];
+        assert!(as_f32(&ys).is_none());
+        let mut zs = [3.0f32];
+        assert!(as_f32_mut(&mut zs).is_some());
+    }
+
+    #[test]
+    fn generic_kernels_match_scalar_ops() {
+        let src: Vec<f32> = (0..37).map(|i| (i as f32) * 0.5 - 9.0).collect();
+        let base: Vec<f32> = (0..37).map(|i| 8.0 - i as f32).collect();
+
+        let mut add = base.clone();
+        add_assign_f32_generic(&mut add, &src);
+        let mut max = base.clone();
+        max_assign_f32_generic(&mut max, &src);
+        let mut min = base.clone();
+        min_assign_f32_generic(&mut min, &src);
+        for i in 0..src.len() {
+            assert_eq!(add[i], base[i] + src[i]);
+            assert_eq!(max[i], base[i].max(src[i]));
+            assert_eq!(min[i], base[i].min(src[i]));
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_match_generic() {
+        // Whatever tier detection picked, results must equal the oracle.
+        let src: Vec<f32> = (0..131).map(|i| ((i * 37) % 19) as f32 - 9.0).collect();
+        let base: Vec<f32> = (0..131).map(|i| ((i * 13) % 23) as f32 - 11.0).collect();
+
+        let mut a = base.clone();
+        add_assign_f32(&mut a, &src);
+        let mut a_ref = base.clone();
+        add_assign_f32_generic(&mut a_ref, &src);
+        assert_eq!(a, a_ref);
+
+        let mut m = base.clone();
+        max_assign_f32(&mut m, &src);
+        let mut m_ref = base.clone();
+        max_assign_f32_generic(&mut m_ref, &src);
+        assert_eq!(m, m_ref);
+
+        let mut y = base.clone();
+        fma_tap1_f32(&mut y, &src, 0.37);
+        let mut y_ref = base.clone();
+        fma_tap1_f32_generic(&mut y_ref, &src, 0.37);
+        assert_eq!(y, y_ref);
+
+        let w = [0.25f32, -0.5, 1.5, 0.125];
+        let n = base.len() - 3;
+        let mut z = base[..n].to_vec();
+        fma_tap4_f32(&mut z, &src, w);
+        let mut z_ref = base[..n].to_vec();
+        fma_tap4_f32_generic(&mut z_ref, &src, w);
+        assert_eq!(z, z_ref);
+    }
+}

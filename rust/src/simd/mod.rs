@@ -1,16 +1,28 @@
-//! Software vector machine — the substrate for the paper's Algorithms 1–4.
+//! Software vector machine — the substrate for the paper's Algorithms 1–4
+//! — plus the runtime `std::arch` SIMD dispatch behind the f32 hot loops.
 //!
 //! The paper is written against a CPU vector ISA: a register of `P` lanes
 //! supporting broadcast, element shift (`≪`), lane-wise `⊕`, and the
 //! `Slide` operation (SVE `EXT` / RISC-V `vslideup`/`vslidedown` /
-//! AVX-512 `vperm*2ps`). This module provides exactly that abstraction as
-//! a fixed-capacity lane array. The lane loops are written branch-free
-//! over `P` contiguous elements so LLVM auto-vectorizes them to the host's
-//! real SIMD (verified by the `tbl_scan`/`tbl_algorithms` benches); `P` is
-//! a runtime-chosen *logical* width ≤ [`MAX_LANES`], letting the benches
-//! sweep the paper's `O(P/w)` scaling law.
+//! AVX-512 `vperm*2ps`). [`VecReg`] provides exactly that abstraction as
+//! a fixed-capacity lane array; `P` is a runtime-chosen *logical* width
+//! ≤ [`MAX_LANES`], letting the benches sweep the paper's `O(P/w)`
+//! scaling law.
+//!
+//! The lane-wise `⊕` no longer relies on LLVM auto-vectorization alone:
+//! [`dispatch`] selects AVX2/SSE2 (x86_64) or NEON (aarch64) kernels at
+//! startup via runtime feature detection, with the generic code as the
+//! portable fallback (`SWSNN_SIMD=off` forces it). See [`SimdTier`] for
+//! the tier table and the bit-exactness contract.
 
+mod dispatch;
 mod vector;
+
+pub use dispatch::{
+    add_assign_f32, add_assign_f32_generic, as_f32, as_f32_mut, fma_tap1_f32,
+    fma_tap1_f32_generic, fma_tap4_f32, fma_tap4_f32_generic, force_tier, max_assign_f32,
+    max_assign_f32_generic, min_assign_f32, min_assign_f32_generic, tier, SimdTier,
+};
 pub use vector::VecReg;
 
 /// Maximum logical lane count of the software vector machine.

@@ -90,14 +90,14 @@ impl<T: Copy + PartialEq + std::fmt::Debug> VecReg<T> {
         r
     }
 
-    /// `Y ← Y ⊕ X`, lane-wise. Written as a single contiguous loop over
-    /// the physical register so LLVM vectorizes it.
+    /// `Y ← Y ⊕ X`, lane-wise, through the operator's slice kernel
+    /// ([`AssocOp::combine_assign_slices`]) — runtime-dispatched
+    /// AVX2/SSE2/NEON for f32 add/max/min, a plain fold otherwise.
     #[inline]
     pub fn combine_assign<O: AssocOp<Elem = T>>(&mut self, op: O, rhs: &Self) {
         debug_assert_eq!(self.p, rhs.p);
-        for i in 0..self.p {
-            self.lanes[i] = op.combine(self.lanes[i], rhs.lanes[i]);
-        }
+        let p = self.p;
+        op.combine_assign_slices(&mut self.lanes[..p], &rhs.lanes[..p]);
     }
 
     /// `Y ← Y ≪ k`: shift lanes left by `k`, filling vacated tail lanes

@@ -25,43 +25,81 @@ use super::out_len;
 
 /// Log-depth sliding sum over a flat buffer (associative `⊕`).
 pub fn sliding_flat_tree<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    sliding_flat_tree_into(op, xs, w, &mut out);
+    out
+}
+
+/// One in-place doubling step: `d[i] ← d[i] ⊕ d[i + size]` for
+/// `i < next_live`, expressed as `size`-wide disjoint (dst, src) chunk
+/// pairs so the operator's slice kernel
+/// ([`AssocOp::combine_assign_slices`] — runtime SIMD for f32
+/// add/max/min) applies. Chunks ascend, so every element still reads its
+/// source before any write reaches it — exactly the original
+/// read-ahead-of-write sweep.
+fn ladder_step<O: AssocOp>(op: O, d: &mut [O::Elem], size: usize, next_live: usize) {
+    let mut c = 0;
+    while c < next_live {
+        let len = size.min(next_live - c);
+        let (head, tail) = d.split_at_mut(c + size);
+        op.combine_assign_slices(&mut head[c..c + len], &tail[..len]);
+        c += len;
+    }
+}
+
+/// [`sliding_flat_tree`] writing into a caller-provided buffer of length
+/// [`out_len`]`(xs.len(), w)` — the final ladder pass lands directly in
+/// `out`, so no result copy remains (the ladder itself still needs one
+/// `O(N)` scratch clone of the input). Every element of `out` is
+/// overwritten.
+pub fn sliding_flat_tree_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: &mut [O::Elem]) {
     let n = xs.len();
     let m = out_len(n, w);
+    assert_eq!(out.len(), m, "dst length");
     if m == 0 {
-        return Vec::new();
+        return;
     }
     if w == 1 {
-        return xs.to_vec();
+        out.copy_from_slice(xs);
+        return;
     }
 
     let t_max = usize::BITS - 1 - w.leading_zeros(); // floor(log2 w)
     let top = 1usize << t_max;
+    let mut d = xs.to_vec();
+    let mut live = n; // valid prefix length of d
 
-    if w == top || op.is_idempotent() {
-        // Single ladder, in place: ascending i never rereads a written
-        // slot (writes at i, reads at i+size > i).
-        let mut d = xs.to_vec();
+    if w == top {
+        // Pure power of two: climb to size = top/2 in place, emit the
+        // final doubling straight into the destination.
         let mut size = 1usize;
-        let mut live = n; // valid prefix length of d
-        while size < top {
+        while size < top / 2 {
             let next_live = live - size;
-            for i in 0..next_live {
-                d[i] = op.combine(d[i], d[i + size]);
-            }
+            ladder_step(op, &mut d, size, next_live);
             live = next_live;
             size <<= 1;
         }
-        if w == top {
-            d.truncate(m);
-            return d;
+        for (o, (a, b)) in out.iter_mut().zip(d.iter().zip(&d[size..])) {
+            *o = op.combine(*a, *b);
         }
-        // Idempotent overlap: window w = [i, i+top) ∪ [i+w-top, i+w).
+        return;
+    }
+
+    if op.is_idempotent() {
+        // Full ladder to size = top, then the overlap combine into the
+        // destination: window w = [i, i+top) ∪ [i+w-top, i+w).
+        let mut size = 1usize;
+        while size < top {
+            let next_live = live - size;
+            ladder_step(op, &mut d, size, next_live);
+            live = next_live;
+            size <<= 1;
+        }
         let shift = w - top;
-        let mut out = Vec::with_capacity(m);
-        for i in 0..m {
-            out.push(op.combine(d[i], d[i + shift]));
+        for (o, (a, b)) in out.iter_mut().zip(d.iter().zip(&d[shift..])) {
+            *o = op.combine(*a, *b);
         }
-        return out;
+        return;
     }
 
     // General associative: fold the binary decomposition of w as the
@@ -71,9 +109,7 @@ pub fn sliding_flat_tree<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::
     // LEFT, preserving order for non-commutative ⊕. The §Perf pass
     // measured the per-level-buffer version 5× slower (page faults on
     // log w fresh multi-MB allocations).
-    let mut d = xs.to_vec();
-    let mut out: Option<Vec<O::Elem>> = None;
-    let mut live = n; // valid prefix of d
+    let mut seeded = false;
     let mut suffix = 0usize; // total size of chunks already folded
     let mut size = 1usize;
     loop {
@@ -81,41 +117,45 @@ pub fn sliding_flat_tree<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::
             // Chunk of `size` ending `suffix` before the window end:
             // starts at i + w − suffix − size.
             let off = w - suffix - size;
-            match out.as_mut() {
-                None => {
-                    out = Some(d[off..off + m].to_vec());
+            if seeded {
+                for (i, ov) in out.iter_mut().enumerate() {
+                    *ov = op.combine(d[off + i], *ov);
                 }
-                Some(o) => {
-                    for (i, ov) in o.iter_mut().enumerate() {
-                        *ov = op.combine(d[off + i], *ov);
-                    }
-                }
+            } else {
+                out.copy_from_slice(&d[off..off + m]);
+                seeded = true;
             }
             suffix += size;
         }
         if size >= top {
             break;
         }
-        // In-place doubling step (safe ascending: reads are ahead of
-        // writes).
+        // In-place doubling step (reads stay ahead of writes).
         let next_live = live - size;
-        for i in 0..next_live {
-            d[i] = op.combine(d[i], d[i + size]);
-        }
+        ladder_step(op, &mut d, size, next_live);
         live = next_live;
         size <<= 1;
     }
-    out.expect("w >= 1 has at least one set bit")
+    debug_assert!(seeded, "w >= 1 has at least one set bit");
 }
 
 /// Window-2 special case: one combine pass (used by the dispatcher).
 pub fn sliding_w2<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
-    let m = out_len(xs.len(), 2);
-    let mut out = Vec::with_capacity(m);
-    for i in 0..m {
-        out.push(op.combine(xs[i], xs[i + 1]));
-    }
+    let mut out = vec![op.identity(); out_len(xs.len(), 2)];
+    sliding_w2_into(op, xs, &mut out);
     out
+}
+
+/// [`sliding_w2`] into a caller-provided buffer: one copy plus one
+/// slice-kernel combine (`out[i] = xs[i] ⊕ xs[i+1]`).
+pub fn sliding_w2_into<O: AssocOp>(op: O, xs: &[O::Elem], out: &mut [O::Elem]) {
+    let m = out_len(xs.len(), 2);
+    assert_eq!(out.len(), m, "dst length");
+    if m == 0 {
+        return;
+    }
+    out.copy_from_slice(&xs[..m]);
+    op.combine_assign_slices(out, &xs[1..1 + m]);
 }
 
 #[cfg(test)]

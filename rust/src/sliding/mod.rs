@@ -18,6 +18,13 @@
 //! All functions compute *valid-mode* windows; [`boundary`] wraps them
 //! with the padding/mirroring/periodic extensions DNN layers need.
 //!
+//! **Write-into-destination convention:** every kernel has an `_into`
+//! variant (`sliding_flat_tree_into`, [`run_into`], [`auto_into`], …)
+//! that writes a caller-provided `&mut [Elem]` of exactly
+//! [`out_len`]`(n, w)` elements, overwriting every element — buffers may
+//! be recycled dirty across calls. The `Vec`-returning entry points are
+//! thin allocate-then-`_into` wrappers.
+//!
 //! **Parallel dispatch:** [`run`] and [`auto`] partition large inputs
 //! into output chunks with `w − 1` input elements of halo overlap and
 //! evaluate the chunks concurrently on the shared worker pool
@@ -40,13 +47,16 @@ pub mod vector_input;
 pub mod vector_slide;
 
 pub use boundary::{extend, Boundary};
-pub use flat_tree::{sliding_flat_tree, sliding_w2};
-pub use naive::sliding_naive;
+pub use flat_tree::{sliding_flat_tree, sliding_flat_tree_into, sliding_w2, sliding_w2_into};
+pub use naive::{sliding_naive, sliding_naive_into};
 pub use ping_pong::sliding_ping_pong;
-pub use scalar_input::sliding_scalar_input;
+pub use scalar_input::{sliding_scalar_input, sliding_scalar_input_into};
 pub use streaming::StreamingSlidingSum;
 pub use vector_input::{sliding_vector_input, sliding_vector_input_log};
-pub use vector_slide::{sliding_vector_slide, sliding_vector_slide_tree};
+pub use vector_slide::{
+    sliding_vector_slide, sliding_vector_slide_into, sliding_vector_slide_tree,
+    sliding_vector_slide_tree_into,
+};
 
 use crate::exec::Executor;
 use crate::ops::AssocOp;
@@ -147,6 +157,32 @@ pub fn run_serial<O: AssocOp>(
     }
 }
 
+/// [`run_serial`] writing into a caller-provided buffer of length
+/// [`out_len`]`(xs.len(), w)` — the per-chunk body of the parallel
+/// dispatch. The chunk-parallel-safe algorithms write in place; the
+/// register-carry family (vector-input, ping-pong) keeps its
+/// `Vec`-returning form and is copied once (it is excluded from chunk
+/// dispatch anyway).
+pub fn run_serial_into<O: AssocOp>(
+    algo: Algo,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
+    match algo {
+        Algo::Naive => sliding_naive_into(op, xs, w, out),
+        Algo::ScalarInput => sliding_scalar_input_into(op, xs, w, p, out),
+        Algo::VectorInput => out.copy_from_slice(&sliding_vector_input(op, xs, w, p)),
+        Algo::VectorInputLog => out.copy_from_slice(&sliding_vector_input_log(op, xs, w, p)),
+        Algo::PingPong => out.copy_from_slice(&sliding_ping_pong(op, xs, w, p)),
+        Algo::VectorSlide => sliding_vector_slide_into(op, xs, w, p, out),
+        Algo::VectorSlideTree => sliding_vector_slide_tree_into(op, xs, w, p, out),
+        Algo::FlatTree => sliding_flat_tree_into(op, xs, w, out),
+    }
+}
+
 /// Run a specific algorithm, fanning large inputs out over the shared
 /// worker pool when the algorithm is chunk-parallel safe.
 pub fn run<O: AssocOp>(algo: Algo, op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
@@ -162,10 +198,43 @@ pub fn run_with<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    run_with_into(ex, algo, op, xs, w, p, &mut out);
+    out
+}
+
+/// [`run`] writing into a caller-provided buffer (global pool).
+pub fn run_into<O: AssocOp>(
+    algo: Algo,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
+    run_with_into(Executor::global(), algo, op, xs, w, p, out)
+}
+
+/// The core dispatch: explicit executor and caller-provided destination.
+/// Chunk-parallel-safe algorithms hand each worker a disjoint `&mut`
+/// sub-slice of `out` to write directly (no intermediate buffers); the
+/// rest run serially in place.
+pub fn run_with_into<O: AssocOp>(
+    ex: &Executor,
+    algo: Algo,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
+    assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
     if algo.chunk_parallel_safe() {
-        chunked_halo(ex, op, xs, w, move |sub| run_serial(algo, op, sub, w, p))
+        chunked_halo_into(ex, xs, w, out, move |sub, dst| {
+            run_serial_into(algo, op, sub, w, p, dst)
+        });
     } else {
-        run_serial(algo, op, xs, w, p)
+        run_serial_into(algo, op, xs, w, p, out);
     }
 }
 
@@ -188,6 +257,21 @@ pub fn auto_serial<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, _p: usize) -> Ve
     }
 }
 
+/// [`auto_serial`] writing into a caller-provided buffer.
+pub fn auto_serial_into<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    _p: usize,
+    out: &mut [O::Elem],
+) {
+    match w {
+        1 => out.copy_from_slice(&xs[..out.len()]),
+        2 => sliding_w2_into(op, xs, out),
+        _ => sliding_flat_tree_into(op, xs, w, out),
+    }
+}
+
 /// [`auto_serial`] with chunk+halo dispatch over the shared worker pool
 /// (all of its paths are chunk-parallel safe). Bit-identical to the
 /// serial sweep for every thread count.
@@ -203,35 +287,61 @@ pub fn auto_with<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
-    chunked_halo(ex, op, xs, w, move |sub| auto_serial(op, sub, w, p))
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    auto_with_into(ex, op, xs, w, p, &mut out);
+    out
+}
+
+/// [`auto`] writing into a caller-provided buffer (global pool).
+pub fn auto_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize, out: &mut [O::Elem]) {
+    auto_with_into(Executor::global(), op, xs, w, p, out)
+}
+
+/// The zero-allocation dispatcher core: explicit executor and
+/// caller-provided destination. Workers write disjoint `&mut` sub-slices
+/// of `out` directly.
+pub fn auto_with_into<O: AssocOp>(
+    ex: &Executor,
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
+    assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
+    chunked_halo_into(ex, xs, w, out, move |sub, dst| {
+        auto_serial_into(op, sub, w, p, dst)
+    });
 }
 
 /// Minimum output elements per parallel chunk — below 2× this the
 /// dispatch overhead beats the win and the sweep stays serial.
 const PAR_MIN_CHUNK: usize = 32 * 1024;
 
-/// Chunk+halo evaluation: split the output range into per-thread chunks;
-/// each chunk re-runs `serial` on its input slice extended by `w − 1`
-/// halo elements, so chunk `c`'s windows see exactly the same elements
-/// as in the monolithic sweep.
-fn chunked_halo<O, F>(ex: &Executor, op: O, xs: &[O::Elem], w: usize, serial: F) -> Vec<O::Elem>
+/// Chunk+halo evaluation into a caller-provided destination: split the
+/// output range into per-thread chunks; each chunk re-runs `serial_into`
+/// on its input slice extended by `w − 1` halo elements, writing its
+/// disjoint `&mut` sub-slice of `out` directly. Chunk `c`'s windows see
+/// exactly the same elements as in the monolithic sweep, and — unlike
+/// the old `Vec`-returning formulation — there is no identity-fill pass
+/// and no per-chunk `Vec` → dst copy.
+fn chunked_halo_into<E, F>(ex: &Executor, xs: &[E], w: usize, out: &mut [E], serial_into: F)
 where
-    O: AssocOp,
-    F: Fn(&[O::Elem]) -> Vec<O::Elem> + Sync,
+    E: Send,
+    F: Fn(&[E], &mut [E]) + Sync,
 {
-    let m = out_len(xs.len(), w);
+    let m = out.len();
+    debug_assert_eq!(m, out_len(xs.len(), w));
     if ex.threads() <= 1 || m < 2 * PAR_MIN_CHUNK {
-        return serial(xs);
+        serial_into(xs, out);
+        return;
     }
     let chunks = ex.threads().min(m.div_ceil(PAR_MIN_CHUNK));
     let chunk_len = m.div_ceil(chunks);
-    let mut out = vec![op.identity(); m];
-    ex.parallel_chunks_mut(&mut out, chunk_len, |ci, dst| {
+    ex.parallel_chunks_mut(out, chunk_len, |ci, dst| {
         let start = ci * chunk_len;
-        let res = serial(&xs[start..start + dst.len() + w - 1]);
-        dst.copy_from_slice(&res);
+        serial_into(&xs[start..start + dst.len() + w - 1], dst);
     });
-    out
 }
 
 #[cfg(test)]

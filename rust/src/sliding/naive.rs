@@ -21,6 +21,19 @@ pub fn sliding_naive<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem
     out
 }
 
+/// [`sliding_naive`] writing into a caller-provided buffer of length
+/// [`out_len`]`(xs.len(), w)`. Every element is overwritten.
+pub fn sliding_naive_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: &mut [O::Elem]) {
+    assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = op.identity();
+        for &x in &xs[i..i + w] {
+            acc = op.combine(acc, x);
+        }
+        *o = acc;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -29,13 +29,28 @@ pub fn sliding_scalar_input<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    sliding_scalar_input_into(op, xs, w, p, &mut out);
+    out
+}
+
+/// [`sliding_scalar_input`] writing into a caller-provided buffer of
+/// length [`out_len`]`(xs.len(), w)`. Every element is overwritten.
+pub fn sliding_scalar_input_into<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
     if w > p || w > MAX_LANES {
-        return sliding_scalar_input_unbounded(op, xs, w);
+        sliding_scalar_input_unbounded_into(op, xs, w, out);
+        return;
     }
     let m = out_len(xs.len(), w);
-    let mut out = Vec::with_capacity(m);
+    assert_eq!(out.len(), m, "dst length");
     if m == 0 {
-        return out;
+        return;
     }
     let id = op.identity();
 
@@ -53,10 +68,9 @@ pub fn sliding_scalar_input<O: AssocOp>(
     for i in (w - 1)..xs.len() {
         let x = VecReg::broadcast_prefix(p, xs[i], w, id);
         y.combine_assign(op, &x);
-        out.push(y.get(0));
+        out[i + 1 - w] = y.get(0);
         y.shift_left(1, id);
     }
-    out
 }
 
 /// Algorithm 1's recurrence on an unbounded working set (window larger
@@ -68,33 +82,44 @@ pub fn sliding_scalar_input_unbounded<O: AssocOp>(
     xs: &[O::Elem],
     w: usize,
 ) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    sliding_scalar_input_unbounded_into(op, xs, w, &mut out);
+    out
+}
+
+/// [`sliding_scalar_input_unbounded`] into a caller-provided buffer.
+pub fn sliding_scalar_input_unbounded_into<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    out: &mut [O::Elem],
+) {
     let m = out_len(xs.len(), w);
-    let mut out = Vec::with_capacity(m);
+    assert_eq!(out.len(), m, "dst length");
     if m == 0 {
-        return out;
+        return;
+    }
+    if w == 1 {
+        out.copy_from_slice(xs);
+        return;
     }
     // Ring buffer of w-1 suffix accumulators; logical lane l of the paper's
     // register lives at ring[(head + l) % (w-1)] — the ≪1 becomes a head
     // bump instead of a data move.
-    if w == 1 {
-        out.extend_from_slice(xs);
-        return out;
-    }
     let cap = w - 1;
     let mut ring = vec![op.identity(); cap];
-    for l in 0..cap {
+    for (l, slot) in ring.iter_mut().enumerate() {
         let mut acc = op.identity();
         for &x in &xs[l..w - 1] {
             acc = op.combine(acc, x);
         }
-        ring[l] = acc;
+        *slot = acc;
     }
     let mut head = 0usize;
     for i in (w - 1)..xs.len() {
         let xi = xs[i];
         // Y ⊕ broadcast(x_i) over the live lanes, emit lane 0, shift.
-        let front = op.combine(ring[head], xi);
-        out.push(front);
+        out[i + 1 - w] = op.combine(ring[head], xi);
         // The vacated slot becomes the youngest suffix lane: its
         // accumulation starts with x_i itself (the broadcast in Alg 1
         // touches the identity lane w-1 too, seeding the next window).
@@ -105,7 +130,6 @@ pub fn sliding_scalar_input_unbounded<O: AssocOp>(
         }
         head = (head + 1) % cap;
     }
-    out
 }
 
 #[cfg(test)]

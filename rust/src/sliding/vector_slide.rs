@@ -24,18 +24,32 @@
 use crate::ops::AssocOp;
 use crate::simd::{VecReg, MAX_LANES};
 
-use super::{out_len, sliding_scalar_input};
+use super::{out_len, sliding_scalar_input_into};
 
 /// Algorithm 4, linear inner loop: `O(N·w/P)`, any monoid.
 pub fn sliding_vector_slide<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    sliding_vector_slide_into(op, xs, w, p, &mut out);
+    out
+}
+
+/// [`sliding_vector_slide`] writing into a caller-provided buffer of
+/// length [`out_len`]`(xs.len(), w)`. Every element is overwritten.
+pub fn sliding_vector_slide_into<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
     if w > p || w > MAX_LANES || w <= 1 {
-        return sliding_scalar_input(op, xs, w, p);
+        return sliding_scalar_input_into(op, xs, w, p, out);
     }
     let n = xs.len();
     let m = out_len(n, w);
-    let mut out = vec![op.identity(); m];
+    assert_eq!(out.len(), m, "dst length");
     if m == 0 {
-        return out;
+        return;
     }
     let id = op.identity();
 
@@ -70,7 +84,6 @@ pub fn sliding_vector_slide<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usiz
         }
     }
     debug_assert_eq!(emitted, m);
-    out
 }
 
 /// Algorithm 4 with a log-depth doubling ladder: `O(N·log w/P)`,
@@ -88,8 +101,22 @@ pub fn sliding_vector_slide_tree<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    let mut out = vec![op.identity(); out_len(xs.len(), w)];
+    sliding_vector_slide_tree_into(op, xs, w, p, &mut out);
+    out
+}
+
+/// [`sliding_vector_slide_tree`] writing into a caller-provided buffer
+/// of length [`out_len`]`(xs.len(), w)`. Every element is overwritten.
+pub fn sliding_vector_slide_tree_into<O: AssocOp>(
+    op: O,
+    xs: &[O::Elem],
+    w: usize,
+    p: usize,
+    out: &mut [O::Elem],
+) {
     if w > p || w > MAX_LANES || w <= 1 {
-        return sliding_scalar_input(op, xs, w, p);
+        return sliding_scalar_input_into(op, xs, w, p, out);
     }
     // Required ladder sizes: the binary decomposition of w, folded from
     // the most significant chunk (earliest stream positions) down.
@@ -98,9 +125,9 @@ pub fn sliding_vector_slide_tree<O: AssocOp>(
     // sub-windows for the remainder chain.
     let n = xs.len();
     let m = out_len(n, w);
-    let mut out = vec![op.identity(); m];
+    assert_eq!(out.len(), m, "dst length");
     if m == 0 {
-        return out;
+        return;
     }
     let id = op.identity();
 
@@ -205,7 +232,6 @@ pub fn sliding_vector_slide_tree<O: AssocOp>(
         }
     }
     debug_assert_eq!(emitted, m);
-    out
 }
 
 #[cfg(test)]

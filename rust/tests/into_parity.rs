@@ -1,0 +1,258 @@
+//! Contracts of the write-into-destination (`_into`) kernel APIs:
+//!
+//! 1. `_into` variants are **bit-identical** to their `Vec`-returning
+//!    wrappers even when the destination starts out full of garbage —
+//!    i.e. every kernel overwrites every output element (the invariant
+//!    that makes buffer recycling in the serving path sound).
+//! 2. `chunked_halo` edge cases: `w = 1`, `w` larger than a parallel
+//!    chunk, empty input, and input shorter than `w`, across thread
+//!    counts {1, 2, 4, 8}.
+
+use swsnn::conv::{
+    conv1d_sliding_with, conv1d_sliding_with_into, conv2d_sliding_with, conv2d_sliding_with_into,
+    Conv1dParams, Conv2dParams,
+};
+use swsnn::exec::Executor;
+use swsnn::nn::{ForwardScratch, Model};
+use swsnn::ops::{AddOp, MaxOp, MulOp};
+use swsnn::pool::{
+    pool1d_with, pool1d_with_into, pool2d_with, pool2d_with_into, Pool1dParams, Pool2dParams,
+    PoolKind,
+};
+use swsnn::sliding::{self, Algo, Boundary};
+use swsnn::workload::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Garbage fill that any correct kernel must fully overwrite.
+const DIRT: f32 = 777.75;
+
+#[test]
+fn sliding_into_matches_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x1701);
+    let xs = rng.vec_uniform(150_000, -1.0, 1.0);
+    let op = AddOp::<f32>::new();
+    for w in [1usize, 2, 3, 7, 16, 63] {
+        for algo in Algo::ALL {
+            let want = sliding::run_serial(algo, op, &xs, w, 16);
+            for t in THREADS {
+                let ex = Executor::new(t);
+                let mut out = vec![DIRT; want.len()];
+                sliding::run_with_into(&ex, algo, op, &xs, w, 16, &mut out);
+                assert_eq!(out, want, "{algo:?} w={w} threads={t}");
+            }
+        }
+        let want = sliding::auto_serial(op, &xs, w, 64);
+        for t in THREADS {
+            let ex = Executor::new(t);
+            let mut out = vec![DIRT; want.len()];
+            sliding::auto_with_into(&ex, op, &xs, w, 64, &mut out);
+            assert_eq!(out, want, "auto w={w} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn sliding_into_non_add_ops() {
+    let mut rng = Rng::new(0x1702);
+    let xs = rng.vec_uniform(80_000, -50.0, 50.0);
+    let mul_xs: Vec<f32> = xs.iter().map(|v| 1.0 + 0.0001 * v).collect();
+    for t in THREADS {
+        let ex = Executor::new(t);
+        let want = sliding::run_serial(Algo::FlatTree, MaxOp::<f32>::new(), &xs, 9, 32);
+        let mut out = vec![DIRT; want.len()];
+        sliding::run_with_into(&ex, Algo::FlatTree, MaxOp::<f32>::new(), &xs, 9, 32, &mut out);
+        assert_eq!(out, want, "max threads={t}");
+
+        let want = sliding::auto_serial(MulOp::<f32>::new(), &mul_xs, 5, 64);
+        let mut out = vec![DIRT; want.len()];
+        sliding::auto_with_into(&ex, MulOp::<f32>::new(), &mul_xs, 5, 64, &mut out);
+        assert_eq!(out, want, "mul threads={t}");
+    }
+}
+
+#[test]
+fn chunked_halo_empty_and_short_inputs() {
+    let op = AddOp::<f32>::new();
+    let empty: [f32; 0] = [];
+    let short = [1.0f32, 2.0];
+    for t in THREADS {
+        let ex = Executor::new(t);
+        assert!(sliding::run_with(&ex, Algo::FlatTree, op, &empty, 3, 16).is_empty());
+        assert!(sliding::auto_with(&ex, op, &empty, 1, 64).is_empty());
+        // Input shorter than the window → zero outputs.
+        assert!(sliding::run_with(&ex, Algo::FlatTree, op, &short, 3, 16).is_empty());
+        assert!(sliding::auto_with(&ex, op, &short, 5, 64).is_empty());
+        let mut out: Vec<f32> = Vec::new();
+        sliding::auto_with_into(&ex, op, &short, 5, 64, &mut out);
+        assert!(out.is_empty());
+    }
+}
+
+#[test]
+fn chunked_halo_w1_large_input() {
+    // w = 1 is a copy; large enough that the chunk dispatch engages
+    // (2 × 32768 outputs).
+    let mut rng = Rng::new(0x1703);
+    let xs = rng.vec_uniform(70_000, -1.0, 1.0);
+    let want = sliding::auto_serial(AddOp::<f32>::new(), &xs, 1, 64);
+    assert_eq!(want, xs);
+    for t in THREADS {
+        let ex = Executor::new(t);
+        assert_eq!(sliding::auto_with(&ex, AddOp::<f32>::new(), &xs, 1, 64), want, "threads={t}");
+    }
+}
+
+#[test]
+fn chunked_halo_window_larger_than_chunk() {
+    // m = 66_000 outputs, w = 40_000: with 4+ threads the chunk length
+    // (~22_000) is smaller than the window, so every chunk's halo
+    // extends far past the next chunk's start. Exercises both the
+    // general-associative (add) and idempotent-overlap (max) flat-tree
+    // paths under extreme halo overlap.
+    let w = 40_000usize;
+    let m = 66_000usize;
+    let mut rng = Rng::new(0x1704);
+    let xs = rng.vec_uniform(m + w - 1, -1.0, 1.0);
+    let want_add = sliding::run_serial(Algo::FlatTree, AddOp::<f32>::new(), &xs, w, 16);
+    let want_max = sliding::run_serial(Algo::FlatTree, MaxOp::<f32>::new(), &xs, w, 16);
+    assert_eq!(want_add.len(), m);
+    for t in THREADS {
+        let ex = Executor::new(t);
+        assert_eq!(
+            sliding::run_with(&ex, Algo::FlatTree, AddOp::<f32>::new(), &xs, w, 16),
+            want_add,
+            "add threads={t}"
+        );
+        assert_eq!(
+            sliding::run_with(&ex, Algo::FlatTree, MaxOp::<f32>::new(), &xs, w, 16),
+            want_max,
+            "max threads={t}"
+        );
+    }
+}
+
+#[test]
+fn conv1d_into_matches_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x1705);
+    for (p, with_bias) in [
+        (Conv1dParams::new(1, 1, 120_000, 9), false),
+        (Conv1dParams::new(2, 3, 9_000, 5).with_batch(2), true),
+        (Conv1dParams::new(1, 2, 50_000, 7).with_same_pad(), true),
+        (Conv1dParams::new(2, 2, 40_000, 5).with_stride(2).with_pad(3), false),
+    ] {
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+        let bias = with_bias.then_some(b.as_slice());
+        for t in THREADS {
+            let ex = Executor::new(t);
+            let want = conv1d_sliding_with(&ex, &x, &w, bias, &p);
+            let mut y = vec![DIRT; p.y_len()];
+            conv1d_sliding_with_into(&ex, &x, &w, bias, &p, &mut y);
+            assert_eq!(y, want, "conv1d threads={t} {p:?}");
+        }
+    }
+}
+
+#[test]
+fn conv2d_into_matches_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x1706);
+    let p = Conv2dParams::new(2, 3, 48, 40, 3, 3).with_same_pad().with_batch(2);
+    let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+    let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+    for t in THREADS {
+        let ex = Executor::new(t);
+        let want = conv2d_sliding_with(&ex, &x, &w, None, &p);
+        let mut y = vec![DIRT; p.y_len()];
+        conv2d_sliding_with_into(&ex, &x, &w, None, &p, &mut y);
+        assert_eq!(y, want, "conv2d threads={t}");
+    }
+}
+
+#[test]
+fn pool_into_matches_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x1707);
+    let x = rng.vec_uniform(2 * 3 * 5_000, -2.0, 2.0);
+    for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+        for stride in [1usize, 4] {
+            for mode in [Boundary::Valid, Boundary::SamePad] {
+                let p = Pool1dParams::new(3, 5_000, 16)
+                    .with_batch(2)
+                    .with_stride(stride)
+                    .with_boundary(mode);
+                for t in THREADS {
+                    let ex = Executor::new(t);
+                    let want = pool1d_with(&ex, kind, &x, &p);
+                    let mut y = vec![DIRT; p.y_len()];
+                    pool1d_with_into(&ex, kind, &x, &p, &mut y);
+                    assert_eq!(y, want, "pool1d {kind:?} s={stride} {mode:?} threads={t}");
+                }
+            }
+        }
+    }
+    let p2 = Pool2dParams::new(4, 48, 48, 3, 3).with_batch(2).with_strides(2, 2);
+    let x2 = rng.vec_uniform(2 * 4 * 48 * 48, -3.0, 3.0);
+    for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+        for t in THREADS {
+            let ex = Executor::new(t);
+            let want = pool2d_with(&ex, kind, &x2, &p2);
+            let mut y = vec![DIRT; p2.y_len()];
+            pool2d_with_into(&ex, kind, &x2, &p2, &mut y);
+            assert_eq!(y, want, "pool2d {kind:?} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn model_forward_into_recycles_buffers_bit_identically() {
+    let cfg = r#"
+[model]
+name = "t"
+c_in = 2
+seq_len = 96
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 5
+same_pad = true
+relu = true
+
+[layer.1]
+type = "residual"
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "dense"
+out = 3
+"#;
+    let (mc, _) = swsnn::config::load_config(cfg).unwrap();
+    let mut rng = Rng::new(0x1708);
+    let model = Model::init(&mc, &mut rng).unwrap();
+    let mut scratch = ForwardScratch::default();
+    let mut out = Vec::new();
+    // Run several different inputs through the SAME scratch: stale
+    // activations from request i must not leak into request i+1.
+    for backend in [
+        swsnn::conv::ConvBackend::Sliding,
+        swsnn::conv::ConvBackend::Im2colGemm,
+    ] {
+        for i in 0..4 {
+            let x = rng.vec_uniform(2 * 96, -1.0, 1.0);
+            let want = model.forward(&x, 1, backend).unwrap();
+            let (c, n) = model
+                .forward_into(&x, 1, backend, &mut scratch, &mut out)
+                .unwrap();
+            assert_eq!(out, want.data, "{backend:?} request {i}");
+            assert_eq!(want.shape, vec![1, c], "n={n}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! SIMD/generic parity: every `std::arch` tier the host supports must be
+//! **bit-identical** to the portable generic fallback, at the kernel
+//! level and through the full conv/pool/sliding stacks.
+//!
+//! All tier forcing lives in ONE test function: `simd::force_tier` is a
+//! process-global override, and the libtest harness runs `#[test]` fns
+//! concurrently within this binary.
+
+use swsnn::conv::{conv1d_sliding_with, Conv1dParams};
+use swsnn::exec::Executor;
+use swsnn::ops::{AddOp, MaxOp};
+use swsnn::pool::{pool1d_with, Pool1dParams, PoolKind};
+use swsnn::simd::{self, SimdTier};
+use swsnn::sliding::{self, Algo};
+use swsnn::workload::Rng;
+
+#[test]
+fn all_supported_tiers_bit_identical_to_generic() {
+    let mut rng = Rng::new(0x51D);
+    let ex1 = Executor::new(1);
+    let ex4 = Executor::new(4);
+
+    // Inputs sized to cross the 4096 conv block and the 8-lane /
+    // 4-lane vector tails.
+    let xs = rng.vec_uniform(50_007, -1.0, 1.0);
+
+    let conv_cases: Vec<Conv1dParams> = vec![
+        Conv1dParams::new(1, 1, 20_000, 3),
+        Conv1dParams::new(1, 1, 20_011, 9),
+        Conv1dParams::new(2, 2, 9_001, 7).with_same_pad(),
+        Conv1dParams::new(1, 2, 8_000, 5).with_dilation(3).with_same_pad(),
+        Conv1dParams::new(2, 1, 7_003, 4).with_stride(2).with_pad(2),
+    ];
+    let conv_inputs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = conv_cases
+        .iter()
+        .map(|p| {
+            (
+                rng.vec_uniform(p.x_len(), -1.0, 1.0),
+                rng.vec_uniform(p.w_len(), -1.0, 1.0),
+                rng.vec_uniform(p.c_out, -0.5, 0.5),
+            )
+        })
+        .collect();
+    let pool_p = Pool1dParams::new(2, 30_000, 16).with_batch(1);
+    let pool_x = rng.vec_uniform(2 * 30_000, -2.0, 2.0);
+
+    // References under the forced generic tier.
+    simd::force_tier(Some(SimdTier::Generic));
+    assert_eq!(simd::tier(), SimdTier::Generic);
+    let kernel_src = rng.vec_uniform(1_003, -3.0, 3.0);
+    let kernel_base = rng.vec_uniform(1_003, -3.0, 3.0);
+    let conv_refs: Vec<Vec<f32>> = conv_cases
+        .iter()
+        .zip(&conv_inputs)
+        .map(|(p, (x, w, b))| conv1d_sliding_with(&ex1, x, w, Some(b.as_slice()), p))
+        .collect();
+    let slide_refs: Vec<Vec<f32>> = [Algo::ScalarInput, Algo::VectorSlide, Algo::FlatTree]
+        .iter()
+        .map(|a| sliding::run_serial(*a, AddOp::<f32>::new(), &xs, 12, 16))
+        .collect();
+    let max_ref = sliding::run_serial(Algo::FlatTree, MaxOp::<f32>::new(), &xs, 9, 16);
+    let auto_ref = sliding::auto_with(&ex4, AddOp::<f32>::new(), &xs, 63, 64);
+    let pool_ref = pool1d_with(&ex1, PoolKind::Avg, &pool_x, &pool_p);
+
+    let tiers = [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon];
+    for t in tiers.into_iter().filter(|t| t.is_supported()) {
+        simd::force_tier(Some(t));
+        assert_eq!(simd::tier(), t);
+
+        // Kernel level.
+        let mut got = kernel_base.clone();
+        simd::add_assign_f32(&mut got, &kernel_src);
+        let mut want = kernel_base.clone();
+        simd::add_assign_f32_generic(&mut want, &kernel_src);
+        assert_eq!(got, want, "{t:?} add_assign");
+
+        let mut got = kernel_base.clone();
+        simd::max_assign_f32(&mut got, &kernel_src);
+        let mut want = kernel_base.clone();
+        simd::max_assign_f32_generic(&mut want, &kernel_src);
+        assert_eq!(got, want, "{t:?} max_assign");
+
+        let mut got = kernel_base.clone();
+        simd::min_assign_f32(&mut got, &kernel_src);
+        let mut want = kernel_base.clone();
+        simd::min_assign_f32_generic(&mut want, &kernel_src);
+        assert_eq!(got, want, "{t:?} min_assign");
+
+        let mut got = kernel_base.clone();
+        simd::fma_tap1_f32(&mut got, &kernel_src, 0.73);
+        let mut want = kernel_base.clone();
+        simd::fma_tap1_f32_generic(&mut want, &kernel_src, 0.73);
+        assert_eq!(got, want, "{t:?} fma_tap1");
+
+        let taps = [0.25f32, -1.5, 0.5, 2.0];
+        let nn = kernel_base.len() - 3;
+        let mut got = kernel_base[..nn].to_vec();
+        simd::fma_tap4_f32(&mut got, &kernel_src, taps);
+        let mut want = kernel_base[..nn].to_vec();
+        simd::fma_tap4_f32_generic(&mut want, &kernel_src, taps);
+        assert_eq!(got, want, "{t:?} fma_tap4");
+
+        // Full conv stack, serial and parallel.
+        for ((p, (x, w, b)), want) in conv_cases.iter().zip(&conv_inputs).zip(&conv_refs) {
+            let got1 = conv1d_sliding_with(&ex1, x, w, Some(b.as_slice()), p);
+            assert_eq!(&got1, want, "{t:?} conv serial {p:?}");
+            let got4 = conv1d_sliding_with(&ex4, x, w, Some(b.as_slice()), p);
+            assert_eq!(&got4, want, "{t:?} conv parallel {p:?}");
+        }
+
+        // Sliding algorithms through the VecReg / flat-tree paths.
+        for (a, want) in [Algo::ScalarInput, Algo::VectorSlide, Algo::FlatTree]
+            .iter()
+            .zip(&slide_refs)
+        {
+            let got = sliding::run_serial(*a, AddOp::<f32>::new(), &xs, 12, 16);
+            assert_eq!(&got, want, "{t:?} {a:?}");
+        }
+        assert_eq!(
+            sliding::run_serial(Algo::FlatTree, MaxOp::<f32>::new(), &xs, 9, 16),
+            max_ref,
+            "{t:?} flat_tree max"
+        );
+        assert_eq!(
+            sliding::auto_with(&ex4, AddOp::<f32>::new(), &xs, 63, 64),
+            auto_ref,
+            "{t:?} auto parallel"
+        );
+        assert_eq!(
+            pool1d_with(&ex1, PoolKind::Avg, &pool_x, &pool_p),
+            pool_ref,
+            "{t:?} pool1d avg"
+        );
+    }
+
+    // Restore auto-detection for any later code in this process.
+    simd::force_tier(None);
+    assert!(simd::tier().is_supported());
+}
+
+#[test]
+fn tier_surface_is_sane() {
+    // No force_tier here: the override is process-global and the big
+    // parity test owns it for this binary.
+    assert!(SimdTier::Generic.is_supported());
+    assert!(!SimdTier::Generic.has_fused_fma());
+    // Cross-architecture tiers are mutually exclusive.
+    assert!(!(SimdTier::Sse2.is_supported() && SimdTier::Neon.is_supported()));
+}
