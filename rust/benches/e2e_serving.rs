@@ -5,9 +5,9 @@
 use std::sync::Arc;
 use swsnn::bench::Table;
 use swsnn::config::{load_config, ServeConfig};
-use swsnn::conv::ConvBackend;
-use swsnn::coordinator::{Coordinator, NativeEngine, PjrtTcnEngine};
-use swsnn::nn::Model;
+use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::coordinator::{Coordinator, Engine, NativeEngine, PjrtTcnEngine};
+use swsnn::nn::{Model, Plan, PlannerConfig};
 use swsnn::workload::Rng;
 
 fn drive(coord: Arc<Coordinator>, clients: usize, per_client: usize, row: usize) -> (f64, swsnn::coordinator::CoordinatorStats) {
@@ -77,5 +77,46 @@ fn main() -> anyhow::Result<()> {
         eprintln!("(artifacts/ missing — skipping PJRT engine row)");
     }
     table.emit("e2e_serving.csv");
+
+    // ── Eager vs planned execution ────────────────────────────────────
+    // Same model, same kernels available; the delta is the plan refactor
+    // (compile-once shapes, single arena, fused epilogues, per-layer
+    // kernel choice under `auto`). The per-layer choices are printed so
+    // the planner's cost model stays auditable across PRs.
+    let mut duel = Table::new(
+        "Eager vs planned execution (8 clients through the batcher)",
+        &["engine", "plan (per-layer kernels)", "req/s", "e2e p50 µs", "e2e p99 µs"],
+    );
+    for (choice, eager) in [
+        (BackendChoice::Fixed(ConvBackend::Sliding), true),
+        (BackendChoice::Fixed(ConvBackend::Sliding), false),
+        (BackendChoice::Auto, false),
+    ] {
+        let mut rng = Rng::new(1);
+        let model = Model::init(&mc, &mut rng)?;
+        let row = model.c_in * model.seq_len;
+        let plan_desc = if eager {
+            "(eager: per-layer passes, ping-pong buffers)".to_string()
+        } else {
+            Plan::compile(&model, serve.max_batch, &PlannerConfig { backend: choice })?.describe()
+        };
+        let engine = if eager {
+            let BackendChoice::Fixed(b) = choice else { unreachable!() };
+            NativeEngine::eager(model, b, serve.max_batch)
+        } else {
+            NativeEngine::with_choice(model, choice, serve.max_batch)
+        };
+        let label = engine.name();
+        let coord = Arc::new(Coordinator::start_native(engine, &serve)?);
+        let (rps, stats) = drive(coord, 8, per_client, row);
+        duel.row(vec![
+            label,
+            plan_desc,
+            format!("{rps:.1}"),
+            format!("{:.0}", stats.e2e_p50_us),
+            format!("{:.0}", stats.e2e_p99_us),
+        ]);
+    }
+    duel.emit("eager_vs_planned.csv");
     Ok(())
 }

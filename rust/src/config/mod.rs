@@ -11,7 +11,7 @@ mod types;
 pub use parse::{parse, ParseError};
 pub use types::{ConfigDoc, Value};
 
-use crate::conv::ConvBackend;
+use crate::conv::{BackendChoice, ConvBackend};
 
 /// Model configuration — a sequential 1-D network definition.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,6 +34,11 @@ pub enum LayerConfig {
         dilation: usize,
         same_pad: bool,
         relu: bool,
+        /// Per-layer kernel override for the execution planner
+        /// (`backend = "sliding" | "im2col_gemm" | "direct" |
+        /// "sliding_pair"`; omit or `"auto"` to let the cost model
+        /// choose). Beats the deployment-level backend either way.
+        backend: Option<ConvBackend>,
     },
     Pool {
         kind: String,
@@ -44,6 +49,8 @@ pub enum LayerConfig {
         /// Dilations of the two conv taps inside the TCN block.
         k: usize,
         dilation: usize,
+        /// Per-layer kernel override for both convs of the block.
+        backend: Option<ConvBackend>,
     },
     Dense {
         out: usize,
@@ -62,7 +69,11 @@ pub struct ServeConfig {
     /// sliding kernels fan out on. `0` = auto (all cores). Applied to
     /// the process-global [`crate::exec::Executor`] at serve startup.
     pub threads: usize,
-    pub backend: ConvBackend,
+    /// Backend selection for the native engine: `"auto"` (default) lets
+    /// the execution planner pick a kernel per layer; a concrete
+    /// backend name forces it on every layer without a per-layer
+    /// `backend =` override.
+    pub backend: BackendChoice,
     pub queue_capacity: usize,
 }
 
@@ -73,7 +84,7 @@ impl Default for ServeConfig {
             batch_deadline_us: 500,
             workers: 1,
             threads: 0,
-            backend: ConvBackend::Sliding,
+            backend: BackendChoice::Auto,
             queue_capacity: 1024,
         }
     }
@@ -100,6 +111,15 @@ fn model_from_doc(doc: &ConfigDoc) -> Result<ModelConfig, String> {
         let Some(ty) = doc.get_str(&format!("{prefix}.type")) else {
             break;
         };
+        // Per-layer planner override: absent or "auto" → cost model.
+        let layer_backend = || -> Result<Option<ConvBackend>, String> {
+            match doc.get_str(&format!("{prefix}.backend")) {
+                None | Some("auto") => Ok(None),
+                Some(s) => ConvBackend::parse(s)
+                    .map(Some)
+                    .ok_or_else(|| format!("{prefix}.backend: unknown backend {s:?}")),
+            }
+        };
         let layer = match ty {
             "conv" => LayerConfig::Conv {
                 c_out: doc
@@ -112,6 +132,7 @@ fn model_from_doc(doc: &ConfigDoc) -> Result<ModelConfig, String> {
                 dilation: doc.get_int(&format!("{prefix}.dilation")).unwrap_or(1) as usize,
                 same_pad: doc.get_bool(&format!("{prefix}.same_pad")).unwrap_or(true),
                 relu: doc.get_bool(&format!("{prefix}.relu")).unwrap_or(true),
+                backend: layer_backend()?,
             },
             "pool" => LayerConfig::Pool {
                 kind: doc
@@ -124,6 +145,7 @@ fn model_from_doc(doc: &ConfigDoc) -> Result<ModelConfig, String> {
             "residual" => LayerConfig::Residual {
                 k: doc.get_int(&format!("{prefix}.k")).unwrap_or(3) as usize,
                 dilation: doc.get_int(&format!("{prefix}.dilation")).unwrap_or(1) as usize,
+                backend: layer_backend()?,
             },
             "dense" => LayerConfig::Dense {
                 out: doc
@@ -150,7 +172,7 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
     let d = ServeConfig::default();
     let backend = match doc.get_str("serve.backend") {
         None => d.backend,
-        Some(s) => ConvBackend::parse(s).ok_or_else(|| format!("unknown backend {s:?}"))?,
+        Some(s) => BackendChoice::parse(s).ok_or_else(|| format!("unknown backend {s:?}"))?,
     };
     // Counts must not wrap through `as usize` (a negative TOML value
     // would become ~2^64 and e.g. spawn threads until the process dies).
@@ -213,9 +235,38 @@ backend = "sliding"
         assert!(matches!(m.layers[0], LayerConfig::Conv { c_out: 8, k: 7, .. }));
         assert!(matches!(m.layers[1], LayerConfig::Residual { dilation: 2, .. }));
         assert_eq!(s.max_batch, 16);
-        assert_eq!(s.backend, ConvBackend::Sliding);
+        assert_eq!(s.backend, BackendChoice::Fixed(ConvBackend::Sliding));
         assert_eq!(s.workers, 1); // default
         assert_eq!(s.threads, 0); // default = auto
+    }
+
+    #[test]
+    fn serve_backend_auto_and_default() {
+        let auto = EXAMPLE.replace("\"sliding\"", "\"auto\"");
+        let (_, s) = load_config(&auto).unwrap();
+        assert_eq!(s.backend, BackendChoice::Auto);
+        // Key absent → planner default.
+        let absent = EXAMPLE.replace("backend = \"sliding\"", "");
+        let (_, s) = load_config(&absent).unwrap();
+        assert_eq!(s.backend, BackendChoice::Auto);
+    }
+
+    #[test]
+    fn per_layer_backend_overrides() {
+        let text = EXAMPLE.replace(
+            "type = \"conv\"\nc_out = 8\nk = 7\n",
+            "type = \"conv\"\nc_out = 8\nk = 7\nbackend = \"im2col_gemm\"\n",
+        );
+        let (m, _) = load_config(&text).unwrap();
+        assert!(matches!(
+            m.layers[0],
+            LayerConfig::Conv { backend: Some(ConvBackend::Im2colGemm), .. }
+        ));
+        // Residual default: no override.
+        assert!(matches!(m.layers[1], LayerConfig::Residual { backend: None, .. }));
+        // Unknown per-layer backend is an error.
+        let bad = text.replace("\"im2col_gemm\"", "\"magic\"");
+        assert!(load_config(&bad).unwrap_err().contains("magic"));
     }
 
     #[test]

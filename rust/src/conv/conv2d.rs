@@ -15,6 +15,7 @@
 //! output `[b, c_out, h_out, w_out]`, row-major.
 
 use crate::gemm;
+use crate::ops::Epilogue;
 
 /// 2-D convolution parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -170,21 +171,23 @@ pub fn conv2d_sliding_with(
     p: &Conv2dParams,
 ) -> Vec<f32> {
     let mut y = vec![0.0f32; p.y_len()];
-    conv2d_sliding_with_into(ex, x, w, bias, p, &mut y);
+    conv2d_sliding_with_into(ex, x, w, bias, p, Epilogue::None, &mut y);
     y
 }
 
 /// [`conv2d_sliding`] writing into a caller-provided buffer of length
 /// [`Conv2dParams::y_len`]. Every output element is overwritten, so the
-/// buffer may hold stale data from a previous request.
+/// buffer may hold stale data from a previous request. The [`Epilogue`]
+/// is fused into each plane-row group's final write.
 pub fn conv2d_sliding_into(
     x: &[f32],
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv2dParams,
+    epi: Epilogue<'_>,
     y: &mut [f32],
 ) {
-    conv2d_sliding_with_into(crate::exec::Executor::global(), x, w, bias, p, y)
+    conv2d_sliding_with_into(crate::exec::Executor::global(), x, w, bias, p, epi, y)
 }
 
 /// The core kernel: explicit executor and caller-provided destination;
@@ -195,10 +198,12 @@ pub fn conv2d_sliding_with_into(
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv2dParams,
+    epi: Epilogue<'_>,
     y: &mut [f32],
 ) {
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
+    epi.check_len(y.len());
     let (h_out, w_out) = (p.h_out(), p.w_out());
     if h_out == 0 || w_out == 0 {
         return;
@@ -209,7 +214,7 @@ pub fn conv2d_sliding_with_into(
     // run the per-plane body directly on the caller.
     if ex.threads() <= 1 || planes * plane_len < crate::exec::PAR_MIN_FANOUT {
         for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
-            conv2d_plane_rows(yplane, plane_idx, 0, x, w, bias, p);
+            conv2d_plane_rows(yplane, plane_idx, 0, x, w, bias, p, epi);
         }
         return;
     }
@@ -221,7 +226,7 @@ pub fn conv2d_sliding_with_into(
         for (gi, yrows) in yplane.chunks_mut(group_rows * w_out).enumerate() {
             let oy0 = gi * group_rows;
             jobs.push(Box::new(move || {
-                conv2d_plane_rows(yrows, plane_idx, oy0, x, w, bias, p);
+                conv2d_plane_rows(yrows, plane_idx, oy0, x, w, bias, p, epi);
             }));
         }
     }
@@ -229,7 +234,10 @@ pub fn conv2d_sliding_with_into(
 }
 
 /// Compute output rows `[oy0, oy0 + yrows.len()/w_out)` of one
-/// `(b, c_out)` plane — the per-task body of the fan-out above.
+/// `(b, c_out)` plane — the per-task body of the fan-out above. The
+/// epilogue runs after the group's accumulation, offset by the group's
+/// flat position in the full output.
+#[allow(clippy::too_many_arguments)]
 fn conv2d_plane_rows(
     yrows: &mut [f32],
     plane_idx: usize,
@@ -238,6 +246,7 @@ fn conv2d_plane_rows(
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv2dParams,
+    epi: Epilogue<'_>,
 ) {
     let w_out = p.w_out();
     let b = plane_idx / p.c_out;
@@ -265,6 +274,7 @@ fn conv2d_plane_rows(
             }
         }
     }
+    epi.apply(yrows, plane_idx * p.h_out() * w_out + oy0 * w_out);
 }
 
 /// One slid FMA pass: `yrow[t] += wk · xrow[t·stride + fx − pad]`, range

@@ -5,9 +5,25 @@ use super::Conv1dParams;
 
 /// Direct `O(B·Cout·Nout·Cin·k)` convolution (cross-correlation).
 pub fn conv1d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
-    p.validate(x, w, bias);
-    let n_out = p.n_out();
     let mut y = vec![0.0f32; p.y_len()];
+    conv1d_direct_into(x, w, bias, p, &mut y);
+    y
+}
+
+/// [`conv1d_direct`] into a caller-provided buffer of length
+/// [`Conv1dParams::y_len`]. Every element is overwritten (the buffer may
+/// be recycled dirty); accumulation order is identical to the allocating
+/// wrapper, so the two are bit-identical.
+pub fn conv1d_direct_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    y: &mut [f32],
+) {
+    p.validate(x, w, bias);
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let n_out = p.n_out();
     for b in 0..p.batch {
         for co in 0..p.c_out {
             let bias_v = bias.map_or(0.0, |bv| bv[co]);
@@ -29,7 +45,6 @@ pub fn conv1d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParam
             }
         }
     }
-    y
 }
 
 #[cfg(test)]

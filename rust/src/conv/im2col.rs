@@ -8,6 +8,7 @@
 //! Fig 1/Fig 2 speedups are measured *against* it.
 
 use crate::gemm;
+use crate::ops::Epilogue;
 
 use super::Conv1dParams;
 
@@ -15,9 +16,19 @@ use super::Conv1dParams;
 /// column matrix: column `t` stacks the k taps of every input channel at
 /// output position `t`. Memory: `c_in·k·n_out` floats — the k× blow-up.
 pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
+    let mut cols = vec![0.0f32; p.c_in * p.k * p.n_out()];
+    im2col_expand_into(x, p, &mut cols);
+    cols
+}
+
+/// [`im2col_expand`] into a caller-provided column buffer of length
+/// `c_in·k·n_out`. Every element is written (pad positions get `0.0`),
+/// so the buffer may be recycled dirty across calls — this is what lets
+/// the execution plan keep one column region in its arena instead of
+/// re-allocating the k×-expanded matrix per request.
+pub fn im2col_expand_into(x: &[f32], p: &Conv1dParams, cols: &mut [f32]) {
     let n_out = p.n_out();
-    let rows = p.c_in * p.k;
-    let mut cols = vec![0.0f32; rows * n_out];
+    assert_eq!(cols.len(), p.c_in * p.k * n_out, "column buffer shape");
     for ci in 0..p.c_in {
         let xrow = &x[ci * p.n..][..p.n];
         for tap in 0..p.k {
@@ -33,7 +44,6 @@ pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
             }
         }
     }
-    cols
 }
 
 /// Convolution via im2col + blocked GEMM:
@@ -53,20 +63,61 @@ pub fn conv1d_im2col_with(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Vec<f32> {
-    p.validate(x, w, bias);
-    let n_out = p.n_out();
-    let rows = p.c_in * p.k;
+    let mut col = vec![0.0f32; p.c_in * p.k * p.n_out()];
     let mut y = vec![0.0f32; p.y_len()];
+    conv1d_im2col_epilogue_into(ex, x, w, bias, p, Epilogue::None, &mut col, &mut y);
+    y
+}
+
+/// The zero-allocation im2col path: expand into a caller-provided column
+/// buffer (`c_in·k·n_out` floats, reused across batch elements and
+/// calls), GEMM into a caller-provided destination, and fuse the bias +
+/// [`Epilogue`] tail into the GEMM's C sweep. This is what the execution
+/// plan runs for layers whose cost model picks the GEMM backend —
+/// backend choice no longer reintroduces per-call allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_im2col_epilogue_into(
+    ex: &crate::exec::Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+    col: &mut [f32],
+    y: &mut [f32],
+) {
+    p.validate(x, w, bias);
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    epi.check_len(y.len());
+    let n_out = p.n_out();
+    if n_out == 0 {
+        return;
+    }
+    let rows = p.c_in * p.k;
+    // The plan hands in one shared column region sized for its largest
+    // im2col layer; use this layer's prefix.
+    assert!(col.len() >= rows * n_out, "column scratch too small");
+    let col = &mut col[..rows * n_out];
     for b in 0..p.batch {
         let xb = &x[b * p.c_in * p.n..][..p.c_in * p.n];
-        let cols = im2col_expand(xb, p);
+        im2col_expand_into(xb, p, col);
         let yb = &mut y[b * p.c_out * n_out..][..p.c_out * n_out];
-        match bias {
-            Some(bv) => gemm::gemm_bias_with(ex, p.c_out, rows, n_out, w, &cols, bv, yb),
-            None => gemm::gemm_with(ex, p.c_out, rows, n_out, w, &cols, yb),
-        }
+        // The GEMM accumulates into C, so a recycled destination must be
+        // cleared first (allocating callers used to get this for free).
+        yb.fill(0.0);
+        gemm::gemm_bias_epilogue_with(
+            ex,
+            p.c_out,
+            rows,
+            n_out,
+            w,
+            col,
+            bias,
+            epi,
+            b * p.c_out * n_out,
+            yb,
+        );
     }
-    y
 }
 
 #[cfg(test)]

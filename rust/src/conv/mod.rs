@@ -32,16 +32,19 @@ pub use conv2d::{
     conv2d_direct, conv2d_im2col, conv2d_sliding, conv2d_sliding_into, conv2d_sliding_with,
     conv2d_sliding_with_into, Conv2dParams,
 };
-pub use direct::conv1d_direct;
-pub use im2col::{conv1d_im2col, conv1d_im2col_with, im2col_expand};
+pub use direct::{conv1d_direct, conv1d_direct_into};
+pub use im2col::{
+    conv1d_im2col, conv1d_im2col_epilogue_into, conv1d_im2col_with, im2col_expand,
+    im2col_expand_into,
+};
 pub use matmul_reform::conv1d_tap_gemm;
-pub use params::{Conv1dParams, ConvBackend};
+pub use params::{BackendChoice, Conv1dParams, ConvBackend};
 pub use quantized::{conv1d_quantized, QuantParams};
 pub use sliding::{
     conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_into, conv1d_sliding_with,
     conv1d_sliding_with_into,
 };
-pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k};
+pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k, conv1d_small_k_into, small_k_qualifies};
 
 /// Dispatch a 1-D convolution to the selected backend.
 ///
@@ -64,23 +67,45 @@ pub fn conv1d(
 
 /// [`conv1d`] writing into a caller-provided buffer (resized to
 /// [`Conv1dParams::y_len`]). The sliding backend writes in place with no
-/// intermediate allocation; the other backends compute into a fresh
-/// vector and move it into `y` (their allocation is the baseline being
-/// measured, not a hot path worth rewriting).
+/// intermediate allocation; im2col reuses `col` for its column matrix
+/// (resized to `c_in·k·n_out` once, recycled dirty afterwards) so
+/// choosing the GEMM backend no longer reintroduces a per-call k×
+/// allocation; direct computes straight into `y`. Only the
+/// faithful-math `SlidingPair` backend still allocates internally.
 pub fn conv1d_into(
     backend: ConvBackend,
     x: &[f32],
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
+    col: &mut Vec<f32>,
     y: &mut Vec<f32>,
 ) {
+    use crate::ops::Epilogue;
     match backend {
         ConvBackend::Sliding => {
             y.resize(p.y_len(), 0.0);
-            conv1d_sliding_into(x, w, bias, p, y);
+            conv1d_sliding_into(x, w, bias, p, Epilogue::None, y);
         }
-        other => *y = conv1d(other, x, w, bias, p),
+        ConvBackend::Im2colGemm => {
+            y.resize(p.y_len(), 0.0);
+            col.resize(p.c_in * p.k * p.n_out(), 0.0);
+            conv1d_im2col_epilogue_into(
+                crate::exec::Executor::global(),
+                x,
+                w,
+                bias,
+                p,
+                Epilogue::None,
+                col,
+                y,
+            );
+        }
+        ConvBackend::Direct => {
+            y.resize(p.y_len(), 0.0);
+            conv1d_direct_into(x, w, bias, p, y);
+        }
+        ConvBackend::SlidingPair => *y = conv1d_pair(x, w, bias, p),
     }
 }
 
@@ -100,6 +125,24 @@ mod tests {
             for (g, t) in got.iter().zip(&d) {
                 assert!((g - t).abs() < 1e-4, "{b:?}");
             }
+        }
+    }
+
+    /// `conv1d_into` must be bit-identical to the allocating dispatch for
+    /// every backend, even with dirty recycled destination/column buffers.
+    #[test]
+    fn into_dispatch_matches_alloc_with_dirty_buffers() {
+        let p = Conv1dParams::new(2, 3, 64, 5).with_batch(2).with_same_pad();
+        let mut rng = crate::workload::Rng::new(0xC0);
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+        let mut col = vec![777.75f32; 7]; // wrong size + garbage: must be fixed up
+        let mut y = vec![777.75f32; 3];
+        for backend in ConvBackend::ALL {
+            let want = conv1d(backend, &x, &w, Some(&b), &p);
+            conv1d_into(backend, &x, &w, Some(&b), &p, &mut col, &mut y);
+            assert_eq!(y, want, "{backend:?}");
         }
     }
 }

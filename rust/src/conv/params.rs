@@ -146,6 +146,38 @@ impl ConvBackend {
     }
 }
 
+/// Deployment-level backend selection: either one fixed [`ConvBackend`]
+/// for every layer (the pre-plan behaviour, and what the paper's tables
+/// measure), or `Auto` — let the execution planner pick a kernel per
+/// layer from its shape-based cost model. Per-layer `backend = "..."`
+/// keys in the model TOML override either choice for that layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendChoice {
+    /// Per-layer cost-model selection at plan-compile time.
+    #[default]
+    Auto,
+    /// Force this backend on every layer without an explicit override.
+    Fixed(ConvBackend),
+}
+
+impl BackendChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Fixed(b) => b.name(),
+        }
+    }
+
+    /// Parse `"auto"` or any [`ConvBackend::parse`] name.
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "auto" {
+            Some(BackendChoice::Auto)
+        } else {
+            ConvBackend::parse(s).map(BackendChoice::Fixed)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +223,15 @@ mod tests {
         for b in ConvBackend::ALL {
             assert_eq!(ConvBackend::parse(b.name()), Some(b));
         }
+    }
+
+    #[test]
+    fn backend_choice_parse() {
+        assert_eq!(BackendChoice::parse("auto"), Some(BackendChoice::Auto));
+        for b in ConvBackend::ALL {
+            assert_eq!(BackendChoice::parse(b.name()), Some(BackendChoice::Fixed(b)));
+        }
+        assert_eq!(BackendChoice::parse("magic"), None);
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
     }
 }

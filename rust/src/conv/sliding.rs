@@ -21,7 +21,7 @@
 //! [`ConvPair`]: crate::ops::ConvPair
 
 use crate::exec::{Executor, PAR_MIN_FANOUT};
-use crate::ops::{AssocOp, ConvPair, Pair};
+use crate::ops::{AssocOp, ConvPair, Epilogue, Pair};
 
 use super::Conv1dParams;
 
@@ -37,15 +37,19 @@ pub fn conv1d_sliding(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dPara
 
 /// [`conv1d_sliding`] writing into a caller-provided buffer of length
 /// [`Conv1dParams::y_len`] (zero allocation on the hot path). Every
-/// output element is overwritten — the buffer may hold stale data.
+/// output element is overwritten — the buffer may hold stale data. The
+/// [`Epilogue`] is fused into each output span's final write (applied
+/// per row segment right after its taps accumulate), bit-identical to
+/// running the same element-wise tail as a separate pass.
 pub fn conv1d_sliding_into(
     x: &[f32],
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
+    epi: Epilogue<'_>,
     y: &mut [f32],
 ) {
-    conv1d_sliding_with_into(Executor::global(), x, w, bias, p, y)
+    conv1d_sliding_with_into(Executor::global(), x, w, bias, p, epi, y)
 }
 
 /// Minimum output-column segment when splitting inside a row.
@@ -73,7 +77,7 @@ pub fn conv1d_sliding_with(
     p: &Conv1dParams,
 ) -> Vec<f32> {
     let mut y = vec![0.0f32; p.y_len()];
-    conv1d_sliding_with_into(ex, x, w, bias, p, &mut y);
+    conv1d_sliding_with_into(ex, x, w, bias, p, Epilogue::None, &mut y);
     y
 }
 
@@ -90,10 +94,12 @@ pub fn conv1d_sliding_with_into(
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
+    epi: Epilogue<'_>,
     y: &mut [f32],
 ) {
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
+    epi.check_len(y.len());
     let n_out = p.n_out();
     if n_out == 0 {
         return;
@@ -105,7 +111,7 @@ pub fn conv1d_sliding_with_into(
     let segs = column_segments(ex, rows, n_out);
     if ex.threads() <= 1 || (segs == 1 && (rows == 1 || rows * n_out < PAR_MIN_FANOUT)) {
         for (r, yrow) in y.chunks_mut(n_out).enumerate() {
-            compute_row_segment(yrow, 0, r, x, w, bias, p);
+            compute_row_segment(yrow, 0, r, x, w, bias, p, epi);
         }
         return;
     }
@@ -115,7 +121,7 @@ pub fn conv1d_sliding_with_into(
         for (si, yseg) in yrow.chunks_mut(seg_len).enumerate() {
             let t0 = si * seg_len;
             jobs.push(Box::new(move || {
-                compute_row_segment(yseg, t0, r, x, w, bias, p);
+                compute_row_segment(yseg, t0, r, x, w, bias, p, epi);
             }));
         }
     }
@@ -124,7 +130,9 @@ pub fn conv1d_sliding_with_into(
 
 /// Compute output columns `[t0, t0 + yseg.len())` of flat output row
 /// `row = b·c_out + co` — the per-task body of both the serial loop and
-/// the parallel fan-out.
+/// the parallel fan-out. The epilogue runs once the segment's taps have
+/// all accumulated, while the segment is still cache-resident.
+#[allow(clippy::too_many_arguments)]
 fn compute_row_segment(
     yseg: &mut [f32],
     t0: usize,
@@ -133,6 +141,7 @@ fn compute_row_segment(
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
+    epi: Epilogue<'_>,
 ) {
     let b = row / p.c_out;
     let co = row % p.c_out;
@@ -144,6 +153,7 @@ fn compute_row_segment(
         let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
         accumulate_row_segment(yseg, t0, xrow, wrow, p);
     }
+    epi.apply(yseg, row * p.n_out() + t0);
 }
 
 /// Accumulate one channel's taps into global output range
@@ -646,6 +656,41 @@ mod tests {
                 let p = Conv1dParams::new(1, 1, n, k).with_dilation(d);
                 check_backend(&p, false, false, 1e-3);
             }
+        }
+    }
+
+    /// Fused epilogues are bit-identical to the same tail run as a
+    /// separate pass, for every partitioning (thread count).
+    #[test]
+    fn fused_epilogue_matches_separate_pass() {
+        let p = Conv1dParams::new(2, 3, 9000, 5).with_batch(2).with_same_pad();
+        let mut seed = 0xE91u64;
+        let mut x = vec![0.0f32; p.x_len()];
+        let mut w = vec![0.0f32; p.w_len()];
+        let mut b = vec![0.0f32; p.c_out];
+        let mut skip = vec![0.0f32; p.y_len()];
+        fill(&mut x, &mut seed);
+        fill(&mut w, &mut seed);
+        fill(&mut b, &mut seed);
+        fill(&mut skip, &mut seed);
+        for threads in [1usize, 2, 4, 8] {
+            let ex = Executor::new(threads);
+            let mut want = conv1d_sliding_with(&ex, &x, &w, Some(&b), &p);
+            for v in want.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut got = vec![777.75f32; p.y_len()];
+            conv1d_sliding_with_into(&ex, &x, &w, Some(&b), &p, Epilogue::Relu, &mut got);
+            assert_eq!(got, want, "relu threads={threads}");
+
+            for (v, s) in want.iter_mut().zip(&skip) {
+                *v += s;
+            }
+            let mut got = vec![777.75f32; p.y_len()];
+            conv1d_sliding_with_into(&ex, &x, &w, Some(&b), &p, Epilogue::ReluAdd(&skip), &mut got);
+            assert_eq!(got, want, "relu+add threads={threads}");
         }
     }
 

@@ -12,6 +12,8 @@
 //! k-wide accumulation window in vector registers (we hand it fully
 //! unrolled bodies for k = 3 and 5).
 
+use crate::ops::Epilogue;
+
 use super::Conv1dParams;
 
 /// Fused single-pass conv for k=3, stride 1, no padding (valid mode).
@@ -45,6 +47,18 @@ pub fn conv1d_k5(x: &[f32], w: &[f32; 5], bias: f32, y: &mut [f32]) {
     }
 }
 
+/// Whether the fused small-k kernels can execute this shape: single
+/// channel, unit stride/dilation, valid mode, k ∈ {3, 5}. Any batch size
+/// qualifies — the `_into` path runs one fused pass per batch row.
+pub fn small_k_qualifies(p: &Conv1dParams) -> bool {
+    p.c_in == 1
+        && p.c_out == 1
+        && p.stride == 1
+        && p.dilation == 1
+        && p.pad == 0
+        && matches!(p.k, 3 | 5)
+}
+
 /// Dispatch wrapper: uses the fused small-k kernel when the shape
 /// qualifies (single channel, stride 1, k ∈ {3,5}), padding handled by
 /// edge patch-up with the generic path. Returns `None` if the shape
@@ -55,21 +69,48 @@ pub fn conv1d_small_k(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Option<Vec<f32>> {
-    if p.c_in != 1 || p.c_out != 1 || p.stride != 1 || p.dilation != 1 || p.batch != 1 {
+    if p.batch != 1 || !small_k_qualifies(p) {
         return None;
     }
-    if p.pad != 0 {
-        return None; // the bench exercises valid mode; same-pad falls back
+    let mut y = vec![0.0f32; p.y_len()];
+    conv1d_small_k_into(x, w, bias, p, Epilogue::None, &mut y).then_some(y)
+}
+
+/// Small-k kernel into a caller-provided buffer (any batch size; one
+/// fused pass per batch row), with the [`Epilogue`] applied to each row
+/// right after its pass. Returns `false` without touching `y` when the
+/// shape does not qualify — the planner never selects this kernel for
+/// such shapes, so a `false` here is a plan bug, not a fallback path.
+pub fn conv1d_small_k_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+    y: &mut [f32],
+) -> bool {
+    if !small_k_qualifies(p) {
+        return false;
+    }
+    p.validate(x, w, bias);
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    epi.check_len(y.len());
+    let n_out = p.n_out();
+    if n_out == 0 {
+        return true; // input shorter than the filter: empty output
     }
     let b = bias.map_or(0.0, |bv| bv[0]);
-    let n_out = p.n_out();
-    let mut y = vec![0.0f32; n_out];
-    match p.k {
-        3 => conv1d_k3(x, &[w[0], w[1], w[2]], b, &mut y),
-        5 => conv1d_k5(x, &[w[0], w[1], w[2], w[3], w[4]], b, &mut y),
-        _ => return None,
+    for bi in 0..p.batch {
+        let xr = &x[bi * p.n..][..p.n];
+        let yr = &mut y[bi * n_out..][..n_out];
+        match p.k {
+            3 => conv1d_k3(xr, &[w[0], w[1], w[2]], b, yr),
+            5 => conv1d_k5(xr, &[w[0], w[1], w[2], w[3], w[4]], b, yr),
+            _ => unreachable!("small_k_qualifies checked k"),
+        }
+        epi.apply(yr, bi * n_out);
     }
-    Some(y)
+    true
 }
 
 #[cfg(test)]

@@ -5,8 +5,8 @@ use anyhow::{bail, Context, Result};
 /// Constructor run on the coordinator's worker thread.
 pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send + 'static>;
 
-use crate::conv::ConvBackend;
-use crate::nn::{ForwardScratch, Model};
+use crate::conv::{BackendChoice, ConvBackend};
+use crate::nn::{EagerScratch, Model, Plan, PlanCache, PlanScratch, PlannerConfig};
 use crate::runtime::{ArtifactRegistry, TensorView};
 
 /// A batched inference engine with a fixed per-row input/output shape.
@@ -37,32 +37,93 @@ pub trait Engine {
     fn name(&self) -> String;
 }
 
-/// Rust-native engine: the [`Model`] layer stack on a conv backend.
-/// `Clone` replicates the model so N coordinator workers can each own an
-/// instance ([`crate::coordinator::Coordinator::start_replicated`]).
+/// Rust-native engine: the [`Model`] layer stack executed through
+/// compiled [`Plan`]s, cached per batch size — each incoming batch
+/// bucket compiles once, then every request runs through the cached
+/// plan's single scratch arena with fused epilogues and zero per-request
+/// allocation (sliding/im2col/small-k/direct kernels). `Clone`
+/// replicates the model (plans and scratch clone along, staying
+/// per-instance) so N coordinator workers can each own an instance
+/// ([`crate::coordinator::Coordinator::start_replicated`]).
 #[derive(Clone)]
 pub struct NativeEngine {
     model: Model,
-    backend: ConvBackend,
+    choice: BackendChoice,
     max_batch: usize,
-    /// Per-engine activation buffer pool (each coordinator worker owns
-    /// its engine, so the scratch recycles across that worker's
-    /// requests without synchronization).
-    scratch: ForwardScratch,
+    /// Eager mode skips the planner and runs the layer-by-layer
+    /// reference path — the baseline arm of the `eager_vs_planned`
+    /// bench (requires a fixed backend).
+    eager: bool,
+    /// Compiled plans keyed by batch size (batch buckets are
+    /// ≤ max_batch).
+    plans: PlanCache<usize>,
+    /// Per-engine plan arena (each coordinator worker owns its engine,
+    /// so the scratch recycles across that worker's requests without
+    /// synchronization).
+    scratch: PlanScratch,
+    eager_scratch: EagerScratch,
 }
 
 impl NativeEngine {
+    /// Planned engine with a fixed backend on every layer (the
+    /// pre-plan constructor, kept source-compatible).
     pub fn new(model: Model, backend: ConvBackend, max_batch: usize) -> Self {
+        Self::with_choice(model, BackendChoice::Fixed(backend), max_batch)
+    }
+
+    /// Planned engine: `Auto` lets the planner's cost model pick a
+    /// kernel per layer; `Fixed` forces one backend (per-layer TOML
+    /// overrides beat either).
+    pub fn with_choice(model: Model, choice: BackendChoice, max_batch: usize) -> Self {
         Self {
             model,
-            backend,
+            choice,
             max_batch: max_batch.max(1),
-            scratch: ForwardScratch::default(),
+            eager: false,
+            plans: PlanCache::default(),
+            scratch: PlanScratch::default(),
+            eager_scratch: EagerScratch::default(),
+        }
+    }
+
+    /// Eager reference engine (no plan compilation; separate bias/ReLU/
+    /// skip-add passes and ping-pong buffers) — the `eager_vs_planned`
+    /// baseline.
+    pub fn eager(model: Model, backend: ConvBackend, max_batch: usize) -> Self {
+        Self {
+            eager: true,
+            ..Self::new(model, backend, max_batch)
         }
     }
 
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    fn planner_cfg(&self) -> PlannerConfig {
+        PlannerConfig { backend: self.choice }
+    }
+
+    /// Number of compiled plans currently cached (one per batch size
+    /// seen).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The cached plan for `batch`, compiling (and caching) on first
+    /// use.
+    pub fn plan_for(&mut self, batch: usize) -> Result<&Plan> {
+        let model = &self.model;
+        let cfg = PlannerConfig { backend: self.choice };
+        self.plans
+            .get_or_compile(batch, || Plan::compile(model, batch, &cfg))
+    }
+
+    fn fixed_backend(&self) -> Result<ConvBackend> {
+        match self.choice {
+            BackendChoice::Fixed(b) => Ok(b),
+            BackendChoice::Auto => bail!("eager mode needs a fixed backend"),
+        }
     }
 }
 
@@ -82,17 +143,42 @@ impl Engine for NativeEngine {
     }
 
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        Ok(self.model.forward(x, batch, self.backend)?.data)
+        let mut y = Vec::new();
+        if self.eager {
+            self.model.forward_eager_into(
+                x,
+                batch,
+                self.fixed_backend()?,
+                &mut EagerScratch::default(),
+                &mut y,
+            )?;
+        } else {
+            // Shared-reference path (no cache access): compile fresh.
+            let plan = Plan::compile(&self.model, batch, &self.planner_cfg())?;
+            plan.run_into(&self.model, x, &mut PlanScratch::default(), &mut y)?;
+        }
+        Ok(y)
     }
 
     fn infer_into(&mut self, x: &[f32], batch: usize, y: &mut Vec<f32>) -> Result<()> {
-        self.model
-            .forward_into(x, batch, self.backend, &mut self.scratch, y)?;
+        if self.eager {
+            let backend = self.fixed_backend()?;
+            self.model
+                .forward_eager_into(x, batch, backend, &mut self.eager_scratch, y)?;
+            return Ok(());
+        }
+        let model = &self.model;
+        let cfg = PlannerConfig { backend: self.choice };
+        let plan = self
+            .plans
+            .get_or_compile(batch, || Plan::compile(model, batch, &cfg))?;
+        plan.run_into(model, x, &mut self.scratch, y)?;
         Ok(())
     }
 
     fn name(&self) -> String {
-        format!("native/{}", self.backend.name())
+        let mode = if self.eager { "eager" } else { "planned" };
+        format!("native/{mode}/{}", self.choice.name())
     }
 }
 

@@ -7,6 +7,7 @@
 //! bench harness can expose the blocking ablation (TBL-A in DESIGN.md).
 
 use crate::exec::{Executor, PAR_MIN_FANOUT};
+use crate::ops::Epilogue;
 
 use super::GemmShape;
 
@@ -62,14 +63,42 @@ pub fn gemm_bias_with(
     bias: &[f32],
     c: &mut [f32],
 ) {
+    gemm_bias_epilogue_with(ex, m, k, n, a, b, Some(bias), Epilogue::None, 0, c);
+}
+
+/// GEMM with the bias broadcast *and* an element-wise [`Epilogue`] fused
+/// into one pass over each C row (instead of gemm → bias pass → relu
+/// pass → skip-add pass, four streams of C become two). `flat0` is the
+/// flat index of `c[0]` in the full output tensor the epilogue's skip
+/// slice is laid out against (the im2col conv path passes the batch
+/// element's offset). Bias-then-epilogue per element matches the unfused
+/// reference order bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_epilogue_with(
+    ex: &Executor,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    epi: Epilogue<'_>,
+    flat0: usize,
+    c: &mut [f32],
+) {
     gemm_with(ex, m, k, n, a, b, c);
-    assert_eq!(bias.len(), m);
+    if let Some(bv) = bias {
+        assert_eq!(bv.len(), m);
+    }
     for i in 0..m {
         let row = &mut c[i * n..(i + 1) * n];
-        let bi = bias[i];
-        for v in row {
-            *v += bi;
+        if let Some(bv) = bias {
+            let bi = bv[i];
+            for v in row.iter_mut() {
+                *v += bi;
+            }
         }
+        epi.apply(row, flat0 + i * n);
     }
 }
 

@@ -13,7 +13,8 @@ mod blocked;
 mod naive;
 
 pub use blocked::{
-    gemm, gemm_bias, gemm_bias_with, gemm_blocked, gemm_blocked_with, gemm_with, GemmBlocking,
+    gemm, gemm_bias, gemm_bias_epilogue_with, gemm_bias_with, gemm_blocked, gemm_blocked_with,
+    gemm_with, GemmBlocking,
 };
 pub use naive::gemm_naive;
 

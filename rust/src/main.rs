@@ -19,9 +19,9 @@ use std::sync::Arc;
 use swsnn::bench::{figs, BenchConfig};
 use swsnn::cli::{parse_args, Args, FlagSpec};
 use swsnn::config::{load_config, ServeConfig};
-use swsnn::conv::{conv1d, Conv1dParams, ConvBackend};
+use swsnn::conv::{conv1d, BackendChoice, Conv1dParams, ConvBackend};
 use swsnn::coordinator::{serve_tcp, Coordinator, NativeEngine, PjrtTcnEngine};
-use swsnn::nn::Model;
+use swsnn::nn::{Model, Plan, PlannerConfig};
 use swsnn::pool::{minimizer_positions, sliding_minimum};
 use swsnn::runtime::{ArtifactRegistry, TensorView};
 use swsnn::workload::{dna_sequence, kmer_hashes, Rng};
@@ -130,7 +130,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         FlagSpec { name: "config", value: Some("path"), help: "model TOML (native engine)" },
         FlagSpec { name: "artifacts", value: Some("dir"), help: "artifacts dir (default artifacts/)" },
         FlagSpec { name: "addr", value: Some("host:port"), help: "listen address (default 127.0.0.1:7878)" },
-        FlagSpec { name: "backend", value: Some("name"), help: "native conv backend (default sliding)" },
+        FlagSpec { name: "backend", value: Some("name"), help: "native backend: auto (per-layer planner) or a fixed kernel" },
         FlagSpec { name: "threads", value: Some("n"), help: "kernel worker-pool threads (default: all cores)" },
         FlagSpec { name: "workers", value: Some("n"), help: "engine workers (default: serve.workers)" },
         FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
@@ -169,8 +169,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             swsnn::exec::set_global_threads(sc.threads);
         }
         serve_cfg = sc;
-        let backend = ConvBackend::parse(&args.get_str("backend", serve_cfg.backend.name()))
-            .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+        let backend = BackendChoice::parse(&args.get_str("backend", serve_cfg.backend.name()))
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown backend (try auto/sliding/im2col_gemm/direct/sliding_pair)")
+            })?;
         let mut rng = Rng::new(42);
         let model = Model::init(&mc, &mut rng)?;
         println!(
@@ -180,8 +182,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             model.param_count(),
             backend.name()
         );
+        // Audit surface for the planner: print the per-layer kernel
+        // choices the serving plans will execute with.
+        let plan = Plan::compile(&model, 1, &PlannerConfig { backend })?;
+        println!("plan (batch 1): {}", plan.describe());
         Coordinator::start_replicated(
-            NativeEngine::new(model, backend, serve_cfg.max_batch),
+            NativeEngine::with_choice(model, backend, serve_cfg.max_batch),
             &serve_cfg,
         )?
     };

@@ -3,6 +3,8 @@
 //! backend.
 
 use crate::conv::{conv1d_into, Conv1dParams, ConvBackend};
+use crate::gemm;
+use crate::ops::Epilogue;
 use crate::pool::{pool1d_into, Pool1dParams, PoolKind};
 use crate::workload::Rng;
 
@@ -146,8 +148,10 @@ impl Layer {
     pub fn forward(&self, x: &LayerOutput, batch: usize, backend: ConvBackend) -> LayerOutput {
         let mut y = Vec::new();
         let mut tmp = Vec::new();
-        let (c2, n2) =
-            self.forward_into(&x.data, x.channels, x.n, batch, backend, &mut y, &mut tmp);
+        let mut col = Vec::new();
+        let (c2, n2) = self.forward_into(
+            &x.data, x.channels, x.n, batch, backend, &mut y, &mut tmp, &mut col,
+        );
         LayerOutput {
             channels: c2,
             n: n2,
@@ -156,11 +160,15 @@ impl Layer {
     }
 
     /// Forward one batch from `x` (flattened `[batch, c, n]`) into `y`,
-    /// reusing `tmp` for intermediate activations (residual blocks).
-    /// Both buffers are resized as needed and every output element is
-    /// overwritten, so they can be recycled dirty across calls. Returns
-    /// the output `(channels, n)`. Numerically identical to
-    /// [`Layer::forward`].
+    /// reusing `tmp` for intermediate activations (residual blocks) and
+    /// `col` for the im2col backend's column matrix. All buffers are
+    /// resized as needed and every output element is overwritten, so
+    /// they can be recycled dirty across calls. Returns the output
+    /// `(channels, n)`. Numerically identical to [`Layer::forward`].
+    ///
+    /// This is the *eager reference* step the compiled plan is tested
+    /// against: each conv kernel's epilogue-fused form must reproduce
+    /// the separate bias/ReLU/skip-add passes here bit-for-bit.
     #[allow(clippy::too_many_arguments)]
     pub fn forward_into(
         &self,
@@ -171,6 +179,7 @@ impl Layer {
         backend: ConvBackend,
         y: &mut Vec<f32>,
         tmp: &mut Vec<f32>,
+        col: &mut Vec<f32>,
     ) -> (usize, usize) {
         match self {
             Layer::Conv {
@@ -192,7 +201,7 @@ impl Layer {
                 if *same_pad {
                     p = p.with_same_pad();
                 }
-                conv1d_into(backend, x, w, Some(b), &p, y);
+                conv1d_into(backend, x, w, Some(b), &p, col, y);
                 if *relu {
                     relu_inplace(y);
                 }
@@ -220,9 +229,9 @@ impl Layer {
                     .with_batch(batch)
                     .with_dilation(*dilation)
                     .with_same_pad();
-                conv1d_into(backend, x, w1, Some(b1), &p, tmp);
+                conv1d_into(backend, x, w1, Some(b1), &p, col, tmp);
                 relu_inplace(tmp);
-                conv1d_into(backend, tmp, w2, Some(b2), &p, y);
+                conv1d_into(backend, tmp, w2, Some(b2), &p, col, y);
                 relu_inplace(y);
                 for (o, xv) in y.iter_mut().zip(x) {
                     *o += xv;
@@ -239,24 +248,47 @@ impl Layer {
                 let feat = c * n;
                 assert_eq!(feat, *in_features, "dense input features");
                 y.resize(batch * out, 0.0);
-                for bi in 0..batch {
-                    let xrow = &x[bi * feat..][..feat];
-                    let yrow = &mut y[bi * out..][..*out];
-                    for (o, yv) in yrow.iter_mut().enumerate() {
-                        let wrow = &w[o * feat..][..feat];
-                        let mut acc = b[o];
-                        for (wv, xv) in wrow.iter().zip(xrow) {
-                            acc = wv.mul_add(*xv, acc);
-                        }
-                        *yv = acc;
-                    }
-                }
-                if *relu {
-                    relu_inplace(y);
-                }
+                dense_forward(
+                    crate::exec::Executor::global(),
+                    x,
+                    w,
+                    b,
+                    batch,
+                    feat,
+                    *out,
+                    *relu,
+                    y,
+                );
                 (*out, 1)
             }
         }
+    }
+}
+
+/// Dense layer forward: one blocked-GEMM gemv per batch row
+/// (`y[out] = W[out, feat] · x[feat] + b`, relu fused into the C sweep)
+/// on the given executor — replacing the former naive scalar triple
+/// loop. The plan's dense step calls this exact routine, so planned and
+/// eager execution agree bitwise.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_forward(
+    ex: &crate::exec::Executor,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    batch: usize,
+    feat: usize,
+    out: usize,
+    relu: bool,
+    y: &mut [f32],
+) {
+    let epi = if relu { Epilogue::Relu } else { Epilogue::None };
+    for bi in 0..batch {
+        let xrow = &x[bi * feat..][..feat];
+        let yrow = &mut y[bi * out..][..out];
+        // The GEMM accumulates into C; clear the recycled row first.
+        yrow.fill(0.0);
+        gemm::gemm_bias_epilogue_with(ex, out, feat, 1, w, xrow, Some(b), epi, 0, yrow);
     }
 }
 

@@ -1,18 +1,28 @@
 //! Composable NN layer stack executed by the rust backends.
 //!
 //! This is the "framework" face of the library: a [`Model`] is built
-//! from a [`ModelConfig`] (the TOML config system), holds its parameters,
-//! and runs forward inference with a selectable convolution backend —
-//! `Sliding` (the paper's kernels), `Im2colGemm` (the baseline), or
-//! `Direct`. The serving coordinator batches requests into model calls;
-//! the PJRT path (AOT TCN artifacts) lives in [`crate::coordinator`] as
-//! a fourth backend, sharing the same request types.
+//! from a [`ModelConfig`] (the TOML config system), holds its
+//! parameters, and runs forward inference through a compiled
+//! [`Plan`] — [`Plan::compile`] resolves shapes, picks a kernel per
+//! layer (sliding / im2col+GEMM / small-k / direct, overridable per
+//! layer from the TOML and globally via
+//! [`BackendChoice`](crate::conv::BackendChoice)), lays out one flat
+//! scratch arena, and fuses the bias/ReLU/skip-add epilogues into the
+//! kernels' destination writes. [`Model::forward_into`] is a
+//! compile-then-run wrapper over a cached plan;
+//! [`Model::forward_eager_into`] keeps the layer-by-layer reference
+//! path the plans are parity-tested against. The serving coordinator
+//! batches requests into plan executions; the PJRT path (AOT TCN
+//! artifacts) lives in [`crate::coordinator`], sharing the same
+//! request types.
 
 mod layers;
 mod model;
+pub mod plan;
 
 pub use layers::{Layer, LayerOutput};
-pub use model::{ForwardScratch, Model, TensorSpec};
+pub use model::{EagerScratch, ForwardScratch, Model, TensorSpec};
+pub use plan::{Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig};
 
 #[cfg(test)]
 mod tests {

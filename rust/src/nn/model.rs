@@ -3,11 +3,12 @@
 use anyhow::{bail, Result};
 
 use crate::config::{LayerConfig, ModelConfig};
-use crate::conv::ConvBackend;
+use crate::conv::{BackendChoice, ConvBackend};
 use crate::pool::PoolKind;
 use crate::workload::Rng;
 
 use super::layers::Layer;
+use super::plan::{Plan, PlanCache, PlanScratch, PlannerConfig};
 
 /// Output tensor of a forward pass: `shape = [batch, features…]`.
 #[derive(Clone, Debug)]
@@ -16,20 +17,34 @@ pub struct TensorSpec {
     pub data: Vec<f32>,
 }
 
-/// Reusable activation buffers for [`Model::forward_into`]: ping/pong
-/// activations plus a residual-block temp. One scratch per engine
-/// worker recycles every intermediate tensor across requests — after
-/// warm-up a forward pass allocates nothing.
+/// Reusable state for [`Model::forward_into`]: the compiled-plan cache
+/// (keyed by batch size and backend) plus the single scratch arena the
+/// plans execute in. One scratch per engine worker recycles every
+/// intermediate tensor across requests — after warm-up a forward pass
+/// compiles nothing and allocates nothing.
 #[derive(Clone, Debug, Default)]
 pub struct ForwardScratch {
+    plans: PlanCache<(usize, ConvBackend)>,
+    scratch: PlanScratch,
+}
+
+/// Reusable activation buffers for the *eager reference path*
+/// ([`Model::forward_eager_into`]): ping/pong activations, a residual
+/// temp, and the im2col column buffer. Kept as the layer-by-layer
+/// oracle the compiled plans are parity-tested against (and as the
+/// "eager" arm of the `eager_vs_planned` bench).
+#[derive(Clone, Debug, Default)]
+pub struct EagerScratch {
     ping: Vec<f32>,
     pong: Vec<f32>,
     tmp: Vec<f32>,
+    col: Vec<f32>,
 }
 
-/// A built model: layers + the (c, n) shape trace used for validation.
-/// `Clone` replicates the parameters — used to hand one engine instance
-/// to each coordinator worker.
+/// A built model: layers + the (c, n) shape trace used for validation,
+/// plus any per-layer backend overrides from the config (`backend =`
+/// keys on conv/residual layers). `Clone` replicates the parameters —
+/// used to hand one engine instance to each coordinator worker.
 #[derive(Clone)]
 pub struct Model {
     pub name: String,
@@ -38,17 +53,25 @@ pub struct Model {
     layers: Vec<Layer>,
     /// (channels, n) after each layer.
     shape_trace: Vec<(usize, usize)>,
+    /// Per-layer backend override (None = planner decides).
+    backend_overrides: Vec<Option<ConvBackend>>,
 }
 
 impl Model {
     /// Build and initialize from config (He init via the given RNG).
+    /// Fails on an empty layer list — a model with no layers has no
+    /// output shape, and that must surface here, not at serve time.
     pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Result<Self> {
+        if cfg.layers.is_empty() {
+            bail!("model {:?} defines no layers", cfg.name);
+        }
         let mut layers = Vec::new();
+        let mut overrides = Vec::new();
         let mut c = cfg.c_in;
         let mut n = cfg.seq_len;
         let mut trace = Vec::new();
         for (idx, lc) in cfg.layers.iter().enumerate() {
-            let layer = match lc {
+            let (layer, over) = match lc {
                 LayerConfig::Conv {
                     c_out,
                     k,
@@ -56,19 +79,28 @@ impl Model {
                     dilation,
                     same_pad,
                     relu,
-                } => Layer::conv(rng, c, *c_out, *k, *stride, *dilation, *same_pad, *relu),
+                    backend,
+                } => (
+                    Layer::conv(rng, c, *c_out, *k, *stride, *dilation, *same_pad, *relu),
+                    *backend,
+                ),
                 LayerConfig::Pool { kind, w, stride } => {
                     let Some(kind) = PoolKind::parse(kind) else {
                         bail!("layer {idx}: unknown pool kind {kind:?}");
                     };
-                    Layer::Pool {
-                        kind,
-                        w: *w,
-                        stride: *stride,
-                    }
+                    (
+                        Layer::Pool {
+                            kind,
+                            w: *w,
+                            stride: *stride,
+                        },
+                        None,
+                    )
                 }
-                LayerConfig::Residual { k, dilation } => Layer::residual(rng, c, *k, *dilation),
-                LayerConfig::Dense { out, relu } => Layer::dense(rng, c * n, *out, *relu),
+                LayerConfig::Residual { k, dilation, backend } => {
+                    (Layer::residual(rng, c, *k, *dilation), *backend)
+                }
+                LayerConfig::Dense { out, relu } => (Layer::dense(rng, c * n, *out, *relu), None),
             };
             let (c2, n2) = layer.out_shape(c, n);
             if n2 == 0 {
@@ -78,6 +110,7 @@ impl Model {
             n = n2;
             trace.push((c, n));
             layers.push(layer);
+            overrides.push(over);
         }
         Ok(Self {
             name: cfg.name.clone(),
@@ -85,6 +118,7 @@ impl Model {
             seq_len: cfg.seq_len,
             layers,
             shape_trace: trace,
+            backend_overrides: overrides,
         })
     }
 
@@ -96,9 +130,24 @@ impl Model {
         self.layers.len()
     }
 
-    /// Final (channels, n) shape per input row.
+    /// The layer stack (read-only; the plan executor resolves weights
+    /// through this).
+    pub(crate) fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Config-level backend override for layer `i`, if any.
+    pub(crate) fn backend_override(&self, i: usize) -> Option<ConvBackend> {
+        self.backend_overrides.get(i).copied().flatten()
+    }
+
+    /// Final (channels, n) shape per input row. [`Model::init`] rejects
+    /// empty models, so the trace always has a last entry.
     pub fn out_shape(&self) -> (usize, usize) {
-        *self.shape_trace.last().unwrap_or(&(self.c_in, self.seq_len))
+        *self
+            .shape_trace
+            .last()
+            .expect("Model::init rejects empty layer lists")
     }
 
     /// Forward a batch: `x` is `[batch, c_in, seq_len]` flattened.
@@ -115,16 +164,41 @@ impl Model {
         Ok(TensorSpec { shape, data })
     }
 
-    /// Forward a batch into a reusable output buffer, recycling every
-    /// intermediate activation through `scratch`. Returns the per-row
-    /// output `(channels, n)`; `out` holds `[batch, channels, n]`
-    /// flattened. Numerically identical to [`Model::forward`].
+    /// Forward a batch into a reusable output buffer. Since the plan
+    /// refactor this is a compile-then-run wrapper: the (batch, backend)
+    /// pair resolves to a cached compiled [`Plan`] in `scratch` (compiled
+    /// on first use), which executes all layers through the single
+    /// scratch arena with fused epilogues. Bit-identical to the eager
+    /// reference path ([`Model::forward_eager_into`], enforced by
+    /// `tests/plan_parity.rs`). Returns the per-row output
+    /// `(channels, n)`; `out` holds `[batch, channels, n]` flattened.
     pub fn forward_into(
         &self,
         x: &[f32],
         batch: usize,
         backend: ConvBackend,
         scratch: &mut ForwardScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize)> {
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(backend),
+        };
+        let plan = scratch
+            .plans
+            .get_or_compile((batch, backend), || Plan::compile(self, batch, &cfg))?;
+        plan.run_into(self, x, &mut scratch.scratch, out)
+    }
+
+    /// The eager layer-by-layer reference path: ping/pong buffer swaps,
+    /// separate bias/ReLU/skip-add passes. Semantically and bitwise
+    /// equal to the planned [`Model::forward_into`]; kept as the parity
+    /// oracle and the baseline arm of the `eager_vs_planned` bench.
+    pub fn forward_eager_into(
+        &self,
+        x: &[f32],
+        batch: usize,
+        backend: ConvBackend,
+        scratch: &mut EagerScratch,
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize)> {
         let expect = batch * self.c_in * self.seq_len;
@@ -140,7 +214,8 @@ impl Model {
         scratch.ping.clear();
         scratch.ping.extend_from_slice(x);
         let (mut c, mut n) = (self.c_in, self.seq_len);
-        for layer in &self.layers {
+        for (i, layer) in self.layers.iter().enumerate() {
+            let backend = self.backend_override(i).unwrap_or(backend);
             let (c2, n2) = layer.forward_into(
                 &scratch.ping,
                 c,
@@ -149,6 +224,7 @@ impl Model {
                 backend,
                 &mut scratch.pong,
                 &mut scratch.tmp,
+                &mut scratch.col,
             );
             std::mem::swap(&mut scratch.ping, &mut scratch.pong);
             c = c2;

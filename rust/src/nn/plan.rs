@@ -1,0 +1,623 @@
+//! Compile-once execution plans for the layer stack.
+//!
+//! [`Plan::compile`] runs once per `(model, batch-bucket, backend
+//! choice)` and bakes every per-request decision out of the hot path:
+//!
+//! * **Shape resolution** — every layer's [`Conv1dParams`] /
+//!   [`Pool1dParams`] (with the batch folded in) is derived ahead of
+//!   time; execution never re-derives a shape.
+//! * **Per-layer kernel selection** — each conv-bearing layer gets a
+//!   [`PlanKernel`] from, in priority order: the layer's `backend =`
+//!   override in the model TOML, the deployment-level
+//!   [`BackendChoice::Fixed`] backend, or (under
+//!   [`BackendChoice::Auto`]) the shape-based cost model in
+//!   [`choose_kernel`]. The paper's crossover (sliding wins at large
+//!   filters, GEMM at small filters with fat channel reductions) is
+//!   what the cost model encodes; the `eager_vs_planned` bench prints
+//!   the chosen kernels next to throughput so the model stays auditable.
+//! * **Arena layout** — one flat `Vec<f32>` holds every intermediate:
+//!   `[ act A | act B | residual tmp | im2col col ]`, with region sizes
+//!   (`act_len`, `tmp_len`, `col_len`) precomputed at compile time.
+//!   Step *i* reads one activation region and writes the other
+//!   (alternating; step 0 reads the request input, the last step writes
+//!   the caller's output buffer), so execution does no resizing, no
+//!   ping/pong `Vec` swaps, and — for all kernels except the
+//!   faithful-math `SlidingPair` — no allocation at all after warm-up.
+//! * **Fused epilogues** — bias is already part of the kernels'
+//!   accumulator seed; the ReLU tail and the residual skip-add ride the
+//!   kernels' destination writes as an [`Epilogue`] instead of separate
+//!   memory passes.
+//!
+//! [`Plan::run_into`] is bit-identical to the eager reference path
+//! ([`Model::forward_eager_into`]) for every fixed backend, thread
+//! count, and SIMD tier — enforced by `tests/plan_parity.rs`. The
+//! serving engines compile and cache plans keyed by batch size
+//! ([`crate::coordinator::NativeEngine`]); the eager
+//! [`Model::forward_into`] is itself a compile-then-run wrapper.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::conv::{self, BackendChoice, Conv1dParams, ConvBackend};
+use crate::exec::Executor;
+use crate::ops::Epilogue;
+use crate::pool::{pool1d_with_into, Pool1dParams, PoolKind};
+
+use super::layers::{dense_forward, Layer};
+use super::Model;
+
+/// Which kernel executes a planned layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKernel {
+    /// Broadcast-FMA sliding-window conv (the paper's contribution).
+    Sliding,
+    /// im2col + blocked GEMM, column matrix in the plan arena.
+    Im2col,
+    /// Fused register-blocked small-filter kernel (k ∈ {3, 5}).
+    SmallK,
+    /// Nested-loop reference conv.
+    Direct,
+    /// Literal Eq. 7–9 pair-operator prefix sum (allocates; kept for
+    /// fidelity, never chosen by the cost model).
+    SlidingPair,
+    /// Blocked-GEMM gemv (dense layers).
+    Gemm,
+    /// Sliding-sum pooling.
+    Pool,
+}
+
+impl PlanKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanKernel::Sliding => "sliding",
+            PlanKernel::Im2col => "im2col",
+            PlanKernel::SmallK => "small_k",
+            PlanKernel::Direct => "direct",
+            PlanKernel::SlidingPair => "sliding_pair",
+            PlanKernel::Gemm => "gemm",
+            PlanKernel::Pool => "pool",
+        }
+    }
+}
+
+/// Planner inputs beyond the model itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlannerConfig {
+    /// Deployment-level backend selection (`--backend` /
+    /// `serve.backend`); per-layer TOML overrides beat it either way.
+    pub backend: BackendChoice,
+}
+
+/// One compiled layer step: resolved shapes + chosen kernel. The arena
+/// region a step reads/writes follows its position (alternating A/B;
+/// first reads the input, last writes the output), so the step itself
+/// only carries lengths.
+#[derive(Clone, Debug)]
+struct Step {
+    /// Index into the model's layer stack (weight lookup + validation).
+    layer: usize,
+    kernel: PlanKernel,
+    op: StepOp,
+    /// Input elements (`batch · c · n`).
+    in_len: usize,
+    /// Output elements (`batch · c2 · n2`).
+    out_len: usize,
+}
+
+#[derive(Clone, Debug)]
+enum StepOp {
+    Conv { p: Conv1dParams, relu: bool },
+    Residual { p: Conv1dParams },
+    Pool { kind: PoolKind, p: Pool1dParams },
+    Dense { feat: usize, out: usize, relu: bool },
+}
+
+/// The scratch a plan executes in: one flat arena
+/// `[act A | act B | tmp | col]`, grown once to the plan's precomputed
+/// size and recycled dirty across requests.
+#[derive(Clone, Debug, Default)]
+pub struct PlanScratch {
+    arena: Vec<f32>,
+}
+
+/// Keyed compile-once plan cache (tiny linear scan — one entry per
+/// batch bucket / backend pair). Shared by
+/// [`crate::coordinator::NativeEngine`] (keyed by batch size) and
+/// [`super::ForwardScratch`](crate::nn::ForwardScratch) (keyed by
+/// batch + backend).
+#[derive(Clone, Debug)]
+pub struct PlanCache<K> {
+    entries: Vec<(K, Plan)>,
+}
+
+impl<K> Default for PlanCache<K> {
+    fn default() -> Self {
+        Self { entries: Vec::new() }
+    }
+}
+
+impl<K: PartialEq + Copy> PlanCache<K> {
+    /// The cached plan for `key`, compiling (and caching) on first use.
+    pub fn get_or_compile(
+        &mut self,
+        key: K,
+        compile: impl FnOnce() -> Result<Plan>,
+    ) -> Result<&Plan> {
+        let idx = match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                self.entries.push((key, compile()?));
+                self.entries.len() - 1
+            }
+        };
+        Ok(&self.entries[idx].1)
+    }
+
+    /// Number of compiled plans cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// A compiled execution plan for one `(model, batch)` pair. Cheap to
+/// clone (no parameter copies — weights stay in the [`Model`] the plan
+/// is run against).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    batch: usize,
+    steps: Vec<Step>,
+    /// Elements per activation ping/pong region (max intermediate).
+    act_len: usize,
+    /// Elements for the residual intermediate region.
+    tmp_len: usize,
+    /// Elements for the im2col column region (largest im2col layer).
+    col_len: usize,
+    in_len: usize,
+    out_c: usize,
+    out_n: usize,
+}
+
+/// Shape-based kernel choice for a conv-shaped layer under `Auto`.
+///
+/// The heuristic mirrors the paper's Fig-1 crossover plus the §5
+/// small-filter note:
+/// * the fused small-k kernel when it applies (single channel, unit
+///   stride/dilation, k ∈ {3, 5} — highest arithmetic intensity per
+///   load of all paths);
+/// * im2col + GEMM when the channel reduction is fat enough to feed the
+///   8×8 microkernel (`c_out ≥ 8`, `c_in·k ≥ 48`) **and** the receptive
+///   field is small (`effective_k ≤ 9`) — there the sliding schedule
+///   degenerates to a few short passes while the k× expansion stays
+///   cheap;
+/// * the sliding kernel everywhere else (large filters, thin channel
+///   counts, dilated stacks — the shapes the paper shows it winning).
+pub fn choose_kernel(p: &Conv1dParams) -> PlanKernel {
+    if conv::small_k_qualifies(p) {
+        PlanKernel::SmallK
+    } else if p.c_out >= 8 && p.c_in * p.k >= 48 && p.effective_k() <= 9 {
+        PlanKernel::Im2col
+    } else {
+        PlanKernel::Sliding
+    }
+}
+
+fn kernel_for_backend(b: ConvBackend) -> PlanKernel {
+    match b {
+        ConvBackend::Sliding => PlanKernel::Sliding,
+        ConvBackend::Im2colGemm => PlanKernel::Im2col,
+        ConvBackend::Direct => PlanKernel::Direct,
+        ConvBackend::SlidingPair => PlanKernel::SlidingPair,
+    }
+}
+
+impl Plan {
+    /// Compile the model for one batch size. Runs once per batch bucket;
+    /// everything shape- or choice-dependent happens here.
+    pub fn compile(model: &Model, batch: usize, cfg: &PlannerConfig) -> Result<Plan> {
+        ensure!(batch >= 1, "plan batch must be >= 1");
+        ensure!(
+            model.layer_count() > 0,
+            "cannot compile a plan for an empty model"
+        );
+        let nlayers = model.layer_count();
+        let (mut c, mut n) = (model.c_in, model.seq_len);
+        let mut steps = Vec::with_capacity(nlayers);
+        let (mut act_len, mut tmp_len, mut col_len) = (0usize, 0usize, 0usize);
+        for (i, layer) in model.layers().iter().enumerate() {
+            let in_len = batch * c * n;
+            // Priority: per-layer TOML override > fixed deployment
+            // backend > cost model.
+            let pick = |p: &Conv1dParams| match model.backend_override(i) {
+                Some(b) => kernel_for_backend(b),
+                None => match cfg.backend {
+                    BackendChoice::Fixed(b) => kernel_for_backend(b),
+                    BackendChoice::Auto => choose_kernel(p),
+                },
+            };
+            let (kernel, op) = match layer {
+                Layer::Conv {
+                    c_in,
+                    c_out,
+                    k,
+                    stride,
+                    dilation,
+                    same_pad,
+                    relu,
+                    ..
+                } => {
+                    ensure!(c == *c_in, "layer {i}: conv input channels");
+                    let mut p = Conv1dParams::new(*c_in, *c_out, n, *k)
+                        .with_batch(batch)
+                        .with_stride(*stride)
+                        .with_dilation(*dilation);
+                    if *same_pad {
+                        p = p.with_same_pad();
+                    }
+                    let kernel = pick(&p);
+                    if kernel == PlanKernel::Im2col {
+                        col_len = col_len.max(p.c_in * p.k * p.n_out());
+                    }
+                    (kernel, StepOp::Conv { p, relu: *relu })
+                }
+                Layer::Residual { c: cr, k, dilation, .. } => {
+                    ensure!(c == *cr, "layer {i}: residual channels");
+                    let p = Conv1dParams::new(*cr, *cr, n, *k)
+                        .with_batch(batch)
+                        .with_dilation(*dilation)
+                        .with_same_pad();
+                    let kernel = pick(&p);
+                    if kernel == PlanKernel::Im2col {
+                        col_len = col_len.max(p.c_in * p.k * p.n_out());
+                    }
+                    tmp_len = tmp_len.max(in_len);
+                    (kernel, StepOp::Residual { p })
+                }
+                Layer::Pool { kind, w, stride } => {
+                    let p = Pool1dParams::new(c, n, *w).with_batch(batch).with_stride(*stride);
+                    (PlanKernel::Pool, StepOp::Pool { kind: *kind, p })
+                }
+                Layer::Dense {
+                    in_features,
+                    out,
+                    relu,
+                    ..
+                } => {
+                    ensure!(c * n == *in_features, "layer {i}: dense input features");
+                    (
+                        PlanKernel::Gemm,
+                        StepOp::Dense {
+                            feat: *in_features,
+                            out: *out,
+                            relu: *relu,
+                        },
+                    )
+                }
+            };
+            let (c2, n2) = layer.out_shape(c, n);
+            ensure!(n2 > 0, "layer {i} produces empty output (c={c}, n={n})");
+            let out_len = batch * c2 * n2;
+            if i + 1 < nlayers {
+                act_len = act_len.max(out_len);
+            }
+            steps.push(Step {
+                layer: i,
+                kernel,
+                op,
+                in_len,
+                out_len,
+            });
+            c = c2;
+            n = n2;
+        }
+        Ok(Plan {
+            batch,
+            steps,
+            act_len,
+            tmp_len,
+            col_len,
+            in_len: batch * model.c_in * model.seq_len,
+            out_c: c,
+            out_n: n,
+        })
+    }
+
+    /// The batch size this plan was compiled for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Total arena elements: `2·act + tmp + col`.
+    pub fn arena_len(&self) -> usize {
+        2 * self.act_len + self.tmp_len + self.col_len
+    }
+
+    /// The chosen kernel per layer (cost-model audit surface).
+    pub fn kernels(&self) -> Vec<PlanKernel> {
+        self.steps.iter().map(|s| s.kernel).collect()
+    }
+
+    /// Human-readable per-layer choices, e.g.
+    /// `conv(k=7,c8)→sliding | pool(max)→pool | dense(4)→gemm`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let shape = match &s.op {
+                    StepOp::Conv { p, .. } => format!("conv(k={},c{})", p.k, p.c_out),
+                    StepOp::Residual { p } => format!("residual(k={},d={})", p.k, p.dilation),
+                    StepOp::Pool { kind, p } => format!("pool({},w={})", kind.name(), p.w),
+                    StepOp::Dense { out, .. } => format!("dense({out})"),
+                };
+                format!("{shape}→{}", s.kernel.name())
+            })
+            .collect();
+        parts.join(" | ")
+    }
+
+    /// Execute on the shared global executor. See
+    /// [`Plan::run_with_into`].
+    pub fn run_into(
+        &self,
+        model: &Model,
+        x: &[f32],
+        scratch: &mut PlanScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize)> {
+        self.run_with_into(Executor::global(), model, x, scratch, out)
+    }
+
+    /// Execute the plan: `x` is `[batch, c_in, seq_len]` flattened with
+    /// exactly the compiled batch; `out` is resized to the output length
+    /// once and fully overwritten. Returns the per-row `(channels, n)`.
+    /// `model` must be the model the plan was compiled from (layer
+    /// stack is cross-checked). Bit-identical to
+    /// [`Model::forward_eager_into`] with the same backend choices.
+    pub fn run_with_into(
+        &self,
+        ex: &Executor,
+        model: &Model,
+        x: &[f32],
+        scratch: &mut PlanScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<(usize, usize)> {
+        ensure!(
+            model.layer_count() == self.steps.len(),
+            "plan compiled for a different model (layer count {} vs {})",
+            self.steps.len(),
+            model.layer_count()
+        );
+        ensure!(
+            x.len() == self.in_len,
+            "input length {} != planned batch {} × c_in × seq_len = {}",
+            x.len(),
+            self.batch,
+            self.in_len
+        );
+        // Grow-only: plans for several batch buckets share one scratch
+        // (every consumer takes region prefixes), so a smaller plan must
+        // not shrink-then-regrow the arena on every bucket change.
+        let arena_len = self.arena_len();
+        if scratch.arena.len() < arena_len {
+            scratch.arena.resize(arena_len, 0.0);
+        }
+        out.resize(self.batch * self.out_c * self.out_n, 0.0);
+        let (reg_a, rest) = scratch.arena.split_at_mut(self.act_len);
+        let (reg_b, rest) = rest.split_at_mut(self.act_len);
+        let (tmp_reg, col_reg) = rest.split_at_mut(self.tmp_len);
+        // The activation regions alternate roles per step; the first
+        // step reads the request input, the last writes `out`.
+        let mut reg_src: &mut [f32] = reg_b;
+        let mut reg_dst: &mut [f32] = reg_a;
+        let last = self.steps.len() - 1;
+        for (i, step) in self.steps.iter().enumerate() {
+            {
+                let src: &[f32] = if i == 0 { x } else { &reg_src[..step.in_len] };
+                let dst: &mut [f32] = if i == last {
+                    out.as_mut_slice()
+                } else {
+                    &mut reg_dst[..step.out_len]
+                };
+                exec_step(ex, model, step, src, dst, tmp_reg, col_reg)?;
+            }
+            std::mem::swap(&mut reg_src, &mut reg_dst);
+        }
+        Ok((self.out_c, self.out_n))
+    }
+}
+
+/// Run one compiled step. `src`/`dst` are the step's activation views
+/// (disjoint by the arena layout); `tmp`/`col` are the shared residual
+/// and im2col regions.
+fn exec_step(
+    ex: &Executor,
+    model: &Model,
+    step: &Step,
+    src: &[f32],
+    dst: &mut [f32],
+    tmp: &mut [f32],
+    col: &mut [f32],
+) -> Result<()> {
+    let layer = &model.layers()[step.layer];
+    match (&step.op, layer) {
+        (StepOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
+            let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+            run_conv(ex, step.kernel, src, w, Some(b), p, epi, col, dst)
+        }
+        (StepOp::Residual { p }, Layer::Residual { w1, b1, w2, b2, .. }) => {
+            let t = &mut tmp[..step.in_len];
+            run_conv(ex, step.kernel, src, w1, Some(b1), p, Epilogue::Relu, col, t)?;
+            run_conv(
+                ex,
+                step.kernel,
+                &*t,
+                w2,
+                Some(b2),
+                p,
+                Epilogue::ReluAdd(src),
+                col,
+                dst,
+            )
+        }
+        (StepOp::Pool { kind, p }, Layer::Pool { .. }) => {
+            pool1d_with_into(ex, *kind, src, p, dst);
+            Ok(())
+        }
+        (StepOp::Dense { feat, out, relu }, Layer::Dense { w, b, .. }) => {
+            dense_forward(ex, src, w, b, step.in_len / feat, *feat, *out, *relu, dst);
+            Ok(())
+        }
+        _ => bail!(
+            "plan step {} does not match the model's layer kind",
+            step.layer
+        ),
+    }
+}
+
+/// Dispatch a conv-shaped step to its chosen kernel, epilogue fused.
+#[allow(clippy::too_many_arguments)]
+fn run_conv(
+    ex: &Executor,
+    kernel: PlanKernel,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+    col: &mut [f32],
+    y: &mut [f32],
+) -> Result<()> {
+    match kernel {
+        PlanKernel::Sliding => conv::conv1d_sliding_with_into(ex, x, w, bias, p, epi, y),
+        PlanKernel::Im2col => conv::conv1d_im2col_epilogue_into(ex, x, w, bias, p, epi, col, y),
+        PlanKernel::SmallK => {
+            ensure!(
+                conv::conv1d_small_k_into(x, w, bias, p, epi, y),
+                "planner selected small_k for a non-qualifying shape"
+            );
+        }
+        PlanKernel::Direct => {
+            conv::conv1d_direct_into(x, w, bias, p, y);
+            epi.apply(y, 0);
+        }
+        PlanKernel::SlidingPair => {
+            let v = conv::conv1d_pair(x, w, bias, p);
+            y.copy_from_slice(&v);
+            epi.apply(y, 0);
+        }
+        PlanKernel::Gemm | PlanKernel::Pool => {
+            bail!("non-conv kernel {} in a conv step", kernel.name())
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::load_config;
+    use crate::workload::Rng;
+
+    const CFG: &str = r#"
+[model]
+name = "plan_t"
+c_in = 1
+seq_len = 64
+
+[layer.0]
+type = "conv"
+c_out = 8
+k = 7
+
+[layer.1]
+type = "residual"
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "dense"
+out = 3
+"#;
+
+    fn model() -> Model {
+        let (mc, _) = load_config(CFG).unwrap();
+        Model::init(&mc, &mut Rng::new(7)).unwrap()
+    }
+
+    #[test]
+    fn compile_resolves_every_layer() {
+        let m = model();
+        let plan = Plan::compile(&m, 4, &PlannerConfig::default()).unwrap();
+        assert_eq!(plan.batch(), 4);
+        assert_eq!(plan.kernels().len(), 4);
+        assert_eq!(plan.kernels()[2], PlanKernel::Pool);
+        assert_eq!(plan.kernels()[3], PlanKernel::Gemm);
+        assert!(plan.arena_len() > 0);
+        assert!(plan.describe().contains("dense(3)→gemm"), "{}", plan.describe());
+    }
+
+    #[test]
+    fn fixed_backend_maps_every_conv_layer() {
+        let m = model();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Im2colGemm),
+        };
+        let plan = Plan::compile(&m, 1, &cfg).unwrap();
+        assert_eq!(plan.kernels()[0], PlanKernel::Im2col);
+        assert_eq!(plan.kernels()[1], PlanKernel::Im2col);
+        assert!(plan.col_len > 0, "im2col layers reserve a column region");
+    }
+
+    #[test]
+    fn planned_run_matches_forward() {
+        let m = model();
+        let mut rng = Rng::new(9);
+        for batch in [1usize, 3] {
+            let x = rng.vec_uniform(batch * 64, -1.0, 1.0);
+            let want = m.forward(&x, batch, ConvBackend::Sliding).unwrap();
+            let cfg = PlannerConfig {
+                backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            };
+            let plan = Plan::compile(&m, batch, &cfg).unwrap();
+            let mut scratch = PlanScratch::default();
+            let mut out = Vec::new();
+            let (c, n) = plan.run_into(&m, &x, &mut scratch, &mut out).unwrap();
+            assert_eq!((c, n), m.out_shape());
+            assert_eq!(out, want.data, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn wrong_batch_rejected() {
+        let m = model();
+        let plan = Plan::compile(&m, 2, &PlannerConfig::default()).unwrap();
+        let mut scratch = PlanScratch::default();
+        let mut out = Vec::new();
+        assert!(plan.run_into(&m, &[0.0; 64], &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn cost_model_prefers_small_k_and_sliding() {
+        // Single-channel k=3 → small_k.
+        let p = Conv1dParams::new(1, 1, 1024, 3);
+        assert_eq!(choose_kernel(&p), PlanKernel::SmallK);
+        // Large filter → sliding.
+        let p = Conv1dParams::new(1, 1, 1024, 63);
+        assert_eq!(choose_kernel(&p), PlanKernel::Sliding);
+        // Fat channel reduction with a tiny receptive field → im2col.
+        let p = Conv1dParams::new(16, 32, 1024, 3).with_same_pad();
+        assert_eq!(choose_kernel(&p), PlanKernel::Im2col);
+        // Same reduction but dilated far → sliding again.
+        let p = Conv1dParams::new(16, 32, 1024, 3).with_dilation(8).with_same_pad();
+        assert_eq!(choose_kernel(&p), PlanKernel::Sliding);
+    }
+}

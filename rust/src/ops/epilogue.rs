@@ -1,0 +1,108 @@
+//! Fused element-wise epilogues for the `_into` kernel family.
+//!
+//! The eager layer stack used to run bias, ReLU, and the residual
+//! skip-add as *separate memory passes* over the activation tensor —
+//! three streams of the output where one suffices. An [`Epilogue`] is
+//! instead handed to the kernel and applied to each output span right
+//! after that span's accumulation completes (while it is still
+//! cache-resident): `conv1d_sliding_with_into` applies it per row
+//! segment, `conv2d_sliding_with_into` per plane-row group, and the
+//! GEMM path per output row band.
+//!
+//! Every variant is a pure element-wise map, so applying it per
+//! disjoint span is **bit-identical** to applying it in one pass after
+//! the full kernel — which is exactly how the eager reference path
+//! (`Model::forward_eager_into`) still computes it. The `ReluAdd` skip
+//! tensor is indexed by the span's *flat* position in the full output,
+//! so parallel workers writing disjoint spans read disjoint skip spans.
+
+/// Element-wise tail fused into a kernel's destination write.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Epilogue<'a> {
+    /// No tail — the kernel's raw output.
+    #[default]
+    None,
+    /// `y ← max(y, 0)` — the conv bias+ReLU tail (bias is already fused
+    /// into the kernels' accumulator seed).
+    Relu,
+    /// `y ← max(y, 0) + skip[flat]` — the TCN residual closing add.
+    /// `skip` must have the same flat layout and length as the full
+    /// output tensor (residual blocks preserve shape).
+    ReluAdd(&'a [f32]),
+}
+
+impl Epilogue<'_> {
+    /// Apply to an output span whose first element has flat index
+    /// `flat` in the full output tensor. Element order and operation
+    /// order match the unfused reference (`relu` pass, then `+= skip`),
+    /// so fused and unfused evaluation are bit-identical.
+    #[inline]
+    pub fn apply(&self, y: &mut [f32], flat: usize) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Relu => {
+                for v in y.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Epilogue::ReluAdd(skip) => {
+                let s = &skip[flat..flat + y.len()];
+                for (v, &sv) in y.iter_mut().zip(s) {
+                    let r = if *v < 0.0 { 0.0 } else { *v };
+                    *v = r + sv;
+                }
+            }
+        }
+    }
+
+    /// Validate the skip tensor against the kernel's full output length
+    /// (call once at kernel entry, before any partitioning).
+    #[inline]
+    pub fn check_len(&self, y_len: usize) {
+        if let Epilogue::ReluAdd(s) = self {
+            assert_eq!(s.len(), y_len, "epilogue skip length");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives_only() {
+        let mut y = [-1.0f32, 0.0, 2.5, -0.0];
+        Epilogue::Relu.apply(&mut y, 0);
+        assert_eq!(y, [0.0, 0.0, 2.5, -0.0]);
+    }
+
+    #[test]
+    fn relu_add_uses_flat_offset() {
+        let skip = [10.0f32, 20.0, 30.0, 40.0];
+        let mut y = [-1.0f32, 3.0];
+        Epilogue::ReluAdd(&skip).apply(&mut y, 2);
+        assert_eq!(y, [30.0, 43.0]);
+    }
+
+    #[test]
+    fn spanwise_matches_full_pass() {
+        let skip: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 8.0).collect();
+        let base: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let epi = Epilogue::ReluAdd(&skip);
+        let mut whole = base.clone();
+        epi.apply(&mut whole, 0);
+        let mut pieces = base.clone();
+        for (i, chunk) in pieces.chunks_mut(5).enumerate() {
+            epi.apply(chunk, i * 5);
+        }
+        assert_eq!(whole, pieces);
+    }
+
+    #[test]
+    #[should_panic]
+    fn skip_length_checked() {
+        Epilogue::ReluAdd(&[0.0; 3]).check_len(4);
+    }
+}

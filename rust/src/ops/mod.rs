@@ -11,7 +11,9 @@
 //! convolution ride the same sliding-sum machinery as pooling.
 
 mod conv_pair;
+mod epilogue;
 pub use conv_pair::{dot_reference, dot_via_prefix, dot_via_tree_reduce, encode_gamma, ConvPair, Pair};
+pub use epilogue::Epilogue;
 
 /// An associative binary operator with identity, over element type `T`.
 ///

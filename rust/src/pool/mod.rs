@@ -155,8 +155,13 @@ pub fn pool1d_with_into(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dPara
 }
 
 /// One `(batch, channel)` row: dense sliding pass + stride decimation.
-/// Stride 1 writes the dense pass straight into the output row; larger
-/// strides need the dense scratch before decimating.
+/// Stride 1 writes the dense pass straight into the output row; the
+/// common DNN case `stride ≥ w` (non-overlapping windows, e.g. 2×
+/// down-sampling) folds each window directly — windows share no
+/// elements, so the sliding machinery has nothing to reuse and the
+/// direct fold is allocation-free (the serving path's strided pool
+/// layers stop allocating a dense row per request). Overlapping strided
+/// windows still go through the dense pass + decimation.
 fn pool1d_row(
     ex: &Executor,
     kind: PoolKind,
@@ -170,9 +175,38 @@ fn pool1d_row(
         pool1d_row_dense_into(ex, kind, xrow, p.w, p.boundary, yrow);
         return;
     }
+    if p.stride >= p.w && p.boundary == Boundary::Valid {
+        pool1d_row_nonoverlap(kind, xrow, p, yrow);
+        return;
+    }
     let dense = pool1d_row_dense_with(ex, kind, xrow, p.w, p.boundary);
     for (t, v) in yrow.iter_mut().enumerate() {
         *v = dense[t * p.stride];
+    }
+}
+
+/// Non-overlapping strided pooling: each output folds its window's
+/// elements in ascending order (the naive-sweep order, so values match
+/// [`pool1d_naive`] exactly for max/min and up to the usual FP identity
+/// for avg). No scratch, no allocation.
+fn pool1d_row_nonoverlap(kind: PoolKind, xrow: &[f32], p: &Pool1dParams, yrow: &mut [f32]) {
+    let inv = 1.0 / p.w as f32;
+    for (t, v) in yrow.iter_mut().enumerate() {
+        let win = &xrow[t * p.stride..][..p.w];
+        *v = match kind {
+            PoolKind::Avg => {
+                let op = AddOp::<f32>::new();
+                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x)) * inv
+            }
+            PoolKind::Max => {
+                let op = MaxOp::<f32>::new();
+                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
+            }
+            PoolKind::Min => {
+                let op = MinOp::<f32>::new();
+                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
+            }
+        };
     }
 }
 
@@ -364,6 +398,31 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    /// The non-overlapping fast path (stride ≥ w, valid mode) folds in
+    /// the naive sweep's order: max/min match the naive oracle exactly;
+    /// avg matches up to the `·(1/w)` vs `/w` rounding identity it
+    /// shares with the dense path.
+    #[test]
+    fn nonoverlap_strided_matches_naive() {
+        let x: Vec<f32> = (0..300).map(|i| ((i * 37 % 101) as f32) - 50.0).collect();
+        for (w, stride) in [(2usize, 2usize), (3, 3), (2, 5), (4, 4), (1, 3)] {
+            let p = Pool1dParams::new(1, 300, w).with_stride(stride);
+            for kind in [PoolKind::Max, PoolKind::Min] {
+                assert_eq!(
+                    pool1d(kind, &x, &p),
+                    pool1d_naive(kind, &x, &p),
+                    "{kind:?} w={w} s={stride}"
+                );
+            }
+            let got = pool1d(PoolKind::Avg, &x, &p);
+            let want = pool1d_naive(PoolKind::Avg, &x, &p);
+            assert_eq!(got.len(), want.len());
+            for (g, t) in got.iter().zip(&want) {
+                assert!((g - t).abs() <= 1e-5 * (1.0 + t.abs()), "avg w={w} s={stride}");
             }
         }
     }

@@ -38,6 +38,46 @@ fn native_coordinator(serve: &ServeConfig) -> Coordinator {
     Coordinator::start_native(engine, serve).unwrap()
 }
 
+/// Plan cache: one compiled plan per batch size, reused afterwards, and
+/// every batch size produces the same per-row results.
+#[test]
+fn engine_caches_one_plan_per_batch_size() {
+    let (mc, _) = load_config(CFG).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(1)).unwrap();
+    let reference = Model::init(&mc, &mut Rng::new(1)).unwrap(); // same seed → same params
+    let mut engine =
+        NativeEngine::with_choice(model, swsnn::conv::BackendChoice::Auto, 8);
+    assert_eq!(engine.cached_plans(), 0);
+
+    let mut rng = Rng::new(41);
+    let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_uniform(32, -1.0, 1.0)).collect();
+
+    let mut y1 = Vec::new();
+    engine.infer_into(&rows[0], 1, &mut y1).unwrap();
+    assert_eq!(engine.cached_plans(), 1, "first batch size compiles one plan");
+
+    let x4: Vec<f32> = rows.iter().flatten().copied().collect();
+    let mut y4 = Vec::new();
+    engine.infer_into(&x4, 4, &mut y4).unwrap();
+    assert_eq!(engine.cached_plans(), 2, "second batch size compiles a second plan");
+
+    // Repeats hit the cache instead of compiling more plans.
+    engine.infer_into(&rows[1], 1, &mut y1).unwrap();
+    engine.infer_into(&x4, 4, &mut y4).unwrap();
+    assert_eq!(engine.cached_plans(), 2);
+
+    // Same outputs from both cached plans: every batched row must equal
+    // the single-row forward of identical parameters.
+    assert_eq!(y4.len(), 4 * 32);
+    for (i, row) in rows.iter().enumerate() {
+        let want = reference.forward(row, 1, ConvBackend::Sliding).unwrap().data;
+        let got = &y4[i * 32..(i + 1) * 32];
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "row {i}: {a} vs {b}");
+        }
+    }
+}
+
 #[test]
 fn single_request_roundtrip() {
     let coord = native_coordinator(&ServeConfig::default());

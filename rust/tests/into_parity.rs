@@ -14,7 +14,7 @@ use swsnn::conv::{
 };
 use swsnn::exec::Executor;
 use swsnn::nn::{ForwardScratch, Model};
-use swsnn::ops::{AddOp, MaxOp, MulOp};
+use swsnn::ops::{AddOp, Epilogue, MaxOp, MulOp};
 use swsnn::pool::{
     pool1d_with, pool1d_with_into, pool2d_with, pool2d_with_into, Pool1dParams, Pool2dParams,
     PoolKind,
@@ -149,7 +149,7 @@ fn conv1d_into_matches_vec_with_dirty_dst() {
             let ex = Executor::new(t);
             let want = conv1d_sliding_with(&ex, &x, &w, bias, &p);
             let mut y = vec![DIRT; p.y_len()];
-            conv1d_sliding_with_into(&ex, &x, &w, bias, &p, &mut y);
+            conv1d_sliding_with_into(&ex, &x, &w, bias, &p, Epilogue::None, &mut y);
             assert_eq!(y, want, "conv1d threads={t} {p:?}");
         }
     }
@@ -165,7 +165,7 @@ fn conv2d_into_matches_vec_with_dirty_dst() {
         let ex = Executor::new(t);
         let want = conv2d_sliding_with(&ex, &x, &w, None, &p);
         let mut y = vec![DIRT; p.y_len()];
-        conv2d_sliding_with_into(&ex, &x, &w, None, &p, &mut y);
+        conv2d_sliding_with_into(&ex, &x, &w, None, &p, Epilogue::None, &mut y);
         assert_eq!(y, want, "conv2d threads={t}");
     }
 }

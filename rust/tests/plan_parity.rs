@@ -1,0 +1,373 @@
+//! Contract of the compiled execution plans (`nn::plan`):
+//!
+//! 1. `Plan::run_into` is **bit-identical** to the eager reference path
+//!    (`Model::forward_eager_into`) for every fixed backend, across
+//!    random models (conv/pool/residual/dense mixes), batch sizes,
+//!    dirty reused arenas, forced SIMD tiers, and thread counts
+//!    {1, 2, 4, 8}.
+//! 2. `Model::forward_into` (the compile-then-run wrapper) agrees with
+//!    both.
+//! 3. Per-layer TOML `backend =` overrides beat the deployment-level
+//!    choice, and `Auto` plans stay numerically faithful to the direct
+//!    oracle.
+//! 4. Empty models fail at `init`/`compile` time, not at serve time.
+
+use swsnn::config::{LayerConfig, ModelConfig};
+use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::exec::Executor;
+use swsnn::nn::{EagerScratch, Model, Plan, PlanKernel, PlanScratch, PlannerConfig};
+use swsnn::simd::{self, SimdTier};
+use swsnn::workload::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Random layer stack. Shapes that collapse to an empty output are
+/// rejected by `Model::init`, so the generator only has to be *mostly*
+/// right; callers skip configs init refuses.
+fn random_config(rng: &mut Rng, idx: usize) -> ModelConfig {
+    let c_in = 1 + rng.below(3);
+    let seq_len = 24 + rng.below(72);
+    let n_layers = 1 + rng.below(4);
+    let mut layers = Vec::new();
+    for li in 0..n_layers {
+        if li + 1 == n_layers && rng.below(3) == 0 {
+            layers.push(LayerConfig::Dense {
+                out: 1 + rng.below(5),
+                relu: rng.below(2) == 0,
+            });
+            break;
+        }
+        match rng.below(5) {
+            0 => layers.push(LayerConfig::Pool {
+                kind: ["max", "avg", "min"][rng.below(3)].to_string(),
+                w: 2,
+                stride: 2,
+            }),
+            1 => layers.push(LayerConfig::Residual {
+                k: 3,
+                dilation: 1 + rng.below(3),
+                backend: None,
+            }),
+            _ => layers.push(LayerConfig::Conv {
+                c_out: 1 + rng.below(6),
+                k: [1, 2, 3, 5, 7][rng.below(5)],
+                stride: 1 + rng.below(2),
+                dilation: 1 + rng.below(2),
+                same_pad: rng.below(4) != 0,
+                relu: rng.below(2) == 0,
+                backend: None,
+            }),
+        }
+    }
+    ModelConfig {
+        name: format!("rand{idx}"),
+        c_in,
+        seq_len,
+        layers,
+    }
+}
+
+/// The SIMD tiers worth forcing on this host: the portable oracle plus
+/// whatever the hardware actually dispatches.
+fn tiers() -> Vec<SimdTier> {
+    let mut ts = vec![SimdTier::Generic];
+    for t in [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon] {
+        if t.is_supported() {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+#[test]
+fn plan_bit_identical_to_eager_across_random_models() {
+    let mut rng = Rng::new(0x9147);
+    // Dirty reused scratch: one plan arena and one eager scratch shared
+    // across every model/backend/batch — stale contents must never leak.
+    let mut plan_scratch = PlanScratch::default();
+    let mut eager_scratch = EagerScratch::default();
+    let mut built = 0usize;
+    let mut attempts = 0usize;
+    while built < 10 && attempts < 60 {
+        attempts += 1;
+        let mc = random_config(&mut rng, attempts);
+        let Ok(model) = Model::init(&mc, &mut Rng::new(attempts as u64)) else {
+            continue; // generator produced a shape that collapses — fine
+        };
+        built += 1;
+        let batch = [1usize, 2, 5][built % 3];
+        let x = rng.vec_uniform(batch * mc.c_in * mc.seq_len, -1.0, 1.0);
+        for backend in [
+            ConvBackend::Sliding,
+            ConvBackend::Im2colGemm,
+            ConvBackend::Direct,
+            ConvBackend::SlidingPair,
+        ] {
+            let mut want = Vec::new();
+            model
+                .forward_eager_into(&x, batch, backend, &mut eager_scratch, &mut want)
+                .unwrap();
+            let cfg = PlannerConfig {
+                backend: BackendChoice::Fixed(backend),
+            };
+            let plan = Plan::compile(&model, batch, &cfg).unwrap();
+            let threads = THREADS[(built + backend as usize) % THREADS.len()];
+            let ex = Executor::new(threads);
+            let mut got = Vec::new();
+            plan.run_with_into(&ex, &model, &x, &mut plan_scratch, &mut got)
+                .unwrap();
+            assert_eq!(
+                got, want,
+                "model {} batch {batch} backend {backend:?} threads {threads}: plan != eager",
+                mc.name
+            );
+        }
+    }
+    assert!(built >= 8, "generator rejected too many configs ({built}/10)");
+}
+
+#[test]
+fn plan_parity_under_forced_simd_tiers_and_threads() {
+    const CFG_TOML: &str = r#"
+[model]
+name = "tiered"
+c_in = 2
+seq_len = 96
+
+[layer.0]
+type = "conv"
+c_out = 8
+k = 7
+
+[layer.1]
+type = "residual"
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "dense"
+out = 3
+"#;
+    let (mc, _) = swsnn::config::load_config(CFG_TOML).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(31)).unwrap();
+    let mut rng = Rng::new(32);
+    let x = rng.vec_uniform(2 * 2 * 96, -1.0, 1.0);
+    let mut plan_scratch = PlanScratch::default();
+    for tier in tiers() {
+        simd::force_tier(Some(tier));
+        for backend in [ConvBackend::Sliding, ConvBackend::Im2colGemm] {
+            let mut want = Vec::new();
+            model
+                .forward_eager_into(&x, 2, backend, &mut EagerScratch::default(), &mut want)
+                .unwrap();
+            let cfg = PlannerConfig {
+                backend: BackendChoice::Fixed(backend),
+            };
+            let plan = Plan::compile(&model, 2, &cfg).unwrap();
+            for threads in THREADS {
+                let ex = Executor::new(threads);
+                let mut got = Vec::new();
+                plan.run_with_into(&ex, &model, &x, &mut plan_scratch, &mut got)
+                    .unwrap();
+                assert_eq!(got, want, "tier {tier:?} backend {backend:?} threads {threads}");
+            }
+        }
+    }
+    simd::force_tier(None);
+}
+
+#[test]
+fn forward_into_wrapper_matches_plan_and_eager() {
+    let mut rng = Rng::new(0x77);
+    let mc = ModelConfig {
+        name: "wrap".into(),
+        c_in: 1,
+        seq_len: 64,
+        layers: vec![
+            LayerConfig::Conv {
+                c_out: 4,
+                k: 5,
+                stride: 1,
+                dilation: 1,
+                same_pad: true,
+                relu: true,
+                backend: None,
+            },
+            LayerConfig::Residual { k: 3, dilation: 2, backend: None },
+            LayerConfig::Dense { out: 3, relu: false },
+        ],
+    };
+    let model = Model::init(&mc, &mut Rng::new(5)).unwrap();
+    let mut fw_scratch = swsnn::nn::ForwardScratch::default();
+    for i in 0..3 {
+        let batch = 1 + i;
+        let x = rng.vec_uniform(batch * 64, -1.0, 1.0);
+        let mut eager = Vec::new();
+        let mut es = EagerScratch::default();
+        model
+            .forward_eager_into(&x, batch, ConvBackend::Sliding, &mut es, &mut eager)
+            .unwrap();
+        let mut wrapped = Vec::new();
+        let (c, n) = model
+            .forward_into(&x, batch, ConvBackend::Sliding, &mut fw_scratch, &mut wrapped)
+            .unwrap();
+        assert_eq!((c, n), model.out_shape());
+        assert_eq!(wrapped, eager, "batch {batch}");
+    }
+}
+
+#[test]
+fn per_layer_override_beats_fixed_choice() {
+    let mc = ModelConfig {
+        name: "override".into(),
+        c_in: 1,
+        seq_len: 48,
+        layers: vec![
+            LayerConfig::Conv {
+                c_out: 4,
+                k: 5,
+                stride: 1,
+                dilation: 1,
+                same_pad: true,
+                relu: true,
+                backend: Some(ConvBackend::Im2colGemm),
+            },
+            LayerConfig::Residual { k: 3, dilation: 1, backend: Some(ConvBackend::Direct) },
+        ],
+    };
+    let model = Model::init(&mc, &mut Rng::new(6)).unwrap();
+    let cfg = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+    };
+    let plan = Plan::compile(&model, 1, &cfg).unwrap();
+    assert_eq!(plan.kernels(), vec![PlanKernel::Im2col, PlanKernel::Direct]);
+    // Overrides apply identically on the eager path → still bit-equal.
+    let mut rng = Rng::new(8);
+    let x = rng.vec_uniform(48, -1.0, 1.0);
+    let mut want = Vec::new();
+    model
+        .forward_eager_into(&x, 1, ConvBackend::Sliding, &mut EagerScratch::default(), &mut want)
+        .unwrap();
+    let mut got = Vec::new();
+    plan.run_into(&model, &x, &mut PlanScratch::default(), &mut got).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn auto_plan_faithful_to_direct_oracle() {
+    let mut rng = Rng::new(0xA0);
+    let mc = ModelConfig {
+        name: "auto".into(),
+        c_in: 1,
+        seq_len: 80,
+        layers: vec![
+            // Qualifies for small_k under Auto.
+            LayerConfig::Conv {
+                c_out: 1,
+                k: 3,
+                stride: 1,
+                dilation: 1,
+                same_pad: false,
+                relu: false,
+                backend: None,
+            },
+            // Fat reduction, small receptive field → im2col under Auto.
+            LayerConfig::Conv {
+                c_out: 16,
+                k: 3,
+                stride: 1,
+                dilation: 1,
+                same_pad: true,
+                relu: true,
+                backend: None,
+            },
+            // Wide dilated filter → sliding under Auto.
+            LayerConfig::Conv {
+                c_out: 2,
+                k: 7,
+                stride: 1,
+                dilation: 4,
+                same_pad: true,
+                relu: false,
+                backend: None,
+            },
+        ],
+    };
+    let model = Model::init(&mc, &mut Rng::new(44)).unwrap();
+    let plan = Plan::compile(&model, 2, &PlannerConfig::default()).unwrap();
+    assert_eq!(
+        plan.kernels(),
+        vec![PlanKernel::SmallK, PlanKernel::Im2col, PlanKernel::Sliding],
+        "cost model choices drifted: {}",
+        plan.describe()
+    );
+    let x = rng.vec_uniform(2 * 80, -1.0, 1.0);
+    let mut got = Vec::new();
+    plan.run_into(&model, &x, &mut PlanScratch::default(), &mut got).unwrap();
+    let mut want = Vec::new();
+    model
+        .forward_eager_into(&x, 2, ConvBackend::Direct, &mut EagerScratch::default(), &mut want)
+        .unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, t)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - t).abs() <= 1e-3 * (1.0 + t.abs()),
+            "auto plan vs direct oracle at {i}: {g} vs {t}"
+        );
+    }
+}
+
+#[test]
+fn empty_model_fails_at_init_not_serve() {
+    let mc = ModelConfig {
+        name: "empty".into(),
+        c_in: 1,
+        seq_len: 8,
+        layers: vec![],
+    };
+    let err = Model::init(&mc, &mut Rng::new(1)).unwrap_err().to_string();
+    assert!(err.contains("no layers"), "{err}");
+}
+
+#[test]
+fn plan_rejects_foreign_model_and_bad_batch() {
+    let mc = ModelConfig {
+        name: "a".into(),
+        c_in: 1,
+        seq_len: 32,
+        layers: vec![LayerConfig::Conv {
+            c_out: 2,
+            k: 3,
+            stride: 1,
+            dilation: 1,
+            same_pad: true,
+            relu: true,
+            backend: None,
+        }],
+    };
+    let model = Model::init(&mc, &mut Rng::new(2)).unwrap();
+    let plan = Plan::compile(&model, 2, &PlannerConfig::default()).unwrap();
+    let mut out = Vec::new();
+    // Wrong input length for the compiled batch.
+    assert!(plan
+        .run_into(&model, &[0.0; 32], &mut PlanScratch::default(), &mut out)
+        .is_err());
+    // A model with a different layer count is rejected.
+    let mc2 = ModelConfig {
+        layers: vec![
+            mc.layers[0].clone(),
+            LayerConfig::Pool { kind: "max".into(), w: 2, stride: 2 },
+        ],
+        ..mc
+    };
+    let model2 = Model::init(&mc2, &mut Rng::new(2)).unwrap();
+    assert!(plan
+        .run_into(&model2, &[0.0; 64], &mut PlanScratch::default(), &mut out)
+        .is_err());
+}
