@@ -78,19 +78,65 @@ fn main() -> anyhow::Result<()> {
     }
     table.emit("e2e_serving.csv");
 
+    // ── Heuristic vs measured kernel choice per layer ─────────────────
+    // The autotune audit table: what the shape heuristic would run,
+    // what the micro-probes actually measured, and the raw probe
+    // timings — so the heuristic-vs-measured decision is reviewable in
+    // bench_results/BENCH_plan_autotune.json on every CI run. Runs
+    // before any other autotuned compile so the probe timings are
+    // recorded fresh rather than served from the tune cache.
+    let mut rng = Rng::new(1);
+    let model = Model::init(&mc, &mut rng)?;
+    let heuristic = Plan::compile(
+        &model,
+        serve.max_batch,
+        &PlannerConfig { backend: BackendChoice::Auto, ..PlannerConfig::default() },
+    )?;
+    let tuned = Plan::compile(
+        &model,
+        serve.max_batch,
+        &PlannerConfig {
+            backend: BackendChoice::Auto,
+            autotune: true,
+            ..PlannerConfig::default()
+        },
+    )?;
+    let mut tune_tbl = Table::new(
+        "Plan autotune: heuristic vs measured kernel per layer (batch 8)",
+        &["layer", "heuristic", "measured", "from cache", "probes (µs)"],
+    );
+    let heur_kernels = heuristic.layer_kernels();
+    for t in tuned.tuning() {
+        let probes: Vec<String> = t
+            .probes
+            .iter()
+            .map(|p| format!("{}:{:.1}", p.kernel.name(), p.micros))
+            .collect();
+        tune_tbl.row(vec![
+            format!("{}", t.layer),
+            heur_kernels[t.layer].name().to_string(),
+            t.chosen.name().to_string(),
+            format!("{}", t.cached),
+            probes.join(" "),
+        ]);
+    }
+    tune_tbl.emit("plan_autotune.csv");
+
     // ── Eager vs planned execution ────────────────────────────────────
     // Same model, same kernels available; the delta is the plan refactor
     // (compile-once shapes, single arena, fused epilogues, per-layer
-    // kernel choice under `auto`). The per-layer choices are printed so
-    // the planner's cost model stays auditable across PRs.
+    // kernel choice under `auto`, measured choice under `auto`+autotune).
+    // The per-layer choices are printed so the cost model stays
+    // auditable across PRs.
     let mut duel = Table::new(
         "Eager vs planned execution (8 clients through the batcher)",
         &["engine", "plan (per-layer kernels)", "req/s", "e2e p50 µs", "e2e p99 µs"],
     );
-    for (choice, eager) in [
-        (BackendChoice::Fixed(ConvBackend::Sliding), true),
-        (BackendChoice::Fixed(ConvBackend::Sliding), false),
-        (BackendChoice::Auto, false),
+    for (choice, eager, autotune) in [
+        (BackendChoice::Fixed(ConvBackend::Sliding), true, false),
+        (BackendChoice::Fixed(ConvBackend::Sliding), false, false),
+        (BackendChoice::Auto, false, false),
+        (BackendChoice::Auto, false, true),
     ] {
         let mut rng = Rng::new(1);
         let model = Model::init(&mc, &mut rng)?;
@@ -98,16 +144,28 @@ fn main() -> anyhow::Result<()> {
         let plan_desc = if eager {
             "(eager: per-layer passes, ping-pong buffers)".to_string()
         } else {
-            Plan::compile(&model, serve.max_batch, &PlannerConfig { backend: choice })?.describe()
+            let cfg = PlannerConfig {
+                backend: choice,
+                autotune,
+                ..PlannerConfig::default()
+            };
+            Plan::compile(&model, serve.max_batch, &cfg)?.describe()
         };
         let engine = if eager {
             let BackendChoice::Fixed(b) = choice else { unreachable!() };
             NativeEngine::eager(model, b, serve.max_batch)
         } else {
-            NativeEngine::with_choice(model, choice, serve.max_batch)
+            NativeEngine::with_choice(model, choice, serve.max_batch).autotuned(autotune)
         };
         let label = engine.name();
-        let coord = Arc::new(Coordinator::start_native(engine, &serve)?);
+        // The serving config must carry the autotune flag too: it gates
+        // the batcher's pad-to-bucket behavior, which is what keeps the
+        // probes off the request path for the "+tune" arm.
+        let serve_arm = ServeConfig {
+            autotune,
+            ..serve.clone()
+        };
+        let coord = Arc::new(Coordinator::start_native(engine, &serve_arm)?);
         let (rps, stats) = drive(coord, 8, per_client, row);
         duel.row(vec![
             label,
@@ -118,5 +176,53 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     duel.emit("eager_vs_planned.csv");
+
+    // ── Conv→pool fusion ──────────────────────────────────────────────
+    // tcn_pool chains conv→pool pairs with non-overlapping windows, so
+    // the planner fuses each pair into one arena pass; the eager row is
+    // the unfused reference (identical numerics, one extra activation
+    // round-trip per pair).
+    let pool_text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_pool.toml"),
+    )?;
+    let (pool_mc, _) = load_config(&pool_text).map_err(anyhow::Error::msg)?;
+    let mut fusion = Table::new(
+        "Conv→pool fusion on tcn_pool (8 clients through the batcher)",
+        &["engine", "plan (per-layer kernels)", "req/s", "e2e p50 µs", "e2e p99 µs"],
+    );
+    for eager in [true, false] {
+        let mut rng = Rng::new(1);
+        let model = Model::init(&pool_mc, &mut rng)?;
+        let row = model.c_in * model.seq_len;
+        let plan_desc = if eager {
+            "(eager: per-layer passes, ping-pong buffers)".to_string()
+        } else {
+            let plan = Plan::compile(
+                &model,
+                serve.max_batch,
+                &PlannerConfig {
+                    backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                    ..PlannerConfig::default()
+                },
+            )?;
+            format!("{} ({} fused)", plan.describe(), plan.fused_steps())
+        };
+        let engine = if eager {
+            NativeEngine::eager(model, ConvBackend::Sliding, serve.max_batch)
+        } else {
+            NativeEngine::new(model, ConvBackend::Sliding, serve.max_batch)
+        };
+        let label = engine.name();
+        let coord = Arc::new(Coordinator::start_native(engine, &serve)?);
+        let (rps, stats) = drive(coord, 8, per_client, row);
+        fusion.row(vec![
+            label,
+            plan_desc,
+            format!("{rps:.1}"),
+            format!("{:.0}", stats.e2e_p50_us),
+            format!("{:.0}", stats.e2e_p99_us),
+        ]);
+    }
+    fusion.emit("conv_pool_fusion.csv");
     Ok(())
 }

@@ -74,6 +74,19 @@ pub struct ServeConfig {
     /// backend name forces it on every layer without a per-layer
     /// `backend =` override.
     pub backend: BackendChoice,
+    /// Measured-cost kernel selection (`serve.autotune` / `--autotune`):
+    /// plan compiles micro-probe every candidate kernel against the
+    /// layer's real shapes instead of trusting the shape heuristic.
+    /// Only meaningful under the `auto` backend. Probe results are
+    /// cached per (shape, SIMD tier, threads), so `SWSNN_SIMD` and
+    /// `--threads` key the tune cache.
+    pub autotune: bool,
+    /// Batch buckets every engine precompiles at startup
+    /// (`serve.batch_buckets = [1, 8, 32]` / `--buckets`): plans,
+    /// autotune probes, and arenas are warmed before the first request.
+    /// Empty (the default) = a power-of-two ladder up to `max_batch`;
+    /// see [`ServeConfig::effective_buckets`].
+    pub batch_buckets: Vec<usize>,
     pub queue_capacity: usize,
 }
 
@@ -85,7 +98,64 @@ impl Default for ServeConfig {
             workers: 1,
             threads: 0,
             backend: BackendChoice::Auto,
+            autotune: false,
+            batch_buckets: Vec::new(),
             queue_capacity: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The batch buckets engines precompile at startup (and the batcher
+    /// pads collected batches up to): the configured list with entries
+    /// above `max_batch` clamped *down* to it (a too-big bucket means
+    /// "warm the largest batch available", not "warm nothing") and
+    /// `max_batch` itself always appended — an explicit list must cover
+    /// every batch the batcher can form, or padded serving would fall
+    /// back to compile-on-request for the sizes above its largest
+    /// bucket — sorted and deduplicated. When no list is configured, a
+    /// power-of-two ladder `1, 2, 4, …` capped by (and including)
+    /// `max_batch`.
+    pub fn effective_buckets(&self) -> Vec<usize> {
+        let cap = self.max_batch.max(1);
+        let mut v: Vec<usize> = if self.batch_buckets.is_empty() {
+            let mut ladder = Vec::new();
+            let mut b = 1usize;
+            while b < cap {
+                ladder.push(b);
+                b *= 2;
+            }
+            ladder
+        } else {
+            self.batch_buckets.iter().map(|&b| b.min(cap)).collect()
+        };
+        v.push(cap);
+        v.retain(|&b| b >= 1);
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Whether the deployment opted into bucketed execution: an explicit
+    /// bucket list, or autotune under the `auto` backend (probe latency
+    /// must never reach the request path; with a fixed backend nothing
+    /// ever probes, so autotune alone changes nothing). Gates both the
+    /// batcher's pad-to-bucket behavior and the full-ladder warm-up.
+    pub fn bucketed_execution(&self) -> bool {
+        (self.autotune && self.backend == BackendChoice::Auto) || !self.batch_buckets.is_empty()
+    }
+
+    /// The batch sizes engines warm at startup: every effective bucket
+    /// under bucketed execution; otherwise just the endpoints
+    /// `{1, max_batch}` (singletons and full batches dominate unbucketed
+    /// traffic — intermediate sizes compile lazily either way).
+    pub fn warmup_buckets(&self) -> Vec<usize> {
+        if self.bucketed_execution() {
+            self.effective_buckets()
+        } else {
+            let mut v = vec![1, self.max_batch.max(1)];
+            v.dedup();
+            v
         }
     }
 }
@@ -183,6 +253,46 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
             Some(v) => Ok(Some(v as usize)),
         }
     };
+    // A mistyped value must fail loudly (like batch_buckets below) — an
+    // operator who wrote `autotune = 1` believes probing is on; silently
+    // falling back to the heuristic would hide that it is not.
+    let autotune = match doc.get("serve.autotune") {
+        None => d.autotune,
+        Some(Value::Bool(b)) => *b,
+        Some(other) => {
+            return Err(format!(
+                "serve.autotune must be a boolean, got {}",
+                other.type_name()
+            ))
+        }
+    };
+    let batch_buckets = match doc.get("serve.batch_buckets") {
+        None => d.batch_buckets.clone(),
+        Some(Value::Array(items)) => {
+            let mut v = Vec::with_capacity(items.len());
+            for item in items {
+                match item {
+                    Value::Int(b) if *b >= 1 => v.push(*b as usize),
+                    Value::Int(b) => {
+                        return Err(format!("serve.batch_buckets entries must be >= 1, got {b}"))
+                    }
+                    other => {
+                        return Err(format!(
+                            "serve.batch_buckets must be an integer array, found a {} entry",
+                            other.type_name()
+                        ))
+                    }
+                }
+            }
+            v
+        }
+        Some(other) => {
+            return Err(format!(
+                "serve.batch_buckets must be an array, got {}",
+                other.type_name()
+            ))
+        }
+    };
     Ok(ServeConfig {
         max_batch: count("serve.max_batch")?.unwrap_or(d.max_batch),
         batch_deadline_us: count("serve.batch_deadline_us")?.unwrap_or(d.batch_deadline_us as usize)
@@ -190,6 +300,8 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
         workers: count("serve.workers")?.unwrap_or(d.workers),
         threads: count("serve.threads")?.unwrap_or(d.threads),
         backend,
+        autotune,
+        batch_buckets,
         queue_capacity: count("serve.queue_capacity")?.unwrap_or(d.queue_capacity),
     })
 }
@@ -283,6 +395,93 @@ backend = "sliding"
         assert!(load_config(&bad).unwrap_err().contains("threads"));
         let bad = format!("{EXAMPLE}\nworkers = -4\n");
         assert!(load_config(&bad).unwrap_err().contains("workers"));
+    }
+
+    #[test]
+    fn autotune_and_batch_buckets_parse() {
+        let text = format!("{EXAMPLE}\nautotune = true\nbatch_buckets = [1, 4, 16]\n");
+        let (_, s) = load_config(&text).unwrap();
+        assert!(s.autotune);
+        assert_eq!(s.batch_buckets, vec![1, 4, 16]);
+        assert_eq!(s.effective_buckets(), vec![1, 4, 16]); // max_batch 16
+        // Defaults: autotune off, bucket ladder derived from max_batch.
+        let (_, s) = load_config(EXAMPLE).unwrap();
+        assert!(!s.autotune);
+        assert!(s.batch_buckets.is_empty());
+        assert_eq!(s.effective_buckets(), vec![1, 2, 4, 8, 16]);
+        // A mistyped autotune value errors instead of silently running
+        // the heuristic.
+        let bad = format!("{EXAMPLE}\nautotune = 1\n");
+        assert!(load_config(&bad).unwrap_err().contains("autotune"));
+        // Non-positive or non-integer entries are rejected.
+        let bad = format!("{EXAMPLE}\nbatch_buckets = [4, -1]\n");
+        assert!(load_config(&bad).unwrap_err().contains("batch_buckets"));
+        let bad = format!("{EXAMPLE}\nbatch_buckets = [\"big\"]\n");
+        assert!(load_config(&bad).unwrap_err().contains("batch_buckets"));
+        let bad = format!("{EXAMPLE}\nbatch_buckets = 4\n");
+        assert!(load_config(&bad).unwrap_err().contains("array"));
+    }
+
+    #[test]
+    fn effective_buckets_clamped_sorted_deduped() {
+        let d = ServeConfig::default(); // max_batch 8
+        assert_eq!(d.effective_buckets(), vec![1, 2, 4, 8]);
+        // Oversized entries clamp DOWN to max_batch (warm the largest
+        // batch available) rather than silently disappearing.
+        let s = ServeConfig {
+            max_batch: 8,
+            batch_buckets: vec![4, 4, 64, 2],
+            ..Default::default()
+        };
+        assert_eq!(s.effective_buckets(), vec![2, 4, 8]);
+        let oversized_only = ServeConfig {
+            max_batch: 8,
+            batch_buckets: vec![16, 32],
+            ..Default::default()
+        };
+        assert_eq!(oversized_only.effective_buckets(), vec![8]);
+        // An explicit list always covers max_batch, so padded serving
+        // never falls back to compile-on-request above its top bucket.
+        let uncovered = ServeConfig {
+            max_batch: 32,
+            batch_buckets: vec![1, 8],
+            ..Default::default()
+        };
+        assert_eq!(uncovered.effective_buckets(), vec![1, 8, 32]);
+        let one = ServeConfig {
+            max_batch: 1,
+            ..Default::default()
+        };
+        assert_eq!(one.effective_buckets(), vec![1]);
+    }
+
+    /// Bucketed execution (padding + full-ladder warm-up) is opt-in: an
+    /// explicit bucket list, or autotune under the `auto` backend — a
+    /// fixed backend never probes, so autotune alone must not enable
+    /// per-batch padding.
+    #[test]
+    fn bucketed_execution_gate_and_warmup_buckets() {
+        let d = ServeConfig::default();
+        assert!(!d.bucketed_execution());
+        assert_eq!(d.warmup_buckets(), vec![1, 8]); // endpoints only
+        let tuned = ServeConfig {
+            autotune: true,
+            ..Default::default()
+        };
+        assert!(tuned.bucketed_execution());
+        assert_eq!(tuned.warmup_buckets(), vec![1, 2, 4, 8]);
+        let tuned_fixed = ServeConfig {
+            autotune: true,
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..Default::default()
+        };
+        assert!(!tuned_fixed.bucketed_execution(), "fixed backend never probes");
+        let explicit = ServeConfig {
+            batch_buckets: vec![4],
+            ..Default::default()
+        };
+        assert!(explicit.bucketed_execution());
+        assert_eq!(explicit.warmup_buckets(), vec![4, 8]);
     }
 
     #[test]

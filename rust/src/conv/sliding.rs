@@ -128,6 +128,25 @@ pub fn conv1d_sliding_with_into(
     ex.scope(jobs);
 }
 
+/// Compute one full flat output row (`row = b·c_out + co`; `yrow` must
+/// have length [`Conv1dParams::n_out`]) exactly as
+/// [`conv1d_sliding_with_into`] computes it — same bias seed, same
+/// ascending tap order, same epilogue application — so callers composing
+/// per-row pipelines (the execution plan's fused conv→pool step) stay
+/// **bit-identical** to the unfused kernel for every partitioning.
+pub(crate) fn conv1d_sliding_row_into(
+    yrow: &mut [f32],
+    row: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+) {
+    debug_assert_eq!(yrow.len(), p.n_out(), "row dst length");
+    compute_row_segment(yrow, 0, row, x, w, bias, p, epi);
+}
+
 /// Compute output columns `[t0, t0 + yseg.len())` of flat output row
 /// `row = b·c_out + co` — the per-task body of both the serial loop and
 /// the parallel fan-out. The epilogue runs once the segment's taps have

@@ -100,31 +100,61 @@ impl Coordinator {
             std::sync::mpsc::channel::<anyhow::Result<(usize, usize, String)>>();
 
         let n_workers = factories.len();
+        // Bucketed execution is opt-in ([`ServeConfig::bucketed_execution`]:
+        // an explicit bucket list, or autotune under the auto backend).
+        // When on, every configured bucket is warmed at startup (plans,
+        // probes, arenas) and the batcher pads each collected batch up to
+        // the next bucket, so engines only ever execute warmed batch
+        // sizes. When off, pad rows would cost recurring compute to avoid
+        // a once-per-size microsecond heuristic compile — so batches run
+        // at their natural size and warm-up covers just the endpoints
+        // {1, max_batch}.
+        let warm_buckets = cfg.warmup_buckets();
+        let pad_buckets = if cfg.bucketed_execution() {
+            warm_buckets.clone()
+        } else {
+            Vec::new()
+        };
         let mut workers = Vec::with_capacity(n_workers);
         for (wi, factory) in factories.into_iter().enumerate() {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let shutdown = Arc::clone(&shutdown);
             let meta_tx = meta_tx.clone();
+            let warm_buckets = warm_buckets.clone();
+            let pad_buckets = pad_buckets.clone();
             let max_batch = cfg.max_batch.max(1);
             let deadline = Duration::from_micros(cfg.batch_deadline_us);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("swsnn-batcher-{wi}"))
                     .spawn(move || {
-                        let engine = match factory() {
-                            Ok(e) => {
-                                let _ =
-                                    meta_tx.send(Ok((e.input_len(), e.output_len(), e.name())));
-                                e
-                            }
+                        let mut engine = match factory() {
+                            Ok(e) => e,
                             Err(err) => {
                                 let _ = meta_tx.send(Err(err));
                                 return;
                             }
                         };
+                        if let Err(err) = engine.warmup(&warm_buckets) {
+                            let _ = meta_tx.send(Err(err.context("engine warm-up failed")));
+                            return;
+                        }
+                        let _ = meta_tx.send(Ok((
+                            engine.input_len(),
+                            engine.output_len(),
+                            engine.name(),
+                        )));
                         drop(meta_tx);
-                        batch_loop(queue, engine, metrics, shutdown, max_batch, deadline)
+                        batch_loop(
+                            queue,
+                            engine,
+                            metrics,
+                            shutdown,
+                            max_batch,
+                            deadline,
+                            pad_buckets,
+                        )
                     })
                     .expect("spawn batcher"),
             );
@@ -332,7 +362,12 @@ impl Drop for Coordinator {
 }
 
 /// Worker: collect a batch (first request blocks, then wait up to the
-/// deadline for more, capped at `max_batch`), run the engine, distribute.
+/// deadline for more, capped at `max_batch`), pad it up to the smallest
+/// bucket in `pad_buckets`, run the engine, distribute. `pad_buckets`
+/// is sorted ascending — a subset of what [`Engine::warmup`]
+/// precompiled, so padded requests only ever execute warmed batch
+/// sizes; empty = no padding (batches run at their natural size).
+#[allow(clippy::too_many_arguments)]
 fn batch_loop(
     queue: Arc<Channel<Request>>,
     mut engine: Box<dyn Engine>,
@@ -340,6 +375,7 @@ fn batch_loop(
     shutdown: Arc<AtomicBool>,
     max_batch: usize,
     deadline: Duration,
+    pad_buckets: Vec<usize>,
 ) {
     let row = engine.input_len();
     let out_row = engine.output_len();
@@ -377,6 +413,13 @@ fn batch_loop(
         }
 
         let b = batch.len();
+        // Pad up to the smallest configured bucket ≥ b: the engine then
+        // only ever executes precompiled batch sizes, so no request pays
+        // plan-compile or autotune-probe latency. Rows are independent —
+        // the zero pad rows change nothing and are dropped below. A
+        // batch no bucket covers (or an empty pad list) runs unpadded
+        // and may compile lazily, once per size.
+        let bucket = pad_buckets.iter().copied().find(|&k| k >= b).unwrap_or(b);
         let infer_start = Instant::now();
         for req in &batch {
             metrics
@@ -384,18 +427,19 @@ fn batch_loop(
                 .record(infer_start.duration_since(req.enqueued));
         }
         xbuf.clear();
-        xbuf.reserve(b * row);
+        xbuf.reserve(bucket * row);
         for req in &batch {
             xbuf.extend_from_slice(&req.input);
         }
-        let result = engine.infer_into(&xbuf, b, &mut ybuf);
+        xbuf.resize(bucket * row, 0.0);
+        let result = engine.infer_into(&xbuf, bucket, &mut ybuf);
         metrics.inference.record(infer_start.elapsed());
         metrics.batches.inc();
         metrics.batched_rows.add(b as u64);
 
         match result {
             Ok(()) => {
-                debug_assert_eq!(ybuf.len(), b * out_row);
+                debug_assert_eq!(ybuf.len(), bucket * out_row);
                 for (i, req) in batch.iter().enumerate() {
                     // Record metrics BEFORE waking the waiter so stats()
                     // observed after wait() always include this request.

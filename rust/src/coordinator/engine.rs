@@ -19,9 +19,6 @@ pub trait Engine {
     fn input_len(&self) -> usize;
     /// Elements per output row.
     fn output_len(&self) -> usize;
-    /// Batch sizes the engine can execute directly. The batcher pads a
-    /// collected batch up to the smallest bucket ≥ its size.
-    fn batch_buckets(&self) -> Vec<usize>;
     /// Run `batch` rows (input length `batch * input_len()`).
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
     /// Run `batch` rows into a reusable output buffer (resized to
@@ -31,6 +28,16 @@ pub trait Engine {
     /// and all intermediate activations recycle across requests.
     fn infer_into(&mut self, x: &[f32], batch: usize, y: &mut Vec<f32>) -> Result<()> {
         *y = self.infer(x, batch)?;
+        Ok(())
+    }
+    /// One-time startup warm-up, run by the coordinator on the worker
+    /// thread right after construction and before the first request:
+    /// precompile whatever per-bucket state the engine keeps (plans,
+    /// probe results, arenas) for the configured batch buckets so
+    /// steady-state inference at a bucketed batch size never pays
+    /// compile, autotune-probe, or allocation latency. A failure here
+    /// fails coordinator startup. Default: no-op.
+    fn warmup(&mut self, _batch_buckets: &[usize]) -> Result<()> {
         Ok(())
     }
     /// Human-readable backend tag for metrics/logs.
@@ -49,6 +56,11 @@ pub trait Engine {
 pub struct NativeEngine {
     model: Model,
     choice: BackendChoice,
+    /// Measured-cost kernel selection: plan compiles micro-probe the
+    /// candidate kernels instead of trusting the shape heuristic
+    /// (probe results cached process-wide, so replicated workers and
+    /// repeated buckets probe each shape once).
+    autotune: bool,
     max_batch: usize,
     /// Eager mode skips the planner and runs the layer-by-layer
     /// reference path — the baseline arm of the `eager_vs_planned`
@@ -78,12 +90,22 @@ impl NativeEngine {
         Self {
             model,
             choice,
+            autotune: false,
             max_batch: max_batch.max(1),
             eager: false,
             plans: PlanCache::default(),
             scratch: PlanScratch::default(),
             eager_scratch: EagerScratch::default(),
         }
+    }
+
+    /// Builder: switch the planner to measured-cost kernel selection
+    /// (`serve.autotune` / `--autotune`). Only meaningful under the
+    /// `auto` backend — fixed backends and per-layer overrides never
+    /// probe.
+    pub fn autotuned(mut self, on: bool) -> Self {
+        self.autotune = on;
+        self
     }
 
     /// Eager reference engine (no plan compilation; separate bias/ReLU/
@@ -101,7 +123,11 @@ impl NativeEngine {
     }
 
     fn planner_cfg(&self) -> PlannerConfig {
-        PlannerConfig { backend: self.choice }
+        PlannerConfig {
+            backend: self.choice,
+            autotune: self.autotune,
+            ..PlannerConfig::default()
+        }
     }
 
     /// Number of compiled plans currently cached (one per batch size
@@ -110,11 +136,29 @@ impl NativeEngine {
         self.plans.len()
     }
 
+    /// Plan compilations performed so far (plan-cache misses). Serving
+    /// tests assert this stays flat after [`Engine::warmup`].
+    pub fn plan_compiles(&self) -> u64 {
+        self.plans.compiles()
+    }
+
+    /// Plan-cache hits (requests served without compiling).
+    pub fn plan_cache_hits(&self) -> u64 {
+        self.plans.hits()
+    }
+
+    /// Current plan-arena size in elements — steady-state inference at
+    /// a warmed bucket must never grow it (zero per-request
+    /// allocations).
+    pub fn arena_len(&self) -> usize {
+        self.scratch.capacity()
+    }
+
     /// The cached plan for `batch`, compiling (and caching) on first
     /// use.
     pub fn plan_for(&mut self, batch: usize) -> Result<&Plan> {
+        let cfg = self.planner_cfg();
         let model = &self.model;
-        let cfg = PlannerConfig { backend: self.choice };
         self.plans
             .get_or_compile(batch, || Plan::compile(model, batch, &cfg))
     }
@@ -135,11 +179,6 @@ impl Engine for NativeEngine {
     fn output_len(&self) -> usize {
         let (c, n) = self.model.out_shape();
         c * n
-    }
-
-    fn batch_buckets(&self) -> Vec<usize> {
-        // Native conv handles any batch; one bucket = no padding waste.
-        (1..=self.max_batch).collect()
     }
 
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
@@ -167,8 +206,8 @@ impl Engine for NativeEngine {
                 .forward_eager_into(x, batch, backend, &mut self.eager_scratch, y)?;
             return Ok(());
         }
+        let cfg = self.planner_cfg();
         let model = &self.model;
-        let cfg = PlannerConfig { backend: self.choice };
         let plan = self
             .plans
             .get_or_compile(batch, || Plan::compile(model, batch, &cfg))?;
@@ -176,9 +215,31 @@ impl Engine for NativeEngine {
         Ok(())
     }
 
+    /// Precompile one plan per configured batch bucket (running the
+    /// autotune probes now if enabled) and pre-grow the shared arena to
+    /// the largest plan, so the first request at any bucketed batch
+    /// size compiles nothing and allocates nothing. Buckets outside
+    /// `[1, max_batch]` are ignored.
+    fn warmup(&mut self, batch_buckets: &[usize]) -> Result<()> {
+        if self.eager {
+            return Ok(()); // the eager reference path has no plans
+        }
+        let mut arena = 0usize;
+        for &b in batch_buckets {
+            if b < 1 || b > self.max_batch {
+                continue;
+            }
+            let plan = self.plan_for(b)?;
+            arena = arena.max(plan.arena_len());
+        }
+        self.scratch.reserve(arena);
+        Ok(())
+    }
+
     fn name(&self) -> String {
         let mode = if self.eager { "eager" } else { "planned" };
-        format!("native/{mode}/{}", self.choice.name())
+        let tune = if self.autotune && !self.eager { "+tune" } else { "" };
+        format!("native/{mode}/{}{tune}", self.choice.name())
     }
 }
 
@@ -270,10 +331,6 @@ impl Engine for PjrtTcnEngine {
 
     fn output_len(&self) -> usize {
         self.c_out * self.seq_len
-    }
-
-    fn batch_buckets(&self) -> Vec<usize> {
-        self.buckets.clone()
     }
 
     fn infer(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {

@@ -27,7 +27,10 @@ use swsnn::runtime::{ArtifactRegistry, TensorView};
 use swsnn::workload::{dna_sequence, kmer_hashes, Rng};
 
 fn main() {
-    let args = parse_args(std::env::args().skip(1), &["quick", "pjrt", "help", "json"]);
+    let args = parse_args(
+        std::env::args().skip(1),
+        &["quick", "pjrt", "help", "json", "autotune"],
+    );
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -121,6 +124,8 @@ fn print_help() {
            selftest      cross-backend consistency check\n\n\
          common flags: --threads N (kernel worker-pool width), --quick (short bench),\n\
                        --json (also write bench_results/BENCH_<table>.json), --help\n\
+         serve flags:  --autotune (measure kernel choices per layer),\n\
+                       --buckets 1,8,32 (batch buckets precompiled at startup)\n\
          env: SWSNN_THREADS, SWSNN_SIMD=off|generic|sse2|avx2|neon, SWSNN_BENCH_QUICK, SWSNN_BENCH_JSON"
     );
 }
@@ -133,6 +138,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         FlagSpec { name: "backend", value: Some("name"), help: "native backend: auto (per-layer planner) or a fixed kernel" },
         FlagSpec { name: "threads", value: Some("n"), help: "kernel worker-pool threads (default: all cores)" },
         FlagSpec { name: "workers", value: Some("n"), help: "engine workers (default: serve.workers)" },
+        FlagSpec { name: "autotune", value: None, help: "micro-probe kernel choices per layer instead of the heuristic" },
+        FlagSpec { name: "buckets", value: Some("1,8,…"), help: "batch buckets precompiled at startup" },
         FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
         FlagSpec { name: "quick", value: None, help: "" },
     ];
@@ -163,31 +170,88 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
         let (mc, mut sc) = load_config(&text).map_err(anyhow::Error::msg)?;
         sc.workers = args.get_usize("workers", sc.workers).map_err(anyhow::Error::msg)?;
+        if args.has("autotune") {
+            sc.autotune = true;
+        }
+        if let Some(list) = args.get("buckets") {
+            let mut buckets = Vec::new();
+            for part in list.split(',') {
+                let b: usize = part.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("--buckets expects comma-separated batch sizes, got {part:?}")
+                })?;
+                anyhow::ensure!(b >= 1, "--buckets entries must be >= 1");
+                buckets.push(b);
+            }
+            sc.batch_buckets = buckets;
+        }
         // --threads (handled globally) wins; otherwise serve.threads > 0
         // pins the kernel pool width before the first forward pass.
         if args.get("threads").is_none() && sc.threads > 0 {
             swsnn::exec::set_global_threads(sc.threads);
         }
-        serve_cfg = sc;
-        let backend = BackendChoice::parse(&args.get_str("backend", serve_cfg.backend.name()))
+        let backend = BackendChoice::parse(&args.get_str("backend", sc.backend.name()))
             .ok_or_else(|| {
                 anyhow::anyhow!("unknown backend (try auto/sliding/im2col_gemm/direct/sliding_pair)")
             })?;
+        // Write the CLI-resolved backend back: `bucketed_execution` (the
+        // pad/warm-up gate) must see the backend actually served, not
+        // whatever the TOML said before `--backend` overrode it.
+        sc.backend = backend;
+        serve_cfg = sc;
         let mut rng = Rng::new(42);
         let model = Model::init(&mc, &mut rng)?;
         println!(
-            "model {} — {} layers, {} params, backend {}",
+            "model {} — {} layers, {} params, backend {}{}",
             mc.name,
             model.layer_count(),
             model.param_count(),
-            backend.name()
+            backend.name(),
+            if serve_cfg.autotune { " (autotuned)" } else { "" }
         );
         // Audit surface for the planner: print the per-layer kernel
-        // choices the serving plans will execute with.
-        let plan = Plan::compile(&model, 1, &PlannerConfig { backend })?;
+        // choices the serving plans will execute with (probing now also
+        // seeds the tune cache for the batch-1 bucket; other buckets
+        // probe during engine warm-up — the tune key includes batch).
+        let plan = Plan::compile(
+            &model,
+            1,
+            &PlannerConfig {
+                backend,
+                autotune: serve_cfg.autotune,
+                ..PlannerConfig::default()
+            },
+        )?;
         println!("plan (batch 1): {}", plan.describe());
+        for t in plan.tuning() {
+            if t.cached {
+                println!("  layer {}: {} (tune cache)", t.layer, t.chosen.name());
+            } else {
+                let probes: Vec<String> = t
+                    .probes
+                    .iter()
+                    .map(|p| format!("{}:{:.1}µs", p.kernel.name(), p.micros))
+                    .collect();
+                println!(
+                    "  layer {}: {} [{}]",
+                    t.layer,
+                    t.chosen.name(),
+                    probes.join(" ")
+                );
+            }
+        }
+        println!(
+            "precompiling batch sizes {:?} on {} worker(s){}",
+            serve_cfg.warmup_buckets(),
+            serve_cfg.workers.max(1),
+            if serve_cfg.bucketed_execution() {
+                " — batches pad to the next bucket"
+            } else {
+                " — other sizes compile lazily on first use"
+            }
+        );
         Coordinator::start_replicated(
-            NativeEngine::with_choice(model, backend, serve_cfg.max_batch),
+            NativeEngine::with_choice(model, backend, serve_cfg.max_batch)
+                .autotuned(serve_cfg.autotune),
             &serve_cfg,
         )?
     };

@@ -22,7 +22,9 @@ pub mod plan;
 
 pub use layers::{Layer, LayerOutput};
 pub use model::{EagerScratch, ForwardScratch, Model, TensorSpec};
-pub use plan::{Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig};
+pub use plan::{
+    LayerTune, Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig, ProbeResult, TuneCache,
+};
 
 #[cfg(test)]
 mod tests {

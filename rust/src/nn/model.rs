@@ -182,6 +182,7 @@ impl Model {
     ) -> Result<(usize, usize)> {
         let cfg = PlannerConfig {
             backend: BackendChoice::Fixed(backend),
+            ..PlannerConfig::default()
         };
         let plan = scratch
             .plans

@@ -10,19 +10,34 @@
 //!   [`PlanKernel`] from, in priority order: the layer's `backend =`
 //!   override in the model TOML, the deployment-level
 //!   [`BackendChoice::Fixed`] backend, or (under
-//!   [`BackendChoice::Auto`]) the shape-based cost model in
-//!   [`choose_kernel`]. The paper's crossover (sliding wins at large
-//!   filters, GEMM at small filters with fat channel reductions) is
-//!   what the cost model encodes; the `eager_vs_planned` bench prints
-//!   the chosen kernels next to throughput so the model stays auditable.
+//!   [`BackendChoice::Auto`]) either the shape-based cost model in
+//!   [`choose_kernel`] or — when [`PlannerConfig::autotune`] is set —
+//!   a **measured** choice: compile micro-probes every candidate kernel
+//!   (sliding / small_k / im2col+GEMM / direct) against the layer's
+//!   real shape and weights and picks the fastest, caching the result
+//!   in the process-wide [`TuneCache`] keyed by `(layer shape, SIMD
+//!   tier, executor threads)` so repeated compiles are free. The shape
+//!   heuristic was hand-fit to one machine; the probe makes the
+//!   crossover (sliding wins at large filters, GEMM at small filters
+//!   with fat channel reductions) portable across microarchitectures.
+//! * **Operator fusion** — a conv directly followed by a
+//!   non-overlapping pool (`stride ≥ w`, the common 2× down-sampling
+//!   case) fuses into a single arena pass when the conv runs the
+//!   sliding kernel: each worker computes one conv row into a small
+//!   cache-resident row buffer and folds the pool windows straight out
+//!   of it, so the full dense conv activation never round-trips through
+//!   the arena. Fused execution reuses the *exact* per-row conv kernel
+//!   and the *exact* non-overlapping fold of the unfused path, so it is
+//!   bit-identical to running the two steps separately.
 //! * **Arena layout** — one flat `Vec<f32>` holds every intermediate:
-//!   `[ act A | act B | residual tmp | im2col col ]`, with region sizes
-//!   (`act_len`, `tmp_len`, `col_len`) precomputed at compile time.
-//!   Step *i* reads one activation region and writes the other
-//!   (alternating; step 0 reads the request input, the last step writes
-//!   the caller's output buffer), so execution does no resizing, no
-//!   ping/pong `Vec` swaps, and — for all kernels except the
-//!   faithful-math `SlidingPair` — no allocation at all after warm-up.
+//!   `[ act A | act B | residual tmp | im2col col | fuse rows ]`, with
+//!   region sizes (`act_len`, `tmp_len`, `col_len`, `fuse_len`)
+//!   precomputed at compile time. Step *i* reads one activation region
+//!   and writes the other (alternating; step 0 reads the request input,
+//!   the last step writes the caller's output buffer), so execution
+//!   does no resizing, no ping/pong `Vec` swaps, and — for all kernels
+//!   except the faithful-math `SlidingPair` — no allocation at all
+//!   after warm-up.
 //! * **Fused epilogues** — bias is already part of the kernels'
 //!   accumulator seed; the ReLU tail and the residual skip-add ride the
 //!   kernels' destination writes as an [`Epilogue`] instead of separate
@@ -30,17 +45,24 @@
 //!
 //! [`Plan::run_into`] is bit-identical to the eager reference path
 //! ([`Model::forward_eager_into`]) for every fixed backend, thread
-//! count, and SIMD tier — enforced by `tests/plan_parity.rs`. The
-//! serving engines compile and cache plans keyed by batch size
-//! ([`crate::coordinator::NativeEngine`]); the eager
-//! [`Model::forward_into`] is itself a compile-then-run wrapper.
+//! count, and SIMD tier — enforced by `tests/plan_parity.rs` (which
+//! also pins autotuned and fused plans to the eager path with matching
+//! per-layer kernels). The serving engines compile and cache plans
+//! keyed by batch size ([`crate::coordinator::NativeEngine`]
+//! additionally precompiles a configured set of batch buckets at
+//! startup, so no request ever pays compile-or-probe latency); the
+//! eager [`Model::forward_into`] is itself a compile-then-run wrapper.
+
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::conv::{self, BackendChoice, Conv1dParams, ConvBackend};
-use crate::exec::Executor;
+use crate::exec::{Executor, PAR_MIN_FANOUT};
 use crate::ops::Epilogue;
-use crate::pool::{pool1d_with_into, Pool1dParams, PoolKind};
+use crate::pool::{pool1d_row_nonoverlap, pool1d_with_into, Pool1dParams, PoolKind};
+use crate::simd::SimdTier;
 
 use super::layers::{dense_forward, Layer};
 use super::Model;
@@ -63,6 +85,9 @@ pub enum PlanKernel {
     Gemm,
     /// Sliding-sum pooling.
     Pool,
+    /// Fused conv→pool step: sliding conv rows folded straight into the
+    /// non-overlapping pool output (one arena pass for two layers).
+    FusedSlidingPool,
 }
 
 impl PlanKernel {
@@ -75,25 +100,48 @@ impl PlanKernel {
             PlanKernel::SlidingPair => "sliding_pair",
             PlanKernel::Gemm => "gemm",
             PlanKernel::Pool => "pool",
+            PlanKernel::FusedSlidingPool => "sliding+pool",
         }
     }
 }
 
 /// Planner inputs beyond the model itself.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct PlannerConfig {
     /// Deployment-level backend selection (`--backend` /
     /// `serve.backend`); per-layer TOML overrides beat it either way.
     pub backend: BackendChoice,
+    /// Measured-cost kernel selection: when the decision falls to the
+    /// cost model (`Auto` backend, no per-layer override), micro-probe
+    /// every candidate kernel against the layer's real shape and
+    /// weights and pick the fastest instead of trusting the shape
+    /// heuristic. Probe results live in the global [`TuneCache`], so
+    /// repeated compiles of the same shape are free.
+    pub autotune: bool,
+    /// Plan-level conv→pool fusion: fold a non-overlapping pool
+    /// directly over its preceding sliding-conv rows (bit-identical to
+    /// the unfused plan; on by default).
+    pub fuse: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            backend: BackendChoice::default(),
+            autotune: false,
+            fuse: true,
+        }
+    }
 }
 
 /// One compiled layer step: resolved shapes + chosen kernel. The arena
 /// region a step reads/writes follows its position (alternating A/B;
 /// first reads the input, last writes the output), so the step itself
-/// only carries lengths.
+/// only carries lengths. A fused step covers two adjacent layers.
 #[derive(Clone, Debug)]
 struct Step {
-    /// Index into the model's layer stack (weight lookup + validation).
+    /// Index into the model's layer stack of the step's *first* layer
+    /// (weight lookup + validation).
     layer: usize,
     kernel: PlanKernel,
     op: StepOp,
@@ -109,29 +157,65 @@ enum StepOp {
     Residual { p: Conv1dParams },
     Pool { kind: PoolKind, p: Pool1dParams },
     Dense { feat: usize, out: usize, relu: bool },
+    /// Fused conv→pool pair: the pool folds straight over per-row conv
+    /// output buffers in the arena's fuse region.
+    ConvPool {
+        conv: Conv1dParams,
+        relu: bool,
+        kind: PoolKind,
+        pool: Pool1dParams,
+    },
 }
 
+/// Upper bound on concurrent row buffers for a fused conv→pool step —
+/// bounds the arena's fuse region to `FUSE_MAX_TASKS · n_conv` elements
+/// instead of the full dense conv activation.
+const FUSE_MAX_TASKS: usize = 16;
+
 /// The scratch a plan executes in: one flat arena
-/// `[act A | act B | tmp | col]`, grown once to the plan's precomputed
-/// size and recycled dirty across requests.
+/// `[act A | act B | tmp | col | fuse]`, grown once to the plan's
+/// precomputed size and recycled dirty across requests.
 #[derive(Clone, Debug, Default)]
 pub struct PlanScratch {
     arena: Vec<f32>,
 }
 
+impl PlanScratch {
+    /// Pre-grow the arena to `elems` (engine startup precompilation):
+    /// the first request then performs zero allocations.
+    pub fn reserve(&mut self, elems: usize) {
+        if self.arena.len() < elems {
+            self.arena.resize(elems, 0.0);
+        }
+    }
+
+    /// Current arena size in elements — the allocation-audit surface
+    /// (steady-state serving must never grow it).
+    pub fn capacity(&self) -> usize {
+        self.arena.len()
+    }
+}
+
 /// Keyed compile-once plan cache (tiny linear scan — one entry per
-/// batch bucket / backend pair). Shared by
-/// [`crate::coordinator::NativeEngine`] (keyed by batch size) and
+/// batch bucket / backend pair) with hit/compile counters so serving
+/// tests can assert that steady-state inference never compiles. Shared
+/// by [`crate::coordinator::NativeEngine`] (keyed by batch size) and
 /// [`super::ForwardScratch`](crate::nn::ForwardScratch) (keyed by
 /// batch + backend).
 #[derive(Clone, Debug)]
 pub struct PlanCache<K> {
     entries: Vec<(K, Plan)>,
+    hits: u64,
+    compiles: u64,
 }
 
 impl<K> Default for PlanCache<K> {
     fn default() -> Self {
-        Self { entries: Vec::new() }
+        Self {
+            entries: Vec::new(),
+            hits: 0,
+            compiles: 0,
+        }
     }
 }
 
@@ -143,9 +227,13 @@ impl<K: PartialEq + Copy> PlanCache<K> {
         compile: impl FnOnce() -> Result<Plan>,
     ) -> Result<&Plan> {
         let idx = match self.entries.iter().position(|(k, _)| *k == key) {
-            Some(i) => i,
+            Some(i) => {
+                self.hits += 1;
+                i
+            }
             None => {
                 self.entries.push((key, compile()?));
+                self.compiles += 1;
                 self.entries.len() - 1
             }
         };
@@ -160,6 +248,247 @@ impl<K: PartialEq + Copy> PlanCache<K> {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Lookups served from the cache (no compile).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Plan compilations performed (cache misses).
+    pub fn compiles(&self) -> u64 {
+        self.compiles
+    }
+}
+
+// ───────────────────────── measured cost model ────────────────────────
+
+/// One probed candidate: the kernel and its best measured wall time.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeResult {
+    pub kernel: PlanKernel,
+    /// Best-of-`PROBE_ITERS` wall time in microseconds.
+    pub micros: f64,
+}
+
+/// Per-layer autotune record kept on the compiled [`Plan`] so the
+/// heuristic-vs-measured decision stays auditable (the `e2e_serving`
+/// bench prints these next to throughput).
+#[derive(Clone, Debug)]
+pub struct LayerTune {
+    /// Model layer index the probe ran for.
+    pub layer: usize,
+    pub chosen: PlanKernel,
+    /// `true` when the choice came from the [`TuneCache`] (probes then
+    /// stay empty — the work happened in an earlier compile).
+    pub cached: bool,
+    pub probes: Vec<ProbeResult>,
+}
+
+/// Timed probe runs per candidate (after one untimed warm-up run); the
+/// minimum is taken — short kernels are noisy and min is the robust
+/// estimator for "how fast can this kernel go here".
+const PROBE_ITERS: usize = 3;
+
+/// Cache key for a probed decision. The shape captures everything the
+/// kernels' cost depends on (batch, channels, length, filter, stride,
+/// dilation, padding); the SIMD tier and executor width capture the
+/// machine configuration — forcing `SWSNN_SIMD=generic` or changing
+/// `--threads` re-probes rather than reusing a measurement taken under
+/// different kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct TuneKey {
+    shape: Conv1dParams,
+    tier: SimdTier,
+    threads: usize,
+}
+
+#[derive(Default)]
+struct TuneInner {
+    entries: Vec<(TuneKey, PlanKernel)>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Process-wide cache of measured kernel choices, keyed by
+/// `(layer shape, SIMD tier, executor threads)`. Shared across engines,
+/// batch buckets, and coordinator workers so each distinct shape is
+/// probed once per process no matter how many plans compile.
+#[derive(Default)]
+pub struct TuneCache {
+    inner: Mutex<TuneInner>,
+}
+
+impl TuneCache {
+    /// The process-wide cache.
+    pub fn global() -> &'static TuneCache {
+        static GLOBAL: OnceLock<TuneCache> = OnceLock::new();
+        GLOBAL.get_or_init(TuneCache::default)
+    }
+
+    fn lookup(&self, key: &TuneKey) -> Option<PlanKernel> {
+        let mut g = self.inner.lock().unwrap();
+        let found = g.entries.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        if found.is_some() {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+        }
+        found
+    }
+
+    /// Insert-or-get: the first inserted decision is canonical. Two
+    /// replicated workers can probe the same shape concurrently (both
+    /// miss `lookup`, then race here); the loser adopts the winner's
+    /// kernel instead of keeping its own measurement, so every worker's
+    /// plans execute the same kernels — identical requests stay
+    /// bit-identical across workers.
+    fn insert(&self, key: TuneKey, kernel: PlanKernel) -> PlanKernel {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, existing)) = g.entries.iter().find(|(k, _)| *k == key) {
+            return *existing;
+        }
+        g.entries.push((key, kernel));
+        kernel
+    }
+
+    /// Distinct probed decisions cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    /// Lookups that had to probe.
+    pub fn misses(&self) -> u64 {
+        self.inner.lock().unwrap().misses
+    }
+}
+
+/// Reused probe buffers (compile-time only — probing allocates once per
+/// compile, never on the request path).
+#[derive(Default)]
+struct ProbeScratch {
+    x: Vec<f32>,
+    y: Vec<f32>,
+    col: Vec<f32>,
+}
+
+impl ProbeScratch {
+    /// Size the buffers for one layer shape and fill the input with a
+    /// small deterministic non-zero pattern (denormals/zeros can skew
+    /// kernel timing).
+    fn fill(&mut self, p: &Conv1dParams) {
+        self.x.clear();
+        self.x
+            .extend((0..p.x_len()).map(|i| ((i % 29) as f32) * 0.0625 - 0.875));
+        self.y.resize(p.y_len(), 0.0);
+        self.col.resize(p.c_in * p.k * p.n_out(), 0.0);
+    }
+}
+
+/// Run every candidate kernel against the layer's real shape and
+/// weights; returns the measured times in candidate order.
+fn probe_candidates(
+    ex: &Executor,
+    w: &[f32],
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    scratch: &mut ProbeScratch,
+) -> Result<Vec<ProbeResult>> {
+    let mut cands = vec![PlanKernel::Sliding];
+    if conv::small_k_qualifies(p) {
+        cands.push(PlanKernel::SmallK);
+    }
+    cands.push(PlanKernel::Im2col);
+    cands.push(PlanKernel::Direct);
+    scratch.fill(p);
+    let mut out = Vec::with_capacity(cands.len());
+    for kernel in cands {
+        // Untimed warm-up: fault in buffers, settle the dispatch.
+        run_conv(
+            ex,
+            kernel,
+            &scratch.x,
+            w,
+            bias,
+            p,
+            Epilogue::None,
+            &mut scratch.col,
+            &mut scratch.y,
+        )?;
+        let mut best = f64::INFINITY;
+        for _ in 0..PROBE_ITERS {
+            let t0 = Instant::now();
+            run_conv(
+                ex,
+                kernel,
+                &scratch.x,
+                w,
+                bias,
+                p,
+                Epilogue::None,
+                &mut scratch.col,
+                &mut scratch.y,
+            )?;
+            best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        out.push(ProbeResult { kernel, micros: best });
+    }
+    Ok(out)
+}
+
+/// Measured kernel choice for one layer: consult the [`TuneCache`],
+/// probe on a miss, record the decision on the plan's tune log either
+/// way.
+fn measured_kernel(
+    ex: &Executor,
+    layer: usize,
+    p: &Conv1dParams,
+    w: &[f32],
+    bias: Option<&[f32]>,
+    probe: &mut ProbeScratch,
+    tunes: &mut Vec<LayerTune>,
+) -> Result<PlanKernel> {
+    let key = TuneKey {
+        shape: *p,
+        tier: crate::simd::tier(),
+        threads: ex.threads(),
+    };
+    if let Some(kernel) = TuneCache::global().lookup(&key) {
+        tunes.push(LayerTune {
+            layer,
+            chosen: kernel,
+            cached: true,
+            probes: Vec::new(),
+        });
+        return Ok(kernel);
+    }
+    let probes = probe_candidates(ex, w, bias, p, probe)?;
+    let mut chosen = probes[0];
+    for pr in &probes[1..] {
+        // Strict `<`: ties keep the earlier candidate (sliding first —
+        // the paper's kernel wins the coin flips).
+        if pr.micros < chosen.micros {
+            chosen = *pr;
+        }
+    }
+    // The cache's first writer wins: adopt whatever it returns so
+    // concurrently probing workers all run the same kernel.
+    let canonical = TuneCache::global().insert(key, chosen.kernel);
+    tunes.push(LayerTune {
+        layer,
+        chosen: canonical,
+        cached: false,
+        probes,
+    });
+    Ok(canonical)
 }
 
 /// A compiled execution plan for one `(model, batch)` pair. Cheap to
@@ -169,15 +498,24 @@ impl<K: PartialEq + Copy> PlanCache<K> {
 pub struct Plan {
     batch: usize,
     steps: Vec<Step>,
+    /// Model layer count the plan was compiled from (≥ `steps.len()`;
+    /// fusion folds adjacent layers into one step).
+    n_layers: usize,
     /// Elements per activation ping/pong region (max intermediate).
     act_len: usize,
     /// Elements for the residual intermediate region.
     tmp_len: usize,
     /// Elements for the im2col column region (largest im2col layer).
     col_len: usize,
+    /// Elements for the fused conv→pool row buffers (largest fused
+    /// step; zero when nothing fused).
+    fuse_len: usize,
     in_len: usize,
     out_c: usize,
     out_n: usize,
+    /// Autotune audit log (empty unless compiled with
+    /// [`PlannerConfig::autotune`]).
+    tunes: Vec<LayerTune>,
 }
 
 /// Shape-based kernel choice for a conv-shaped layer under `Auto`.
@@ -194,6 +532,11 @@ pub struct Plan {
 ///   cheap;
 /// * the sliding kernel everywhere else (large filters, thin channel
 ///   counts, dilated stacks — the shapes the paper shows it winning).
+///
+/// These boundaries were hand-fit to one machine; the measured mode
+/// ([`PlannerConfig::autotune`]) exists because they do not transfer.
+/// The heuristic stays as the probe-free default and its boundaries are
+/// pinned by unit tests so autotune work cannot silently shift them.
 pub fn choose_kernel(p: &Conv1dParams) -> PlanKernel {
     if conv::small_k_qualifies(p) {
         PlanKernel::SmallK
@@ -213,9 +556,37 @@ fn kernel_for_backend(b: ConvBackend) -> PlanKernel {
     }
 }
 
+/// Kernel choice for one conv-shaped layer. Priority: per-layer TOML
+/// override > fixed deployment backend > measured probe (autotune) >
+/// shape heuristic.
+#[allow(clippy::too_many_arguments)]
+fn select_kernel(
+    model: &Model,
+    cfg: &PlannerConfig,
+    layer: usize,
+    p: &Conv1dParams,
+    w: &[f32],
+    bias: Option<&[f32]>,
+    ex: &Executor,
+    probe: &mut ProbeScratch,
+    tunes: &mut Vec<LayerTune>,
+) -> Result<PlanKernel> {
+    Ok(match model.backend_override(layer) {
+        Some(b) => kernel_for_backend(b),
+        None => match cfg.backend {
+            BackendChoice::Fixed(b) => kernel_for_backend(b),
+            BackendChoice::Auto if cfg.autotune => {
+                measured_kernel(ex, layer, p, w, bias, probe, tunes)?
+            }
+            BackendChoice::Auto => choose_kernel(p),
+        },
+    })
+}
+
 impl Plan {
     /// Compile the model for one batch size. Runs once per batch bucket;
-    /// everything shape- or choice-dependent happens here.
+    /// everything shape- or choice-dependent happens here — including
+    /// the autotune probes and the conv→pool fusion pass.
     pub fn compile(model: &Model, batch: usize, cfg: &PlannerConfig) -> Result<Plan> {
         ensure!(batch >= 1, "plan batch must be >= 1");
         ensure!(
@@ -223,21 +594,19 @@ impl Plan {
             "cannot compile a plan for an empty model"
         );
         let nlayers = model.layer_count();
+        let layers = model.layers();
+        let ex = Executor::global();
         let (mut c, mut n) = (model.c_in, model.seq_len);
         let mut steps = Vec::with_capacity(nlayers);
-        let (mut act_len, mut tmp_len, mut col_len) = (0usize, 0usize, 0usize);
-        for (i, layer) in model.layers().iter().enumerate() {
+        let (mut act_len, mut tmp_len) = (0usize, 0usize);
+        let (mut col_len, mut fuse_len) = (0usize, 0usize);
+        let mut tunes: Vec<LayerTune> = Vec::new();
+        let mut probe = ProbeScratch::default();
+        let mut i = 0usize;
+        while i < nlayers {
+            let layer = &layers[i];
             let in_len = batch * c * n;
-            // Priority: per-layer TOML override > fixed deployment
-            // backend > cost model.
-            let pick = |p: &Conv1dParams| match model.backend_override(i) {
-                Some(b) => kernel_for_backend(b),
-                None => match cfg.backend {
-                    BackendChoice::Fixed(b) => kernel_for_backend(b),
-                    BackendChoice::Auto => choose_kernel(p),
-                },
-            };
-            let (kernel, op) = match layer {
+            let (mut kernel, mut op) = match layer {
                 Layer::Conv {
                     c_in,
                     c_out,
@@ -246,7 +615,8 @@ impl Plan {
                     dilation,
                     same_pad,
                     relu,
-                    ..
+                    w,
+                    b,
                 } => {
                     ensure!(c == *c_in, "layer {i}: conv input channels");
                     let mut p = Conv1dParams::new(*c_in, *c_out, n, *k)
@@ -256,19 +626,28 @@ impl Plan {
                     if *same_pad {
                         p = p.with_same_pad();
                     }
-                    let kernel = pick(&p);
+                    let kernel =
+                        select_kernel(model, cfg, i, &p, w, Some(b), ex, &mut probe, &mut tunes)?;
                     if kernel == PlanKernel::Im2col {
                         col_len = col_len.max(p.c_in * p.k * p.n_out());
                     }
                     (kernel, StepOp::Conv { p, relu: *relu })
                 }
-                Layer::Residual { c: cr, k, dilation, .. } => {
+                Layer::Residual {
+                    c: cr,
+                    k,
+                    dilation,
+                    w1,
+                    b1,
+                    ..
+                } => {
                     ensure!(c == *cr, "layer {i}: residual channels");
                     let p = Conv1dParams::new(*cr, *cr, n, *k)
                         .with_batch(batch)
                         .with_dilation(*dilation)
                         .with_same_pad();
-                    let kernel = pick(&p);
+                    let kernel =
+                        select_kernel(model, cfg, i, &p, w1, Some(b1), ex, &mut probe, &mut tunes)?;
                     if kernel == PlanKernel::Im2col {
                         col_len = col_len.max(p.c_in * p.k * p.n_out());
                     }
@@ -296,10 +675,54 @@ impl Plan {
                     )
                 }
             };
-            let (c2, n2) = layer.out_shape(c, n);
+            let (mut c2, mut n2) = layer.out_shape(c, n);
             ensure!(n2 > 0, "layer {i} produces empty output (c={c}, n={n})");
+            let mut consumed = 1usize;
+            // Fusion pass: a sliding conv directly feeding a
+            // non-overlapping pool (`stride ≥ w`, stride > 1, valid
+            // boundary — the plan's pools are always valid-mode) folds
+            // into one step. Restricted to the sliding kernel because
+            // the fused executor reuses its per-row body verbatim.
+            if cfg.fuse && kernel == PlanKernel::Sliding && i + 1 < nlayers {
+                let conv_info = match &op {
+                    StepOp::Conv { p, relu } => Some((*p, *relu)),
+                    _ => None,
+                };
+                if let Some((cp, relu)) = conv_info {
+                    if let Layer::Pool {
+                        kind,
+                        w: pw,
+                        stride: ps,
+                    } = &layers[i + 1]
+                    {
+                        if *ps > 1 && *ps >= *pw {
+                            let pool_p = Pool1dParams::new(c2, n2, *pw)
+                                .with_batch(batch)
+                                .with_stride(*ps);
+                            let (c3, n3) = layers[i + 1].out_shape(c2, n2);
+                            ensure!(
+                                n3 > 0,
+                                "layer {} produces empty output (c={c2}, n={n2})",
+                                i + 1
+                            );
+                            let rows = batch * cp.c_out;
+                            fuse_len = fuse_len.max(rows.min(FUSE_MAX_TASKS) * cp.n_out());
+                            kernel = PlanKernel::FusedSlidingPool;
+                            op = StepOp::ConvPool {
+                                conv: cp,
+                                relu,
+                                kind: *kind,
+                                pool: pool_p,
+                            };
+                            c2 = c3;
+                            n2 = n3;
+                            consumed = 2;
+                        }
+                    }
+                }
+            }
             let out_len = batch * c2 * n2;
-            if i + 1 < nlayers {
+            if i + consumed < nlayers {
                 act_len = act_len.max(out_len);
             }
             steps.push(Step {
@@ -311,16 +734,20 @@ impl Plan {
             });
             c = c2;
             n = n2;
+            i += consumed;
         }
         Ok(Plan {
             batch,
             steps,
+            n_layers: nlayers,
             act_len,
             tmp_len,
             col_len,
+            fuse_len,
             in_len: batch * model.c_in * model.seq_len,
             out_c: c,
             out_n: n,
+            tunes,
         })
     }
 
@@ -329,18 +756,51 @@ impl Plan {
         self.batch
     }
 
-    /// Total arena elements: `2·act + tmp + col`.
+    /// Total arena elements: `2·act + tmp + col + fuse`.
     pub fn arena_len(&self) -> usize {
-        2 * self.act_len + self.tmp_len + self.col_len
+        2 * self.act_len + self.tmp_len + self.col_len + self.fuse_len
     }
 
-    /// The chosen kernel per layer (cost-model audit surface).
+    /// The chosen kernel per *step* (fused steps appear once).
     pub fn kernels(&self) -> Vec<PlanKernel> {
         self.steps.iter().map(|s| s.kernel).collect()
     }
 
+    /// The chosen kernel per *model layer*, expanding fused steps back
+    /// to their constituent layers — the audit surface parity tests map
+    /// onto eager per-layer backend overrides.
+    pub fn layer_kernels(&self) -> Vec<PlanKernel> {
+        let mut out = Vec::with_capacity(self.n_layers);
+        for s in &self.steps {
+            match s.kernel {
+                PlanKernel::FusedSlidingPool => {
+                    out.push(PlanKernel::Sliding);
+                    out.push(PlanKernel::Pool);
+                }
+                k => out.push(k),
+            }
+        }
+        out
+    }
+
+    /// Number of fused conv→pool steps in the plan.
+    pub fn fused_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| s.kernel == PlanKernel::FusedSlidingPool)
+            .count()
+    }
+
+    /// Autotune audit log: one entry per probed (or cache-served)
+    /// conv-shaped layer; empty for heuristic/fixed plans.
+    pub fn tuning(&self) -> &[LayerTune] {
+        &self.tunes
+    }
+
     /// Human-readable per-layer choices, e.g.
-    /// `conv(k=7,c8)→sliding | pool(max)→pool | dense(4)→gemm`.
+    /// `conv(k=7,c8)→sliding | pool(max)→pool | dense(4)→gemm`; fused
+    /// steps print both layers:
+    /// `conv(k=7,c8)+pool(max,w=2)→sliding+pool`.
     pub fn describe(&self) -> String {
         let parts: Vec<String> = self
             .steps
@@ -351,6 +811,13 @@ impl Plan {
                     StepOp::Residual { p } => format!("residual(k={},d={})", p.k, p.dilation),
                     StepOp::Pool { kind, p } => format!("pool({},w={})", kind.name(), p.w),
                     StepOp::Dense { out, .. } => format!("dense({out})"),
+                    StepOp::ConvPool { conv, kind, pool, .. } => format!(
+                        "conv(k={},c{})+pool({},w={})",
+                        conv.k,
+                        conv.c_out,
+                        kind.name(),
+                        pool.w
+                    ),
                 };
                 format!("{shape}→{}", s.kernel.name())
             })
@@ -385,9 +852,9 @@ impl Plan {
         out: &mut Vec<f32>,
     ) -> Result<(usize, usize)> {
         ensure!(
-            model.layer_count() == self.steps.len(),
+            model.layer_count() == self.n_layers,
             "plan compiled for a different model (layer count {} vs {})",
-            self.steps.len(),
+            self.n_layers,
             model.layer_count()
         );
         ensure!(
@@ -407,7 +874,8 @@ impl Plan {
         out.resize(self.batch * self.out_c * self.out_n, 0.0);
         let (reg_a, rest) = scratch.arena.split_at_mut(self.act_len);
         let (reg_b, rest) = rest.split_at_mut(self.act_len);
-        let (tmp_reg, col_reg) = rest.split_at_mut(self.tmp_len);
+        let (tmp_reg, rest) = rest.split_at_mut(self.tmp_len);
+        let (col_reg, fuse_reg) = rest.split_at_mut(self.col_len);
         // The activation regions alternate roles per step; the first
         // step reads the request input, the last writes `out`.
         let mut reg_src: &mut [f32] = reg_b;
@@ -421,7 +889,7 @@ impl Plan {
                 } else {
                     &mut reg_dst[..step.out_len]
                 };
-                exec_step(ex, model, step, src, dst, tmp_reg, col_reg)?;
+                exec_step(ex, model, step, src, dst, tmp_reg, col_reg, fuse_reg)?;
             }
             std::mem::swap(&mut reg_src, &mut reg_dst);
         }
@@ -430,8 +898,9 @@ impl Plan {
 }
 
 /// Run one compiled step. `src`/`dst` are the step's activation views
-/// (disjoint by the arena layout); `tmp`/`col` are the shared residual
-/// and im2col regions.
+/// (disjoint by the arena layout); `tmp`/`col`/`fuse` are the shared
+/// residual, im2col, and fused-row regions.
+#[allow(clippy::too_many_arguments)]
 fn exec_step(
     ex: &Executor,
     model: &Model,
@@ -440,6 +909,7 @@ fn exec_step(
     dst: &mut [f32],
     tmp: &mut [f32],
     col: &mut [f32],
+    fuse: &mut [f32],
 ) -> Result<()> {
     let layer = &model.layers()[step.layer];
     match (&step.op, layer) {
@@ -470,11 +940,89 @@ fn exec_step(
             dense_forward(ex, src, w, b, step.in_len / feat, *feat, *out, *relu, dst);
             Ok(())
         }
+        (
+            StepOp::ConvPool {
+                conv: cp,
+                relu,
+                kind,
+                pool,
+            },
+            Layer::Conv { w, b, .. },
+        ) => {
+            let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+            run_fused_conv_pool(ex, src, w, Some(b), cp, epi, *kind, pool, fuse, dst);
+            Ok(())
+        }
         _ => bail!(
             "plan step {} does not match the model's layer kind",
             step.layer
         ),
     }
+}
+
+/// Execute a fused conv→pool step: every `(batch, c_out)` conv row is
+/// computed into a cache-resident row buffer from the arena's fuse
+/// region (by the *same* per-row body the unfused sliding kernel runs —
+/// [`conv::conv1d_sliding_row_into`]) and the non-overlapping pool
+/// windows fold straight out of it (by the *same* fold the unfused pool
+/// runs — [`pool1d_row_nonoverlap`]); the dense conv activation never
+/// materializes. Workers own disjoint row buffers and write disjoint
+/// pool-output row chunks, and per-row values do not depend on the
+/// partitioning, so results are bit-identical to the two-step plan for
+/// every thread count.
+#[allow(clippy::too_many_arguments)]
+fn run_fused_conv_pool(
+    ex: &Executor,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    cp: &Conv1dParams,
+    epi: Epilogue<'_>,
+    kind: PoolKind,
+    pp: &Pool1dParams,
+    fuse: &mut [f32],
+    dst: &mut [f32],
+) {
+    let n_conv = cp.n_out();
+    let n_pool = pp.n_out();
+    let rows = cp.batch * cp.c_out;
+    debug_assert_eq!(dst.len(), rows * n_pool, "fused dst length");
+    debug_assert_eq!(pp.n, n_conv, "pool reads the conv row");
+    let tasks = rows.min(FUSE_MAX_TASKS);
+    let fuse = &mut fuse[..tasks * n_conv];
+    if ex.threads() <= 1 || tasks <= 1 || rows * n_conv < PAR_MIN_FANOUT {
+        let buf = &mut fuse[..n_conv];
+        for (r, drow) in dst.chunks_mut(n_pool).enumerate() {
+            conv::conv1d_sliding_row_into(buf, r, x, w, bias, cp, epi);
+            pool1d_row_nonoverlap(kind, buf, pp, drow);
+        }
+        return;
+    }
+    // Balanced contiguous row chunks: every one of the `tasks` row
+    // buffers gets a job, with chunk sizes differing by at most one row
+    // (`ceil(remaining / tasks_left)` per step), so e.g. 18 rows over
+    // 16 buffers run as 16 jobs of 1–2 rows, not 9 jobs of 2.
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
+    let mut rest = dst;
+    let mut bufs = fuse.chunks_mut(n_conv);
+    let mut r0 = 0usize;
+    for ti in 0..tasks {
+        let take = (rows - r0).div_ceil(tasks - ti);
+        // Move the remainder out of the loop variable so the split's
+        // halves inherit the full arena lifetime.
+        let rem = rest;
+        let (dchunk, tail) = rem.split_at_mut(take * n_pool);
+        rest = tail;
+        let buf = bufs.next().expect("one row buffer per task");
+        jobs.push(Box::new(move || {
+            for (j, drow) in dchunk.chunks_mut(n_pool).enumerate() {
+                conv::conv1d_sliding_row_into(buf, r0 + j, x, w, bias, cp, epi);
+                pool1d_row_nonoverlap(kind, buf, pp, drow);
+            }
+        }));
+        r0 += take;
+    }
+    ex.scope(jobs);
 }
 
 /// Dispatch a conv-shaped step to its chosen kernel, epilogue fused.
@@ -508,7 +1056,7 @@ fn run_conv(
             y.copy_from_slice(&v);
             epi.apply(y, 0);
         }
-        PlanKernel::Gemm | PlanKernel::Pool => {
+        PlanKernel::Gemm | PlanKernel::Pool | PlanKernel::FusedSlidingPool => {
             bail!("non-conv kernel {} in a conv step", kernel.name())
         }
     }
@@ -558,9 +1106,12 @@ out = 3
         let m = model();
         let plan = Plan::compile(&m, 4, &PlannerConfig::default()).unwrap();
         assert_eq!(plan.batch(), 4);
+        // The pool follows a residual, not a conv, so nothing fuses.
         assert_eq!(plan.kernels().len(), 4);
+        assert_eq!(plan.fused_steps(), 0);
         assert_eq!(plan.kernels()[2], PlanKernel::Pool);
         assert_eq!(plan.kernels()[3], PlanKernel::Gemm);
+        assert_eq!(plan.layer_kernels(), plan.kernels());
         assert!(plan.arena_len() > 0);
         assert!(plan.describe().contains("dense(3)→gemm"), "{}", plan.describe());
     }
@@ -570,6 +1121,7 @@ out = 3
         let m = model();
         let cfg = PlannerConfig {
             backend: BackendChoice::Fixed(ConvBackend::Im2colGemm),
+            ..PlannerConfig::default()
         };
         let plan = Plan::compile(&m, 1, &cfg).unwrap();
         assert_eq!(plan.kernels()[0], PlanKernel::Im2col);
@@ -586,6 +1138,7 @@ out = 3
             let want = m.forward(&x, batch, ConvBackend::Sliding).unwrap();
             let cfg = PlannerConfig {
                 backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                ..PlannerConfig::default()
             };
             let plan = Plan::compile(&m, batch, &cfg).unwrap();
             let mut scratch = PlanScratch::default();
@@ -619,5 +1172,248 @@ out = 3
         // Same reduction but dilated far → sliding again.
         let p = Conv1dParams::new(16, 32, 1024, 3).with_dilation(8).with_same_pad();
         assert_eq!(choose_kernel(&p), PlanKernel::Sliding);
+    }
+
+    /// Pin every decision boundary of the shape heuristic so the
+    /// autotuner can evolve without silently shifting the probe-free
+    /// fallback (`c_out ≥ 8`, `c_in·k ≥ 48`, `eff_k ≤ 9`, small-k
+    /// qualification).
+    #[test]
+    fn choose_kernel_decision_boundaries_pinned() {
+        let base = |c_in: usize, c_out: usize, k: usize| Conv1dParams::new(c_in, c_out, 4096, k);
+        // c_in·k = 48 exactly, c_out = 8 exactly, eff_k = 3 → im2col.
+        assert_eq!(choose_kernel(&base(16, 8, 3)), PlanKernel::Im2col);
+        // One below the c_out boundary.
+        assert_eq!(choose_kernel(&base(16, 7, 3)), PlanKernel::Sliding);
+        // One below the reduction boundary (45 < 48).
+        assert_eq!(choose_kernel(&base(15, 8, 3)), PlanKernel::Sliding);
+        // eff_k = 9 exactly still qualifies (6·9 = 54 ≥ 48).
+        assert_eq!(choose_kernel(&base(6, 8, 9)), PlanKernel::Im2col);
+        // eff_k = 10 does not.
+        assert_eq!(choose_kernel(&base(6, 8, 10)), PlanKernel::Sliding);
+        // Dilation pushes the receptive field over the boundary:
+        // (3−1)·4+1 = 9 qualifies, (3−1)·5+1 = 11 does not.
+        assert_eq!(
+            choose_kernel(&base(16, 8, 3).with_dilation(4)),
+            PlanKernel::Im2col
+        );
+        assert_eq!(
+            choose_kernel(&base(16, 8, 3).with_dilation(5)),
+            PlanKernel::Sliding
+        );
+        // Small-k qualification: single channel, unit stride/dilation,
+        // no padding, k ∈ {3, 5}.
+        assert_eq!(choose_kernel(&base(1, 1, 5)), PlanKernel::SmallK);
+        assert_eq!(choose_kernel(&base(1, 1, 7)), PlanKernel::Sliding);
+        assert_eq!(
+            choose_kernel(&base(1, 1, 3).with_stride(2)),
+            PlanKernel::Sliding
+        );
+        assert_eq!(
+            choose_kernel(&base(1, 1, 3).with_dilation(2)),
+            PlanKernel::Sliding
+        );
+        assert_eq!(
+            choose_kernel(&base(1, 1, 3).with_same_pad()),
+            PlanKernel::Sliding
+        );
+        assert_eq!(choose_kernel(&base(2, 1, 3)), PlanKernel::Sliding);
+    }
+
+    #[test]
+    fn conv_pool_fusion_fuses_nonoverlapping_only() {
+        const FUSE_CFG: &str = r#"
+[model]
+name = "fuse_t"
+c_in = 1
+seq_len = 96
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 5
+
+[layer.1]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.2]
+type = "conv"
+c_out = 4
+k = 3
+
+[layer.3]
+type = "pool"
+kind = "avg"
+w = 3
+stride = 2
+"#;
+        let (mc, _) = load_config(FUSE_CFG).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(5)).unwrap();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..PlannerConfig::default()
+        };
+        let plan = Plan::compile(&m, 2, &cfg).unwrap();
+        // Layer 0+1 fuse (stride ≥ w); layer 2+3 must not (overlapping
+        // windows, stride < w, go through the dense sliding pass).
+        assert_eq!(plan.fused_steps(), 1, "{}", plan.describe());
+        assert_eq!(
+            plan.kernels(),
+            vec![
+                PlanKernel::FusedSlidingPool,
+                PlanKernel::Sliding,
+                PlanKernel::Pool
+            ],
+            "{}",
+            plan.describe()
+        );
+        assert_eq!(
+            plan.layer_kernels(),
+            vec![
+                PlanKernel::Sliding,
+                PlanKernel::Pool,
+                PlanKernel::Sliding,
+                PlanKernel::Pool
+            ]
+        );
+        assert!(plan.fuse_len > 0, "fused step reserves row buffers");
+        assert!(plan.describe().contains("+pool(max,w=2)→sliding+pool"), "{}", plan.describe());
+
+        // Fusion off → one step per layer, no fuse region.
+        let unfused = Plan::compile(
+            &m,
+            2,
+            &PlannerConfig {
+                fuse: false,
+                ..cfg
+            },
+        )
+        .unwrap();
+        assert_eq!(unfused.fused_steps(), 0);
+        assert_eq!(unfused.kernels().len(), 4);
+        assert_eq!(unfused.fuse_len, 0);
+
+        // Fused and unfused runs are bit-identical (and match eager).
+        let mut rng = Rng::new(11);
+        let x = rng.vec_uniform(2 * 96, -1.0, 1.0);
+        let mut scratch = PlanScratch::default();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        plan.run_into(&m, &x, &mut scratch, &mut a).unwrap();
+        unfused.run_into(&m, &x, &mut scratch, &mut b).unwrap();
+        assert_eq!(a, b, "fused plan diverged from unfused plan");
+        let want = m.forward(&x, 2, ConvBackend::Sliding).unwrap();
+        assert_eq!(a, want.data, "fused plan diverged from forward");
+    }
+
+    #[test]
+    fn fixed_non_sliding_backends_do_not_fuse() {
+        const CFG2: &str = r#"
+[model]
+name = "nofuse"
+c_in = 1
+seq_len = 64
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 3
+
+[layer.1]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+"#;
+        let (mc, _) = load_config(CFG2).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(3)).unwrap();
+        for backend in [ConvBackend::Im2colGemm, ConvBackend::Direct] {
+            let plan = Plan::compile(
+                &m,
+                1,
+                &PlannerConfig {
+                    backend: BackendChoice::Fixed(backend),
+                    ..PlannerConfig::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(plan.fused_steps(), 0, "{backend:?}");
+            assert_eq!(plan.kernels().len(), 2, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn autotune_records_probes_and_hits_cache_on_recompile() {
+        let m = model();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Auto,
+            autotune: true,
+            ..PlannerConfig::default()
+        };
+        // Uncommon batch so other tests cannot have pre-seeded the keys.
+        let plan = Plan::compile(&m, 6, &cfg).unwrap();
+        // Two conv-shaped layers (conv + residual) → two tune records.
+        assert_eq!(plan.tuning().len(), 2);
+        for t in plan.tuning() {
+            if !t.cached {
+                assert!(
+                    t.probes.len() >= 3,
+                    "probes cover sliding/im2col/direct at least: {t:?}"
+                );
+                assert!(t.probes.iter().any(|p| p.kernel == t.chosen));
+                assert!(t.probes.iter().all(|p| p.micros.is_finite()));
+            }
+        }
+        // Recompiling the same shapes is served from the TuneCache.
+        let again = Plan::compile(&m, 6, &cfg).unwrap();
+        assert!(
+            again.tuning().iter().all(|t| t.cached),
+            "second compile re-probed: {:?}",
+            again.tuning()
+        );
+        assert_eq!(
+            plan.tuning().iter().map(|t| t.chosen).collect::<Vec<_>>(),
+            again.tuning().iter().map(|t| t.chosen).collect::<Vec<_>>(),
+            "cache returned a different decision"
+        );
+        // Autotuned plans execute like any other plan.
+        let mut rng = Rng::new(13);
+        let x = rng.vec_uniform(6 * 64, -1.0, 1.0);
+        let mut out = Vec::new();
+        plan.run_into(&m, &x, &mut PlanScratch::default(), &mut out)
+            .unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn per_layer_override_bypasses_autotune() {
+        const CFG3: &str = r#"
+[model]
+name = "pinned"
+c_in = 1
+seq_len = 48
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 5
+backend = "direct"
+"#;
+        let (mc, _) = load_config(CFG3).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(2)).unwrap();
+        let plan = Plan::compile(
+            &m,
+            1,
+            &PlannerConfig {
+                backend: BackendChoice::Auto,
+                autotune: true,
+                ..PlannerConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(plan.kernels(), vec![PlanKernel::Direct]);
+        assert!(plan.tuning().is_empty(), "override must not probe");
     }
 }

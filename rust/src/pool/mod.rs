@@ -188,8 +188,16 @@ fn pool1d_row(
 /// Non-overlapping strided pooling: each output folds its window's
 /// elements in ascending order (the naive-sweep order, so values match
 /// [`pool1d_naive`] exactly for max/min and up to the usual FP identity
-/// for avg). No scratch, no allocation.
-fn pool1d_row_nonoverlap(kind: PoolKind, xrow: &[f32], p: &Pool1dParams, yrow: &mut [f32]) {
+/// for avg). No scratch, no allocation. Crate-visible because the
+/// execution plan's fused conv→pool step folds with exactly this
+/// routine — reusing it (rather than reimplementing the fold) is what
+/// keeps fused and unfused pooling bit-identical.
+pub(crate) fn pool1d_row_nonoverlap(
+    kind: PoolKind,
+    xrow: &[f32],
+    p: &Pool1dParams,
+    yrow: &mut [f32],
+) {
     let inv = 1.0 / p.w as f32;
     for (t, v) in yrow.iter_mut().enumerate() {
         let win = &xrow[t * p.stride..][..p.w];

@@ -78,6 +78,171 @@ fn engine_caches_one_plan_per_batch_size() {
     }
 }
 
+/// Startup batch-bucket precompilation: after `warmup` with buckets
+/// [1, 8, 32], steady-state inference at those batch sizes is served
+/// entirely from the plan cache (zero compiles — the compile counter
+/// stays flat) and never regrows the plan arena (zero per-request
+/// allocations in the plan layer).
+#[test]
+fn warmup_precompiles_buckets_and_steady_state_never_compiles() {
+    let (mc, _) = load_config(CFG).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(1)).unwrap();
+    let mut engine = NativeEngine::with_choice(model, swsnn::conv::BackendChoice::Auto, 32);
+    assert_eq!(engine.plan_compiles(), 0);
+    engine.warmup(&[1, 8, 32]).unwrap();
+    assert_eq!(engine.cached_plans(), 3, "one plan per configured bucket");
+    assert_eq!(engine.plan_compiles(), 3);
+    let arena = engine.arena_len();
+    assert!(arena > 0, "warm-up pre-grows the plan arena");
+
+    let mut rng = Rng::new(41);
+    let mut y = Vec::new();
+    for batch in [1usize, 8, 32, 8, 1, 32] {
+        let x = rng.vec_uniform(batch * 32, -1.0, 1.0);
+        engine.infer_into(&x, batch, &mut y).unwrap();
+        assert_eq!(y.len(), batch * 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(
+        engine.plan_compiles(),
+        3,
+        "steady-state inference at a warmed bucket compiled a plan"
+    );
+    assert_eq!(engine.cached_plans(), 3);
+    assert!(engine.plan_cache_hits() >= 6, "requests must hit the cache");
+    assert_eq!(
+        engine.arena_len(),
+        arena,
+        "steady-state inference at a warmed bucket grew the arena"
+    );
+
+    // Out-of-range buckets are ignored, not errors; repeats are free.
+    engine.warmup(&[0, 8, 64]).unwrap();
+    assert_eq!(engine.cached_plans(), 3);
+    assert_eq!(engine.plan_compiles(), 3);
+}
+
+/// The coordinator wires `serve.batch_buckets` through to every worker's
+/// engine warm-up at startup (replicated engines included) and serving
+/// behaves normally afterwards.
+#[test]
+fn coordinator_startup_warms_configured_buckets() {
+    let serve = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 500,
+        workers: 2,
+        batch_buckets: vec![1, 4, 8],
+        ..Default::default()
+    };
+    let (mc, _) = load_config(CFG).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(1)).unwrap();
+    let engine = NativeEngine::with_choice(model, swsnn::conv::BackendChoice::Auto, 8);
+    let coord = Coordinator::start_replicated(engine, &serve).unwrap();
+    assert_eq!(coord.worker_count(), 2);
+    let mut rng = Rng::new(77);
+    for _ in 0..6 {
+        let y = coord.infer(rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+        assert_eq!(y.len(), 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.rejected, 0);
+}
+
+/// The batcher pads every collected batch up to the smallest configured
+/// bucket, so engines only ever execute warmed batch sizes — and the pad
+/// rows are dropped before distribution (responses still match their
+/// requests exactly).
+#[test]
+fn batcher_pads_batches_to_configured_buckets() {
+    use std::sync::Mutex;
+    struct SizeRecorder {
+        row: usize,
+        seen: Arc<Mutex<Vec<usize>>>,
+    }
+    impl Engine for SizeRecorder {
+        fn input_len(&self) -> usize {
+            self.row
+        }
+        fn output_len(&self) -> usize {
+            self.row
+        }
+        fn infer(&self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+            assert_eq!(x.len(), batch * self.row, "padded input shape");
+            self.seen.lock().unwrap().push(batch);
+            Ok(x.to_vec()) // echo — pad rows come back too, batcher drops them
+        }
+        fn name(&self) -> String {
+            "size-recorder".into()
+        }
+    }
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let serve = ServeConfig {
+        max_batch: 8,
+        batch_deadline_us: 5_000,
+        batch_buckets: vec![4, 8],
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(
+        SizeRecorder {
+            row: 3,
+            seen: Arc::clone(&seen),
+        },
+        &serve,
+    )
+    .unwrap();
+    let inputs: Vec<Vec<f32>> = (0..5)
+        .map(|i| vec![i as f32, i as f32 + 0.5, -(i as f32)])
+        .collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| coord.submit(x.clone()).unwrap())
+        .collect();
+    for (x, t) in inputs.iter().zip(tickets) {
+        let y = t.wait().unwrap();
+        assert_eq!(&y, x, "pad rows leaked into a response");
+    }
+    // However the 5 requests were grouped, every executed batch was
+    // padded to a configured bucket (4 or 8) — never an arbitrary size.
+    let sizes = seen.lock().unwrap().clone();
+    assert!(!sizes.is_empty());
+    for s in sizes {
+        assert!(s == 4 || s == 8, "engine saw unpadded batch size {s}");
+    }
+    coord.shutdown();
+}
+
+/// A failing warm-up fails coordinator startup (same contract as a
+/// failing engine factory).
+#[test]
+fn warmup_failure_fails_startup() {
+    struct BadWarmup;
+    impl Engine for BadWarmup {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            Ok(x.to_vec())
+        }
+        fn warmup(&mut self, _buckets: &[usize]) -> anyhow::Result<()> {
+            anyhow::bail!("no memory for plans")
+        }
+        fn name(&self) -> String {
+            "bad-warmup".into()
+        }
+    }
+    let err = Coordinator::start_native(BadWarmup, &ServeConfig::default())
+        .err()
+        .expect("warm-up failure must fail startup");
+    let msg = format!("{err:#}"); // full chain: context + root cause
+    assert!(msg.contains("warm-up failed"), "{msg}");
+    assert!(msg.contains("no memory for plans"), "{msg}");
+}
+
 #[test]
 fn single_request_roundtrip() {
     let coord = native_coordinator(&ServeConfig::default());
@@ -176,9 +341,6 @@ fn backpressure_overload_signal() {
         fn output_len(&self) -> usize {
             4
         }
-        fn batch_buckets(&self) -> Vec<usize> {
-            vec![1]
-        }
         fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
             while !self.0.load(Ordering::SeqCst) {
                 std::thread::sleep(Duration::from_millis(1));
@@ -226,9 +388,6 @@ fn engine_error_propagates_to_all_waiters() {
         }
         fn output_len(&self) -> usize {
             2
-        }
-        fn batch_buckets(&self) -> Vec<usize> {
-            vec![4]
         }
         fn infer(&self, _x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
             anyhow::bail!("numerical explosion")
@@ -283,9 +442,6 @@ fn mismatched_engine_shapes_fail_start_multi() {
         fn output_len(&self) -> usize {
             8
         }
-        fn batch_buckets(&self) -> Vec<usize> {
-            vec![1]
-        }
         fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
             Ok(x.to_vec())
         }
@@ -315,9 +471,6 @@ impl Engine for IdEngine {
     }
     fn output_len(&self) -> usize {
         4
-    }
-    fn batch_buckets(&self) -> Vec<usize> {
-        vec![4]
     }
     fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
         Ok(x.iter().map(|v| v * 2.0 + 1.0).collect())

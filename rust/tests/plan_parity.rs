@@ -11,11 +11,20 @@
 //!    choice, and `Auto` plans stay numerically faithful to the direct
 //!    oracle.
 //! 4. Empty models fail at `init`/`compile` time, not at serve time.
+//! 5. **Fused** conv→pool plans are bit-identical to the unfused plan
+//!    and to the eager path, across tiers, threads, and dirty arenas.
+//! 6. **Autotuned** plans are bit-identical to the eager path with each
+//!    layer's backend pinned to the plan's measured choice (small_k maps
+//!    to sliding — the two share the exact per-output fused chain,
+//!    pinned below).
 
 use swsnn::config::{LayerConfig, ModelConfig};
-use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::conv::{
+    conv1d_sliding, conv1d_small_k_into, BackendChoice, Conv1dParams, ConvBackend,
+};
 use swsnn::exec::Executor;
 use swsnn::nn::{EagerScratch, Model, Plan, PlanKernel, PlanScratch, PlannerConfig};
+use swsnn::ops::Epilogue;
 use swsnn::simd::{self, SimdTier};
 use swsnn::workload::Rng;
 
@@ -109,6 +118,7 @@ fn plan_bit_identical_to_eager_across_random_models() {
                 .unwrap();
             let cfg = PlannerConfig {
                 backend: BackendChoice::Fixed(backend),
+                ..Default::default()
             };
             let plan = Plan::compile(&model, batch, &cfg).unwrap();
             let threads = THREADS[(built + backend as usize) % THREADS.len()];
@@ -168,6 +178,7 @@ out = 3
                 .unwrap();
             let cfg = PlannerConfig {
                 backend: BackendChoice::Fixed(backend),
+                ..Default::default()
             };
             let plan = Plan::compile(&model, 2, &cfg).unwrap();
             for threads in THREADS {
@@ -244,6 +255,7 @@ fn per_layer_override_beats_fixed_choice() {
     let model = Model::init(&mc, &mut Rng::new(6)).unwrap();
     let cfg = PlannerConfig {
         backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        ..Default::default()
     };
     let plan = Plan::compile(&model, 1, &cfg).unwrap();
     assert_eq!(plan.kernels(), vec![PlanKernel::Im2col, PlanKernel::Direct]);
@@ -321,6 +333,206 @@ fn auto_plan_faithful_to_direct_oracle() {
             "auto plan vs direct oracle at {i}: {g} vs {t}"
         );
     }
+}
+
+/// Fused conv→pool plans must be bit-identical to both the unfused plan
+/// and the eager reference — across forced SIMD tiers, thread counts
+/// {1, 2, 4, 8}, and one dirty arena shared by every run.
+#[test]
+fn fused_conv_pool_parity_across_tiers_and_threads() {
+    const CFG_TOML: &str = r#"
+[model]
+name = "fused"
+c_in = 2
+seq_len = 96
+
+[layer.0]
+type = "conv"
+c_out = 6
+k = 7
+
+[layer.1]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.2]
+type = "conv"
+c_out = 4
+k = 5
+relu = false
+
+[layer.3]
+type = "pool"
+kind = "avg"
+w = 3
+stride = 3
+
+[layer.4]
+type = "pool"
+kind = "min"
+w = 2
+stride = 2
+
+[layer.5]
+type = "dense"
+out = 3
+"#;
+    let (mc, _) = swsnn::config::load_config(CFG_TOML).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(21)).unwrap();
+    let batch = 3;
+    let cfg_fused = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        ..Default::default()
+    };
+    let cfg_unfused = PlannerConfig {
+        fuse: false,
+        ..cfg_fused
+    };
+    let fused = Plan::compile(&model, batch, &cfg_fused).unwrap();
+    // Both conv→pool pairs fuse (w=2/s=2 and w=3/s=3 are
+    // non-overlapping); the pool→pool and dense tails do not.
+    assert_eq!(fused.fused_steps(), 2, "{}", fused.describe());
+    assert_eq!(fused.kernels().len(), 4);
+    assert_eq!(fused.layer_kernels().len(), 6);
+    let unfused = Plan::compile(&model, batch, &cfg_unfused).unwrap();
+    assert_eq!(unfused.fused_steps(), 0);
+    assert_eq!(unfused.kernels().len(), 6);
+
+    let mut rng = Rng::new(22);
+    let x = rng.vec_uniform(batch * 2 * 96, -1.0, 1.0);
+    let mut scratch = PlanScratch::default();
+    for tier in tiers() {
+        simd::force_tier(Some(tier));
+        let mut want = Vec::new();
+        model
+            .forward_eager_into(
+                &x,
+                batch,
+                ConvBackend::Sliding,
+                &mut EagerScratch::default(),
+                &mut want,
+            )
+            .unwrap();
+        for threads in THREADS {
+            let ex = Executor::new(threads);
+            let mut got_fused = Vec::new();
+            fused
+                .run_with_into(&ex, &model, &x, &mut scratch, &mut got_fused)
+                .unwrap();
+            assert_eq!(
+                got_fused, want,
+                "tier {tier:?} threads {threads}: fused plan != eager"
+            );
+            let mut got_unfused = Vec::new();
+            unfused
+                .run_with_into(&ex, &model, &x, &mut scratch, &mut got_unfused)
+                .unwrap();
+            assert_eq!(
+                got_fused, got_unfused,
+                "tier {tier:?} threads {threads}: fused plan != unfused plan"
+            );
+        }
+    }
+    simd::force_tier(None);
+}
+
+/// The random-model sweep under `Autotune` (+ fusion, the default): the
+/// measured choice is timing-dependent, so the eager reference pins each
+/// layer's backend to whatever the plan actually chose — bit-identical
+/// regardless of which kernels won the probes. Dirty shared arena,
+/// rotating thread counts.
+#[test]
+fn autotuned_plans_bit_identical_to_eager_with_matching_kernels() {
+    let mut rng = Rng::new(0xA117);
+    let mut plan_scratch = PlanScratch::default();
+    let mut built = 0usize;
+    let mut attempts = 0usize;
+    while built < 8 && attempts < 60 {
+        attempts += 1;
+        let mc = random_config(&mut rng, attempts);
+        let seed = 4000 + attempts as u64;
+        let Ok(model) = Model::init(&mc, &mut Rng::new(seed)) else {
+            continue;
+        };
+        built += 1;
+        let batch = [1usize, 2, 4][built % 3];
+        let x = rng.vec_uniform(batch * mc.c_in * mc.seq_len, -1.0, 1.0);
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Auto,
+            autotune: true,
+            ..Default::default()
+        };
+        let plan = Plan::compile(&model, batch, &cfg).unwrap();
+        // Rebuild the same model (same init seed → same weights) with
+        // each conv-shaped layer pinned to the plan's measured kernel;
+        // small_k maps to sliding (bit-identical chain, pinned below).
+        let lk = plan.layer_kernels();
+        assert_eq!(lk.len(), mc.layers.len());
+        let mut mc_ref = mc.clone();
+        for (layer, k) in mc_ref.layers.iter_mut().zip(&lk) {
+            let over = match k {
+                PlanKernel::Sliding | PlanKernel::SmallK => Some(ConvBackend::Sliding),
+                PlanKernel::Im2col => Some(ConvBackend::Im2colGemm),
+                PlanKernel::Direct => Some(ConvBackend::Direct),
+                _ => None,
+            };
+            match layer {
+                LayerConfig::Conv { backend, .. } => *backend = over,
+                LayerConfig::Residual { backend, .. } => *backend = over,
+                _ => {}
+            }
+        }
+        let model_ref = Model::init(&mc_ref, &mut Rng::new(seed)).unwrap();
+        let mut want = Vec::new();
+        model_ref
+            .forward_eager_into(
+                &x,
+                batch,
+                ConvBackend::Sliding,
+                &mut EagerScratch::default(),
+                &mut want,
+            )
+            .unwrap();
+        let threads = THREADS[built % THREADS.len()];
+        let ex = Executor::new(threads);
+        let mut got = Vec::new();
+        plan.run_with_into(&ex, &model, &x, &mut plan_scratch, &mut got)
+            .unwrap();
+        assert_eq!(
+            got, want,
+            "model {} batch {batch} threads {threads} plan [{}]: autotuned plan != eager",
+            mc.name,
+            plan.describe()
+        );
+    }
+    assert!(built >= 6, "generator rejected too many configs ({built}/8)");
+}
+
+/// Pin the mapping the autotune parity test relies on: for qualifying
+/// shapes the small-k kernel's per-output chain (bias seed, ascending
+/// fused taps) is the *same* chain as the sliding kernel's — the two are
+/// bitwise equal on every SIMD tier.
+#[test]
+fn small_k_bitwise_equals_sliding_for_qualifying_shapes() {
+    let mut rng = Rng::new(0x511d);
+    for tier in tiers() {
+        simd::force_tier(Some(tier));
+        for k in [3usize, 5] {
+            for n in [16usize, 100, 1000] {
+                let p = Conv1dParams::new(1, 1, n, k).with_batch(2);
+                let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+                let w = rng.vec_uniform(k, -1.0, 1.0);
+                let b = [0.25f32];
+                let want = conv1d_sliding(&x, &w, Some(&b), &p);
+                let mut got = vec![f32::NAN; p.y_len()];
+                assert!(conv1d_small_k_into(&x, &w, Some(&b), &p, Epilogue::None, &mut got));
+                assert_eq!(got, want, "tier {tier:?} k={k} n={n}");
+            }
+        }
+    }
+    simd::force_tier(None);
 }
 
 #[test]

@@ -4,13 +4,18 @@
 //! batching invariants under randomized load.
 
 use swsnn::config::ServeConfig;
-use swsnn::conv::{conv1d, Conv1dParams, ConvBackend};
-use swsnn::coordinator::{Coordinator, Engine};
-use swsnn::ops::{
-    dot_reference, dot_via_prefix, dot_via_tree_reduce, AddOp, AssocOp, ConvPair, MaxOp, MinOp,
-    Pair,
+use swsnn::conv::{
+    conv1d, conv2d_sliding_with, conv2d_sliding_with_into, Conv1dParams, Conv2dParams, ConvBackend,
 };
-use swsnn::pool::{minimizer_positions, sliding_minimum};
+use swsnn::coordinator::{Coordinator, Engine};
+use swsnn::exec::Executor;
+use swsnn::ops::{
+    dot_reference, dot_via_prefix, dot_via_tree_reduce, AddOp, AssocOp, ConvPair, Epilogue, MaxOp,
+    MinOp, Pair,
+};
+use swsnn::pool::{
+    minimizer_positions, pool1d, pool1d_naive, sliding_minimum, Pool1dParams, PoolKind,
+};
 use swsnn::prop::{check, ensure, ensure_close, PropConfig};
 use swsnn::sliding::{self, Algo, Boundary};
 
@@ -182,6 +187,85 @@ fn prop_sliding_minimum_matches_deque_minimizers() {
     });
 }
 
+/// The strided non-overlapping pooling fold (PR 3's allocation-free
+/// `stride ≥ w` fast path): every batched/multi-channel random shape
+/// must match the naive dense-sweep-then-decimate oracle — exactly for
+/// max/min (order-insensitive in FP), within the `·(1/w)` rounding
+/// identity for avg.
+#[test]
+fn prop_nonoverlapping_strided_pool_matches_naive() {
+    check(cfg(80), "nonoverlap pool fold", |g| {
+        let w = g.usize_in(1, 10);
+        let stride = w + g.usize_in(0, 5); // stride ≥ w: the fold path
+        let channels = g.usize_in(1, 4);
+        let batch = g.usize_in(1, 3);
+        let n = g.usize_in(w, w + 150);
+        let p = Pool1dParams::new(channels, n, w)
+            .with_batch(batch)
+            .with_stride(stride);
+        let x = g.vec_f32_len(batch * channels * n, -50.0, 50.0);
+        for kind in [PoolKind::Max, PoolKind::Min] {
+            ensure(
+                pool1d(kind, &x, &p) == pool1d_naive(kind, &x, &p),
+                format!("{kind:?} b={batch} c={channels} n={n} w={w} s={stride}"),
+            )?;
+        }
+        let got = pool1d(PoolKind::Avg, &x, &p);
+        let want = pool1d_naive(PoolKind::Avg, &x, &p);
+        ensure(got.len() == want.len(), "avg length")?;
+        for (a, b) in got.iter().zip(&want) {
+            ensure_close(*a, *b, 1e-5, &format!("avg n={n} w={w} s={stride}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// `Epilogue::ReluAdd` fused into conv2d's destination writes must be
+/// bit-identical to the unfused formulation (raw kernel output, then a
+/// separate relu pass, then `+= skip`) for random shapes, strides,
+/// padding, and thread counts — the epilogue contract PR 3 shipped
+/// without randomized coverage.
+#[test]
+fn prop_conv2d_relu_add_epilogue_fused_equals_unfused() {
+    check(cfg(40), "conv2d ReluAdd epilogue", |g| {
+        let c_in = g.usize_in(1, 3);
+        let c_out = g.usize_in(1, 3);
+        let kh = g.usize_in(1, 4);
+        let kw = g.usize_in(1, 4);
+        let h = g.usize_in(kh, kh + 10);
+        let w = g.usize_in(kw, kw + 10);
+        let stride = g.usize_in(1, 3);
+        let pad = g.usize_in(0, 2);
+        let batch = g.usize_in(1, 3);
+        let p = Conv2dParams::new(c_in, c_out, h, w, kh, kw)
+            .with_batch(batch)
+            .with_stride(stride)
+            .with_pad(pad);
+        if p.h_out() == 0 || p.w_out() == 0 {
+            return Ok(());
+        }
+        let x = g.vec_f32_len(p.x_len(), -1.0, 1.0);
+        let wt = g.vec_f32_len(p.w_len(), -1.0, 1.0);
+        let b = g.vec_f32_len(c_out, -0.5, 0.5);
+        let skip = g.vec_f32_len(p.y_len(), -2.0, 2.0);
+        let ex = Executor::new(*g.choose(&[1usize, 2, 4]));
+        // Unfused reference: raw output, relu pass, then the skip add —
+        // exactly the eager residual formulation.
+        let mut want = conv2d_sliding_with(&ex, &x, &wt, Some(&b), &p);
+        for (v, s) in want.iter_mut().zip(&skip) {
+            let r = if *v < 0.0 { 0.0 } else { *v };
+            *v = r + s;
+        }
+        // Fused: dirty destination, epilogue riding the kernel writes.
+        let mut got = vec![f32::NAN; p.y_len()];
+        conv2d_sliding_with_into(&ex, &x, &wt, Some(&b), &p, Epilogue::ReluAdd(&skip), &mut got);
+        ensure(
+            got == want,
+            format!("fused ReluAdd != unfused for {p:?}"),
+        )
+    });
+}
+
 // ───────────────────── conv backend agreement ────────────────────────
 
 #[test]
@@ -232,9 +316,6 @@ impl Engine for EchoEngine {
     }
     fn output_len(&self) -> usize {
         self.row
-    }
-    fn batch_buckets(&self) -> Vec<usize> {
-        vec![8]
     }
     fn infer(&self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
         assert_eq!(x.len(), batch * self.row);
@@ -291,9 +372,6 @@ fn prop_coordinator_never_exceeds_max_batch() {
         }
         fn output_len(&self) -> usize {
             self.row
-        }
-        fn batch_buckets(&self) -> Vec<usize> {
-            vec![self.cap]
         }
         fn infer(&self, x: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
             self.max_seen.fetch_max(batch, Ordering::SeqCst);
