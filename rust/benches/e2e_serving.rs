@@ -224,5 +224,71 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     fusion.emit("conv_pool_fusion.csv");
+
+    // ── Depth-tiled chain fusion ──────────────────────────────────────
+    // tcn_deep stacks eight chain-eligible layers whose dense
+    // intermediates overflow L2 at batch 8; the fused plan sweeps
+    // cache-resident row tiles through the whole segment, the unfused
+    // plan round-trips every intermediate through the arena, and the
+    // eager row adds the separate-epilogue-pass baseline. Identical
+    // numerics across all three rows (pinned by tests/chain_fusion.rs);
+    // the delta is pure memory locality.
+    let deep_text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_deep.toml"),
+    )?;
+    let (deep_mc, _) = load_config(&deep_text).map_err(anyhow::Error::msg)?;
+    let mut chain_tbl = Table::new(
+        "Chain fusion on tcn_deep (8 clients through the batcher, batch ≤ 8)",
+        &["engine", "plan (per-layer kernels)", "req/s", "e2e p50 µs", "e2e p99 µs"],
+    );
+    #[derive(Clone, Copy, PartialEq)]
+    enum Arm {
+        Eager,
+        Unfused,
+        Fused,
+    }
+    for arm in [Arm::Eager, Arm::Unfused, Arm::Fused] {
+        let mut rng = Rng::new(1);
+        let model = Model::init(&deep_mc, &mut rng)?;
+        let row = model.c_in * model.seq_len;
+        let plan_desc = match arm {
+            Arm::Eager => "(eager: per-layer passes, ping-pong buffers)".to_string(),
+            Arm::Unfused | Arm::Fused => {
+                let plan = Plan::compile(
+                    &model,
+                    serve.max_batch,
+                    &PlannerConfig {
+                        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                        fuse: arm == Arm::Fused,
+                        ..PlannerConfig::default()
+                    },
+                )?;
+                format!(
+                    "{} ({} fused layers, arena {}x f32)",
+                    plan.describe(),
+                    plan.fused_layers(),
+                    plan.arena_len()
+                )
+            }
+        };
+        let engine = match arm {
+            Arm::Eager => NativeEngine::eager(model, ConvBackend::Sliding, serve.max_batch),
+            Arm::Unfused => {
+                NativeEngine::new(model, ConvBackend::Sliding, serve.max_batch).fused(false)
+            }
+            Arm::Fused => NativeEngine::new(model, ConvBackend::Sliding, serve.max_batch),
+        };
+        let label = engine.name();
+        let coord = Arc::new(Coordinator::start_native(engine, &serve)?);
+        let (rps, stats) = drive(coord, 8, per_client, row);
+        chain_tbl.row(vec![
+            label,
+            plan_desc,
+            format!("{rps:.1}"),
+            format!("{:.0}", stats.e2e_p50_us),
+            format!("{:.0}", stats.e2e_p99_us),
+        ]);
+    }
+    chain_tbl.emit("chain_fusion.csv");
     Ok(())
 }

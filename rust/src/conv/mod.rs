@@ -44,7 +44,7 @@ pub use sliding::{
     conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_into, conv1d_sliding_with,
     conv1d_sliding_with_into,
 };
-pub(crate) use sliding::conv1d_sliding_row_into;
+pub(crate) use sliding::conv1d_sliding_row_tile_into;
 pub use small_k::{conv1d_k3, conv1d_k5, conv1d_small_k, conv1d_small_k_into, small_k_qualifies};
 
 /// Dispatch a 1-D convolution to the selected backend.

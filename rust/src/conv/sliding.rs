@@ -128,23 +128,44 @@ pub fn conv1d_sliding_with_into(
     ex.scope(jobs);
 }
 
-/// Compute one full flat output row (`row = b·c_out + co`; `yrow` must
-/// have length [`Conv1dParams::n_out`]) exactly as
-/// [`conv1d_sliding_with_into`] computes it — same bias seed, same
-/// ascending tap order, same epilogue application — so callers composing
-/// per-row pipelines (the execution plan's fused conv→pool step) stay
-/// **bit-identical** to the unfused kernel for every partitioning.
-pub(crate) fn conv1d_sliding_row_into(
-    yrow: &mut [f32],
-    row: usize,
-    x: &[f32],
+/// Compute output columns `[t0, t0 + yseg.len())` of conv output
+/// channel `co` for **one batch element** whose input channels live in
+/// `src` as `c_in` consecutive rows of pitch `src_len`, each holding
+/// conceptual input positions `[src0, src0 + src_len)` of the full
+/// length-`p.n` row. With `src0 = 0` and `src_len = p.n` this is
+/// exactly the unfused kernel's per-row-segment body; a non-zero `src0`
+/// lets the execution plan's fused-chain step feed the *same* code from
+/// a small ring buffer holding only the tile + halo window of the
+/// input. Same bias seed, same ascending tap order, same epilogue
+/// application — **bit-identical** to the unfused kernel for every
+/// partitioning and every buffering.
+///
+/// Contract: `src` must cover the conceptual range
+/// `[max(0, t0·s − pad), min(n, (t1−1)·s − pad + eff_k))` for
+/// `t1 = t0 + yseg.len()`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv1d_sliding_row_tile_into(
+    yseg: &mut [f32],
+    t0: usize,
+    co: usize,
+    src: &[f32],
+    src0: usize,
+    src_len: usize,
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
     epi: Epilogue<'_>,
+    epi_flat: usize,
 ) {
-    debug_assert_eq!(yrow.len(), p.n_out(), "row dst length");
-    compute_row_segment(yrow, 0, row, x, w, bias, p, epi);
+    // Seed with bias (or zero) unconditionally: the destination may be a
+    // recycled buffer holding stale values.
+    yseg.fill(bias.map_or(0.0, |bv| bv[co]));
+    for ci in 0..p.c_in {
+        let xrow = &src[ci * src_len..][..src_len];
+        let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
+        accumulate_row_segment(yseg, t0, xrow, src0, wrow, p);
+    }
+    epi.apply(yseg, epi_flat);
 }
 
 /// Compute output columns `[t0, t0 + yseg.len())` of flat output row
@@ -164,48 +185,58 @@ fn compute_row_segment(
 ) {
     let b = row / p.c_out;
     let co = row % p.c_out;
-    // Seed with bias (or zero) unconditionally: the destination may be a
-    // recycled buffer holding stale values.
-    yseg.fill(bias.map_or(0.0, |bv| bv[co]));
-    for ci in 0..p.c_in {
-        let xrow = &x[(b * p.c_in + ci) * p.n..][..p.n];
-        let wrow = &w[(co * p.c_in + ci) * p.k..][..p.k];
-        accumulate_row_segment(yseg, t0, xrow, wrow, p);
-    }
-    epi.apply(yseg, row * p.n_out() + t0);
+    let src = &x[b * p.c_in * p.n..][..p.c_in * p.n];
+    conv1d_sliding_row_tile_into(
+        yseg,
+        t0,
+        co,
+        src,
+        0,
+        p.n,
+        w,
+        bias,
+        p,
+        epi,
+        row * p.n_out() + t0,
+    );
 }
 
 /// Accumulate one channel's taps into global output range
 /// `[t0, t0 + yseg.len())`: unit fast path when stride 1 / no pad,
 /// interior/edge split when padded, clipped per-tap loop otherwise.
+/// `xrow` holds conceptual input positions `[x0, x0 + xrow.len())` of
+/// the full length-`p.n` channel row (`x0 = 0` for a fully materialized
+/// row); the clipping math runs on conceptual indices, so partial and
+/// full source rows take identical per-element paths.
 fn accumulate_row_segment(
     yseg: &mut [f32],
     t0: usize,
     xrow: &[f32],
+    x0: usize,
     wrow: &[f32],
     p: &Conv1dParams,
 ) {
     let t1 = t0 + yseg.len();
     if p.stride == 1 && p.pad == 0 {
-        accumulate_taps_unit(yseg, &xrow[t0..], wrow, p.dilation);
+        accumulate_taps_unit(yseg, &xrow[t0 - x0..], wrow, p.dilation);
         return;
     }
     if p.stride == 1 {
         let k = wrow.len();
-        let n = xrow.len();
+        let n = p.n;
         // Interior: 0 ≤ t + tap·d − pad < n for all taps ⇔
         // t ∈ [pad, n − (k−1)·d + pad), intersected with this segment.
         let lo = p.pad.clamp(t0, t1);
         let hi = (n + p.pad).saturating_sub((k - 1) * p.dilation).clamp(t0, t1);
         if lo < hi {
             let interior = &mut yseg[lo - t0..hi - t0];
-            accumulate_taps_unit(interior, &xrow[lo - p.pad..], wrow, p.dilation);
-            edge_taps(yseg, t0, xrow, wrow, p, t0, lo);
-            edge_taps(yseg, t0, xrow, wrow, p, hi, t1);
+            accumulate_taps_unit(interior, &xrow[lo - p.pad - x0..], wrow, p.dilation);
+            edge_taps(yseg, t0, xrow, x0, wrow, p, t0, lo);
+            edge_taps(yseg, t0, xrow, x0, wrow, p, hi, t1);
             return;
         }
     }
-    edge_taps(yseg, t0, xrow, wrow, p, t0, t1);
+    edge_taps(yseg, t0, xrow, x0, wrow, p, t0, t1);
 }
 
 /// Hot loop, stride 1 / no pad: for each tap, `y[t] += w_k · x[t + k·d]`
@@ -336,13 +367,16 @@ fn accumulate_taps_unit_generic(yrow: &mut [f32], xrow: &[f32], wrow: &[f32], di
 }
 
 /// Clipped per-tap accumulation restricted to the *global* output range
-/// `[r_lo, r_hi)`; `yseg[0]` holds global output index `seg_off`. The
-/// per-output tap order is identical to the fast path, so edge columns
-/// and interior columns compose bit-identically however the row is cut.
+/// `[r_lo, r_hi)`; `yseg[0]` holds global output index `seg_off` and
+/// `xrow[0]` holds conceptual input index `x0`. The per-output tap
+/// order is identical to the fast path, so edge columns and interior
+/// columns compose bit-identically however the row is cut.
+#[allow(clippy::too_many_arguments)]
 fn edge_taps(
     yseg: &mut [f32],
     seg_off: usize,
     xrow: &[f32],
+    x0: usize,
     wrow: &[f32],
     p: &Conv1dParams,
     r_lo: usize,
@@ -351,7 +385,7 @@ fn edge_taps(
     if r_lo >= r_hi {
         return;
     }
-    let n = xrow.len();
+    let n = p.n;
     for (tap, &wk) in wrow.iter().enumerate() {
         // x index for output t: t·stride + tap·dilation − pad ∈ [0, n)
         let base = tap as isize * p.dilation as isize - p.pad as isize;
@@ -376,14 +410,14 @@ fn edge_taps(
             // loop auto-vectorizes (a runtime-stride induction variable
             // blocks LLVM's vectorizer and costs ~25× — see §Perf log).
             let len = t_hi_excl - t_lo;
-            let x_off = (t_lo as isize + base) as usize;
+            let x_off = (t_lo as isize + base) as usize - x0;
             let ys = &mut yseg[t_lo - seg_off..t_hi_excl - seg_off];
             let xs = &xrow[x_off..x_off + len];
             for (y, &xv) in ys.iter_mut().zip(xs) {
                 *y = wk.mul_add(xv, *y);
             }
         } else {
-            let mut xi = (t_lo as isize * p.stride as isize + base) as usize;
+            let mut xi = (t_lo as isize * p.stride as isize + base) as usize - x0;
             for t in t_lo..t_hi_excl {
                 let yv = &mut yseg[t - seg_off];
                 *yv = wk.mul_add(xrow[xi], *yv);

@@ -61,6 +61,9 @@ pub struct NativeEngine {
     /// (probe results cached process-wide, so replicated workers and
     /// repeated buckets probe each shape once).
     autotune: bool,
+    /// Plan-level chain fusion (on by default; the `chain_fusion` bench
+    /// turns it off for its unfused comparison arm).
+    fuse: bool,
     max_batch: usize,
     /// Eager mode skips the planner and runs the layer-by-layer
     /// reference path — the baseline arm of the `eager_vs_planned`
@@ -91,6 +94,7 @@ impl NativeEngine {
             model,
             choice,
             autotune: false,
+            fuse: true,
             max_batch: max_batch.max(1),
             eager: false,
             plans: PlanCache::default(),
@@ -105,6 +109,14 @@ impl NativeEngine {
     /// probe.
     pub fn autotuned(mut self, on: bool) -> Self {
         self.autotune = on;
+        self
+    }
+
+    /// Builder: toggle plan-level chain fusion (default on). The
+    /// `chain_fusion` bench's unfused arm is the only production caller
+    /// that turns it off.
+    pub fn fused(mut self, on: bool) -> Self {
+        self.fuse = on;
         self
     }
 
@@ -126,6 +138,7 @@ impl NativeEngine {
         PlannerConfig {
             backend: self.choice,
             autotune: self.autotune,
+            fuse: self.fuse,
             ..PlannerConfig::default()
         }
     }
@@ -239,7 +252,8 @@ impl Engine for NativeEngine {
     fn name(&self) -> String {
         let mode = if self.eager { "eager" } else { "planned" };
         let tune = if self.autotune && !self.eager { "+tune" } else { "" };
-        format!("native/{mode}/{}{tune}", self.choice.name())
+        let fuse = if !self.fuse && !self.eager { "+nofuse" } else { "" };
+        format!("native/{mode}/{}{tune}{fuse}", self.choice.name())
     }
 }
 

@@ -208,6 +208,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             backend.name(),
             if serve_cfg.autotune { " (autotuned)" } else { "" }
         );
+        // Persist probe results across restarts: load whatever a
+        // previous serve recorded for this CPU/tier/thread-count, and
+        // write every new decision through. `SWSNN_TUNE_CACHE` points
+        // at the file (or disables with `off`); the default is
+        // bench_results/tunecache.json.
+        if serve_cfg.autotune {
+            let loaded = swsnn::nn::TuneCache::global().enable_persistence(None);
+            if loaded > 0 {
+                println!("tune cache: {loaded} persisted decision(s) loaded");
+            }
+        }
         // Audit surface for the planner: print the per-layer kernel
         // choices the serving plans will execute with (probing now also
         // seeds the tune cache for the batch-1 bucket; other buckets
@@ -236,6 +247,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     t.layer,
                     t.chosen.name(),
                     probes.join(" ")
+                );
+            }
+        }
+        for s in plan.segment_tuning() {
+            if s.cached {
+                println!(
+                    "  segment {}..={}: fused={} (tune cache)",
+                    s.layers.0, s.layers.1, s.fused
+                );
+            } else {
+                println!(
+                    "  segment {}..={}: fused={} [fused:{:.1}µs unfused:{:.1}µs]",
+                    s.layers.0, s.layers.1, s.fused, s.fused_micros, s.unfused_micros
                 );
             }
         }

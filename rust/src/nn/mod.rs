@@ -23,7 +23,8 @@ pub mod plan;
 pub use layers::{Layer, LayerOutput};
 pub use model::{EagerScratch, ForwardScratch, Model, TensorSpec};
 pub use plan::{
-    LayerTune, Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig, ProbeResult, TuneCache,
+    LayerTune, Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig, ProbeResult, SegmentTune,
+    TuneCache,
 };
 
 #[cfg(test)]

@@ -20,24 +20,35 @@
 //!   heuristic was hand-fit to one machine; the probe makes the
 //!   crossover (sliding wins at large filters, GEMM at small filters
 //!   with fat channel reductions) portable across microarchitectures.
-//! * **Operator fusion** — a conv directly followed by a
-//!   non-overlapping pool (`stride ≥ w`, the common 2× down-sampling
-//!   case) fuses into a single arena pass when the conv runs the
-//!   sliding kernel: each worker computes one conv row into a small
-//!   cache-resident row buffer and folds the pool windows straight out
-//!   of it, so the full dense conv activation never round-trips through
-//!   the arena. Fused execution reuses the *exact* per-row conv kernel
-//!   and the *exact* non-overlapping fold of the unfused path, so it is
-//!   bit-identical to running the two steps separately.
+//! * **Chain fusion** — the planner greedily groups every maximal run
+//!   of chain-eligible layers (sliding-kernel convs and interleaved
+//!   non-overlapping valid-mode pools) into one [`FusedChain`] step.
+//!   At run time, workers sweep `(batch element × final-column span)`
+//!   tiles through the *entire* segment: each stage writes its output
+//!   into a small per-worker ring buffer in the arena's `fuse` region
+//!   and keeps the trailing `eff_k − 1` halo rows of its input, so the
+//!   next tile resumes where the last one stopped — no recompute, and
+//!   the dense intermediate activations never round-trip through the
+//!   arena. Residual skips, non-sliding kernels, and overlapping pools
+//!   break a segment. Fused execution reuses the *exact* per-row-tile
+//!   conv body ([`crate::conv`]'s `conv1d_sliding_row_tile_into`) and
+//!   the *exact* non-overlapping pool fold of the unfused path, so it
+//!   is bit-identical to running the steps separately — for every tile
+//!   size, span partitioning, and thread count.
 //! * **Arena layout** — one flat `Vec<f32>` holds every intermediate:
-//!   `[ act A | act B | residual tmp | im2col col | fuse rows ]`, with
-//!   region sizes (`act_len`, `tmp_len`, `col_len`, `fuse_len`)
-//!   precomputed at compile time. Step *i* reads one activation region
-//!   and writes the other (alternating; step 0 reads the request input,
-//!   the last step writes the caller's output buffer), so execution
-//!   does no resizing, no ping/pong `Vec` swaps, and — for all kernels
-//!   except the faithful-math `SlidingPair` — no allocation at all
-//!   after warm-up.
+//!   `[ act A | act B | residual tmp | im2col col | fuse rings | pool
+//!   dense ]`, with region sizes (`act_len`, `tmp_len`, `col_len`,
+//!   `fuse_len`, `pool_len`) precomputed at compile time. Step *i*
+//!   reads one activation region and writes the other (alternating;
+//!   step 0 reads the request input, the last step writes the caller's
+//!   output buffer), so execution does no resizing, no ping/pong `Vec`
+//!   swaps, and — for all kernels except the faithful-math
+//!   `SlidingPair` — no tensor-sized allocation after warm-up (the
+//!   only per-request heap traffic is the O(tasks) boxed-job and
+//!   sweep-state bookkeeping every parallel dispatch in this crate
+//!   already pays — never proportional to activation size). The `pool`
+//!   region hands strided *overlapping* pools their dense scratch rows,
+//!   so that last allocating layer kind now recycles arena memory too.
 //! * **Fused epilogues** — bias is already part of the kernels'
 //!   accumulator seed; the ReLU tail and the residual skip-add ride the
 //!   kernels' destination writes as an [`Epilogue`] instead of separate
@@ -52,7 +63,10 @@
 //! additionally precompiles a configured set of batch buckets at
 //! startup, so no request ever pays compile-or-probe latency); the
 //! eager [`Model::forward_into`] is itself a compile-then-run wrapper.
+//!
+//! [`FusedChain`]: PlanKernel::FusedChain
 
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -61,8 +75,12 @@ use anyhow::{bail, ensure, Result};
 use crate::conv::{self, BackendChoice, Conv1dParams, ConvBackend};
 use crate::exec::{Executor, PAR_MIN_FANOUT};
 use crate::ops::Epilogue;
-use crate::pool::{pool1d_row_nonoverlap, pool1d_with_into, Pool1dParams, PoolKind};
+use crate::pool::{
+    pool1d_overlap_strided_with_into, pool1d_row_nonoverlap_tile, pool1d_with_into, Pool1dParams,
+    PoolKind, POOL_SCRATCH_TASKS,
+};
 use crate::simd::SimdTier;
+use crate::sliding::Boundary;
 
 use super::layers::{dense_forward, Layer};
 use super::Model;
@@ -85,9 +103,10 @@ pub enum PlanKernel {
     Gemm,
     /// Sliding-sum pooling.
     Pool,
-    /// Fused conv→pool step: sliding conv rows folded straight into the
-    /// non-overlapping pool output (one arena pass for two layers).
-    FusedSlidingPool,
+    /// Fused chain segment: a maximal run of sliding convs and
+    /// non-overlapping pools swept tile-by-tile through per-worker ring
+    /// buffers (one arena pass for the whole segment).
+    FusedChain,
 }
 
 impl PlanKernel {
@@ -100,8 +119,20 @@ impl PlanKernel {
             PlanKernel::SlidingPair => "sliding_pair",
             PlanKernel::Gemm => "gemm",
             PlanKernel::Pool => "pool",
-            PlanKernel::FusedSlidingPool => "sliding+pool",
+            PlanKernel::FusedChain => "fused_chain",
         }
+    }
+}
+
+/// Parse a persisted conv-kernel decision name (only the candidates the
+/// autotuner probes are valid).
+fn parse_conv_kernel(name: &str) -> Option<PlanKernel> {
+    match name {
+        "sliding" => Some(PlanKernel::Sliding),
+        "im2col" => Some(PlanKernel::Im2col),
+        "small_k" => Some(PlanKernel::SmallK),
+        "direct" => Some(PlanKernel::Direct),
+        _ => None,
     }
 }
 
@@ -118,10 +149,18 @@ pub struct PlannerConfig {
     /// heuristic. Probe results live in the global [`TuneCache`], so
     /// repeated compiles of the same shape are free.
     pub autotune: bool,
-    /// Plan-level conv→pool fusion: fold a non-overlapping pool
-    /// directly over its preceding sliding-conv rows (bit-identical to
-    /// the unfused plan; on by default).
+    /// Plan-level chain fusion: sweep maximal runs of sliding convs and
+    /// non-overlapping pools through cache-resident ring-buffer tiles
+    /// (bit-identical to the unfused plan; on by default). Under
+    /// [`PlannerConfig::autotune`] each candidate segment is
+    /// micro-probed fused-vs-unfused and only kept fused when measured
+    /// faster.
     pub fuse: bool,
+    /// Force the fused-chain tile size (final-stage output columns per
+    /// sweep step). `None` (the default) sizes the tile so one worker's
+    /// ring buffers stay within [`CHAIN_CACHE_ELEMS`]; tests force tiny
+    /// tiles to stress the halo handoff.
+    pub chain_tile: Option<usize>,
 }
 
 impl Default for PlannerConfig {
@@ -130,6 +169,7 @@ impl Default for PlannerConfig {
             backend: BackendChoice::default(),
             autotune: false,
             fuse: true,
+            chain_tile: None,
         }
     }
 }
@@ -157,24 +197,215 @@ enum StepOp {
     Residual { p: Conv1dParams },
     Pool { kind: PoolKind, p: Pool1dParams },
     Dense { feat: usize, out: usize, relu: bool },
-    /// Fused conv→pool pair: the pool folds straight over per-row conv
-    /// output buffers in the arena's fuse region.
-    ConvPool {
-        conv: Conv1dParams,
-        relu: bool,
-        kind: PoolKind,
-        pool: Pool1dParams,
-    },
+    /// Fused chain segment: every stage streams through per-worker ring
+    /// buffers in the arena's fuse region.
+    Chain(ChainPlan),
 }
 
-/// Upper bound on concurrent row buffers for a fused conv→pool step —
-/// bounds the arena's fuse region to `FUSE_MAX_TASKS · n_conv` elements
-/// instead of the full dense conv activation.
-const FUSE_MAX_TASKS: usize = 16;
+// ───────────────────────── fused chain segments ───────────────────────
+
+/// Upper bound on concurrent ring-buffer sets for a fused chain step —
+/// bounds the arena's fuse region to `CHAIN_MAX_TASKS · task_elems`
+/// elements no matter how many workers the runtime executor has.
+const CHAIN_MAX_TASKS: usize = 16;
+
+/// Target ring-buffer footprint per worker, in f32 elements (≈ 192 KiB
+/// — comfortably cache-resident on anything with ≥ 256 KiB of L2). The
+/// tile size is halved until a sweep fits, so deep segments trade tile
+/// width for depth instead of spilling.
+const CHAIN_CACHE_ELEMS: usize = 48 * 1024;
+
+/// Tile-size floor: below this the per-tile bookkeeping dominates the
+/// kernel work, so the auto-sizer stops halving.
+const CHAIN_MIN_TILE: usize = 32;
+
+/// Minimum final-output columns per span when a row is split across
+/// workers — each span restarts its halos from scratch, so spans much
+/// smaller than this pay more boundary recompute than they win back in
+/// parallelism.
+const CHAIN_MIN_SPAN: usize = 64;
+
+/// One stage of a fused chain: the resolved op plus the halo geometry
+/// (`stride`/`extent`/`pad`) both the compile-time capacity computation
+/// and the run-time sweep derive ranges from — sharing the arithmetic
+/// is what makes the precomputed ring-buffer capacities exact.
+#[derive(Clone, Debug)]
+struct ChainStage {
+    /// Index into the model's layer stack (weight lookup + validation).
+    layer: usize,
+    op: ChainOp,
+    /// Input / output channels (equal for pools).
+    c_in: usize,
+    c_out: usize,
+    /// Conceptual input / output row lengths.
+    n_in: usize,
+    n_out: usize,
+    /// Output stride.
+    stride: usize,
+    /// Window extent in input elements (`eff_k` for convs, `w` for
+    /// pools).
+    extent: usize,
+    /// Left zero-padding (convs only; plan pools are valid-mode).
+    pad: usize,
+    /// Ring-buffer row capacity for this stage's *output* (0 for the
+    /// last stage, which writes the step destination directly).
+    cap: usize,
+    /// Element offset of this stage's ring buffer inside one worker's
+    /// chunk of the fuse region.
+    buf_off: usize,
+}
+
+#[derive(Clone, Debug)]
+enum ChainOp {
+    Conv { p: Conv1dParams, relu: bool },
+    Pool { kind: PoolKind, p: Pool1dParams },
+}
+
+impl ChainStage {
+    /// First conceptual input index needed to produce output `t` —
+    /// also the resume point the previous stage's ring buffer must keep
+    /// buffered (everything below it has been fully consumed).
+    fn in_lo(&self, t: usize) -> usize {
+        (t * self.stride).saturating_sub(self.pad).min(self.n_in)
+    }
+
+    /// One past the last conceptual input index needed to produce
+    /// outputs `[.., t1)`.
+    fn in_hi(&self, t1: usize) -> usize {
+        if t1 == 0 {
+            return 0;
+        }
+        ((t1 - 1) * self.stride + self.extent)
+            .saturating_sub(self.pad)
+            .min(self.n_in)
+    }
+}
+
+/// A compiled fused-chain segment: stages plus the tile/ring-buffer
+/// layout, fixed at compile time so execution never sizes anything.
+#[derive(Clone, Debug)]
+struct ChainPlan {
+    batch: usize,
+    stages: Vec<ChainStage>,
+    /// Final-stage output columns per sweep step.
+    tile: usize,
+    /// Ring-buffer elements per worker (sum over non-final stages of
+    /// `c_out · cap`).
+    task_elems: usize,
+    /// Ring-buffer sets the fuse region holds for this segment.
+    max_tasks: usize,
+    /// Output elements ALL stages produce per batch element (the
+    /// segment's real work) — the parallelism gate compares this, not
+    /// the final stage's (possibly heavily down-sampled) volume.
+    unit_work: usize,
+}
+
+/// Fill each non-final stage's ring-buffer capacity (and buffer offset)
+/// for the given tile size; returns the per-worker element footprint.
+///
+/// The capacity bound is the unclamped affine recursion over the halo
+/// geometry: with `G[last] = tile` final outputs per sweep step, stage
+/// `i` holds at most `s·G[i+1] + (e − s)` buffered elements (`s`/`e`
+/// the *next* stage's stride/extent) — the next tile's target `hi`
+/// minus the consumed-and-dropped prefix. Clamping at the row ends only
+/// shrinks ranges, so the bound is safe; it is also capped at the full
+/// row length, which the content can never exceed.
+fn chain_task_elems(stages: &mut [ChainStage], tile: usize) -> usize {
+    let m = stages.len();
+    let mut g = tile.max(1);
+    for i in (0..m - 1).rev() {
+        let s = stages[i + 1].stride;
+        let e = stages[i + 1].extent;
+        let grow = s * g + e.saturating_sub(s);
+        stages[i].cap = grow.min(stages[i].n_out).max(1);
+        g = grow;
+    }
+    stages[m - 1].cap = 0;
+    let mut off = 0usize;
+    for st in stages[..m - 1].iter_mut() {
+        st.buf_off = off;
+        off += st.c_out * st.cap;
+    }
+    off
+}
+
+/// Whether a classified step can join a fused chain: a conv that runs
+/// the sliding kernel, or a strided non-overlapping valid-mode pool.
+/// Residual blocks (the skip needs the full input), dense layers,
+/// non-sliding kernels, and overlapping pools break the segment.
+fn chain_eligible(step: &Step) -> bool {
+    match &step.op {
+        StepOp::Conv { .. } => step.kernel == PlanKernel::Sliding,
+        StepOp::Pool { p, .. } => {
+            p.stride > 1 && p.stride >= p.w && p.boundary == Boundary::Valid
+        }
+        _ => false,
+    }
+}
+
+/// Build the chain layout for a run of eligible raw steps.
+fn build_chain(raw: &[Step], batch: usize, cfg: &PlannerConfig) -> Result<ChainPlan> {
+    let mut stages: Vec<ChainStage> = Vec::with_capacity(raw.len());
+    for s in raw {
+        let st = match &s.op {
+            StepOp::Conv { p, relu } => ChainStage {
+                layer: s.layer,
+                c_in: p.c_in,
+                c_out: p.c_out,
+                n_in: p.n,
+                n_out: p.n_out(),
+                stride: p.stride,
+                extent: p.effective_k(),
+                pad: p.pad,
+                cap: 0,
+                buf_off: 0,
+                op: ChainOp::Conv { p: *p, relu: *relu },
+            },
+            StepOp::Pool { kind, p } => ChainStage {
+                layer: s.layer,
+                c_in: p.channels,
+                c_out: p.channels,
+                n_in: p.n,
+                n_out: p.n_out(),
+                stride: p.stride,
+                extent: p.w,
+                pad: 0,
+                cap: 0,
+                buf_off: 0,
+                op: ChainOp::Pool { kind: *kind, p: *p },
+            },
+            _ => bail!("non-chainable step handed to the chain builder"),
+        };
+        stages.push(st);
+    }
+    let n_final = stages.last().expect("chains have >= 2 stages").n_out;
+    let tile = match cfg.chain_tile {
+        Some(t) => t.clamp(1, n_final.max(1)),
+        None => {
+            let mut t = n_final.max(1);
+            while t > CHAIN_MIN_TILE && chain_task_elems(&mut stages, t) > CHAIN_CACHE_ELEMS {
+                t /= 2;
+            }
+            t
+        }
+    };
+    let task_elems = chain_task_elems(&mut stages, tile);
+    let max_spans = n_final.div_ceil(CHAIN_MIN_SPAN).clamp(1, CHAIN_MAX_TASKS);
+    let max_tasks = (batch * max_spans).min(CHAIN_MAX_TASKS).max(1);
+    let unit_work: usize = stages.iter().map(|st| st.c_out * st.n_out).sum();
+    Ok(ChainPlan {
+        batch,
+        stages,
+        tile,
+        task_elems,
+        max_tasks,
+        unit_work,
+    })
+}
 
 /// The scratch a plan executes in: one flat arena
-/// `[act A | act B | tmp | col | fuse]`, grown once to the plan's
-/// precomputed size and recycled dirty across requests.
+/// `[act A | act B | tmp | col | fuse | pool]`, grown once to the
+/// plan's precomputed size and recycled dirty across requests.
 #[derive(Clone, Debug, Default)]
 pub struct PlanScratch {
     arena: Vec<f32>,
@@ -284,6 +515,27 @@ pub struct LayerTune {
     pub probes: Vec<ProbeResult>,
 }
 
+/// Per-segment autotune record: under [`PlannerConfig::autotune`] each
+/// candidate fused chain is micro-probed against running its stages
+/// unfused, so the fuse/no-fuse decision is *measured on the segment*,
+/// not inferred from lone-layer timings. Kept on the compiled [`Plan`]
+/// for auditability.
+#[derive(Clone, Debug)]
+pub struct SegmentTune {
+    /// First and last model layer index of the candidate segment.
+    pub layers: (usize, usize),
+    /// Whether the segment compiled fused.
+    pub fused: bool,
+    /// `true` when the decision came from the [`TuneCache`] (micros
+    /// then stay 0 — the measurement happened in an earlier compile or
+    /// process).
+    pub cached: bool,
+    /// Best-of-probes wall time for the fused sweep, microseconds.
+    pub fused_micros: f64,
+    /// Best-of-probes wall time for the per-stage unfused run.
+    pub unfused_micros: f64,
+}
+
 /// Timed probe runs per candidate (after one untimed warm-up run); the
 /// minimum is taken — short kernels are noisy and min is the robust
 /// estimator for "how fast can this kernel go here".
@@ -302,17 +554,36 @@ struct TuneKey {
     threads: usize,
 }
 
+/// Key for a fused-vs-unfused segment decision: the segment signature
+/// (stage shapes + batch, see [`segment_sig`]) plus the machine
+/// configuration.
+type SegKey = (String, SimdTier, usize);
+
 #[derive(Default)]
 struct TuneInner {
     entries: Vec<(TuneKey, PlanKernel)>,
+    segments: Vec<(SegKey, bool)>,
     hits: u64,
     misses: u64,
+    /// Write-through persistence target (None = in-memory only).
+    persist: Option<PathBuf>,
 }
 
 /// Process-wide cache of measured kernel choices, keyed by
-/// `(layer shape, SIMD tier, executor threads)`. Shared across engines,
-/// batch buckets, and coordinator workers so each distinct shape is
-/// probed once per process no matter how many plans compile.
+/// `(layer shape, SIMD tier, executor threads)`, plus fused-vs-unfused
+/// segment decisions keyed by `(segment signature, SIMD tier,
+/// threads)`. Shared across engines, batch buckets, and coordinator
+/// workers so each distinct shape is probed once per process no matter
+/// how many plans compile.
+///
+/// With persistence enabled ([`TuneCache::enable_persistence`] — the
+/// serve CLI turns it on at startup, honoring `SWSNN_TUNE_CACHE`, with
+/// `bench_results/tunecache.json` as the default path) decisions are
+/// also written through to disk and reloaded on the next start, so
+/// replicated restarts skip re-probing entirely. The file is gated on
+/// the CPU model string; every entry additionally carries its SIMD
+/// tier and thread count, so a changed machine configuration re-probes
+/// instead of trusting stale measurements.
 #[derive(Default)]
 pub struct TuneCache {
     inner: Mutex<TuneInner>,
@@ -348,16 +619,49 @@ impl TuneCache {
             return *existing;
         }
         g.entries.push((key, kernel));
+        let snapshot = persist_snapshot(&g);
+        drop(g);
+        write_snapshot(snapshot);
         kernel
     }
 
-    /// Distinct probed decisions cached.
+    fn lookup_segment(&self, key: &SegKey) -> Option<bool> {
+        let mut g = self.inner.lock().unwrap();
+        let found = g.segments.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        if found.is_some() {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+        }
+        found
+    }
+
+    /// Insert-or-get for segment decisions (same first-writer-wins
+    /// contract as [`TuneCache::insert`]).
+    fn insert_segment(&self, key: SegKey, fused: bool) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, existing)) = g.segments.iter().find(|(k, _)| *k == key) {
+            return *existing;
+        }
+        g.segments.push((key, fused));
+        let snapshot = persist_snapshot(&g);
+        drop(g);
+        write_snapshot(snapshot);
+        fused
+    }
+
+    /// Distinct probed kernel decisions cached.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Distinct probed segment decisions cached.
+    pub fn segments_len(&self) -> usize {
+        self.inner.lock().unwrap().segments.len()
     }
 
     /// Lookups answered from the cache.
@@ -369,6 +673,279 @@ impl TuneCache {
     pub fn misses(&self) -> u64 {
         self.inner.lock().unwrap().misses
     }
+
+    /// Turn on disk persistence: load whatever a previous process
+    /// recorded for this CPU model, then write every new decision
+    /// through. `path = None` resolves `SWSNN_TUNE_CACHE` (a path; the
+    /// values `off`, `0`, or empty disable persistence) and falls back
+    /// to `bench_results/tunecache.json`. Returns the number of entries
+    /// loaded. Tests and tools can instead call
+    /// [`TuneCache::save_to`] / [`TuneCache::load_from`] on explicit
+    /// paths without touching process-global state.
+    pub fn enable_persistence(&self, path: Option<PathBuf>) -> usize {
+        let resolved = match path {
+            Some(p) => Some(p),
+            None => match std::env::var("SWSNN_TUNE_CACHE") {
+                Ok(v) if v.is_empty() || v == "off" || v == "0" => None,
+                Ok(v) => Some(PathBuf::from(v)),
+                Err(_) => Some(PathBuf::from("bench_results/tunecache.json")),
+            },
+        };
+        let Some(p) = resolved else { return 0 };
+        let loaded = self.load_from(&p).unwrap_or(0);
+        self.inner.lock().unwrap().persist = Some(p);
+        loaded
+    }
+
+    /// Serialize every cached decision to `path` (hand-rolled JSON —
+    /// serde is unavailable offline), tagged with this machine's CPU
+    /// model string.
+    pub fn save_to(&self, path: &Path) -> std::io::Result<()> {
+        let g = self.inner.lock().unwrap();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, render_tune_json(&g.entries, &g.segments))
+    }
+
+    /// Merge decisions persisted by a previous process. Entries are
+    /// ignored wholesale when the file's CPU model differs from this
+    /// machine's, and individually when already present (in-memory
+    /// probes win) or malformed. Returns the number of entries merged.
+    pub fn load_from(&self, path: &Path) -> std::io::Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        let my_cpu = json_escape(&cpu_model());
+        let Some(pos) = text.find("\"cpu\":\"") else {
+            return Ok(0);
+        };
+        let after = &text[pos + 7..];
+        let Some(e) = after.find('"') else {
+            return Ok(0);
+        };
+        if after[..e] != my_cpu {
+            return Ok(0);
+        }
+        let mut loaded = 0usize;
+        let mut g = self.inner.lock().unwrap();
+        for obj in nested_objects(&text) {
+            if let Some(kname) = obj_field(obj, "kernel") {
+                let Some(kernel) = parse_conv_kernel(kname) else {
+                    continue;
+                };
+                let Some(tier) = obj_field(obj, "tier").and_then(SimdTier::parse) else {
+                    continue;
+                };
+                let Some(threads) = obj_usize(obj, "threads") else {
+                    continue;
+                };
+                let (Some(batch), Some(c_in), Some(c_out), Some(n)) = (
+                    obj_usize(obj, "batch"),
+                    obj_usize(obj, "c_in"),
+                    obj_usize(obj, "c_out"),
+                    obj_usize(obj, "n"),
+                ) else {
+                    continue;
+                };
+                let (Some(k), Some(stride), Some(dilation), Some(pad)) = (
+                    obj_usize(obj, "k"),
+                    obj_usize(obj, "stride"),
+                    obj_usize(obj, "dilation"),
+                    obj_usize(obj, "pad"),
+                ) else {
+                    continue;
+                };
+                if k < 1 || stride < 1 || dilation < 1 {
+                    continue;
+                }
+                let key = TuneKey {
+                    shape: Conv1dParams {
+                        batch,
+                        c_in,
+                        c_out,
+                        n,
+                        k,
+                        stride,
+                        dilation,
+                        pad,
+                    },
+                    tier,
+                    threads,
+                };
+                if !g.entries.iter().any(|(existing, _)| *existing == key) {
+                    g.entries.push((key, kernel));
+                    loaded += 1;
+                }
+            } else if let Some(fused) = obj_field(obj, "fused") {
+                let fused = fused == "true";
+                let (Some(sig), Some(tier), Some(threads)) = (
+                    obj_field(obj, "sig"),
+                    obj_field(obj, "tier").and_then(SimdTier::parse),
+                    obj_usize(obj, "threads"),
+                ) else {
+                    continue;
+                };
+                let key: SegKey = (sig.to_string(), tier, threads);
+                if !g.segments.iter().any(|(existing, _)| *existing == key) {
+                    g.segments.push((key, fused));
+                    loaded += 1;
+                }
+            }
+        }
+        Ok(loaded)
+    }
+}
+
+/// Render the write-through snapshot while the lock is held
+/// (CPU-only serialization — probing is compile-time, and the files are
+/// tiny). Returns `None` unless persistence is enabled.
+fn persist_snapshot(g: &TuneInner) -> Option<(PathBuf, String)> {
+    let path = g.persist.as_ref()?;
+    Some((path.clone(), render_tune_json(&g.entries, &g.segments)))
+}
+
+/// Perform the blocking disk I/O *after* the cache lock is dropped, so
+/// concurrently-warming workers never queue behind a file write. Each
+/// write stages through its own uniquely-named temp file (pid +
+/// process-wide counter — two racing writers must never interleave on
+/// one inode) and lands with an atomic rename, so the target is always
+/// well-formed. Racing inserts may land their snapshots out of order;
+/// any decision the losing write momentarily dropped is re-persisted
+/// by the next insert — the on-disk cache is advisory, the in-memory
+/// one is canonical. Failures are swallowed: the cache stays correct
+/// in memory.
+fn write_snapshot(snapshot: Option<(PathBuf, String)>) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let Some((path, text)) = snapshot else { return };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    let tmp = path.with_extension(format!(
+        "json.tmp.{}.{}",
+        std::process::id(),
+        WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, &path).is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+fn render_tune_json(entries: &[(TuneKey, PlanKernel)], segments: &[(SegKey, bool)]) -> String {
+    let kernels: Vec<String> = entries
+        .iter()
+        .map(|(k, v)| {
+            format!(
+                "{{\"batch\":{},\"c_in\":{},\"c_out\":{},\"n\":{},\"k\":{},\"stride\":{},\"dilation\":{},\"pad\":{},\"tier\":\"{}\",\"threads\":{},\"kernel\":\"{}\"}}",
+                k.shape.batch,
+                k.shape.c_in,
+                k.shape.c_out,
+                k.shape.n,
+                k.shape.k,
+                k.shape.stride,
+                k.shape.dilation,
+                k.shape.pad,
+                k.tier.name(),
+                k.threads,
+                v.name()
+            )
+        })
+        .collect();
+    let segs: Vec<String> = segments
+        .iter()
+        .map(|((sig, tier, threads), fused)| {
+            format!(
+                "{{\"sig\":\"{}\",\"tier\":\"{}\",\"threads\":{},\"fused\":{}}}",
+                json_escape(sig),
+                tier.name(),
+                threads,
+                fused
+            )
+        })
+        .collect();
+    format!(
+        "{{\n\"cpu\":\"{}\",\n\"kernels\":[\n{}\n],\n\"segments\":[\n{}\n]\n}}\n",
+        json_escape(&cpu_model()),
+        kernels.join(",\n"),
+        segs.join(",\n")
+    )
+}
+
+/// The CPU model string the persisted cache is keyed by: measurements
+/// do not transfer across microarchitectures, so a file recorded on a
+/// different machine is ignored wholesale.
+fn cpu_model() -> String {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+            for line in info.lines() {
+                if let Some((key, val)) = line.split_once(':') {
+                    if key.trim() == "model name" {
+                        return val.trim().to_string();
+                    }
+                }
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The entry objects of a persisted tune file (the nested `{...}`
+/// literals after the outer brace). Entry objects never nest and the
+/// strings we write never contain braces, so a flat scan suffices —
+/// this parser only ever reads files this module wrote, and anything
+/// malformed is simply skipped.
+fn nested_objects(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let Some(first) = text.find('{') else {
+        return out;
+    };
+    let mut rest = &text[first + 1..];
+    while let Some(s) = rest.find('{') {
+        let after = &rest[s + 1..];
+        let Some(e) = after.find('}') else { break };
+        out.push(&after[..e]);
+        rest = &after[e + 1..];
+    }
+    out
+}
+
+/// Extract the raw value of `"key":` from an entry object: quoted
+/// strings are returned unquoted, other values run to the next comma.
+fn obj_field<'a>(obj: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let pos = obj.find(&pat)?;
+    let rest = obj[pos + pat.len()..].trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        let end = stripped.find('"')?;
+        Some(&stripped[..end])
+    } else {
+        let end = rest.find(',').unwrap_or(rest.len());
+        Some(rest[..end].trim())
+    }
+}
+
+fn obj_usize(obj: &str, key: &str) -> Option<usize> {
+    obj_field(obj, key)?.parse().ok()
 }
 
 /// Reused probe buffers (compile-time only — probing allocates once per
@@ -507,15 +1084,20 @@ pub struct Plan {
     tmp_len: usize,
     /// Elements for the im2col column region (largest im2col layer).
     col_len: usize,
-    /// Elements for the fused conv→pool row buffers (largest fused
-    /// step; zero when nothing fused).
+    /// Elements for the fused-chain ring buffers (largest fused
+    /// segment's `max_tasks · task_elems`; zero when nothing fused).
     fuse_len: usize,
+    /// Elements for the strided overlapping-pool dense scratch rows
+    /// (largest such pool step; zero when none).
+    pool_len: usize,
     in_len: usize,
     out_c: usize,
     out_n: usize,
     /// Autotune audit log (empty unless compiled with
     /// [`PlannerConfig::autotune`]).
     tunes: Vec<LayerTune>,
+    /// Segment fuse/no-fuse audit log (empty unless autotuned).
+    seg_tunes: Vec<SegmentTune>,
 }
 
 /// Shape-based kernel choice for a conv-shaped layer under `Auto`.
@@ -586,7 +1168,7 @@ fn select_kernel(
 impl Plan {
     /// Compile the model for one batch size. Runs once per batch bucket;
     /// everything shape- or choice-dependent happens here — including
-    /// the autotune probes and the conv→pool fusion pass.
+    /// the autotune probes and the chain-fusion grouping pass.
     pub fn compile(model: &Model, batch: usize, cfg: &PlannerConfig) -> Result<Plan> {
         ensure!(batch >= 1, "plan batch must be >= 1");
         ensure!(
@@ -597,16 +1179,19 @@ impl Plan {
         let layers = model.layers();
         let ex = Executor::global();
         let (mut c, mut n) = (model.c_in, model.seq_len);
-        let mut steps = Vec::with_capacity(nlayers);
-        let (mut act_len, mut tmp_len) = (0usize, 0usize);
-        let (mut col_len, mut fuse_len) = (0usize, 0usize);
+        // ── pass 1: classify every layer into a single raw step ──────
+        // (shape resolution + kernel selection, exactly one probe/tune
+        // record per conv-shaped layer; fusion happens in pass 2 over
+        // the classified list, so speculative grouping can never
+        // double-probe a layer).
+        let mut raw: Vec<Step> = Vec::with_capacity(nlayers);
+        let (mut tmp_len, mut col_len) = (0usize, 0usize);
         let mut tunes: Vec<LayerTune> = Vec::new();
         let mut probe = ProbeScratch::default();
-        let mut i = 0usize;
-        while i < nlayers {
+        for i in 0..nlayers {
             let layer = &layers[i];
             let in_len = batch * c * n;
-            let (mut kernel, mut op) = match layer {
+            let (kernel, op) = match layer {
                 Layer::Conv {
                     c_in,
                     c_out,
@@ -675,57 +1260,10 @@ impl Plan {
                     )
                 }
             };
-            let (mut c2, mut n2) = layer.out_shape(c, n);
+            let (c2, n2) = layer.out_shape(c, n);
             ensure!(n2 > 0, "layer {i} produces empty output (c={c}, n={n})");
-            let mut consumed = 1usize;
-            // Fusion pass: a sliding conv directly feeding a
-            // non-overlapping pool (`stride ≥ w`, stride > 1, valid
-            // boundary — the plan's pools are always valid-mode) folds
-            // into one step. Restricted to the sliding kernel because
-            // the fused executor reuses its per-row body verbatim.
-            if cfg.fuse && kernel == PlanKernel::Sliding && i + 1 < nlayers {
-                let conv_info = match &op {
-                    StepOp::Conv { p, relu } => Some((*p, *relu)),
-                    _ => None,
-                };
-                if let Some((cp, relu)) = conv_info {
-                    if let Layer::Pool {
-                        kind,
-                        w: pw,
-                        stride: ps,
-                    } = &layers[i + 1]
-                    {
-                        if *ps > 1 && *ps >= *pw {
-                            let pool_p = Pool1dParams::new(c2, n2, *pw)
-                                .with_batch(batch)
-                                .with_stride(*ps);
-                            let (c3, n3) = layers[i + 1].out_shape(c2, n2);
-                            ensure!(
-                                n3 > 0,
-                                "layer {} produces empty output (c={c2}, n={n2})",
-                                i + 1
-                            );
-                            let rows = batch * cp.c_out;
-                            fuse_len = fuse_len.max(rows.min(FUSE_MAX_TASKS) * cp.n_out());
-                            kernel = PlanKernel::FusedSlidingPool;
-                            op = StepOp::ConvPool {
-                                conv: cp,
-                                relu,
-                                kind: *kind,
-                                pool: pool_p,
-                            };
-                            c2 = c3;
-                            n2 = n3;
-                            consumed = 2;
-                        }
-                    }
-                }
-            }
             let out_len = batch * c2 * n2;
-            if i + consumed < nlayers {
-                act_len = act_len.max(out_len);
-            }
-            steps.push(Step {
+            raw.push(Step {
                 layer: i,
                 kernel,
                 op,
@@ -734,7 +1272,68 @@ impl Plan {
             });
             c = c2;
             n = n2;
-            i += consumed;
+        }
+        // ── pass 2: chain-fusion grouping ────────────────────────────
+        // Greedily take every maximal run of eligible steps (≥ 2 layers
+        // with at least one conv — a lone pool gains nothing). Under
+        // autotune, each candidate segment is micro-probed fused vs
+        // unfused and only kept when the fused sweep measures faster.
+        let mut steps: Vec<Step> = Vec::with_capacity(raw.len());
+        let mut fuse_len = 0usize;
+        let mut seg_tunes: Vec<SegmentTune> = Vec::new();
+        let mut i = 0usize;
+        while i < raw.len() {
+            if cfg.fuse {
+                let mut j = i;
+                let mut has_conv = false;
+                while j < raw.len() && chain_eligible(&raw[j]) {
+                    if matches!(raw[j].op, StepOp::Conv { .. }) {
+                        has_conv = true;
+                    }
+                    j += 1;
+                }
+                if has_conv && j - i >= 2 {
+                    let chain = build_chain(&raw[i..j], batch, cfg)?;
+                    let keep = if cfg.autotune {
+                        probe_segment(ex, model, &chain, &raw[i..j], &mut seg_tunes)?
+                    } else {
+                        true
+                    };
+                    if keep {
+                        fuse_len = fuse_len.max(chain.max_tasks * chain.task_elems);
+                        steps.push(Step {
+                            layer: raw[i].layer,
+                            kernel: PlanKernel::FusedChain,
+                            in_len: raw[i].in_len,
+                            out_len: raw[j - 1].out_len,
+                            op: StepOp::Chain(chain),
+                        });
+                        i = j;
+                        continue;
+                    }
+                }
+            }
+            steps.push(raw[i].clone());
+            i += 1;
+        }
+        // ── region sizing over the final step list ───────────────────
+        // Fused intermediates never materialize, so the activation
+        // ping/pong regions only need the largest *chain-boundary*
+        // activation; the pool region covers the largest overlapping
+        // strided pool's dense scratch rows.
+        let mut act_len = 0usize;
+        let mut pool_len = 0usize;
+        let last = steps.len() - 1;
+        for (si, s) in steps.iter().enumerate() {
+            if si < last {
+                act_len = act_len.max(s.out_len);
+            }
+            if let StepOp::Pool { p, .. } = &s.op {
+                if p.stride > 1 && p.stride < p.w && p.boundary == Boundary::Valid {
+                    let tasks = (p.batch * p.channels).min(POOL_SCRATCH_TASKS);
+                    pool_len = pool_len.max(tasks * p.dense_len());
+                }
+            }
         }
         Ok(Plan {
             batch,
@@ -744,10 +1343,12 @@ impl Plan {
             tmp_len,
             col_len,
             fuse_len,
+            pool_len,
             in_len: batch * model.c_in * model.seq_len,
             out_c: c,
             out_n: n,
             tunes,
+            seg_tunes,
         })
     }
 
@@ -756,39 +1357,54 @@ impl Plan {
         self.batch
     }
 
-    /// Total arena elements: `2·act + tmp + col + fuse`.
+    /// Total arena elements: `2·act + tmp + col + fuse + pool`.
     pub fn arena_len(&self) -> usize {
-        2 * self.act_len + self.tmp_len + self.col_len + self.fuse_len
+        2 * self.act_len + self.tmp_len + self.col_len + self.fuse_len + self.pool_len
     }
 
-    /// The chosen kernel per *step* (fused steps appear once).
+    /// The chosen kernel per *step* (fused segments appear once).
     pub fn kernels(&self) -> Vec<PlanKernel> {
         self.steps.iter().map(|s| s.kernel).collect()
     }
 
-    /// The chosen kernel per *model layer*, expanding fused steps back
-    /// to their constituent layers — the audit surface parity tests map
-    /// onto eager per-layer backend overrides.
+    /// The chosen kernel per *model layer*, expanding fused segments
+    /// back to their constituent layers — the audit surface parity
+    /// tests map onto eager per-layer backend overrides.
     pub fn layer_kernels(&self) -> Vec<PlanKernel> {
         let mut out = Vec::with_capacity(self.n_layers);
         for s in &self.steps {
-            match s.kernel {
-                PlanKernel::FusedSlidingPool => {
-                    out.push(PlanKernel::Sliding);
-                    out.push(PlanKernel::Pool);
+            match &s.op {
+                StepOp::Chain(chain) => {
+                    for st in &chain.stages {
+                        out.push(match st.op {
+                            ChainOp::Conv { .. } => PlanKernel::Sliding,
+                            ChainOp::Pool { .. } => PlanKernel::Pool,
+                        });
+                    }
                 }
-                k => out.push(k),
+                _ => out.push(s.kernel),
             }
         }
         out
     }
 
-    /// Number of fused conv→pool steps in the plan.
+    /// Number of fused chain steps in the plan.
     pub fn fused_steps(&self) -> usize {
         self.steps
             .iter()
-            .filter(|s| s.kernel == PlanKernel::FusedSlidingPool)
+            .filter(|s| s.kernel == PlanKernel::FusedChain)
             .count()
+    }
+
+    /// Number of model layers covered by fused chain steps.
+    pub fn fused_layers(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match &s.op {
+                StepOp::Chain(chain) => chain.stages.len(),
+                _ => 0,
+            })
+            .sum()
     }
 
     /// Autotune audit log: one entry per probed (or cache-served)
@@ -797,10 +1413,17 @@ impl Plan {
         &self.tunes
     }
 
+    /// Segment fuse/no-fuse audit log: one entry per candidate chain
+    /// segment probed (or cache-served) under autotune; empty
+    /// otherwise.
+    pub fn segment_tuning(&self) -> &[SegmentTune] {
+        &self.seg_tunes
+    }
+
     /// Human-readable per-layer choices, e.g.
     /// `conv(k=7,c8)→sliding | pool(max)→pool | dense(4)→gemm`; fused
-    /// steps print both layers:
-    /// `conv(k=7,c8)+pool(max,w=2)→sliding+pool`.
+    /// segments print every stage:
+    /// `[conv(k=7,c8)+pool(max,w=2)+conv(k=3,c8)]→fused_chain`.
     pub fn describe(&self) -> String {
         let parts: Vec<String> = self
             .steps
@@ -811,13 +1434,19 @@ impl Plan {
                     StepOp::Residual { p } => format!("residual(k={},d={})", p.k, p.dilation),
                     StepOp::Pool { kind, p } => format!("pool({},w={})", kind.name(), p.w),
                     StepOp::Dense { out, .. } => format!("dense({out})"),
-                    StepOp::ConvPool { conv, kind, pool, .. } => format!(
-                        "conv(k={},c{})+pool({},w={})",
-                        conv.k,
-                        conv.c_out,
-                        kind.name(),
-                        pool.w
-                    ),
+                    StepOp::Chain(chain) => {
+                        let stages: Vec<String> = chain
+                            .stages
+                            .iter()
+                            .map(|st| match &st.op {
+                                ChainOp::Conv { p, .. } => format!("conv(k={},c{})", p.k, p.c_out),
+                                ChainOp::Pool { kind, p } => {
+                                    format!("pool({},w={})", kind.name(), p.w)
+                                }
+                            })
+                            .collect();
+                        format!("[{}]", stages.join("+"))
+                    }
                 };
                 format!("{shape}→{}", s.kernel.name())
             })
@@ -875,7 +1504,9 @@ impl Plan {
         let (reg_a, rest) = scratch.arena.split_at_mut(self.act_len);
         let (reg_b, rest) = rest.split_at_mut(self.act_len);
         let (tmp_reg, rest) = rest.split_at_mut(self.tmp_len);
-        let (col_reg, fuse_reg) = rest.split_at_mut(self.col_len);
+        let (col_reg, rest) = rest.split_at_mut(self.col_len);
+        let (fuse_reg, rest) = rest.split_at_mut(self.fuse_len);
+        let pool_reg = &mut rest[..self.pool_len];
         // The activation regions alternate roles per step; the first
         // step reads the request input, the last writes `out`.
         let mut reg_src: &mut [f32] = reg_b;
@@ -889,7 +1520,7 @@ impl Plan {
                 } else {
                     &mut reg_dst[..step.out_len]
                 };
-                exec_step(ex, model, step, src, dst, tmp_reg, col_reg, fuse_reg)?;
+                exec_step(ex, model, step, src, dst, tmp_reg, col_reg, fuse_reg, pool_reg)?;
             }
             std::mem::swap(&mut reg_src, &mut reg_dst);
         }
@@ -898,8 +1529,9 @@ impl Plan {
 }
 
 /// Run one compiled step. `src`/`dst` are the step's activation views
-/// (disjoint by the arena layout); `tmp`/`col`/`fuse` are the shared
-/// residual, im2col, and fused-row regions.
+/// (disjoint by the arena layout); `tmp`/`col`/`fuse`/`pool_scratch`
+/// are the shared residual, im2col, chain-ring, and dense-pool-row
+/// regions.
 #[allow(clippy::too_many_arguments)]
 fn exec_step(
     ex: &Executor,
@@ -910,7 +1542,11 @@ fn exec_step(
     tmp: &mut [f32],
     col: &mut [f32],
     fuse: &mut [f32],
+    pool_scratch: &mut [f32],
 ) -> Result<()> {
+    if let StepOp::Chain(chain) = &step.op {
+        return run_fused_chain(ex, model, chain, src, fuse, dst);
+    }
     let layer = &model.layers()[step.layer];
     match (&step.op, layer) {
         (StepOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
@@ -933,24 +1569,18 @@ fn exec_step(
             )
         }
         (StepOp::Pool { kind, p }, Layer::Pool { .. }) => {
-            pool1d_with_into(ex, *kind, src, p, dst);
+            if p.stride > 1 && p.stride < p.w && p.boundary == Boundary::Valid {
+                // Strided overlapping windows: dense pass + decimation
+                // out of the arena's pool region instead of a per-row
+                // Vec (same sweep, bit-identical values).
+                pool1d_overlap_strided_with_into(ex, *kind, src, p, pool_scratch, dst);
+            } else {
+                pool1d_with_into(ex, *kind, src, p, dst);
+            }
             Ok(())
         }
         (StepOp::Dense { feat, out, relu }, Layer::Dense { w, b, .. }) => {
             dense_forward(ex, src, w, b, step.in_len / feat, *feat, *out, *relu, dst);
-            Ok(())
-        }
-        (
-            StepOp::ConvPool {
-                conv: cp,
-                relu,
-                kind,
-                pool,
-            },
-            Layer::Conv { w, b, .. },
-        ) => {
-            let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
-            run_fused_conv_pool(ex, src, w, Some(b), cp, epi, *kind, pool, fuse, dst);
             Ok(())
         }
         _ => bail!(
@@ -960,69 +1590,391 @@ fn exec_step(
     }
 }
 
-/// Execute a fused conv→pool step: every `(batch, c_out)` conv row is
-/// computed into a cache-resident row buffer from the arena's fuse
-/// region (by the *same* per-row body the unfused sliding kernel runs —
-/// [`conv::conv1d_sliding_row_into`]) and the non-overlapping pool
-/// windows fold straight out of it (by the *same* fold the unfused pool
-/// runs — [`pool1d_row_nonoverlap`]); the dense conv activation never
-/// materializes. Workers own disjoint row buffers and write disjoint
-/// pool-output row chunks, and per-row values do not depend on the
-/// partitioning, so results are bit-identical to the two-step plan for
-/// every thread count.
-#[allow(clippy::too_many_arguments)]
-fn run_fused_conv_pool(
+/// A chain stage with its weights resolved — what the sweep workers
+/// actually execute.
+enum StageKernel<'a> {
+    Conv {
+        w: &'a [f32],
+        bias: &'a [f32],
+        p: &'a Conv1dParams,
+        relu: bool,
+    },
+    Pool {
+        kind: PoolKind,
+        p: &'a Pool1dParams,
+    },
+}
+
+/// Execute a fused chain step: workers sweep `(batch element ×
+/// final-column span)` units tile-by-tile through the whole segment,
+/// each stage writing into a small per-worker ring buffer in the
+/// arena's fuse region and keeping the trailing halo of its input so
+/// the next tile resumes without recompute. The per-element math is the
+/// *same* row-tile conv body and the *same* non-overlapping pool fold
+/// the unfused plan runs, and every final output element is produced by
+/// exactly one unit — so results are bit-identical to the unfused plan
+/// for every tile size, span split, and thread count (spans restart
+/// their halos, which only re-derives identical intermediate values at
+/// the boundary).
+fn run_fused_chain(
     ex: &Executor,
-    x: &[f32],
-    w: &[f32],
-    bias: Option<&[f32]>,
-    cp: &Conv1dParams,
-    epi: Epilogue<'_>,
-    kind: PoolKind,
-    pp: &Pool1dParams,
+    model: &Model,
+    chain: &ChainPlan,
+    src: &[f32],
     fuse: &mut [f32],
     dst: &mut [f32],
-) {
-    let n_conv = cp.n_out();
-    let n_pool = pp.n_out();
-    let rows = cp.batch * cp.c_out;
-    debug_assert_eq!(dst.len(), rows * n_pool, "fused dst length");
-    debug_assert_eq!(pp.n, n_conv, "pool reads the conv row");
-    let tasks = rows.min(FUSE_MAX_TASKS);
-    let fuse = &mut fuse[..tasks * n_conv];
-    if ex.threads() <= 1 || tasks <= 1 || rows * n_conv < PAR_MIN_FANOUT {
-        let buf = &mut fuse[..n_conv];
-        for (r, drow) in dst.chunks_mut(n_pool).enumerate() {
-            conv::conv1d_sliding_row_into(buf, r, x, w, bias, cp, epi);
-            pool1d_row_nonoverlap(kind, buf, pp, drow);
+) -> Result<()> {
+    let stages = &chain.stages;
+    let m = stages.len();
+    let mut kernels: Vec<StageKernel<'_>> = Vec::with_capacity(m);
+    for st in stages {
+        let layer = &model.layers()[st.layer];
+        match (&st.op, layer) {
+            (ChainOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
+                kernels.push(StageKernel::Conv {
+                    w,
+                    bias: b,
+                    p,
+                    relu: *relu,
+                });
+            }
+            (ChainOp::Pool { kind, p }, Layer::Pool { .. }) => {
+                kernels.push(StageKernel::Pool { kind: *kind, p });
+            }
+            _ => bail!(
+                "fused-chain stage {} does not match the model's layer kind",
+                st.layer
+            ),
         }
-        return;
     }
-    // Balanced contiguous row chunks: every one of the `tasks` row
-    // buffers gets a job, with chunk sizes differing by at most one row
-    // (`ceil(remaining / tasks_left)` per step), so e.g. 18 rows over
-    // 16 buffers run as 16 jobs of 1–2 rows, not 9 jobs of 2.
+    let batch = chain.batch;
+    let (c_final, n_final) = (stages[m - 1].c_out, stages[m - 1].n_out);
+    debug_assert_eq!(src.len(), batch * stages[0].c_in * stages[0].n_in);
+    debug_assert_eq!(dst.len(), batch * c_final * n_final);
+    // Work partitioning: one unit per (batch element, column span).
+    // Spans only split when the batch alone cannot feed the pool; each
+    // concurrent ring-buffer set is bounded by the compile-time
+    // `max_tasks`, with multiple units run sequentially per task.
+    let threads = ex.threads();
+    let target = threads.min(CHAIN_MAX_TASKS);
+    // Gate on the segment's *total* output volume: a deep
+    // down-sampling chain does most of its work in early stages, so the
+    // final stage's volume alone would serialize sweeps that are well
+    // worth fanning out.
+    let small = batch * chain.unit_work < PAR_MIN_FANOUT;
+    let spans = if threads <= 1 || small || batch >= target {
+        1
+    } else {
+        target
+            .div_ceil(batch)
+            .min(n_final.div_ceil(CHAIN_MIN_SPAN))
+            .max(1)
+    };
+    let units = batch * spans;
+    let tasks = if threads <= 1 || small {
+        1
+    } else {
+        units.min(target)
+    }
+    .min(chain.max_tasks)
+    .max(1);
+    let span_len = n_final.div_ceil(spans);
+    // Carve per-unit, per-channel destination column slices. Iterating
+    // (batch, channel, span) walks `dst` front to back with no gaps, so
+    // sequential `split_at_mut` hands every unit its disjoint columns.
+    let mut unit_dst: Vec<Vec<&mut [f32]>> =
+        (0..units).map(|_| Vec::with_capacity(c_final)).collect();
+    {
+        let mut rest: &mut [f32] = dst;
+        for b in 0..batch {
+            for _co in 0..c_final {
+                for j in 0..spans {
+                    let s0 = (j * span_len).min(n_final);
+                    let s1 = ((j + 1) * span_len).min(n_final);
+                    let rem = rest;
+                    let (piece, tail) = rem.split_at_mut(s1 - s0);
+                    rest = tail;
+                    unit_dst[b * spans + j].push(piece);
+                }
+            }
+        }
+        debug_assert!(rest.is_empty());
+    }
+    let fuse = &mut fuse[..tasks * chain.task_elems];
+    let kernels_ref: &[StageKernel<'_>] = &kernels;
+    let tile = chain.tile;
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
-    let mut rest = dst;
-    let mut bufs = fuse.chunks_mut(n_conv);
-    let mut r0 = 0usize;
+    let mut bufs = fuse.chunks_mut(chain.task_elems);
+    let mut unit_iter = unit_dst.into_iter().enumerate();
+    let mut assigned = 0usize;
     for ti in 0..tasks {
-        let take = (rows - r0).div_ceil(tasks - ti);
-        // Move the remainder out of the loop variable so the split's
-        // halves inherit the full arena lifetime.
-        let rem = rest;
-        let (dchunk, tail) = rem.split_at_mut(take * n_pool);
-        rest = tail;
-        let buf = bufs.next().expect("one row buffer per task");
+        let take = (units - assigned).div_ceil(tasks - ti);
+        let my_units: Vec<(usize, Vec<&mut [f32]>)> = unit_iter.by_ref().take(take).collect();
+        assigned += take;
+        let buf = bufs.next().expect("one ring-buffer set per task");
         jobs.push(Box::new(move || {
-            for (j, drow) in dchunk.chunks_mut(n_pool).enumerate() {
-                conv::conv1d_sliding_row_into(buf, r0 + j, x, w, bias, cp, epi);
-                pool1d_row_nonoverlap(kind, buf, pp, drow);
+            for (uidx, mut dsl) in my_units {
+                let b = uidx / spans;
+                let j = uidx % spans;
+                let v0 = (j * span_len).min(n_final);
+                let v1 = ((j + 1) * span_len).min(n_final);
+                if v0 >= v1 {
+                    continue;
+                }
+                chain_sweep_unit(stages, kernels_ref, tile, src, b, v0, v1, buf, &mut dsl);
             }
         }));
-        r0 += take;
     }
     ex.scope(jobs);
+    Ok(())
+}
+
+/// Sweep one `(batch element, final-column span)` unit through the
+/// whole segment. Per tile, targets propagate back through the halo
+/// geometry ([`ChainStage::in_hi`]) and stages then produce front to
+/// back: drop what the next stage has consumed (shifting the retained
+/// `extent − stride` halo to the ring-buffer front), append the new
+/// rows, hand off. Every stage resumes exactly where it stopped, so
+/// nothing is recomputed within a span and the dense intermediates
+/// never exist.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn chain_sweep_unit(
+    stages: &[ChainStage],
+    kernels: &[StageKernel<'_>],
+    tile: usize,
+    src: &[f32],
+    b: usize,
+    v0: usize,
+    v1: usize,
+    task_buf: &mut [f32],
+    dst: &mut [&mut [f32]],
+) {
+    let m = stages.len();
+    let row0 = stages[0].c_in * stages[0].n_in;
+    let src_b = &src[b * row0..][..row0];
+    // Split the task buffer into per-stage ring buffers (laid out in
+    // stage order by `buf_off`).
+    let mut bufs: Vec<&mut [f32]> = Vec::with_capacity(m - 1);
+    {
+        let mut rest = task_buf;
+        for st in &stages[..m - 1] {
+            let rem = rest;
+            let (a, tail) = rem.split_at_mut(st.c_out * st.cap);
+            rest = tail;
+            bufs.push(a);
+        }
+    }
+    // prod[i]: outputs produced so far; lo[i]: conceptual origin of
+    // stage i's ring buffer (content = [lo, prod)); hi[i]: this tile's
+    // production target.
+    let mut prod: Vec<usize> = vec![0; m];
+    let mut lo: Vec<usize> = vec![0; m];
+    let mut hi: Vec<usize> = vec![0; m];
+    prod[m - 1] = v0;
+    for i in (0..m - 1).rev() {
+        prod[i] = stages[i + 1].in_lo(prod[i + 1]);
+        lo[i] = prod[i];
+    }
+    let mut u = v0;
+    while u < v1 {
+        let u1 = (u + tile).min(v1);
+        hi[m - 1] = u1;
+        for i in (0..m - 1).rev() {
+            hi[i] = stages[i + 1].in_hi(hi[i + 1]).max(prod[i]);
+        }
+        for i in 0..m {
+            // Drop fully consumed input rows: the next stage resumes at
+            // prod[i+1], so everything below its in_lo is dead. A
+            // stride > extent stage (gapped pool) can leave lo ahead of
+            // prod — the gap elements are simply never produced.
+            if i + 1 < m {
+                let keep = stages[i + 1].in_lo(prod[i + 1]);
+                if keep > lo[i] {
+                    let have = prod[i].saturating_sub(keep);
+                    if have > 0 {
+                        let shift = keep - lo[i];
+                        let cap = stages[i].cap;
+                        for row in bufs[i].chunks_mut(cap) {
+                            row.copy_within(shift..shift + have, 0);
+                        }
+                    }
+                    lo[i] = keep;
+                }
+            }
+            let new_lo = if i + 1 < m {
+                prod[i].max(lo[i])
+            } else {
+                prod[i]
+            };
+            let new_hi = hi[i];
+            if new_hi <= new_lo {
+                prod[i] = prod[i].max(new_hi);
+                continue;
+            }
+            let n_new = new_hi - new_lo;
+            debug_assert!(
+                i + 1 == m || new_hi - lo[i] <= stages[i].cap,
+                "chain ring-buffer overflow at stage {i}"
+            );
+            let (inputs, outputs) = bufs.split_at_mut(i);
+            let (src_view, src0, pitch): (&[f32], usize, usize) = if i == 0 {
+                (src_b, 0, stages[0].n_in)
+            } else {
+                (&*inputs[i - 1], lo[i - 1], stages[i - 1].cap)
+            };
+            match &kernels[i] {
+                StageKernel::Conv { w, bias, p, relu } => {
+                    let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+                    for co in 0..stages[i].c_out {
+                        let yseg: &mut [f32] = if i + 1 < m {
+                            let cap = stages[i].cap;
+                            &mut outputs[0][co * cap + (new_lo - lo[i])..][..n_new]
+                        } else {
+                            &mut dst[co][new_lo - v0..][..n_new]
+                        };
+                        conv::conv1d_sliding_row_tile_into(
+                            yseg, new_lo, co, src_view, src0, pitch, w, Some(bias), p, epi, 0,
+                        );
+                    }
+                }
+                StageKernel::Pool { kind, p } => {
+                    for ch in 0..stages[i].c_out {
+                        let xin = &src_view[ch * pitch..][..pitch];
+                        let yseg: &mut [f32] = if i + 1 < m {
+                            let cap = stages[i].cap;
+                            &mut outputs[0][ch * cap + (new_lo - lo[i])..][..n_new]
+                        } else {
+                            &mut dst[ch][new_lo - v0..][..n_new]
+                        };
+                        pool1d_row_nonoverlap_tile(*kind, xin, src0, p, new_lo, yseg);
+                    }
+                }
+            }
+            prod[i] = new_hi;
+        }
+        u = u1;
+    }
+}
+
+/// Measure a candidate segment fused vs unfused (compile-time only;
+/// decisions cached process-wide in the [`TuneCache`], and on disk when
+/// persistence is on). Fused wins ties — it also shrinks the arena.
+fn probe_segment(
+    ex: &Executor,
+    model: &Model,
+    chain: &ChainPlan,
+    raw: &[Step],
+    seg_tunes: &mut Vec<SegmentTune>,
+) -> Result<bool> {
+    let key: SegKey = (segment_sig(chain), crate::simd::tier(), ex.threads());
+    let layers = (raw[0].layer, raw[raw.len() - 1].layer);
+    if let Some(fused) = TuneCache::global().lookup_segment(&key) {
+        seg_tunes.push(SegmentTune {
+            layers,
+            fused,
+            cached: true,
+            fused_micros: 0.0,
+            unfused_micros: 0.0,
+        });
+        return Ok(fused);
+    }
+    // Probe buffers (allocating is fine here — never on the request
+    // path). Deterministic non-zero input, same pattern as the kernel
+    // probes.
+    let x: Vec<f32> = (0..raw[0].in_len)
+        .map(|i| ((i % 29) as f32) * 0.0625 - 0.875)
+        .collect();
+    let mut outs: Vec<Vec<f32>> = raw.iter().map(|s| vec![0.0f32; s.out_len]).collect();
+    let mut fuse_buf = vec![0.0f32; chain.max_tasks * chain.task_elems];
+    let mut out = vec![0.0f32; raw[raw.len() - 1].out_len];
+    exec_segment_unfused(ex, model, raw, &x, &mut outs)?;
+    let mut unfused_best = f64::INFINITY;
+    for _ in 0..PROBE_ITERS {
+        let t0 = Instant::now();
+        exec_segment_unfused(ex, model, raw, &x, &mut outs)?;
+        unfused_best = unfused_best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    run_fused_chain(ex, model, chain, &x, &mut fuse_buf, &mut out)?;
+    let mut fused_best = f64::INFINITY;
+    for _ in 0..PROBE_ITERS {
+        let t0 = Instant::now();
+        run_fused_chain(ex, model, chain, &x, &mut fuse_buf, &mut out)?;
+        fused_best = fused_best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let fused = fused_best <= unfused_best;
+    let canonical = TuneCache::global().insert_segment(key, fused);
+    seg_tunes.push(SegmentTune {
+        layers,
+        fused: canonical,
+        cached: false,
+        fused_micros: fused_best,
+        unfused_micros: unfused_best,
+    });
+    Ok(canonical)
+}
+
+/// Run a candidate segment's raw steps sequentially (the unfused probe
+/// arm): per-step buffers, same kernels the unfused plan would run.
+fn exec_segment_unfused(
+    ex: &Executor,
+    model: &Model,
+    raw: &[Step],
+    x: &[f32],
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    for (si, s) in raw.iter().enumerate() {
+        let (head, tail) = outs.split_at_mut(si);
+        let src: &[f32] = if si == 0 { x } else { &head[si - 1] };
+        let dst: &mut [f32] = &mut tail[0];
+        match &s.op {
+            StepOp::Conv { p, relu } => {
+                let Layer::Conv { w, b, .. } = &model.layers()[s.layer] else {
+                    bail!("segment probe: layer {} is not a conv", s.layer);
+                };
+                let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+                run_conv(ex, s.kernel, src, w, Some(b), p, epi, &mut [], dst)?;
+            }
+            StepOp::Pool { kind, p } => pool1d_with_into(ex, *kind, src, p, dst),
+            _ => bail!("non-chainable step in segment probe"),
+        }
+    }
+    Ok(())
+}
+
+/// Stable signature of a segment's stage shapes (plus batch and the
+/// *effective* tile size) for the [`TuneCache`] — uses only JSON-safe
+/// characters so persisted keys round-trip verbatim. The tile is part
+/// of the key because a decision measured under a forced tiny tile
+/// (`PlannerConfig::chain_tile`, which pays per-tile bookkeeping on
+/// every column) must never answer for a default cache-sized compile;
+/// the auto-sized tile is a pure function of the stage shapes, so
+/// default compiles still collide onto one key.
+fn segment_sig(chain: &ChainPlan) -> String {
+    use std::fmt::Write;
+    let mut s = format!("b{}t{}", chain.batch, chain.tile);
+    for st in &chain.stages {
+        match &st.op {
+            ChainOp::Conv { p, relu } => {
+                let _ = write!(
+                    s,
+                    "+conv_ci{}co{}n{}k{}s{}d{}p{}r{}",
+                    p.c_in, p.c_out, p.n, p.k, p.stride, p.dilation, p.pad, *relu as u8
+                );
+            }
+            ChainOp::Pool { kind, p } => {
+                let _ = write!(
+                    s,
+                    "+pool_{}c{}n{}w{}s{}",
+                    kind.name(),
+                    p.channels,
+                    p.n,
+                    p.w,
+                    p.stride
+                );
+            }
+        }
+    }
+    s
 }
 
 /// Dispatch a conv-shaped step to its chosen kernel, epilogue fused.
@@ -1056,7 +2008,7 @@ fn run_conv(
             y.copy_from_slice(&v);
             epi.apply(y, 0);
         }
-        PlanKernel::Gemm | PlanKernel::Pool | PlanKernel::FusedSlidingPool => {
+        PlanKernel::Gemm | PlanKernel::Pool | PlanKernel::FusedChain => {
             bail!("non-conv kernel {} in a conv step", kernel.name())
         }
     }
@@ -1066,7 +2018,7 @@ fn run_conv(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::load_config;
+    use crate::config::{load_config, LayerConfig, ModelConfig};
     use crate::workload::Rng;
 
     const CFG: &str = r#"
@@ -1221,7 +2173,7 @@ out = 3
     }
 
     #[test]
-    fn conv_pool_fusion_fuses_nonoverlapping_only() {
+    fn chain_fusion_groups_maximal_runs() {
         const FUSE_CFG: &str = r#"
 [model]
 name = "fuse_t"
@@ -1257,16 +2209,14 @@ stride = 2
             ..PlannerConfig::default()
         };
         let plan = Plan::compile(&m, 2, &cfg).unwrap();
-        // Layer 0+1 fuse (stride ≥ w); layer 2+3 must not (overlapping
-        // windows, stride < w, go through the dense sliding pass).
+        // Layers 0–2 (conv, non-overlapping pool, conv) are one maximal
+        // run → one chain; layer 3 (overlapping windows, stride < w)
+        // breaks the segment and stays a lone pool step.
         assert_eq!(plan.fused_steps(), 1, "{}", plan.describe());
+        assert_eq!(plan.fused_layers(), 3, "{}", plan.describe());
         assert_eq!(
             plan.kernels(),
-            vec![
-                PlanKernel::FusedSlidingPool,
-                PlanKernel::Sliding,
-                PlanKernel::Pool
-            ],
+            vec![PlanKernel::FusedChain, PlanKernel::Pool],
             "{}",
             plan.describe()
         );
@@ -1279,8 +2229,17 @@ stride = 2
                 PlanKernel::Pool
             ]
         );
-        assert!(plan.fuse_len > 0, "fused step reserves row buffers");
-        assert!(plan.describe().contains("+pool(max,w=2)→sliding+pool"), "{}", plan.describe());
+        assert!(plan.fuse_len > 0, "fused chain reserves ring buffers");
+        assert!(
+            plan.pool_len > 0,
+            "overlapping strided pool reserves dense scratch"
+        );
+        assert!(
+            plan.describe()
+                .contains("[conv(k=5,c4)+pool(max,w=2)+conv(k=3,c4)]→fused_chain"),
+            "{}",
+            plan.describe()
+        );
 
         // Fusion off → one step per layer, no fuse region.
         let unfused = Plan::compile(
@@ -1304,8 +2263,229 @@ stride = 2
         plan.run_into(&m, &x, &mut scratch, &mut a).unwrap();
         unfused.run_into(&m, &x, &mut scratch, &mut b).unwrap();
         assert_eq!(a, b, "fused plan diverged from unfused plan");
-        let want = m.forward(&x, 2, ConvBackend::Sliding).unwrap();
-        assert_eq!(a, want.data, "fused plan diverged from forward");
+        let mut want = Vec::new();
+        m.forward_eager_into(
+            &x,
+            2,
+            ConvBackend::Sliding,
+            &mut crate::nn::EagerScratch::default(),
+            &mut want,
+        )
+        .unwrap();
+        assert_eq!(a, want, "fused plan diverged from eager");
+    }
+
+    /// Boundary pin for the segment-break rules: residual skips,
+    /// non-sliding kernels (per-layer overrides), and overlapping pools
+    /// all end a chain; adjacent eligible layers always group.
+    #[test]
+    fn chain_segment_break_rules_pinned() {
+        let conv = |backend| LayerConfig::Conv {
+            c_out: 3,
+            k: 3,
+            stride: 1,
+            dilation: 1,
+            same_pad: true,
+            relu: true,
+            backend,
+        };
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..PlannerConfig::default()
+        };
+        let compile = |layers: Vec<LayerConfig>| {
+            let mc = ModelConfig {
+                name: "breaks".into(),
+                c_in: 1,
+                seq_len: 64,
+                layers,
+            };
+            // c_in 1 vs conv c_out 3: first conv takes c_in from the
+            // model, residuals preserve channels.
+            let m = Model::init(&mc, &mut Rng::new(9)).unwrap();
+            Plan::compile(&m, 2, &cfg).unwrap()
+        };
+        // conv→conv fuses.
+        let p = compile(vec![conv(None), conv(None)]);
+        assert_eq!(p.kernels(), vec![PlanKernel::FusedChain], "{}", p.describe());
+        assert_eq!(p.fused_layers(), 2);
+        // A residual between them breaks the run (and 1-layer runs
+        // never fuse).
+        let p = compile(vec![
+            conv(None),
+            LayerConfig::Residual { k: 3, dilation: 1, backend: None },
+            conv(None),
+        ]);
+        assert_eq!(p.fused_steps(), 0, "{}", p.describe());
+        assert_eq!(p.kernels().len(), 3);
+        // A non-sliding per-layer override breaks the run.
+        let p = compile(vec![conv(Some(ConvBackend::Im2colGemm)), conv(None)]);
+        assert_eq!(p.fused_steps(), 0, "{}", p.describe());
+        // An overlapping pool (stride < w) breaks the run.
+        let p = compile(vec![
+            conv(None),
+            LayerConfig::Pool { kind: "max".into(), w: 3, stride: 2 },
+            conv(None),
+        ]);
+        assert_eq!(p.fused_steps(), 0, "{}", p.describe());
+        // A lone pool run (no conv) never fuses.
+        let p = compile(vec![
+            LayerConfig::Pool { kind: "max".into(), w: 2, stride: 2 },
+            LayerConfig::Pool { kind: "avg".into(), w: 2, stride: 2 },
+        ]);
+        assert_eq!(p.fused_steps(), 0, "{}", p.describe());
+        // conv→pool→conv→pool→conv is one chain of five.
+        let pool = || LayerConfig::Pool { kind: "max".into(), w: 2, stride: 2 };
+        let p = compile(vec![conv(None), pool(), conv(None), pool(), conv(None)]);
+        assert_eq!(p.kernels(), vec![PlanKernel::FusedChain], "{}", p.describe());
+        assert_eq!(p.fused_layers(), 5);
+    }
+
+    /// The sweep is bit-identical for every tile size — forced tiny
+    /// tiles exercise the halo handoff on every stage boundary.
+    #[test]
+    fn chain_forced_tile_sizes_bit_identical() {
+        const CFG_T: &str = r#"
+[model]
+name = "tiles"
+c_in = 2
+seq_len = 80
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 7
+
+[layer.1]
+type = "conv"
+c_out = 3
+k = 5
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "conv"
+c_out = 2
+k = 3
+relu = false
+"#;
+        let (mc, _) = load_config(CFG_T).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(17)).unwrap();
+        let base = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..PlannerConfig::default()
+        };
+        let mut rng = Rng::new(18);
+        let x = rng.vec_uniform(3 * 2 * 80, -1.0, 1.0);
+        let mut scratch = PlanScratch::default();
+        let mut want = Vec::new();
+        Plan::compile(&m, 3, &PlannerConfig { fuse: false, ..base })
+            .unwrap()
+            .run_into(&m, &x, &mut scratch, &mut want)
+            .unwrap();
+        for tile in [1usize, 2, 3, 7, 16, 1000] {
+            let plan = Plan::compile(
+                &m,
+                3,
+                &PlannerConfig {
+                    chain_tile: Some(tile),
+                    ..base
+                },
+            )
+            .unwrap();
+            assert_eq!(plan.fused_steps(), 1, "{}", plan.describe());
+            assert_eq!(plan.fused_layers(), 4, "{}", plan.describe());
+            let mut got = Vec::new();
+            plan.run_into(&m, &x, &mut scratch, &mut got).unwrap();
+            assert_eq!(got, want, "tile {tile}");
+        }
+        // Auto-sized tile too.
+        let plan = Plan::compile(&m, 3, &base).unwrap();
+        let mut got = Vec::new();
+        plan.run_into(&m, &x, &mut scratch, &mut got).unwrap();
+        assert_eq!(got, want, "auto tile");
+    }
+
+    /// The strided overlapping pool runs out of the arena's pool region
+    /// on the plan path and stays bit-identical to the eager path.
+    #[test]
+    fn overlap_strided_pool_uses_arena_scratch() {
+        const CFG_P: &str = r#"
+[model]
+name = "opool"
+c_in = 3
+seq_len = 90
+
+[layer.0]
+type = "pool"
+kind = "avg"
+w = 4
+stride = 2
+"#;
+        let (mc, _) = load_config(CFG_P).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(3)).unwrap();
+        let plan = Plan::compile(&m, 2, &PlannerConfig::default()).unwrap();
+        assert!(plan.pool_len > 0, "dense scratch reserved in the arena");
+        let mut rng = Rng::new(4);
+        let x = rng.vec_uniform(2 * 3 * 90, -1.0, 1.0);
+        let mut got = Vec::new();
+        plan.run_into(&m, &x, &mut PlanScratch::default(), &mut got)
+            .unwrap();
+        let mut want = Vec::new();
+        m.forward_eager_into(
+            &x,
+            2,
+            ConvBackend::Sliding,
+            &mut crate::nn::EagerScratch::default(),
+            &mut want,
+        )
+        .unwrap();
+        assert_eq!(got, want, "arena-scratch pool diverged from eager");
+    }
+
+    /// Disk persistence round-trip: kernel and segment decisions
+    /// survive a save/load cycle on a fresh cache, keyed to this CPU.
+    #[test]
+    fn tune_cache_persists_and_reloads() {
+        let cache = TuneCache::default();
+        let key = TuneKey {
+            shape: Conv1dParams::new(3, 4, 100, 5).with_batch(2).with_same_pad(),
+            tier: SimdTier::Generic,
+            threads: 3,
+        };
+        assert_eq!(cache.insert(key, PlanKernel::Im2col), PlanKernel::Im2col);
+        let seg: SegKey = (
+            "b2+conv_ci1co2n64k3s1d1p0r1+pool_maxc2n62w2s2".into(),
+            SimdTier::Generic,
+            3,
+        );
+        assert!(cache.insert_segment(seg.clone(), true));
+        let path = std::env::temp_dir().join(format!(
+            "swsnn_tunecache_test_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        cache.save_to(&path).unwrap();
+        let fresh = TuneCache::default();
+        assert_eq!(fresh.load_from(&path).unwrap(), 2, "both entries merge");
+        assert_eq!(fresh.lookup(&key), Some(PlanKernel::Im2col));
+        assert_eq!(fresh.lookup_segment(&seg), Some(true));
+        // A different machine configuration (threads) still misses.
+        let other = TuneKey { threads: 4, ..key };
+        assert_eq!(fresh.lookup(&other), None);
+        // Re-loading is idempotent (no duplicates).
+        assert_eq!(fresh.load_from(&path).unwrap(), 0);
+        // In-memory decisions win over a conflicting file.
+        let conflicting = TuneCache::default();
+        conflicting.insert(key, PlanKernel::Direct);
+        conflicting.load_from(&path).unwrap();
+        assert_eq!(conflicting.lookup(&key), Some(PlanKernel::Direct));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

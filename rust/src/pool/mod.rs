@@ -161,7 +161,10 @@ pub fn pool1d_with_into(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dPara
 /// elements, so the sliding machinery has nothing to reuse and the
 /// direct fold is allocation-free (the serving path's strided pool
 /// layers stop allocating a dense row per request). Overlapping strided
-/// windows still go through the dense pass + decimation.
+/// windows still go through the dense pass + decimation (the execution
+/// plan routes them through [`pool1d_overlap_strided_with_into`], which
+/// runs the same two steps out of the plan arena instead of a per-row
+/// `Vec`).
 fn pool1d_row(
     ex: &Executor,
     kind: PoolKind,
@@ -185,37 +188,134 @@ fn pool1d_row(
     }
 }
 
+/// Fold one window in ascending element order — the shared body of the
+/// non-overlapping fast paths. Max/min match the naive sweep exactly;
+/// avg matches up to the `·(1/w)` identity it shares with the dense
+/// path.
+#[inline]
+fn fold_window(kind: PoolKind, win: &[f32], inv: f32) -> f32 {
+    match kind {
+        PoolKind::Avg => {
+            let op = AddOp::<f32>::new();
+            win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x)) * inv
+        }
+        PoolKind::Max => {
+            let op = MaxOp::<f32>::new();
+            win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
+        }
+        PoolKind::Min => {
+            let op = MinOp::<f32>::new();
+            win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
+        }
+    }
+}
+
 /// Non-overlapping strided pooling: each output folds its window's
 /// elements in ascending order (the naive-sweep order, so values match
 /// [`pool1d_naive`] exactly for max/min and up to the usual FP identity
-/// for avg). No scratch, no allocation. Crate-visible because the
-/// execution plan's fused conv→pool step folds with exactly this
-/// routine — reusing it (rather than reimplementing the fold) is what
-/// keeps fused and unfused pooling bit-identical.
+/// for avg). No scratch, no allocation.
 pub(crate) fn pool1d_row_nonoverlap(
     kind: PoolKind,
     xrow: &[f32],
     p: &Pool1dParams,
     yrow: &mut [f32],
 ) {
+    pool1d_row_nonoverlap_tile(kind, xrow, 0, p, 0, yrow);
+}
+
+/// Outputs `[t0, t0 + yseg.len())` of a non-overlapping strided pool
+/// row whose input is held *partially*: `xrow` holds conceptual
+/// positions `[x0, x0 + xrow.len())` of the full length-`p.n` row.
+/// Exactly [`pool1d_row_nonoverlap`]'s fold with the window addresses
+/// rebased — crate-visible because the execution plan's fused-chain
+/// step folds pool stages with this routine out of its ring buffers;
+/// reusing the fold (rather than reimplementing it) is what keeps fused
+/// and unfused pooling bit-identical.
+pub(crate) fn pool1d_row_nonoverlap_tile(
+    kind: PoolKind,
+    xrow: &[f32],
+    x0: usize,
+    p: &Pool1dParams,
+    t0: usize,
+    yseg: &mut [f32],
+) {
     let inv = 1.0 / p.w as f32;
-    for (t, v) in yrow.iter_mut().enumerate() {
-        let win = &xrow[t * p.stride..][..p.w];
-        *v = match kind {
-            PoolKind::Avg => {
-                let op = AddOp::<f32>::new();
-                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x)) * inv
-            }
-            PoolKind::Max => {
-                let op = MaxOp::<f32>::new();
-                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
-            }
-            PoolKind::Min => {
-                let op = MinOp::<f32>::new();
-                win.iter().fold(op.identity(), |acc, &x| op.combine(acc, x))
-            }
-        };
+    for (i, v) in yseg.iter_mut().enumerate() {
+        let win = &xrow[(t0 + i) * p.stride - x0..][..p.w];
+        *v = fold_window(kind, win, inv);
     }
+}
+
+/// Upper bound on concurrent dense-row scratch buffers for
+/// [`pool1d_overlap_strided_with_into`] — bounds the plan arena's pool
+/// region to `POOL_SCRATCH_TASKS · dense_len` elements instead of one
+/// dense row per `(batch, channel)` row.
+pub const POOL_SCRATCH_TASKS: usize = 16;
+
+/// Strided *overlapping*-window pooling (`1 < stride < w`, valid mode)
+/// with caller-provided dense scratch: the same dense-sliding-pass +
+/// stride-decimation steps as [`pool1d_with_into`]'s per-row fallback,
+/// minus its per-row `Vec` allocation — the plan path hands in a slice
+/// of the arena's pool region instead. `dense` must hold at least
+/// `min(rows, POOL_SCRATCH_TASKS) · (n − w + 1)` elements. Values are
+/// bit-identical to [`pool1d_with_into`] (same dense sweep, same
+/// decimation) for every thread count.
+pub fn pool1d_overlap_strided_with_into(
+    ex: &Executor,
+    kind: PoolKind,
+    x: &[f32],
+    p: &Pool1dParams,
+    dense: &mut [f32],
+    y: &mut [f32],
+) {
+    assert!(
+        p.stride > 1 && p.stride < p.w && p.boundary == Boundary::Valid,
+        "overlap-strided pool path needs 1 < stride < w, valid mode"
+    );
+    assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    let n_out = p.n_out();
+    if n_out == 0 {
+        return;
+    }
+    let dense_len = p.dense_len();
+    let rows = p.batch * p.channels;
+    let tasks = rows.min(POOL_SCRATCH_TASKS);
+    let dense = &mut dense[..tasks * dense_len];
+    if ex.threads() <= 1 || tasks <= 1 || rows * n_out < PAR_MIN_FANOUT {
+        let drow = &mut dense[..dense_len];
+        for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+            let xrow = &x[r * p.n..][..p.n];
+            pool1d_row_dense_into(ex, kind, xrow, p.w, p.boundary, drow);
+            for (t, v) in yrow.iter_mut().enumerate() {
+                *v = drow[t * p.stride];
+            }
+        }
+        return;
+    }
+    // Balanced contiguous row chunks, one dense scratch row per task.
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
+    let mut rest = y;
+    let mut bufs = dense.chunks_mut(dense_len);
+    let mut r0 = 0usize;
+    for ti in 0..tasks {
+        let take = (rows - r0).div_ceil(tasks - ti);
+        let rem = rest;
+        let (ychunk, tail) = rem.split_at_mut(take * n_out);
+        rest = tail;
+        let drow = bufs.next().expect("one dense buffer per task");
+        jobs.push(Box::new(move || {
+            for (j, yrow) in ychunk.chunks_mut(n_out).enumerate() {
+                let xrow = &x[(r0 + j) * p.n..][..p.n];
+                pool1d_row_dense_into(ex, kind, xrow, p.w, p.boundary, drow);
+                for (t, v) in yrow.iter_mut().enumerate() {
+                    *v = drow[t * p.stride];
+                }
+            }
+        }));
+        r0 += take;
+    }
+    ex.scope(jobs);
 }
 
 /// Dense stride-1 pooling of one row (shared worker pool).

@@ -1,0 +1,377 @@
+//! Contract of fused chain segments (`nn::plan`'s `FusedChain`):
+//!
+//! 1. **Halo arithmetic, property-tested**: random segment lengths ×
+//!    kernel sizes/strides/dilations/padding × pool interleavings ×
+//!    forced tile sizes × thread counts × dirty arenas — the fused
+//!    sweep is bitwise identical to the unfused plan and to the eager
+//!    reference. Residuals and overlapping pools are mixed in so the
+//!    generator also exercises segment breaks mid-model.
+//! 2. Forced SIMD tiers × tiny tiles: heavy halo handoff on every
+//!    stage boundary, still bit-identical (single `#[test]` so the
+//!    process-global tier override never races inside this binary).
+//! 3. `configs/tcn_deep.toml` compiles to ONE eight-layer chain and is
+//!    bit-identical to eager at the serving batch size.
+//! 4. Under autotune the fuse/no-fuse decision is probed per segment,
+//!    recorded on the plan, and served from the tune cache on
+//!    recompile — with execution staying bit-identical either way.
+
+use std::cell::{Cell, RefCell};
+
+use swsnn::config::{load_config, LayerConfig, ModelConfig};
+use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::exec::Executor;
+use swsnn::nn::{EagerScratch, Model, Plan, PlanKernel, PlanScratch, PlannerConfig};
+use swsnn::prop::{check, ensure, PropConfig};
+use swsnn::simd::{self, SimdTier};
+use swsnn::workload::Rng;
+
+/// Random chain-heavy stack: mostly chain-eligible layers (sliding
+/// convs, non-overlapping pools) with the occasional residual or
+/// overlapping pool so segments also break mid-model.
+fn random_chain_config(g: &mut swsnn::prop::Gen, idx: usize) -> ModelConfig {
+    let c_in = 1 + g.usize_in(0, 3);
+    let seq_len = 48 + g.usize_in(0, 112);
+    let n_layers = 2 + g.usize_in(0, 5);
+    let mut layers = Vec::new();
+    for _ in 0..n_layers {
+        match g.usize_in(0, 10) {
+            0 => layers.push(LayerConfig::Residual {
+                k: 3,
+                dilation: 1 + g.usize_in(0, 2),
+                backend: None,
+            }),
+            // Overlapping strided pool (stride < w): breaks the chain
+            // and runs the arena-scratch dense path.
+            1 => layers.push(LayerConfig::Pool {
+                kind: "max".to_string(),
+                w: 3 + g.usize_in(0, 2),
+                stride: 2,
+            }),
+            // Non-overlapping pool (stride ≥ w, including gapped
+            // stride > w): chains.
+            2 | 3 => {
+                let w = 2 + g.usize_in(0, 2);
+                layers.push(LayerConfig::Pool {
+                    kind: ["max", "avg", "min"][g.usize_in(0, 3)].to_string(),
+                    w,
+                    stride: w + g.usize_in(0, 2),
+                });
+            }
+            _ => layers.push(LayerConfig::Conv {
+                c_out: 1 + g.usize_in(0, 5),
+                k: [1, 2, 3, 5, 7, 9][g.usize_in(0, 6)],
+                stride: 1 + g.usize_in(0, 2),
+                dilation: 1 + g.usize_in(0, 2),
+                same_pad: g.usize_in(0, 4) != 0,
+                relu: g.bool(),
+                backend: None,
+            }),
+        }
+    }
+    ModelConfig {
+        name: format!("chain{idx}"),
+        c_in,
+        seq_len,
+        layers,
+    }
+}
+
+#[test]
+fn prop_fused_chain_bit_identical_to_unfused_and_eager() {
+    // One dirty arena + eager scratch shared across every case: stale
+    // ring-buffer and activation contents must never leak into results.
+    let plan_scratch = RefCell::new(PlanScratch::default());
+    let eager_scratch = RefCell::new(EagerScratch::default());
+    let case = Cell::new(0usize);
+    check(
+        PropConfig {
+            cases: 40,
+            ..Default::default()
+        },
+        "fused chain ≡ unfused plan ≡ eager",
+        |g| {
+            let idx = case.get();
+            case.set(idx + 1);
+            let mc = random_chain_config(g, idx);
+            let seed = g.rng.next_u64();
+            let Ok(model) = Model::init(&mc, &mut Rng::new(seed)) else {
+                return Ok(()); // generator produced a collapsing shape
+            };
+            let batch = 1 + g.usize_in(0, 4);
+            let x =
+                Rng::new(seed ^ 0x5a5a).vec_uniform(batch * mc.c_in * mc.seq_len, -1.0, 1.0);
+            let tile = *g.choose(&[None, Some(1usize), Some(2), Some(3), Some(5), Some(17)]);
+            let threads = *g.choose(&[1usize, 2, 4, 8]);
+            let ex = Executor::new(threads);
+            let base = PlannerConfig {
+                backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                chain_tile: tile,
+                ..PlannerConfig::default()
+            };
+            let fused = Plan::compile(&model, batch, &base).map_err(|e| e.to_string())?;
+            let unfused = Plan::compile(
+                &model,
+                batch,
+                &PlannerConfig {
+                    fuse: false,
+                    ..base
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            ensure(unfused.fused_steps() == 0, "unfused plan fused something")?;
+            let mut want = Vec::new();
+            model
+                .forward_eager_into(
+                    &x,
+                    batch,
+                    ConvBackend::Sliding,
+                    &mut eager_scratch.borrow_mut(),
+                    &mut want,
+                )
+                .map_err(|e| e.to_string())?;
+            let mut got_fused = Vec::new();
+            fused
+                .run_with_into(
+                    &ex,
+                    &model,
+                    &x,
+                    &mut plan_scratch.borrow_mut(),
+                    &mut got_fused,
+                )
+                .map_err(|e| e.to_string())?;
+            let mut got_unfused = Vec::new();
+            unfused
+                .run_with_into(
+                    &ex,
+                    &model,
+                    &x,
+                    &mut plan_scratch.borrow_mut(),
+                    &mut got_unfused,
+                )
+                .map_err(|e| e.to_string())?;
+            ensure(
+                got_fused == want,
+                format!(
+                    "fused != eager ({} tile {tile:?} threads {threads} batch {batch}: {})",
+                    mc.name,
+                    fused.describe()
+                ),
+            )?;
+            ensure(
+                got_fused == got_unfused,
+                format!(
+                    "fused != unfused ({} tile {tile:?} threads {threads} batch {batch})",
+                    mc.name
+                ),
+            )
+        },
+    );
+}
+
+/// The SIMD tiers worth forcing on this host: the portable oracle plus
+/// whatever the hardware actually dispatches.
+fn tiers() -> Vec<SimdTier> {
+    let mut ts = vec![SimdTier::Generic];
+    for t in [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon] {
+        if t.is_supported() {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+/// Forced SIMD tiers × tiny forced tiles × thread counts on a fixed
+/// deep stack: maximal halo traffic on every stage boundary, still
+/// bit-identical to eager.
+#[test]
+fn fused_chain_parity_under_forced_tiers_and_tiny_tiles() {
+    const CFG: &str = r#"
+[model]
+name = "tiered_chain"
+c_in = 2
+seq_len = 120
+
+[layer.0]
+type = "conv"
+c_out = 5
+k = 7
+
+[layer.1]
+type = "conv"
+c_out = 4
+k = 5
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "conv"
+c_out = 3
+k = 3
+
+[layer.4]
+type = "pool"
+kind = "avg"
+w = 2
+stride = 3
+
+[layer.5]
+type = "conv"
+c_out = 2
+k = 3
+relu = false
+"#;
+    let (mc, _) = load_config(CFG).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(77)).unwrap();
+    let batch = 3;
+    let mut rng = Rng::new(78);
+    let x = rng.vec_uniform(batch * 2 * 120, -1.0, 1.0);
+    let mut scratch = PlanScratch::default();
+    for tier in tiers() {
+        simd::force_tier(Some(tier));
+        let mut want = Vec::new();
+        model
+            .forward_eager_into(
+                &x,
+                batch,
+                ConvBackend::Sliding,
+                &mut EagerScratch::default(),
+                &mut want,
+            )
+            .unwrap();
+        for tile in [1usize, 4, 64] {
+            let plan = Plan::compile(
+                &model,
+                batch,
+                &PlannerConfig {
+                    backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                    chain_tile: Some(tile),
+                    ..PlannerConfig::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(plan.fused_steps(), 1, "{}", plan.describe());
+            assert_eq!(plan.fused_layers(), 6, "{}", plan.describe());
+            for threads in [1usize, 2, 4, 8] {
+                let ex = Executor::new(threads);
+                let mut got = Vec::new();
+                plan.run_with_into(&ex, &model, &x, &mut scratch, &mut got)
+                    .unwrap();
+                assert_eq!(got, want, "tier {tier:?} tile {tile} threads {threads}");
+            }
+        }
+    }
+    simd::force_tier(None);
+}
+
+/// The `chain_fusion` bench model compiles to a single eight-layer
+/// chain at the serving batch size and runs bit-identically to eager
+/// (the whole stack is one arena pass — no ping/pong activations at
+/// all, so the plan's activation regions are empty).
+#[test]
+fn tcn_deep_compiles_to_one_chain_and_matches_eager() {
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_deep.toml"),
+    )
+    .unwrap();
+    let (mc, _) = load_config(&text).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(1)).unwrap();
+    let cfg = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        ..PlannerConfig::default()
+    };
+    let plan = Plan::compile(&model, 8, &cfg).unwrap();
+    assert_eq!(plan.kernels(), vec![PlanKernel::FusedChain], "{}", plan.describe());
+    assert_eq!(plan.fused_layers(), 8, "{}", plan.describe());
+    let mut rng = Rng::new(2);
+    let x = rng.vec_uniform(8 * model.c_in * model.seq_len, -1.0, 1.0);
+    let mut got = Vec::new();
+    plan.run_into(&model, &x, &mut PlanScratch::default(), &mut got)
+        .unwrap();
+    let mut want = Vec::new();
+    model
+        .forward_eager_into(
+            &x,
+            8,
+            ConvBackend::Sliding,
+            &mut EagerScratch::default(),
+            &mut want,
+        )
+        .unwrap();
+    assert_eq!(got, want, "{}", plan.describe());
+}
+
+/// Under autotune the fuse/no-fuse decision is measured on the whole
+/// segment, recorded on the plan, and served from the process-wide
+/// tune cache on recompile — and execution matches eager whichever way
+/// the probe decided.
+#[test]
+fn autotune_probes_segments_and_serves_recompiles_from_cache() {
+    const CFG: &str = r#"
+[model]
+name = "seg_tune"
+c_in = 1
+seq_len = 73
+
+[layer.0]
+type = "conv"
+c_out = 5
+k = 7
+
+[layer.1]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.2]
+type = "conv"
+c_out = 3
+k = 5
+relu = false
+"#;
+    let (mc, _) = load_config(CFG).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(21)).unwrap();
+    // Uncommon batch so concurrent tests cannot pre-seed the key.
+    let batch = 7;
+    let cfg = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        autotune: true,
+        ..PlannerConfig::default()
+    };
+    let plan = Plan::compile(&model, batch, &cfg).unwrap();
+    assert_eq!(plan.segment_tuning().len(), 1, "{:?}", plan.segment_tuning());
+    let first = &plan.segment_tuning()[0];
+    assert_eq!(first.layers, (0, 2));
+    if !first.cached {
+        assert!(first.fused_micros.is_finite() && first.fused_micros > 0.0);
+        assert!(first.unfused_micros.is_finite() && first.unfused_micros > 0.0);
+    }
+    // Recompiles are served from the tune cache with the same decision.
+    let again = Plan::compile(&model, batch, &cfg).unwrap();
+    assert_eq!(again.segment_tuning().len(), 1);
+    assert!(again.segment_tuning()[0].cached, "{:?}", again.segment_tuning());
+    assert_eq!(again.segment_tuning()[0].fused, first.fused);
+    assert_eq!(again.fused_steps(), plan.fused_steps());
+    // Bit-identical to eager whichever way the probe decided.
+    let mut rng = Rng::new(22);
+    let x = rng.vec_uniform(batch * 73, -1.0, 1.0);
+    let mut got = Vec::new();
+    plan.run_into(&model, &x, &mut PlanScratch::default(), &mut got)
+        .unwrap();
+    let mut want = Vec::new();
+    model
+        .forward_eager_into(
+            &x,
+            batch,
+            ConvBackend::Sliding,
+            &mut EagerScratch::default(),
+            &mut want,
+        )
+        .unwrap();
+    assert_eq!(got, want);
+}

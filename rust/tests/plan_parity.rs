@@ -11,8 +11,11 @@
 //!    choice, and `Auto` plans stay numerically faithful to the direct
 //!    oracle.
 //! 4. Empty models fail at `init`/`compile` time, not at serve time.
-//! 5. **Fused** conv→pool plans are bit-identical to the unfused plan
-//!    and to the eager path, across tiers, threads, and dirty arenas.
+//! 5. **Fused chain** plans (conv/pool runs swept through ring-buffer
+//!    tiles) are bit-identical to the unfused plan and to the eager
+//!    path, across tiers, threads, and dirty arenas (see also
+//!    `tests/chain_fusion.rs` for the randomized halo-arithmetic
+//!    sweep).
 //! 6. **Autotuned** plans are bit-identical to the eager path with each
 //!    layer's backend pinned to the plan's measured choice (small_k maps
 //!    to sliding — the two share the exact per-output fused chain,
@@ -335,11 +338,11 @@ fn auto_plan_faithful_to_direct_oracle() {
     }
 }
 
-/// Fused conv→pool plans must be bit-identical to both the unfused plan
+/// Fused-chain plans must be bit-identical to both the unfused plan
 /// and the eager reference — across forced SIMD tiers, thread counts
 /// {1, 2, 4, 8}, and one dirty arena shared by every run.
 #[test]
-fn fused_conv_pool_parity_across_tiers_and_threads() {
+fn fused_chain_parity_across_tiers_and_threads() {
     const CFG_TOML: &str = r#"
 [model]
 name = "fused"
@@ -391,10 +394,13 @@ out = 3
         ..cfg_fused
     };
     let fused = Plan::compile(&model, batch, &cfg_fused).unwrap();
-    // Both conv→pool pairs fuse (w=2/s=2 and w=3/s=3 are
-    // non-overlapping); the pool→pool and dense tails do not.
-    assert_eq!(fused.fused_steps(), 2, "{}", fused.describe());
-    assert_eq!(fused.kernels().len(), 4);
+    // Every layer up to the dense head is chain-eligible (sliding
+    // convs, non-overlapping pools — w=2/s=2, w=3/s=3, w=2/s=2), so the
+    // whole prefix groups into ONE fused chain of five stages; the
+    // dense head stays a separate step.
+    assert_eq!(fused.fused_steps(), 1, "{}", fused.describe());
+    assert_eq!(fused.fused_layers(), 5, "{}", fused.describe());
+    assert_eq!(fused.kernels().len(), 2);
     assert_eq!(fused.layer_kernels().len(), 6);
     let unfused = Plan::compile(&model, batch, &cfg_unfused).unwrap();
     assert_eq!(unfused.fused_steps(), 0);

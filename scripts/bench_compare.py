@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Diff two sets of BENCH_*.json tables (bench_results baselines vs a
+fresh run) and print per-row deltas for every shared numeric column.
+
+Usage:
+    python3 scripts/bench_compare.py <baseline_dir> <current_dir>
+
+Each BENCH_<table>.json is the hand-rolled `{"title", "headers",
+"rows"}` shape `swsnn::bench::Table::json` emits. Rows are matched by
+their first cell (the engine/config label). Purely informational: the
+script always exits 0 — perf gating stays a human decision, this just
+turns "is the fused plan still beating the unfused one?" into a
+one-glance table on every CI run.
+
+To (re)record a baseline on a reference machine:
+    cd rust && cargo bench --bench e2e_serving -- --json
+    cp bench_results/BENCH_*.json bench_results/baselines/
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def load_tables(directory: Path):
+    tables = {}
+    for path in sorted(directory.glob("BENCH_*.json")):
+        try:
+            tables[path.name] = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError) as exc:
+            print(f"  (skipping unreadable {path}: {exc})")
+    return tables
+
+
+def as_float(cell: str):
+    try:
+        return float(cell)
+    except ValueError:
+        return None
+
+
+def compare_table(name: str, base: dict, cur: dict) -> None:
+    print(f"\n== {name}: {cur.get('title', '')}")
+    headers = cur.get("headers", [])
+    if headers != base.get("headers", []):
+        print("  (headers changed — raw comparison skipped)")
+        return
+    base_rows = {row[0]: row for row in base.get("rows", []) if row}
+    for row in cur.get("rows", []):
+        if not row:
+            continue
+        key = row[0]
+        old = base_rows.get(key)
+        if old is None:
+            print(f"  {key}: new row (no baseline)")
+            continue
+        deltas = []
+        for header, new_cell, old_cell in zip(headers[1:], row[1:], old[1:]):
+            new_v, old_v = as_float(new_cell), as_float(old_cell)
+            if new_v is None or old_v is None or old_v == 0:
+                continue
+            pct = 100.0 * (new_v - old_v) / old_v
+            deltas.append(f"{header}: {old_v:g} -> {new_v:g} ({pct:+.1f}%)")
+        print(f"  {key}: " + ("; ".join(deltas) if deltas else "no numeric columns matched"))
+    for key in base_rows:
+        if key not in {row[0] for row in cur.get("rows", []) if row}:
+            print(f"  {key}: row disappeared from the current run")
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 0
+    baseline_dir, current_dir = Path(sys.argv[1]), Path(sys.argv[2])
+    base = load_tables(baseline_dir)
+    cur = load_tables(current_dir)
+    if not base:
+        print(f"no baselines under {baseline_dir} — nothing to compare "
+              "(see bench_results/baselines/README.md to record one)")
+        return 0
+    shared = [name for name in cur if name in base]
+    if not shared:
+        print("no shared BENCH_*.json tables between the two directories")
+        return 0
+    for name in shared:
+        compare_table(name, base[name], cur[name])
+    only_base = [n for n in base if n not in cur]
+    if only_base:
+        print(f"\nbaseline-only tables (bench not run?): {', '.join(only_base)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
