@@ -1,0 +1,145 @@
+//! Checked-build invariants (the `check-invariants` cargo feature).
+//!
+//! The static pass (`cargo xtask check`) enforces what a line scanner
+//! can see; this module compiles in the runtime assertions for the
+//! contracts it can't (docs/invariants.md):
+//!
+//! * the NaN-sentinel **full-overwrite poison check**: every `_into`
+//!   kernel pre-fills its destination with [`sentinel`] and asserts on
+//!   exit that no sentinel bits survive — i.e. the kernel really did
+//!   overwrite every element, which is what makes recycling buffers
+//!   dirty sound;
+//! * the [`invariant!`] macro behind the arena-layout audit at
+//!   `Plan::compile` and the fused-chain halo/ring-capacity bounds at
+//!   every tile step.
+//!
+//! Everything here compiles to nothing unless the feature is on (the
+//! bodies sit behind `cfg!(feature = "check-invariants")`, which the
+//! optimizer folds away), so the hot paths keep their release-build
+//! codegen. CI runs the whole test suite once with the feature enabled.
+
+/// Bit pattern of the poison value: a *signaling* NaN (quiet bit
+/// clear, non-zero payload) so the sentinel can never be produced by
+/// ordinary kernel arithmetic on real inputs. Detection compares exact
+/// bits — arithmetic on a poisoned lane would quieten the NaN, so a
+/// kernel that *reads* its uninitialized destination trips the check
+/// too (the result is a different bit pattern only if it was written;
+/// an untouched lane keeps these exact bits).
+pub const SENTINEL_BITS: u32 = 0x7FA5_DEAD;
+
+/// The poison value itself.
+#[inline]
+pub fn sentinel() -> f32 {
+    f32::from_bits(SENTINEL_BITS)
+}
+
+/// Exact-bits sentinel test (NaN `==` would be always-false).
+#[inline]
+pub fn is_sentinel(v: f32) -> bool {
+    v.to_bits() == SENTINEL_BITS
+}
+
+/// Whether the checked build is active.
+#[inline]
+pub fn enabled() -> bool {
+    cfg!(feature = "check-invariants")
+}
+
+/// Pre-fill an `_into` destination with the poison pattern. Works on
+/// the `f32` instantiations of the generic kernels (routed through
+/// [`crate::simd::as_f32_mut`]); other element types pass through
+/// untouched. No-op unless `check-invariants` is on.
+#[inline]
+pub fn poison<T: Copy + 'static>(dst: &mut [T]) {
+    if cfg!(feature = "check-invariants") {
+        if let Some(d) = crate::simd::as_f32_mut(dst) {
+            d.fill(sentinel());
+        }
+    }
+}
+
+/// Assert that no poison survives in `dst` — i.e. the kernel between
+/// [`poison`] and this call overwrote every element. `what` names the
+/// kernel in the panic message. No-op unless `check-invariants` is on.
+#[inline]
+pub fn assert_no_poison<T: Copy + 'static>(dst: &[T], what: &str) {
+    if cfg!(feature = "check-invariants") {
+        if let Some(d) = crate::simd::as_f32(dst) {
+            if let Some(i) = d.iter().position(|v| is_sentinel(*v)) {
+                panic!(
+                    "check-invariants: `{what}` left dst[{i}] (of {}) unwritten",
+                    d.len()
+                );
+            }
+        }
+    }
+}
+
+/// `assert!` that is compiled in for debug builds *and* checked builds
+/// (`check-invariants`), and compiled out entirely otherwise — a
+/// strict strengthening of `debug_assert!` for the arena/halo/ring
+/// contracts. The condition must be side-effect free.
+#[macro_export]
+macro_rules! invariant {
+    ($cond:expr $(, $arg:tt)* $(,)?) => {
+        if cfg!(debug_assertions) || cfg!(feature = "check-invariants") {
+            assert!($cond $(, $arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentinel_is_signaling_nan_with_stable_bits() {
+        let s = sentinel();
+        assert!(s.is_nan());
+        assert!(is_sentinel(s));
+        // The quiet bit (mantissa MSB) is clear: signaling.
+        assert_eq!(SENTINEL_BITS & 0x0040_0000, 0);
+        // Ordinary values never match.
+        for v in [0.0f32, -0.0, 1.0, f32::NAN, f32::INFINITY, f32::MIN] {
+            assert!(!is_sentinel(v) || v.to_bits() == SENTINEL_BITS);
+        }
+    }
+
+    #[test]
+    fn poison_roundtrip_matches_feature_state() {
+        let mut buf = [1.0f32; 8];
+        poison(&mut buf);
+        if enabled() {
+            assert!(buf.iter().all(|v| is_sentinel(*v)));
+        } else {
+            assert_eq!(buf, [1.0f32; 8]);
+        }
+        buf.fill(2.0);
+        assert_no_poison(&buf, "test");
+    }
+
+    #[test]
+    fn non_f32_elements_pass_through() {
+        let mut buf = [7i32; 4];
+        poison(&mut buf);
+        assert_eq!(buf, [7i32; 4]);
+        assert_no_poison(&buf, "test-i32");
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "check-invariants"), ignore)]
+    fn unwritten_lane_is_caught() {
+        let mut buf = [0.0f32; 4];
+        poison(&mut buf);
+        buf[0] = 1.0;
+        buf[1] = 2.0;
+        buf[3] = 3.0;
+        let caught = std::panic::catch_unwind(|| assert_no_poison(&buf, "hole")).is_err();
+        assert!(caught, "sentinel at index 2 must be detected");
+    }
+
+    #[test]
+    fn invariant_macro_passes_on_true() {
+        invariant!(1 + 1 == 2, "arithmetic holds");
+    }
+}

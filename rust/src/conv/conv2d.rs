@@ -120,6 +120,7 @@ impl Conv2dParams {
 pub fn conv2d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv2dParams) -> Vec<f32> {
     p.validate(x, w, bias);
     let (h_out, w_out) = (p.h_out(), p.w_out());
+    // alloc-ok: Vec-returning oracle, not on the plan run path.
     let mut y = vec![0.0f32; p.y_len()];
     for b in 0..p.batch {
         for co in 0..p.c_out {
@@ -170,6 +171,7 @@ pub fn conv2d_sliding_with(
     bias: Option<&[f32]>,
     p: &Conv2dParams,
 ) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; conv2d_sliding_with_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     conv2d_sliding_with_into(ex, x, w, bias, p, Epilogue::None, &mut y);
     y
@@ -204,6 +206,7 @@ pub fn conv2d_sliding_with_into(
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
     epi.check_len(y.len());
+    crate::check::poison(y);
     let (h_out, w_out) = (p.h_out(), p.w_out());
     if h_out == 0 || w_out == 0 {
         return;
@@ -216,21 +219,25 @@ pub fn conv2d_sliding_with_into(
         for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
             conv2d_plane_rows(yplane, plane_idx, 0, x, w, bias, p, epi);
         }
+        crate::check::assert_no_poison(y, "conv2d_sliding_with_into");
         return;
     }
     // Group output rows so the pool sees ~4 tasks per thread even when
     // there are few planes.
     let group_rows = h_out.div_ceil((ex.threads() * 4).div_ceil(planes)).max(1);
+    // alloc-ok: one job closure per plane-row group (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (plane_idx, yplane) in y.chunks_mut(plane_len).enumerate() {
         for (gi, yrows) in yplane.chunks_mut(group_rows * w_out).enumerate() {
             let oy0 = gi * group_rows;
+            // alloc-ok: job closure box, amortized over a whole row group.
             jobs.push(Box::new(move || {
                 conv2d_plane_rows(yrows, plane_idx, oy0, x, w, bias, p, epi);
             }));
         }
     }
     ex.scope(jobs);
+    crate::check::assert_no_poison(y, "conv2d_sliding_with_into");
 }
 
 /// Compute output rows `[oy0, oy0 + yrows.len()/w_out)` of one
@@ -329,11 +336,12 @@ pub fn conv2d_im2col(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv2dParam
     let (h_out, w_out) = (p.h_out(), p.w_out());
     let cols_rows = p.c_in * p.kh * p.kw;
     let cols_n = h_out * w_out;
+    // alloc-ok: im2col comparator baseline, not on the plan run path.
     let mut y = vec![0.0f32; p.y_len()];
     if cols_n == 0 {
         return y;
     }
-    let mut cols = vec![0.0f32; cols_rows * cols_n];
+    let mut cols = vec![0.0f32; cols_rows * cols_n]; // alloc-ok: baseline scratch
     for b in 0..p.batch {
         cols.fill(0.0);
         for ci in 0..p.c_in {

@@ -5,6 +5,7 @@ use super::Conv1dParams;
 
 /// Direct `O(B·Cout·Nout·Cin·k)` convolution (cross-correlation).
 pub fn conv1d_direct(x: &[f32], w: &[f32], bias: Option<&[f32]>, p: &Conv1dParams) -> Vec<f32> {
+    // alloc-ok: Vec-returning oracle; conv1d_direct_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     conv1d_direct_into(x, w, bias, p, &mut y);
     y
@@ -23,6 +24,7 @@ pub fn conv1d_direct_into(
 ) {
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
+    crate::check::poison(y);
     let n_out = p.n_out();
     for b in 0..p.batch {
         for co in 0..p.c_out {
@@ -45,6 +47,7 @@ pub fn conv1d_direct_into(
             }
         }
     }
+    crate::check::assert_no_poison(y, "conv1d_direct_into");
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@ use super::Conv1dParams;
 /// column matrix: column `t` stacks the k taps of every input channel at
 /// output position `t`. Memory: `c_in·k·n_out` floats — the k× blow-up.
 pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; im2col_expand_into is the hot path.
     let mut cols = vec![0.0f32; p.c_in * p.k * p.n_out()];
     im2col_expand_into(x, p, &mut cols);
     cols
@@ -29,6 +30,7 @@ pub fn im2col_expand(x: &[f32], p: &Conv1dParams) -> Vec<f32> {
 pub fn im2col_expand_into(x: &[f32], p: &Conv1dParams, cols: &mut [f32]) {
     let n_out = p.n_out();
     assert_eq!(cols.len(), p.c_in * p.k * n_out, "column buffer shape");
+    crate::check::poison(cols);
     for ci in 0..p.c_in {
         let xrow = &x[ci * p.n..][..p.n];
         for tap in 0..p.k {
@@ -44,6 +46,7 @@ pub fn im2col_expand_into(x: &[f32], p: &Conv1dParams, cols: &mut [f32]) {
             }
         }
     }
+    crate::check::assert_no_poison(cols, "im2col_expand_into");
 }
 
 /// Convolution via im2col + blocked GEMM:
@@ -63,8 +66,10 @@ pub fn conv1d_im2col_with(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; the epilogue `_into` form below is
+    // the hot path (the plan owns both buffers in its arena).
     let mut col = vec![0.0f32; p.c_in * p.k * p.n_out()];
-    let mut y = vec![0.0f32; p.y_len()];
+    let mut y = vec![0.0f32; p.y_len()]; // alloc-ok: Vec-returning wrapper.
     conv1d_im2col_epilogue_into(ex, x, w, bias, p, Epilogue::None, &mut col, &mut y);
     y
 }
@@ -89,6 +94,7 @@ pub fn conv1d_im2col_epilogue_into(
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
     epi.check_len(y.len());
+    crate::check::poison(y);
     let n_out = p.n_out();
     if n_out == 0 {
         return;
@@ -118,6 +124,7 @@ pub fn conv1d_im2col_epilogue_into(
             yb,
         );
     }
+    crate::check::assert_no_poison(y, "conv1d_im2col_epilogue_into");
 }
 
 #[cfg(test)]

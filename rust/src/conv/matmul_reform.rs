@@ -41,15 +41,17 @@ pub fn conv1d_tap_gemm(
     }
     p.validate(x, w, bias);
     let n_out = p.n_out();
+    // alloc-ok: Vec-returning reformulation study path, not on the plan
+    // run path (the planner never selects tap-GEMM).
     let mut y = vec![0.0f32; p.y_len()];
     if n_out == 0 {
         return Some(y);
     }
     let padded_n = p.n + 2 * p.pad;
-    let mut xpad = vec![0.0f32; p.c_in * padded_n];
-    let mut panel = vec![0.0f32; p.c_in * n_out];
+    let mut xpad = vec![0.0f32; p.c_in * padded_n]; // alloc-ok: study path
+    let mut panel = vec![0.0f32; p.c_in * n_out]; // alloc-ok: study path
     // Per-tap filter matrix W_tap[c_out, c_in], gathered once.
-    let mut w_tap = vec![0.0f32; p.c_out * p.c_in];
+    let mut w_tap = vec![0.0f32; p.c_out * p.c_in]; // alloc-ok: study path
 
     for b in 0..p.batch {
         // Pad the batch element once (channel-major).

@@ -36,6 +36,7 @@ impl QuantParams {
     }
 
     pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
+        // alloc-ok: one-time quantization of inputs/weights (setup).
         xs.iter().map(|&x| self.quantize(x)).collect()
     }
 }
@@ -60,6 +61,7 @@ pub fn conv1d_quantized(
     assert_eq!(qx.len(), p.x_len(), "input shape");
     assert_eq!(qw.len(), p.w_len(), "filter shape");
     let n_out = p.n_out();
+    // alloc-ok: Vec-returning i8 study path, not on the plan run path.
     let mut y = vec![0.0f32; p.y_len()];
     if n_out == 0 {
         return y;
@@ -71,8 +73,9 @@ pub fn conv1d_quantized(
     for b in 0..p.batch {
         for co in 0..p.c_out {
             let yrow = &mut y[(b * p.c_out + co) * n_out..][..n_out];
-            let mut acc = vec![0i32; n_out];
-            let mut qx_winsum = vec![0i32; n_out]; // Σ qx per window (sliding!)
+            let mut acc = vec![0i32; n_out]; // alloc-ok: study-path scratch
+            // alloc-ok: Σ qx per window (sliding!) — study-path scratch.
+            let mut qx_winsum = vec![0i32; n_out];
             let mut qw_sum = 0i32;
             for ci in 0..p.c_in {
                 let xrow = &qx[(b * p.c_in + ci) * p.n..][..p.n];

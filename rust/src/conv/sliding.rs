@@ -76,6 +76,7 @@ pub fn conv1d_sliding_with(
     bias: Option<&[f32]>,
     p: &Conv1dParams,
 ) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; conv1d_sliding_with_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     conv1d_sliding_with_into(ex, x, w, bias, p, Epilogue::None, &mut y);
     y
@@ -100,6 +101,7 @@ pub fn conv1d_sliding_with_into(
     p.validate(x, w, bias);
     assert_eq!(y.len(), p.y_len(), "dst length");
     epi.check_len(y.len());
+    crate::check::poison(y);
     let n_out = p.n_out();
     if n_out == 0 {
         return;
@@ -113,19 +115,23 @@ pub fn conv1d_sliding_with_into(
         for (r, yrow) in y.chunks_mut(n_out).enumerate() {
             compute_row_segment(yrow, 0, r, x, w, bias, p, epi);
         }
+        crate::check::assert_no_poison(y, "conv1d_sliding_with_into");
         return;
     }
     let seg_len = n_out.div_ceil(segs);
+    // alloc-ok: one job closure per row segment (fan-out setup, O(rows·segs)).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows * segs);
     for (r, yrow) in y.chunks_mut(n_out).enumerate() {
         for (si, yseg) in yrow.chunks_mut(seg_len).enumerate() {
             let t0 = si * seg_len;
+            // alloc-ok: job closure box, amortized over a whole segment.
             jobs.push(Box::new(move || {
                 compute_row_segment(yseg, t0, r, x, w, bias, p, epi);
             }));
         }
     }
     ex.scope(jobs);
+    crate::check::assert_no_poison(y, "conv1d_sliding_with_into");
 }
 
 /// Compute output columns `[t0, t0 + yseg.len())` of conv output
@@ -460,12 +466,14 @@ fn conv1d_pair_impl(
 ) -> Vec<f32> {
     p.validate(x, w, bias);
     let n_out = p.n_out();
+    // alloc-ok: paper-faithful γ-pair formulation (tests/benches only;
+    // the production path is the broadcast-FMA kernel above).
     let mut y = vec![0.0f32; p.y_len()];
     if n_out == 0 {
         return y;
     }
     let padded_n = p.n + 2 * p.pad;
-    let mut xpad = vec![0.0f32; padded_n];
+    let mut xpad = vec![0.0f32; padded_n]; // alloc-ok: pair-path scratch
 
     for b in 0..p.batch {
         for co in 0..p.c_out {
@@ -485,6 +493,7 @@ fn conv1d_pair_impl(
                     if phase >= xpad.len() {
                         break; // padded input shorter than the dilation
                     }
+                    // alloc-ok: pair-path phase decimation scratch.
                     let dec: Vec<f32> =
                         xpad[phase..].iter().step_by(p.dilation).copied().collect();
                     if dec.len() < p.k {
@@ -518,7 +527,7 @@ fn conv1d_pair_impl(
 /// αⱼ₋₁/αⱼ` (`ratios[0] = 1`), plus `α_{M-1}` for the closing pair.
 fn gamma_ratios(w: &[f32]) -> (Vec<f32>, f32) {
     let alpha = |j: usize| if w[j] == 0.0 { 1.0 } else { w[j] };
-    let mut ratios = Vec::with_capacity(w.len());
+    let mut ratios = Vec::with_capacity(w.len()); // alloc-ok: pair-path setup
     ratios.push(1.0);
     for j in 1..w.len() {
         ratios.push(alpha(j - 1) / alpha(j));
@@ -540,7 +549,7 @@ fn beta(wj: f32, xv: f32) -> f32 {
 /// One lanewise pair-combine per tap (`k` vector steps).
 fn pair_fold_linear(w: &[f32], ratios: &[f32], dec: &[f32], lanes: usize) -> Vec<Pair> {
     let op = ConvPair;
-    let mut acc = vec![op.identity(); lanes];
+    let mut acc = vec![op.identity(); lanes]; // alloc-ok: pair-path scratch
     for (j, (&wj, &uj)) in w.iter().zip(ratios).enumerate() {
         let xs = &dec[j..j + lanes];
         for t in 0..lanes {
@@ -557,10 +566,11 @@ fn pair_fold_tree(w: &[f32], ratios: &[f32], dec: &[f32], lanes: usize) -> Vec<P
     let op = ConvPair;
     // Stack of (chunk_size, folded array); merge equal sizes eagerly —
     // the binary-counter pairwise reduction.
+    // alloc-ok: pair-path scratch (tests/benches only).
     let mut stack: Vec<(usize, Vec<Pair>)> = Vec::new();
     for (j, (&wj, &uj)) in w.iter().zip(ratios).enumerate() {
         let xs = &dec[j..j + lanes];
-        let mut leaf = Vec::with_capacity(lanes);
+        let mut leaf = Vec::with_capacity(lanes); // alloc-ok: pair-path scratch
         for t in 0..lanes {
             leaf.push(Pair::new(uj, beta(wj, xs[t])));
         }

@@ -72,6 +72,7 @@ pub fn conv1d_small_k(
     if p.batch != 1 || !small_k_qualifies(p) {
         return None;
     }
+    // alloc-ok: Vec-returning wrapper; conv1d_small_k_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     conv1d_small_k_into(x, w, bias, p, Epilogue::None, &mut y).then_some(y)
 }
@@ -99,6 +100,7 @@ pub fn conv1d_small_k_into(
     if n_out == 0 {
         return true; // input shorter than the filter: empty output
     }
+    crate::check::poison(y);
     let b = bias.map_or(0.0, |bv| bv[0]);
     for bi in 0..p.batch {
         let xr = &x[bi * p.n..][..p.n];
@@ -110,6 +112,7 @@ pub fn conv1d_small_k_into(
         }
         epi.apply(yr, bi * n_out);
     }
+    crate::check::assert_no_poison(y, "conv1d_small_k_into");
     true
 }
 

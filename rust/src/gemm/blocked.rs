@@ -129,11 +129,13 @@ pub fn gemm_blocked_with(
     if m < MR {
         // Skinny rows (gemv-like): split each C row into column segments.
         let seg = n.div_ceil(threads * 2).max(1024);
+        // alloc-ok: one job closure per row segment (fan-out setup).
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (i, crow) in c.chunks_mut(n).enumerate() {
             let arow = &a[i * k..(i + 1) * k];
             for (si, cseg) in crow.chunks_mut(seg).enumerate() {
                 let j0 = si * seg;
+                // alloc-ok: job closure box, amortized over a whole segment.
                 jobs.push(Box::new(move || skinny_row_segment(arow, b, n, j0, cseg)));
             }
         }
@@ -148,6 +150,7 @@ pub fn gemm_blocked_with(
     // the microkernel the serial reference uses — so the last band
     // absorbs any sub-MR tail rather than leaving them as their own job.
     let rows_per_job = m.div_ceil(threads * 2).div_ceil(MR) * MR;
+    // alloc-ok: one job closure per row band (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     let mut c_rest = c;
     let mut r0 = 0usize;
@@ -160,6 +163,7 @@ pub fn gemm_blocked_with(
         };
         let (band, rest) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
         let a_rows = &a[r0 * k..(r0 + rows) * k];
+        // alloc-ok: job closure box, amortized over a whole band.
         jobs.push(Box::new(move || {
             gemm_blocked(GemmShape { m: rows, k, n }, blk, a_rows, b, band)
         }));
@@ -196,8 +200,11 @@ pub fn gemm_blocked(shape: GemmShape, blk: GemmBlocking, a: &[f32], b: &[f32], c
     // non-multiple blocking parameters stay in bounds.
     let mc_pad = blk.mc.div_ceil(MR) * MR;
     let nc_pad = blk.nc.div_ceil(NR) * NR;
+    // alloc-ok: BLIS-style pack buffers, one pair per gemm call (their
+    // size depends on the blocking, not the problem; amortized over the
+    // whole k·m·n sweep).
     let mut a_pack = vec![0.0f32; mc_pad * blk.kc];
-    let mut b_pack = vec![0.0f32; blk.kc * nc_pad];
+    let mut b_pack = vec![0.0f32; blk.kc * nc_pad]; // alloc-ok: pack buffer
 
     let mut jc = 0;
     while jc < n {

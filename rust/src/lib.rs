@@ -10,15 +10,26 @@
 //!   serving coordinator, benchmark harness.
 //! * L2/L1 (build-time python): JAX model + Pallas kernels, AOT-lowered
 //!   to `artifacts/*.hlo.txt`, executed by [`runtime`] via PJRT.
+//!
+//! Unsafe code is confined to [`exec`] (the scoped-lifetime job
+//! transmute) and [`simd`] (the `std::arch` kernels + the f32 element
+//! downcast); everything else is `#![deny(unsafe_code)]`, and
+//! `cargo xtask check` statically enforces the kernel-core contracts
+//! (see docs/invariants.md).
+#![deny(unsafe_code)]
+
 pub mod bench;
+pub mod check;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+#[allow(unsafe_code)]
 pub mod exec;
 pub mod nn;
 pub mod ops;
 pub mod prop;
 pub mod scan;
+#[allow(unsafe_code)]
 pub mod simd;
 pub mod sliding;
 pub mod conv;

@@ -692,7 +692,21 @@ impl TuneCache {
             },
         };
         let Some(p) = resolved else { return 0 };
-        let loaded = self.load_from(&p).unwrap_or(0);
+        // A missing file is the normal first run; anything else (I/O
+        // error, non-UTF-8 bytes, …) is logged and treated as an empty
+        // cache — a corrupt snapshot must never take the process down,
+        // it just costs re-probing.
+        let loaded = match self.load_from(&p) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => 0,
+            Err(e) => {
+                eprintln!(
+                    "swsnn: tune cache {} unreadable ({e}); starting empty",
+                    p.display()
+                );
+                0
+            }
+        };
         self.inner.lock().unwrap().persist = Some(p);
         loaded
     }
@@ -756,7 +770,7 @@ impl TuneCache {
                 ) else {
                     continue;
                 };
-                if k < 1 || stride < 1 || dilation < 1 {
+                if k < 1 || stride < 1 || dilation < 1 || threads < 1 {
                     continue;
                 }
                 let key = TuneKey {
@@ -786,6 +800,9 @@ impl TuneCache {
                 ) else {
                     continue;
                 };
+                if threads < 1 {
+                    continue;
+                }
                 let key: SegKey = (sig.to_string(), tier, threads);
                 if !g.segments.iter().any(|(existing, _)| *existing == key) {
                     g.segments.push((key, fused));
@@ -1335,7 +1352,7 @@ impl Plan {
                 }
             }
         }
-        Ok(Plan {
+        let plan = Plan {
             batch,
             steps,
             n_layers: nlayers,
@@ -1349,7 +1366,9 @@ impl Plan {
             out_n: n,
             tunes,
             seg_tunes,
-        })
+        };
+        plan.audit_arena_layout();
+        Ok(plan)
     }
 
     /// The batch size this plan was compiled for.
@@ -1360,6 +1379,77 @@ impl Plan {
     /// Total arena elements: `2·act + tmp + col + fuse + pool`.
     pub fn arena_len(&self) -> usize {
         2 * self.act_len + self.tmp_len + self.col_len + self.fuse_len + self.pool_len
+    }
+
+    /// Checked-build arena audit (docs/invariants.md). The arena regions
+    /// `[act A | act B | tmp | col | fuse | pool]` are disjoint by
+    /// construction (`split_at_mut` carving in `run_with_into`), so what
+    /// can actually drift is the *sizing* pass above: a step whose
+    /// buffer demand exceeds its region would slice out of bounds at run
+    /// time, inside a serving request. Re-derive every step's demand
+    /// here, at compile, where a failure is cheap and attributable.
+    /// Compiled in for debug and `check-invariants` builds only.
+    fn audit_arena_layout(&self) {
+        if !(cfg!(debug_assertions) || cfg!(feature = "check-invariants")) {
+            return;
+        }
+        let last = self.steps.len() - 1;
+        let mut expect_in = self.in_len;
+        for (si, s) in self.steps.iter().enumerate() {
+            crate::invariant!(
+                s.in_len == expect_in,
+                "arena audit: step {si} input length disagrees with the previous step's output"
+            );
+            expect_in = s.out_len;
+            if si < last {
+                crate::invariant!(
+                    s.out_len <= self.act_len,
+                    "arena audit: step {si} output exceeds the activation region"
+                );
+            }
+            match &s.op {
+                StepOp::Conv { p, .. } => {
+                    if s.kernel == PlanKernel::Im2col {
+                        crate::invariant!(
+                            p.c_in * p.k * p.n_out() <= self.col_len,
+                            "arena audit: step {si} im2col columns exceed the col region"
+                        );
+                    }
+                }
+                StepOp::Residual { p } => {
+                    crate::invariant!(
+                        s.in_len <= self.tmp_len,
+                        "arena audit: step {si} residual intermediate exceeds the tmp region"
+                    );
+                    if s.kernel == PlanKernel::Im2col {
+                        crate::invariant!(
+                            p.c_in * p.k * p.n_out() <= self.col_len,
+                            "arena audit: step {si} im2col columns exceed the col region"
+                        );
+                    }
+                }
+                StepOp::Pool { p, .. } => {
+                    if p.stride > 1 && p.stride < p.w && p.boundary == Boundary::Valid {
+                        let tasks = (p.batch * p.channels).min(POOL_SCRATCH_TASKS);
+                        crate::invariant!(
+                            tasks * p.dense_len() <= self.pool_len,
+                            "arena audit: step {si} pool dense scratch exceeds the pool region"
+                        );
+                    }
+                }
+                StepOp::Chain(chain) => {
+                    crate::invariant!(
+                        chain.max_tasks * chain.task_elems <= self.fuse_len,
+                        "arena audit: step {si} fused-chain scratch exceeds the fuse region"
+                    );
+                }
+                StepOp::Dense { .. } => {}
+            }
+        }
+        crate::invariant!(
+            expect_in == self.batch * self.out_c * self.out_n,
+            "arena audit: final step output disagrees with the plan's output shape"
+        );
     }
 
     /// The chosen kernel per *step* (fused segments appear once).
@@ -1454,6 +1544,9 @@ impl Plan {
         parts.join(" | ")
     }
 
+    // xtask: begin-hot — the plan run path serves requests; allocations
+    // below this marker must carry an `alloc-ok:` justification.
+
     /// Execute on the shared global executor. See
     /// [`Plan::run_with_into`].
     pub fn run_into(
@@ -1501,6 +1594,7 @@ impl Plan {
             scratch.arena.resize(arena_len, 0.0);
         }
         out.resize(self.batch * self.out_c * self.out_n, 0.0);
+        crate::check::poison(out.as_mut_slice());
         let (reg_a, rest) = scratch.arena.split_at_mut(self.act_len);
         let (reg_b, rest) = rest.split_at_mut(self.act_len);
         let (tmp_reg, rest) = rest.split_at_mut(self.tmp_len);
@@ -1524,6 +1618,7 @@ impl Plan {
             }
             std::mem::swap(&mut reg_src, &mut reg_dst);
         }
+        crate::check::assert_no_poison(out, "Plan::run_with_into");
         Ok((self.out_c, self.out_n))
     }
 }
@@ -1626,6 +1721,7 @@ fn run_fused_chain(
 ) -> Result<()> {
     let stages = &chain.stages;
     let m = stages.len();
+    // alloc-ok: O(stages) resolved-weight table, built once per request.
     let mut kernels: Vec<StageKernel<'_>> = Vec::with_capacity(m);
     for st in stages {
         let layer = &model.layers()[st.layer];
@@ -1682,6 +1778,7 @@ fn run_fused_chain(
     // Carve per-unit, per-channel destination column slices. Iterating
     // (batch, channel, span) walks `dst` front to back with no gaps, so
     // sequential `split_at_mut` hands every unit its disjoint columns.
+    // alloc-ok: per-unit dst slice table, O(units·c_final) fan-out setup.
     let mut unit_dst: Vec<Vec<&mut [f32]>> =
         (0..units).map(|_| Vec::with_capacity(c_final)).collect();
     {
@@ -1703,15 +1800,18 @@ fn run_fused_chain(
     let fuse = &mut fuse[..tasks * chain.task_elems];
     let kernels_ref: &[StageKernel<'_>] = &kernels;
     let tile = chain.tile;
+    // alloc-ok: one job closure per task (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
     let mut bufs = fuse.chunks_mut(chain.task_elems);
     let mut unit_iter = unit_dst.into_iter().enumerate();
     let mut assigned = 0usize;
     for ti in 0..tasks {
         let take = (units - assigned).div_ceil(tasks - ti);
+        // alloc-ok: this task's unit assignment, O(units) across all tasks.
         let my_units: Vec<(usize, Vec<&mut [f32]>)> = unit_iter.by_ref().take(take).collect();
         assigned += take;
         let buf = bufs.next().expect("one ring-buffer set per task");
+        // alloc-ok: job closure box, amortized over a whole unit sweep.
         jobs.push(Box::new(move || {
             for (uidx, mut dsl) in my_units {
                 let b = uidx / spans;
@@ -1754,6 +1854,7 @@ fn chain_sweep_unit(
     let src_b = &src[b * row0..][..row0];
     // Split the task buffer into per-stage ring buffers (laid out in
     // stage order by `buf_off`).
+    // alloc-ok: O(stages) ring-buffer views into the arena's fuse region.
     let mut bufs: Vec<&mut [f32]> = Vec::with_capacity(m - 1);
     {
         let mut rest = task_buf;
@@ -1767,9 +1868,9 @@ fn chain_sweep_unit(
     // prod[i]: outputs produced so far; lo[i]: conceptual origin of
     // stage i's ring buffer (content = [lo, prod)); hi[i]: this tile's
     // production target.
-    let mut prod: Vec<usize> = vec![0; m];
-    let mut lo: Vec<usize> = vec![0; m];
-    let mut hi: Vec<usize> = vec![0; m];
+    let mut prod: Vec<usize> = vec![0; m]; // alloc-ok: O(stages) cursors
+    let mut lo: Vec<usize> = vec![0; m]; // alloc-ok: O(stages) cursors
+    let mut hi: Vec<usize> = vec![0; m]; // alloc-ok: O(stages) cursors
     prod[m - 1] = v0;
     for i in (0..m - 1).rev() {
         prod[i] = stages[i + 1].in_lo(prod[i + 1]);
@@ -1794,6 +1895,10 @@ fn chain_sweep_unit(
                     if have > 0 {
                         let shift = keep - lo[i];
                         let cap = stages[i].cap;
+                        crate::invariant!(
+                            shift + have <= cap,
+                            "chain halo shift out of ring bounds at stage {i}"
+                        );
                         for row in bufs[i].chunks_mut(cap) {
                             row.copy_within(shift..shift + have, 0);
                         }
@@ -1812,7 +1917,7 @@ fn chain_sweep_unit(
                 continue;
             }
             let n_new = new_hi - new_lo;
-            debug_assert!(
+            crate::invariant!(
                 i + 1 == m || new_hi - lo[i] <= stages[i].cap,
                 "chain ring-buffer overflow at stage {i}"
             );
@@ -1855,6 +1960,8 @@ fn chain_sweep_unit(
         u = u1;
     }
 }
+
+// xtask: end-hot — probing/compile helpers below allocate freely.
 
 /// Measure a candidate segment fused vs unfused (compile-time only;
 /// decisions cached process-wide in the [`TuneCache`], and on disk when
@@ -1977,6 +2084,8 @@ fn segment_sig(chain: &ChainPlan) -> String {
     s
 }
 
+// xtask: begin-hot — per-step conv dispatch runs on the request path.
+
 /// Dispatch a conv-shaped step to its chosen kernel, epilogue fused.
 #[allow(clippy::too_many_arguments)]
 fn run_conv(
@@ -2014,6 +2123,8 @@ fn run_conv(
     }
     Ok(())
 }
+
+// xtask: end-hot
 
 #[cfg(test)]
 mod tests {
@@ -2485,6 +2596,78 @@ stride = 2
         conflicting.insert(key, PlanKernel::Direct);
         conflicting.load_from(&path).unwrap();
         assert_eq!(conflicting.lookup(&key), Some(PlanKernel::Direct));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Corrupt-snapshot robustness (property): arbitrary truncations and
+    /// byte flips of a valid cache file must never panic `load_from` —
+    /// the worst allowed outcome is fewer (or zero) merged entries — and
+    /// a cache that just absorbed garbage must still merge a clean file.
+    #[test]
+    fn tune_cache_load_survives_mangled_json() {
+        let cache = TuneCache::default();
+        cache.insert(
+            TuneKey {
+                shape: Conv1dParams::new(2, 3, 80, 3).with_batch(2),
+                tier: SimdTier::Generic,
+                threads: 2,
+            },
+            PlanKernel::Sliding,
+        );
+        cache.insert_segment(
+            ("b1+conv_ci1co1n32k3s1d1p0r0".into(), SimdTier::Generic, 2),
+            false,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "swsnn_tunecache_mangle_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        cache.save_to(&path).unwrap();
+        let valid = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(TuneCache::default().load_from(&path).unwrap(), 2);
+        crate::prop::check(
+            crate::prop::PropConfig {
+                cases: 300,
+                ..Default::default()
+            },
+            "mangled tune cache never panics",
+            |g| {
+                let mut bytes = valid.clone().into_bytes();
+                match g.usize_in(0, 3) {
+                    // Truncation (partial write / full disk).
+                    0 => bytes.truncate(g.usize_in(0, bytes.len() + 1)),
+                    // Byte flips (bit rot, editor damage) — may also
+                    // produce invalid UTF-8, which must surface as Err.
+                    1 => {
+                        for _ in 0..g.usize_in(1, 9) {
+                            let i = g.usize_in(0, bytes.len());
+                            bytes[i] = g.usize_in(0, 256) as u8;
+                        }
+                    }
+                    // Both at once.
+                    _ => {
+                        bytes.truncate(g.usize_in(0, bytes.len() + 1));
+                        if !bytes.is_empty() {
+                            let i = g.usize_in(0, bytes.len());
+                            bytes[i] = g.usize_in(0, 256) as u8;
+                        }
+                    }
+                }
+                std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+                let fresh = TuneCache::default();
+                // Ok (with anything ≤ the real entry count merged) or a
+                // clean Err are both acceptable; a panic fails the test.
+                let merged = fresh.load_from(&path).unwrap_or(0);
+                crate::prop::ensure(merged <= 2, format!("merged {merged} > entries written"))?;
+                std::fs::write(&path, valid.as_bytes()).map_err(|e| e.to_string())?;
+                let after = fresh.load_from(&path).map_err(|e| e.to_string())?;
+                crate::prop::ensure(
+                    merged + after >= 2,
+                    "clean reload after garbage lost entries",
+                )
+            },
+        );
         let _ = std::fs::remove_file(&path);
     }
 

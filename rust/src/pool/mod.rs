@@ -122,6 +122,7 @@ pub fn pool1d_into(kind: PoolKind, x: &[f32], p: &Pool1dParams, y: &mut [f32]) {
 
 /// [`pool1d`] on an explicit executor (scaling benches / parity tests).
 pub fn pool1d_with(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; pool1d_with_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     pool1d_with_into(ex, kind, x, p, &mut y);
     y
@@ -136,6 +137,7 @@ pub fn pool1d_with(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams) -
 pub fn pool1d_with_into(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dParams, y: &mut [f32]) {
     assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
     assert_eq!(y.len(), p.y_len(), "dst length");
+    crate::check::poison(y);
     let n_out = p.n_out();
     if n_out == 0 {
         return;
@@ -145,13 +147,17 @@ pub fn pool1d_with_into(ex: &Executor, kind: PoolKind, x: &[f32], p: &Pool1dPara
         for (r, yrow) in y.chunks_mut(n_out).enumerate() {
             pool1d_row(ex, kind, x, p, r, yrow);
         }
+        crate::check::assert_no_poison(y, "pool1d_with_into");
         return;
     }
+    // alloc-ok: one job closure per (batch, channel) row (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows);
     for (r, yrow) in y.chunks_mut(n_out).enumerate() {
+        // alloc-ok: job closure box, amortized over a whole row.
         jobs.push(Box::new(move || pool1d_row(ex, kind, x, p, r, yrow)));
     }
     ex.scope(jobs);
+    crate::check::assert_no_poison(y, "pool1d_with_into");
 }
 
 /// One `(batch, channel)` row: dense sliding pass + stride decimation.
@@ -274,6 +280,9 @@ pub fn pool1d_overlap_strided_with_into(
     );
     assert_eq!(x.len(), p.batch * p.channels * p.n, "input shape");
     assert_eq!(y.len(), p.y_len(), "dst length");
+    // Poison `y` only: `dense` is scratch and legitimately holds a
+    // partially-meaningful tail when rows differ in length.
+    crate::check::poison(y);
     let n_out = p.n_out();
     if n_out == 0 {
         return;
@@ -291,11 +300,13 @@ pub fn pool1d_overlap_strided_with_into(
                 *v = drow[t * p.stride];
             }
         }
+        crate::check::assert_no_poison(y, "pool1d_overlap_strided_with_into");
         return;
     }
     // Balanced contiguous row chunks, one dense scratch row per task.
+    // alloc-ok: one job closure per scratch task (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
-    let mut rest = y;
+    let mut rest = &mut y[..];
     let mut bufs = dense.chunks_mut(dense_len);
     let mut r0 = 0usize;
     for ti in 0..tasks {
@@ -304,6 +315,7 @@ pub fn pool1d_overlap_strided_with_into(
         let (ychunk, tail) = rem.split_at_mut(take * n_out);
         rest = tail;
         let drow = bufs.next().expect("one dense buffer per task");
+        // alloc-ok: job closure box, amortized over a whole row chunk.
         jobs.push(Box::new(move || {
             for (j, yrow) in ychunk.chunks_mut(n_out).enumerate() {
                 let xrow = &x[(r0 + j) * p.n..][..p.n];
@@ -316,6 +328,7 @@ pub fn pool1d_overlap_strided_with_into(
         r0 += take;
     }
     ex.scope(jobs);
+    crate::check::assert_no_poison(y, "pool1d_overlap_strided_with_into");
 }
 
 /// Dense stride-1 pooling of one row (shared worker pool).
@@ -333,6 +346,7 @@ pub fn pool1d_row_dense_with(
     w: usize,
     mode: Boundary,
 ) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; pool1d_row_dense_into is the hot path.
     let mut dst = vec![0.0f32; sliding::boundary::output_len(xrow.len(), w, mode)];
     pool1d_row_dense_into(ex, kind, xrow, w, mode, &mut dst);
     dst
@@ -349,6 +363,7 @@ pub fn pool1d_row_dense_into(
     mode: Boundary,
     dst: &mut [f32],
 ) {
+    crate::check::poison(dst);
     match kind {
         PoolKind::Avg => {
             extend_then_sweep(ex, AddOp::<f32>::new(), xrow, w, mode, dst);
@@ -360,6 +375,7 @@ pub fn pool1d_row_dense_into(
         PoolKind::Max => extend_then_sweep(ex, MaxOp::<f32>::new(), xrow, w, mode, dst),
         PoolKind::Min => extend_then_sweep(ex, MinOp::<f32>::new(), xrow, w, mode, dst),
     }
+    crate::check::assert_no_poison(dst, "pool1d_row_dense_into");
 }
 
 /// Boundary-extend (borrowing the row in place for `Valid`) and run the
@@ -388,6 +404,7 @@ fn extend_then_sweep<O: AssocOp<Elem = f32>>(
 pub fn pool1d_naive(kind: PoolKind, x: &[f32], p: &Pool1dParams) -> Vec<f32> {
     assert_eq!(x.len(), p.batch * p.channels * p.n);
     let n_out = p.n_out();
+    // alloc-ok: naive baseline for benches/tests, not on the plan run path.
     let mut y = vec![0.0f32; p.y_len()];
     for b in 0..p.batch {
         for c in 0..p.channels {
@@ -437,10 +454,12 @@ pub fn sliding_minimum(xs: &[u64], w: usize) -> Vec<u64> {
 pub fn minimizer_positions(xs: &[u64], w: usize) -> Vec<usize> {
     let n = xs.len();
     if w == 0 || n < w {
-        return Vec::new();
+        return Vec::new(); // alloc-ok: minimizer example path, not a DNN layer
     }
+    // alloc-ok: minimizer example path (genomics cross-check), not on the
+    // plan run path.
     let mut deque: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
-    let mut out = Vec::with_capacity(n - w + 1);
+    let mut out = Vec::with_capacity(n - w + 1); // alloc-ok: example path
     for i in 0..n {
         while let Some(&back) = deque.back() {
             if xs[back] > xs[i] {

@@ -89,6 +89,7 @@ pub fn pool2d_with(
     x: &[f32],
     p: &Pool2dParams,
 ) -> Vec<f32> {
+    // alloc-ok: Vec-returning wrapper; pool2d_with_into is the hot path.
     let mut y = vec![0.0f32; p.y_len()];
     pool2d_with_into(ex, kind, x, p, &mut y);
     y
@@ -107,6 +108,7 @@ pub fn pool2d_with_into(
 ) {
     assert_eq!(x.len(), p.batch * p.channels * p.h * p.w, "input shape");
     assert_eq!(y.len(), p.y_len(), "dst length");
+    crate::check::poison(y);
     let (h_out, w_out) = (p.h_out(), p.w_out());
     if h_out == 0 || w_out == 0 {
         return;
@@ -118,16 +120,20 @@ pub fn pool2d_with_into(
         for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
             pool2d_plane(ex, kind, x, p, pi, out_plane, &mut scratch);
         }
+        crate::check::assert_no_poison(y, "pool2d_with_into");
         return;
     }
+    // alloc-ok: one job closure per (batch, channel) plane (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(p.batch * p.channels);
     for (pi, out_plane) in y.chunks_mut(plane_len).enumerate() {
+        // alloc-ok: job closure box, amortized over a whole plane.
         jobs.push(Box::new(move || {
             let mut scratch = PlaneScratch::default();
             pool2d_plane(ex, kind, x, p, pi, out_plane, &mut scratch);
         }));
     }
     ex.scope(jobs);
+    crate::check::assert_no_poison(y, "pool2d_with_into");
 }
 
 /// Reusable per-plane scratch: row-pass buffer, column gather buffer,
@@ -210,6 +216,7 @@ fn row_windows_into(
 pub fn pool2d_naive(kind: PoolKind, x: &[f32], p: &Pool2dParams) -> Vec<f32> {
     assert_eq!(x.len(), p.batch * p.channels * p.h * p.w);
     let (h_out, w_out) = (p.h_out(), p.w_out());
+    // alloc-ok: naive oracle for benches/tests, not on the plan run path.
     let mut y = vec![0.0f32; p.y_len()];
     for b in 0..p.batch {
         for c in 0..p.channels {

@@ -206,10 +206,13 @@ pub fn as_f32_mut<T: 'static>(xs: &mut [T]) -> Option<&mut [f32]> {
 pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::add_assign_avx2(dst, src) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline on x86_64.
         SimdTier::Sse2 => unsafe { x86::add_assign_sse2(dst, src) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
         SimdTier::Neon => unsafe { neon::add_assign_neon(dst, src) },
         _ => add_assign_f32_generic(dst, src),
     }
@@ -219,10 +222,13 @@ pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
 pub fn max_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::max_assign_avx2(dst, src) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline on x86_64.
         SimdTier::Sse2 => unsafe { x86::max_assign_sse2(dst, src) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
         SimdTier::Neon => unsafe { neon::max_assign_neon(dst, src) },
         _ => max_assign_f32_generic(dst, src),
     }
@@ -232,10 +238,13 @@ pub fn max_assign_f32(dst: &mut [f32], src: &[f32]) {
 pub fn min_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::min_assign_avx2(dst, src) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is baseline on x86_64.
         SimdTier::Sse2 => unsafe { x86::min_assign_sse2(dst, src) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
         SimdTier::Neon => unsafe { neon::min_assign_neon(dst, src) },
         _ => min_assign_f32_generic(dst, src),
     }
@@ -275,8 +284,11 @@ pub fn fma_tap1_f32(yb: &mut [f32], xs: &[f32], wk: f32) {
     debug_assert!(xs.len() >= yb.len());
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier requires AVX2+FMA at detection time; the
+        // caller contract `xs.len() >= yb.len()` keeps loads in bounds.
         SimdTier::Avx2 => unsafe { x86::fma_tap1_avx2(yb, xs, wk) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same length contract.
         SimdTier::Neon => unsafe { neon::fma_tap1_neon(yb, xs, wk) },
         _ => fma_tap1_f32_generic(yb, xs, wk),
     }
@@ -288,8 +300,11 @@ pub fn fma_tap4_f32(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
     debug_assert!(xs.len() >= yb.len() + 3);
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier requires AVX2+FMA at detection time; the
+        // caller contract `xs.len() >= yb.len() + 3` keeps loads in bounds.
         SimdTier::Avx2 => unsafe { x86::fma_tap4_avx2(yb, xs, w) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same length contract.
         SimdTier::Neon => unsafe { neon::fma_tap4_neon(yb, xs, w) },
         _ => fma_tap4_f32_generic(yb, xs, w),
     }
@@ -321,6 +336,9 @@ mod x86 {
     macro_rules! assign_avx {
         ($name:ident, $vop:ident, $scalar:expr) => {
             #[target_feature(enable = "avx2")]
+            // SAFETY: caller must guarantee AVX2 (dispatch does, via the
+            // Avx2 tier). All pointer offsets stay below
+            // `n = min(dst.len(), src.len())`, within both slices.
             pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
                 let n = dst.len().min(src.len());
                 let dp = dst.as_mut_ptr();
@@ -344,6 +362,9 @@ mod x86 {
     macro_rules! assign_sse {
         ($name:ident, $vop:ident, $scalar:expr) => {
             #[target_feature(enable = "sse2")]
+            // SAFETY: caller must guarantee SSE2 (baseline on x86_64).
+            // All pointer offsets stay below
+            // `n = min(dst.len(), src.len())`, within both slices.
             pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
                 let n = dst.len().min(src.len());
                 let dp = dst.as_mut_ptr();
@@ -372,6 +393,8 @@ mod x86 {
     assign_sse!(min_assign_sse2, _mm_min_ps, |a, b| if a < b { a } else { b });
 
     #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: caller must guarantee AVX2+FMA (dispatch does, via the Avx2
+    // tier) and `xs.len() >= yb.len()`; offsets stay below `yb.len()`.
     pub unsafe fn fma_tap1_avx2(yb: &mut [f32], xs: &[f32], wk: f32) {
         let n = yb.len();
         let yp = yb.as_mut_ptr();
@@ -391,6 +414,8 @@ mod x86 {
     }
 
     #[target_feature(enable = "avx2", enable = "fma")]
+    // SAFETY: caller must guarantee AVX2+FMA (dispatch does, via the Avx2
+    // tier) and `xs.len() >= yb.len() + 3`, covering the `t + 3` loads.
     pub unsafe fn fma_tap4_avx2(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
         let n = yb.len();
         let yp = yb.as_mut_ptr();
@@ -428,6 +453,9 @@ mod neon {
     macro_rules! assign_neon {
         ($name:ident, $vop:ident, $scalar:expr) => {
             #[target_feature(enable = "neon")]
+            // SAFETY: caller must guarantee NEON (baseline on aarch64).
+            // All pointer offsets stay below
+            // `n = min(dst.len(), src.len())`, within both slices.
             pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
                 let n = dst.len().min(src.len());
                 let dp = dst.as_mut_ptr();
@@ -453,6 +481,8 @@ mod neon {
     assign_neon!(min_assign_neon, vminq_f32, |a, b| if a < b { a } else { b });
 
     #[target_feature(enable = "neon")]
+    // SAFETY: caller must guarantee NEON (baseline on aarch64) and
+    // `xs.len() >= yb.len()`; offsets stay below `yb.len()`.
     pub unsafe fn fma_tap1_neon(yb: &mut [f32], xs: &[f32], wk: f32) {
         let n = yb.len();
         let yp = yb.as_mut_ptr();
@@ -471,6 +501,8 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: caller must guarantee NEON (baseline on aarch64) and
+    // `xs.len() >= yb.len() + 3`, covering the `t + 3` loads.
     pub unsafe fn fma_tap4_neon(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
         let n = yb.len();
         let yp = yb.as_mut_ptr();

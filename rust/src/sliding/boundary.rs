@@ -50,10 +50,11 @@ impl Boundary {
 pub fn extend<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, mode: Boundary) -> Vec<O::Elem> {
     let n = xs.len();
     if mode == Boundary::Valid || w <= 1 || n == 0 {
-        return xs.to_vec();
+        return xs.to_vec(); // alloc-ok: boundary extension is setup, not hot
     }
     let lead = (w - 1) / 2;
     let trail = w - 1 - lead;
+    // alloc-ok: boundary extension is setup work, not on the tile loop.
     let mut out = Vec::with_capacity(n + w - 1);
     match mode {
         Boundary::Valid => unreachable!(),

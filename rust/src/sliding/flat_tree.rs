@@ -25,6 +25,7 @@ use super::out_len;
 
 /// Log-depth sliding sum over a flat buffer (associative `⊕`).
 pub fn sliding_flat_tree<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; sliding_flat_tree_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     sliding_flat_tree_into(op, xs, w, &mut out);
     out
@@ -63,10 +64,11 @@ pub fn sliding_flat_tree_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: 
         out.copy_from_slice(xs);
         return;
     }
+    crate::check::poison(out);
 
     let t_max = usize::BITS - 1 - w.leading_zeros(); // floor(log2 w)
     let top = 1usize << t_max;
-    let mut d = xs.to_vec();
+    let mut d = xs.to_vec(); // alloc-ok: the one O(N) ladder scratch clone
     let mut live = n; // valid prefix length of d
 
     if w == top {
@@ -82,6 +84,7 @@ pub fn sliding_flat_tree_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: 
         for (o, (a, b)) in out.iter_mut().zip(d.iter().zip(&d[size..])) {
             *o = op.combine(*a, *b);
         }
+        crate::check::assert_no_poison(out, "sliding_flat_tree_into");
         return;
     }
 
@@ -99,6 +102,7 @@ pub fn sliding_flat_tree_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: 
         for (o, (a, b)) in out.iter_mut().zip(d.iter().zip(&d[shift..])) {
             *o = op.combine(*a, *b);
         }
+        crate::check::assert_no_poison(out, "sliding_flat_tree_into");
         return;
     }
 
@@ -137,10 +141,12 @@ pub fn sliding_flat_tree_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: 
         size <<= 1;
     }
     debug_assert!(seeded, "w >= 1 has at least one set bit");
+    crate::check::assert_no_poison(out, "sliding_flat_tree_into");
 }
 
 /// Window-2 special case: one combine pass (used by the dispatcher).
 pub fn sliding_w2<O: AssocOp>(op: O, xs: &[O::Elem]) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; sliding_w2_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), 2)];
     sliding_w2_into(op, xs, &mut out);
     out
@@ -154,8 +160,10 @@ pub fn sliding_w2_into<O: AssocOp>(op: O, xs: &[O::Elem], out: &mut [O::Elem]) {
     if m == 0 {
         return;
     }
+    crate::check::poison(out);
     out.copy_from_slice(&xs[..m]);
     op.combine_assign_slices(out, &xs[1..1 + m]);
+    crate::check::assert_no_poison(out, "sliding_w2_into");
 }
 
 #[cfg(test)]

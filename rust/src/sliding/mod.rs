@@ -171,6 +171,7 @@ pub fn run_serial_into<O: AssocOp>(
     p: usize,
     out: &mut [O::Elem],
 ) {
+    crate::check::poison(out);
     match algo {
         Algo::Naive => sliding_naive_into(op, xs, w, out),
         Algo::ScalarInput => sliding_scalar_input_into(op, xs, w, p, out),
@@ -181,6 +182,7 @@ pub fn run_serial_into<O: AssocOp>(
         Algo::VectorSlideTree => sliding_vector_slide_tree_into(op, xs, w, p, out),
         Algo::FlatTree => sliding_flat_tree_into(op, xs, w, out),
     }
+    crate::check::assert_no_poison(out, "run_serial_into");
 }
 
 /// Run a specific algorithm, fanning large inputs out over the shared
@@ -198,6 +200,7 @@ pub fn run_with<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; run_with_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     run_with_into(ex, algo, op, xs, w, p, &mut out);
     out
@@ -229,6 +232,7 @@ pub fn run_with_into<O: AssocOp>(
     out: &mut [O::Elem],
 ) {
     assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
+    crate::check::poison(out);
     if algo.chunk_parallel_safe() {
         chunked_halo_into(ex, xs, w, out, move |sub, dst| {
             run_serial_into(algo, op, sub, w, p, dst)
@@ -236,6 +240,7 @@ pub fn run_with_into<O: AssocOp>(
     } else {
         run_serial_into(algo, op, xs, w, p, out);
     }
+    crate::check::assert_no_poison(out, "run_with_into");
 }
 
 /// Dispatcher: pick the best implementation for `(w, P)` on a
@@ -251,6 +256,7 @@ pub fn run_with_into<O: AssocOp>(
 ///   [`run`] for streaming inputs and for the TBL-A reproduction.
 pub fn auto_serial<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, _p: usize) -> Vec<O::Elem> {
     match w {
+        // alloc-ok: Vec-returning wrapper; auto_serial_into is the hot path.
         1 => xs.to_vec(),
         2 => sliding_w2(op, xs),
         _ => sliding_flat_tree(op, xs, w),
@@ -265,11 +271,13 @@ pub fn auto_serial_into<O: AssocOp>(
     _p: usize,
     out: &mut [O::Elem],
 ) {
+    crate::check::poison(out);
     match w {
         1 => out.copy_from_slice(&xs[..out.len()]),
         2 => sliding_w2_into(op, xs, out),
         _ => sliding_flat_tree_into(op, xs, w, out),
     }
+    crate::check::assert_no_poison(out, "auto_serial_into");
 }
 
 /// [`auto_serial`] with chunk+halo dispatch over the shared worker pool
@@ -287,6 +295,7 @@ pub fn auto_with<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; auto_with_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     auto_with_into(ex, op, xs, w, p, &mut out);
     out
@@ -309,9 +318,11 @@ pub fn auto_with_into<O: AssocOp>(
     out: &mut [O::Elem],
 ) {
     assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
+    crate::check::poison(out);
     chunked_halo_into(ex, xs, w, out, move |sub, dst| {
         auto_serial_into(op, sub, w, p, dst)
     });
+    crate::check::assert_no_poison(out, "auto_with_into");
 }
 
 /// Minimum output elements per parallel chunk — below 2× this the

@@ -10,6 +10,7 @@ use super::out_len;
 /// baseline the TBL-A bench normalizes speedups to.
 pub fn sliding_naive<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem> {
     let m = out_len(xs.len(), w);
+    // alloc-ok: Vec-returning oracle; sliding_naive_into is the hot path.
     let mut out = Vec::with_capacity(m);
     for i in 0..m {
         let mut acc = op.identity();
@@ -25,6 +26,7 @@ pub fn sliding_naive<O: AssocOp>(op: O, xs: &[O::Elem], w: usize) -> Vec<O::Elem
 /// [`out_len`]`(xs.len(), w)`. Every element is overwritten.
 pub fn sliding_naive_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: &mut [O::Elem]) {
     assert_eq!(out.len(), out_len(xs.len(), w), "dst length");
+    crate::check::poison(out);
     for (i, o) in out.iter_mut().enumerate() {
         let mut acc = op.identity();
         for &x in &xs[i..i + w] {
@@ -32,6 +34,7 @@ pub fn sliding_naive_into<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, out: &mut
         }
         *o = acc;
     }
+    crate::check::assert_no_poison(out, "sliding_naive_into");
 }
 
 #[cfg(test)]

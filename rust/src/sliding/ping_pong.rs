@@ -57,6 +57,8 @@ pub fn sliding_ping_pong<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) 
     }
     let n = xs.len();
     let m = out_len(n, w);
+    // alloc-ok: Vec-returning algorithm (no `_into` form yet; the plan
+    // run paths reach ping-pong only through run_serial_into's copy arm).
     let mut out = vec![op.identity(); m];
     if m == 0 {
         return out;

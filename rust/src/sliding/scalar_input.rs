@@ -29,6 +29,7 @@ pub fn sliding_scalar_input<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; sliding_scalar_input_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     sliding_scalar_input_into(op, xs, w, p, &mut out);
     out
@@ -52,6 +53,7 @@ pub fn sliding_scalar_input_into<O: AssocOp>(
     if m == 0 {
         return;
     }
+    crate::check::poison(out);
     let id = op.identity();
 
     // Initialize Y with the suffix sums of the first w-1 elements:
@@ -71,6 +73,7 @@ pub fn sliding_scalar_input_into<O: AssocOp>(
         out[i + 1 - w] = y.get(0);
         y.shift_left(1, id);
     }
+    crate::check::assert_no_poison(out, "sliding_scalar_input_into");
 }
 
 /// Algorithm 1's recurrence on an unbounded working set (window larger
@@ -82,6 +85,7 @@ pub fn sliding_scalar_input_unbounded<O: AssocOp>(
     xs: &[O::Elem],
     w: usize,
 ) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; the `_into` form is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     sliding_scalar_input_unbounded_into(op, xs, w, &mut out);
     out
@@ -99,15 +103,17 @@ pub fn sliding_scalar_input_unbounded_into<O: AssocOp>(
     if m == 0 {
         return;
     }
+    crate::check::poison(out);
     if w == 1 {
         out.copy_from_slice(xs);
+        crate::check::assert_no_poison(out, "sliding_scalar_input_unbounded_into");
         return;
     }
     // Ring buffer of w-1 suffix accumulators; logical lane l of the paper's
     // register lives at ring[(head + l) % (w-1)] — the ≪1 becomes a head
     // bump instead of a data move.
     let cap = w - 1;
-    let mut ring = vec![op.identity(); cap];
+    let mut ring = vec![op.identity(); cap]; // alloc-ok: O(w) ring scratch
     for (l, slot) in ring.iter_mut().enumerate() {
         let mut acc = op.identity();
         for &x in &xs[l..w - 1] {
@@ -130,6 +136,7 @@ pub fn sliding_scalar_input_unbounded_into<O: AssocOp>(
         }
         head = (head + 1) % cap;
     }
+    crate::check::assert_no_poison(out, "sliding_scalar_input_unbounded_into");
 }
 
 #[cfg(test)]

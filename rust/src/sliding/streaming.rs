@@ -27,7 +27,7 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
         Self {
             op,
             w,
-            ring: vec![op.identity(); w.max(2) - 1],
+            ring: vec![op.identity(); w.max(2) - 1], // alloc-ok: one-time O(w) state
             head: 0,
             seen: 0,
         }
@@ -69,6 +69,7 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
 
     /// Push a packet; collects completed sums (vector-input usage shape).
     pub fn push_slice(&mut self, xs: &[O::Elem]) -> Vec<O::Elem> {
+        // alloc-ok: Vec-returning convenience API, not on the plan run path.
         let mut out = Vec::with_capacity(xs.len());
         for &x in xs {
             if let Some(y) = self.push(x) {

@@ -106,6 +106,8 @@ fn vector_input_impl<O: AssocOp>(
     }
     let n = xs.len();
     let m = out_len(n, w);
+    // alloc-ok: Vec-returning algorithm (no `_into` form yet; the plan
+    // run paths reach vector-input only through run_serial_into's copy arm).
     let mut out = vec![op.identity(); m];
     if m == 0 {
         return out;

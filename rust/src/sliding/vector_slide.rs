@@ -28,6 +28,7 @@ use super::{out_len, sliding_scalar_input_into};
 
 /// Algorithm 4, linear inner loop: `O(N·w/P)`, any monoid.
 pub fn sliding_vector_slide<O: AssocOp>(op: O, xs: &[O::Elem], w: usize, p: usize) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; sliding_vector_slide_into is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     sliding_vector_slide_into(op, xs, w, p, &mut out);
     out
@@ -51,6 +52,7 @@ pub fn sliding_vector_slide_into<O: AssocOp>(
     if m == 0 {
         return;
     }
+    crate::check::poison(out);
     let id = op.identity();
 
     // Pre-pad the stream with w-1 identities so the first register pair
@@ -84,6 +86,7 @@ pub fn sliding_vector_slide_into<O: AssocOp>(
         }
     }
     debug_assert_eq!(emitted, m);
+    crate::check::assert_no_poison(out, "sliding_vector_slide_into");
 }
 
 /// Algorithm 4 with a log-depth doubling ladder: `O(N·log w/P)`,
@@ -101,6 +104,7 @@ pub fn sliding_vector_slide_tree<O: AssocOp>(
     w: usize,
     p: usize,
 ) -> Vec<O::Elem> {
+    // alloc-ok: Vec-returning wrapper; the `_into` form is the hot path.
     let mut out = vec![op.identity(); out_len(xs.len(), w)];
     sliding_vector_slide_tree_into(op, xs, w, p, &mut out);
     out
@@ -129,6 +133,7 @@ pub fn sliding_vector_slide_tree_into<O: AssocOp>(
     if m == 0 {
         return;
     }
+    crate::check::poison(out);
     let id = op.identity();
 
     // Decompose w into chunk sizes (powers of two, descending), e.g.
@@ -136,11 +141,11 @@ pub fn sliding_vector_slide_tree_into<O: AssocOp>(
     let t_max = usize::BITS - 1 - w.leading_zeros(); // floor(log2 w)
     let top = 1usize << t_max;
     let chunks: Vec<usize> = if w == top {
-        vec![top]
+        vec![top] // alloc-ok: O(log w) chunk list
     } else if op.is_idempotent() {
-        vec![top, top] // two overlapping windows of size 2^T
+        vec![top, top] // alloc-ok: two overlapping windows of size 2^T
     } else {
-        let mut c = Vec::new();
+        let mut c = Vec::new(); // alloc-ok: O(log w) chunk list
         let rem = w;
         let mut bit = top;
         while bit > 0 {
@@ -153,13 +158,15 @@ pub fn sliding_vector_slide_tree_into<O: AssocOp>(
         c
     };
 
-    let mut prev_ladder: Vec<VecReg<O::Elem>> = Vec::new(); // per level t
+    // alloc-ok: O(log w) register ladder scratch (per level t).
+    let mut prev_ladder: Vec<VecReg<O::Elem>> = Vec::new();
     let mut i = 0usize;
     let mut emitted = 0usize;
     while emitted < m {
         let take = p.min(n - i);
         let cur0 = VecReg::load(p, &xs[i..i + take], id);
         // Build the doubling ladder for the current register.
+        // alloc-ok: O(log w) register ladder scratch.
         let mut cur_ladder = Vec::with_capacity(t_max as usize + 1);
         cur_ladder.push(cur0.clone());
         for t in 0..t_max as usize {
@@ -232,6 +239,7 @@ pub fn sliding_vector_slide_tree_into<O: AssocOp>(
         }
     }
     debug_assert_eq!(emitted, m);
+    crate::check::assert_no_poison(out, "sliding_vector_slide_tree_into");
 }
 
 #[cfg(test)]

@@ -9,15 +9,18 @@
 //!    counts {1, 2, 4, 8}.
 
 use swsnn::conv::{
-    conv1d_sliding_with, conv1d_sliding_with_into, conv2d_sliding_with, conv2d_sliding_with_into,
-    Conv1dParams, Conv2dParams,
+    conv1d_direct, conv1d_direct_into, conv1d_im2col_epilogue_into, conv1d_im2col_with,
+    conv1d_sliding_into, conv1d_sliding_with, conv1d_sliding_with_into, conv2d_sliding,
+    conv2d_sliding_into, conv2d_sliding_with, conv2d_sliding_with_into, im2col_expand,
+    im2col_expand_into, Conv1dParams, Conv2dParams,
 };
 use swsnn::exec::Executor;
 use swsnn::nn::{ForwardScratch, Model};
 use swsnn::ops::{AddOp, Epilogue, MaxOp, MulOp};
 use swsnn::pool::{
-    pool1d_with, pool1d_with_into, pool2d_with, pool2d_with_into, Pool1dParams, Pool2dParams,
-    PoolKind,
+    pool1d, pool1d_into, pool1d_overlap_strided_with_into, pool1d_row_dense_into,
+    pool1d_row_dense_with, pool1d_with, pool1d_with_into, pool2d, pool2d_into, pool2d_with,
+    pool2d_with_into, Pool1dParams, Pool2dParams, PoolKind, POOL_SCRATCH_TASKS,
 };
 use swsnn::sliding::{self, Algo, Boundary};
 use swsnn::workload::Rng;
@@ -200,6 +203,185 @@ fn pool_into_matches_vec_with_dirty_dst() {
             let mut y = vec![DIRT; p2.y_len()];
             pool2d_with_into(&ex, kind, &x2, &p2, &mut y);
             assert_eq!(y, want, "pool2d {kind:?} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn serial_sliding_into_variants_match_vec_with_dirty_dst() {
+    use swsnn::sliding::scalar_input::{
+        sliding_scalar_input_unbounded, sliding_scalar_input_unbounded_into,
+    };
+    use swsnn::sliding::{
+        sliding_flat_tree, sliding_flat_tree_into, sliding_naive, sliding_naive_into,
+        sliding_scalar_input, sliding_scalar_input_into, sliding_vector_slide,
+        sliding_vector_slide_into, sliding_vector_slide_tree, sliding_vector_slide_tree_into,
+        sliding_w2, sliding_w2_into,
+    };
+    let mut rng = Rng::new(0x1709);
+    let xs = rng.vec_uniform(4_096, -1.0, 1.0);
+    let op = AddOp::<f32>::new();
+    const P: usize = 16;
+    for w in [1usize, 2, 3, 8, 15] {
+        let m = xs.len() - w + 1;
+
+        let mut out = vec![DIRT; m];
+        sliding_naive_into(op, &xs, w, &mut out);
+        assert_eq!(out, sliding_naive(op, &xs, w), "naive w={w}");
+
+        let mut out = vec![DIRT; m];
+        sliding_flat_tree_into(op, &xs, w, &mut out);
+        assert_eq!(out, sliding_flat_tree(op, &xs, w), "flat_tree w={w}");
+
+        let mut out = vec![DIRT; m];
+        sliding_scalar_input_into(op, &xs, w, P, &mut out);
+        assert_eq!(out, sliding_scalar_input(op, &xs, w, P), "scalar_input w={w}");
+
+        let mut out = vec![DIRT; m];
+        sliding_scalar_input_unbounded_into(op, &xs, w, &mut out);
+        assert_eq!(
+            out,
+            sliding_scalar_input_unbounded(op, &xs, w),
+            "scalar_input_unbounded w={w}"
+        );
+
+        let mut out = vec![DIRT; m];
+        sliding_vector_slide_into(op, &xs, w, P, &mut out);
+        assert_eq!(out, sliding_vector_slide(op, &xs, w, P), "vector_slide w={w}");
+
+        let mut out = vec![DIRT; m];
+        sliding_vector_slide_tree_into(op, &xs, w, P, &mut out);
+        assert_eq!(
+            out,
+            sliding_vector_slide_tree(op, &xs, w, P),
+            "vector_slide_tree w={w}"
+        );
+
+        for algo in Algo::ALL {
+            let mut out = vec![DIRT; m];
+            sliding::run_serial_into(algo, op, &xs, w, P, &mut out);
+            assert_eq!(out, sliding::run_serial(algo, op, &xs, w, P), "{algo:?} w={w}");
+        }
+
+        let mut out = vec![DIRT; m];
+        sliding::auto_serial_into(op, &xs, w, 64, &mut out);
+        assert_eq!(out, sliding::auto_serial(op, &xs, w, 64), "auto_serial w={w}");
+
+        // Global-executor convenience wrapper: the chunked dispatch it
+        // delegates to is bit-identical to the serial sweep.
+        let mut out = vec![DIRT; m];
+        sliding::auto_into(op, &xs, w, 64, &mut out);
+        assert_eq!(out, sliding::auto_serial(op, &xs, w, 64), "auto w={w}");
+    }
+    let mut out = vec![DIRT; xs.len() - 1];
+    sliding_w2_into(op, &xs, &mut out);
+    assert_eq!(out, sliding_w2(op, &xs), "w2");
+}
+
+#[test]
+fn conv_into_convenience_and_im2col_match_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x170A);
+    let p = Conv1dParams::new(2, 3, 6_000, 5).with_batch(2);
+    let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+    let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+    let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+    let bias = Some(b.as_slice());
+
+    // Global-executor wrapper: chunk dispatch is bit-identical across
+    // thread counts, so the 1-thread reference is exact.
+    let want = conv1d_sliding_with(&Executor::new(1), &x, &w, bias, &p);
+    let mut y = vec![DIRT; p.y_len()];
+    conv1d_sliding_into(&x, &w, bias, &p, Epilogue::None, &mut y);
+    assert_eq!(y, want, "conv1d_sliding_into");
+
+    let mut y = vec![DIRT; p.y_len()];
+    conv1d_direct_into(&x, &w, bias, &p, &mut y);
+    assert_eq!(y, conv1d_direct(&x, &w, bias, &p), "conv1d_direct_into");
+
+    // im2col: the expansion and the epilogue-fused GEMM path against
+    // their Vec-returning forms (same backend, so exact equality).
+    let p1 = Conv1dParams::new(3, 2, 400, 7).with_dilation(2);
+    let x1 = rng.vec_uniform(p1.x_len(), -1.0, 1.0);
+    let w1 = rng.vec_uniform(p1.w_len(), -1.0, 1.0);
+    let mut cols = vec![DIRT; p1.c_in * p1.k * p1.n_out()];
+    im2col_expand_into(&x1, &p1, &mut cols);
+    assert_eq!(cols, im2col_expand(&x1, &p1), "im2col_expand_into");
+
+    for t in THREADS {
+        let ex = Executor::new(t);
+        let want = conv1d_im2col_with(&ex, &x1, &w1, None, &p1);
+        let mut y = vec![DIRT; p1.y_len()];
+        let mut col = vec![DIRT; p1.c_in * p1.k * p1.n_out()];
+        conv1d_im2col_epilogue_into(&ex, &x1, &w1, None, &p1, Epilogue::None, &mut col, &mut y);
+        assert_eq!(y, want, "conv1d_im2col_epilogue_into threads={t}");
+    }
+
+    let p2 = Conv2dParams::new(2, 2, 24, 20, 3, 3).with_same_pad();
+    let x2 = rng.vec_uniform(p2.x_len(), -1.0, 1.0);
+    let w2 = rng.vec_uniform(p2.w_len(), -1.0, 1.0);
+    let want = conv2d_sliding(&x2, &w2, None, &p2);
+    let mut y = vec![DIRT; p2.y_len()];
+    conv2d_sliding_into(&x2, &w2, None, &p2, Epilogue::None, &mut y);
+    assert_eq!(y, want, "conv2d_sliding_into");
+}
+
+#[test]
+fn pool_convenience_and_row_dense_into_match_vec() {
+    let mut rng = Rng::new(0x170B);
+    let p = Pool1dParams::new(3, 4_000, 8).with_batch(2).with_stride(2);
+    let x = rng.vec_uniform(2 * 3 * 4_000, -2.0, 2.0);
+    for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+        let mut y = vec![DIRT; p.y_len()];
+        pool1d_into(kind, &x, &p, &mut y);
+        assert_eq!(y, pool1d(kind, &x, &p), "pool1d_into {kind:?}");
+    }
+    let p2 = Pool2dParams::new(2, 24, 24, 2, 2);
+    let x2 = rng.vec_uniform(2 * 24 * 24, -2.0, 2.0);
+    for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+        let mut y = vec![DIRT; p2.y_len()];
+        pool2d_into(kind, &x2, &p2, &mut y);
+        assert_eq!(y, pool2d(kind, &x2, &p2), "pool2d_into {kind:?}");
+    }
+    // Dense per-row windows across boundary modes.
+    let row = rng.vec_uniform(777, -2.0, 2.0);
+    for mode in [Boundary::Valid, Boundary::SamePad] {
+        for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+            for t in THREADS {
+                let ex = Executor::new(t);
+                let want = pool1d_row_dense_with(&ex, kind, &row, 9, mode);
+                let mut dst = vec![DIRT; want.len()];
+                pool1d_row_dense_into(&ex, kind, &row, 9, mode, &mut dst);
+                assert_eq!(dst, want, "row_dense {kind:?} {mode:?} threads={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_overlap_strided_into_overwrites_nan_poisoned_dst() {
+    // NaN is the nastiest dirt: any blend of an unwritten destination
+    // element into the output propagates it, so exact equality with the
+    // Vec-returning reference proves every element (of `y` *and* of the
+    // consulted scratch prefix) was freshly produced. Covers both the
+    // serial path and the task fan-out (rows > POOL_SCRATCH_TASKS).
+    let mut rng = Rng::new(0x170C);
+    for (channels, n) in [(3usize, 5_000usize), (40, 2_000)] {
+        let p = Pool1dParams::new(channels, n, 7).with_batch(2).with_stride(3);
+        let x = rng.vec_uniform(2 * channels * n, -2.0, 2.0);
+        let tasks = (2 * channels).min(POOL_SCRATCH_TASKS);
+        for kind in [PoolKind::Avg, PoolKind::Max, PoolKind::Min] {
+            for t in THREADS {
+                let ex = Executor::new(t);
+                let want = pool1d_with(&ex, kind, &x, &p);
+                let mut dense = vec![f32::NAN; tasks * p.dense_len()];
+                let mut y = vec![f32::NAN; p.y_len()];
+                pool1d_overlap_strided_with_into(&ex, kind, &x, &p, &mut dense, &mut y);
+                assert_eq!(y, want, "{kind:?} channels={channels} threads={t}");
+                assert!(
+                    y.iter().all(|v| v.is_finite()),
+                    "NaN leaked through {kind:?} channels={channels} threads={t}"
+                );
+            }
         }
     }
 }

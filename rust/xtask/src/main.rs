@@ -1,0 +1,480 @@
+//! `cargo xtask check` — static contract checker for the swsnn kernel
+//! core. Enforces the repo conventions that the PR 2–5 hot-path work
+//! established but until now only sampled dynamically (see
+//! docs/invariants.md):
+//!
+//! 1. **safety-comment** — every `unsafe` block/fn/impl carries a
+//!    `// SAFETY:` comment on the same line or in the contiguous
+//!    comment block directly above it.
+//! 2. **arch-confinement** — `std::arch` / `core::arch` tokens appear
+//!    only inside `src/simd/`, and there only under an item gated by
+//!    `#[cfg(target_arch = ...)]`.
+//! 3. **no-alloc** — hot-path modules (`sliding/`, `conv/`, `pool/`,
+//!    `gemm/`, `simd/`, and the `// xtask: begin-hot` … `end-hot`
+//!    regions of `nn/plan.rs`) contain no heap-allocation calls
+//!    (`Vec::new`, `Vec::with_capacity`, `VecDeque::new`, `vec![`,
+//!    `.to_vec()`, `.collect()`, `Box::new`) outside per-line
+//!    `// alloc-ok: <why>` allowlist annotations.
+//! 4. **into-coverage** — every public `*_into` kernel is referenced
+//!    from at least one test under `tests/`.
+//!
+//! The checker is a line-based scanner with a small lexer (comments,
+//! strings, brace depth) — deliberately not a full parser, so it stays
+//! std-only, builds in a blink, and its failure output is always a
+//! plain `file:line`. `#[cfg(test)]` modules inside `src/` are exempt
+//! from rules 2 and 3 (tests may allocate freely).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const HOT_DIRS: [&str; 5] = ["sliding", "conv", "pool", "gemm", "simd"];
+const ALLOC_PATTERNS: [&str; 7] = [
+    "Vec::new",
+    "Vec::with_capacity",
+    "VecDeque::new",
+    "vec![",
+    ".to_vec()",
+    ".collect()",
+    "Box::new",
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("check") | None => run_check(),
+        Some(other) => {
+            eprintln!("unknown xtask `{other}`; available: check");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run_check() -> ExitCode {
+    // CARGO_MANIFEST_DIR is rust/xtask; the crate under inspection is
+    // its sibling `src/` + `tests/`.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives inside the rust/ crate dir")
+        .to_path_buf();
+    let src = root.join("src");
+    let tests_dir = root.join("tests");
+
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files);
+    files.sort();
+
+    let mut test_corpus = String::new();
+    let mut test_files = Vec::new();
+    collect_rs_files(&tests_dir, &mut test_files);
+    for f in &test_files {
+        test_corpus.push_str(&std::fs::read_to_string(f).unwrap_or_default());
+        test_corpus.push('\n');
+    }
+
+    let mut violations: Vec<String> = Vec::new();
+    let mut into_kernels: Vec<(String, String, usize)> = Vec::new();
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                violations.push(format!("{}: unreadable: {e}", rel(path, &root)));
+                continue;
+            }
+        };
+        let file = analyze(&text);
+        let relpath = rel(path, &root);
+        check_safety_comments(&file, &relpath, &mut violations);
+        check_arch_confinement(&file, &relpath, &mut violations);
+        check_no_alloc(&file, &relpath, &root, path, &mut violations);
+        collect_into_kernels(&file, &relpath, &mut into_kernels);
+    }
+    for (name, relpath, line) in &into_kernels {
+        if !test_corpus.contains(name.as_str()) {
+            violations.push(format!(
+                "{relpath}:{line}: [into-coverage] public kernel `{name}` is not \
+                 referenced by any test under tests/"
+            ));
+        }
+    }
+
+    if violations.is_empty() {
+        println!(
+            "xtask check: {} source files, {} `_into` kernels covered, 0 violations",
+            files.len(),
+            into_kernels.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask check: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn rel(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .display()
+        .to_string()
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Per-line view of one source file after the lexing pass.
+struct FileScan {
+    /// Raw source lines (comments intact — annotations live here).
+    raw: Vec<String>,
+    /// Code-only text: comments stripped, string/char literal bodies
+    /// blanked. Pattern matching runs on this so prose never trips a
+    /// rule.
+    code: Vec<String>,
+    /// Line is inside a `#[cfg(test)]`-gated braced item.
+    in_test: Vec<bool>,
+    /// Line is inside a `#[cfg(target_arch = ...)]`-gated braced item.
+    in_gated: Vec<bool>,
+}
+
+/// Lex + region-track one file. Regions are tracked by brace depth: a
+/// `#[cfg(test)]` / `#[cfg(target_arch ...)]` attribute arms a pending
+/// marker that attaches to the next `{` (the item body) and covers
+/// lines until its matching `}`. An attribute that gates a braceless
+/// item (`use`, statement) expires at the first `;` instead.
+fn analyze(text: &str) -> FileScan {
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let mut code = Vec::with_capacity(raw.len());
+    let mut in_test = vec![false; raw.len()];
+    let mut in_gated = vec![false; raw.len()];
+
+    let mut in_block_comment = false;
+    let mut depth: i64 = 0;
+    // (kind, depth threshold): active while depth >= threshold.
+    let mut stack: Vec<(u8, i64)> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_gate = false;
+
+    for (i, line) in raw.iter().enumerate() {
+        let c = lex_line(line, &mut in_block_comment);
+        let test_before = stack.iter().any(|&(k, _)| k == b'T');
+        let gate_before = stack.iter().any(|&(k, _)| k == b'G');
+        if c.contains("cfg(test)") {
+            pending_test = true;
+        }
+        if c.contains("cfg(target_arch") && !c.contains("cfg(not") {
+            pending_gate = true;
+        }
+        let mut saw_brace = false;
+        for ch in c.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    saw_brace = true;
+                    if pending_test {
+                        stack.push((b'T', depth));
+                        pending_test = false;
+                    }
+                    if pending_gate {
+                        stack.push((b'G', depth));
+                        pending_gate = false;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    while stack.last().is_some_and(|&(_, th)| depth < th) {
+                        stack.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+        if (pending_test || pending_gate) && !saw_brace && c.contains(';') {
+            pending_test = false;
+            pending_gate = false;
+        }
+        in_test[i] = test_before || stack.iter().any(|&(k, _)| k == b'T');
+        in_gated[i] = gate_before || stack.iter().any(|&(k, _)| k == b'G');
+        code.push(c);
+    }
+    FileScan {
+        raw,
+        code,
+        in_test,
+        in_gated,
+    }
+}
+
+/// Strip comments and literal bodies from one line. `in_block_comment`
+/// carries `/* ... */` state across lines. String bodies become `""`
+/// and char literals `' '` so brace counting and pattern matching never
+/// see quoted text; lifetimes (`&'a`) are left alone.
+fn lex_line(line: &str, in_block_comment: &mut bool) -> String {
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        if *in_block_comment {
+            if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                *in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        let ch = chars[i];
+        if ch == '/' && i + 1 < n && chars[i + 1] == '/' {
+            break; // line comment: rest of line is prose
+        }
+        if ch == '/' && i + 1 < n && chars[i + 1] == '*' {
+            *in_block_comment = true;
+            i += 2;
+            continue;
+        }
+        // Raw strings: r"..." and r#"..."# (depth-1 is all the crate uses).
+        if ch == 'r'
+            && i + 1 < n
+            && (chars[i + 1] == '"' || (chars[i + 1] == '#' && i + 2 < n && chars[i + 2] == '"'))
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+        {
+            let hashed = chars[i + 1] == '#';
+            i += if hashed { 3 } else { 2 };
+            while i < n {
+                if chars[i] == '"' && (!hashed || (i + 1 < n && chars[i + 1] == '#')) {
+                    i += if hashed { 2 } else { 1 };
+                    break;
+                }
+                i += 1;
+            }
+            out.push_str("\"\"");
+            continue;
+        }
+        if ch == '"' {
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push_str("\"\"");
+            continue;
+        }
+        if ch == '\'' {
+            // Char literal iff it closes ('x' or '\x'); otherwise a
+            // lifetime tick, which passes through.
+            if i + 2 < n && chars[i + 1] == '\\' {
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.push_str("' '");
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                i += 3;
+                out.push_str("' '");
+                continue;
+            }
+            out.push(ch);
+            i += 1;
+            continue;
+        }
+        out.push(ch);
+        i += 1;
+    }
+    out
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whole-word occurrence of `word` in `code` (so `unsafe_code` in an
+/// attribute never matches `unsafe`).
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_char(code[..at].chars().last().unwrap());
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = after.is_none_or(|c| !is_ident_char(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Rule 1: `unsafe` requires `// SAFETY:` on the line or in the
+/// contiguous comment block directly above.
+fn check_safety_comments(file: &FileScan, relpath: &str, violations: &mut Vec<String>) {
+    for (i, code) in file.code.iter().enumerate() {
+        if !contains_word(code, "unsafe") {
+            continue;
+        }
+        if file.raw[i].contains("SAFETY:") || preceding_comments_contain(file, i, "SAFETY:") {
+            continue;
+        }
+        violations.push(format!(
+            "{relpath}:{}: [safety-comment] `unsafe` without a `// SAFETY:` comment \
+             (same line or contiguous comment block above)",
+            i + 1
+        ));
+    }
+}
+
+/// Scan the contiguous run of comment lines directly above line `i`.
+fn preceding_comments_contain(file: &FileScan, i: usize, needle: &str) -> bool {
+    for j in (0..i).rev() {
+        let t = file.raw[j].trim_start();
+        if t.starts_with("//") {
+            if t.contains(needle) {
+                return true;
+            }
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Rule 2: `std::arch` / `core::arch` only inside `src/simd/`, and
+/// there only under `#[cfg(target_arch = ...)]`-gated items.
+fn check_arch_confinement(file: &FileScan, relpath: &str, violations: &mut Vec<String>) {
+    let in_simd = relpath.starts_with("simd/") || relpath.contains("/simd/");
+    for (i, code) in file.code.iter().enumerate() {
+        if !code.contains("std::arch") && !code.contains("core::arch") {
+            continue;
+        }
+        if !in_simd {
+            violations.push(format!(
+                "{relpath}:{}: [arch-confinement] std::arch/core::arch outside src/simd/",
+                i + 1
+            ));
+        } else if !file.in_gated[i] && !file.in_test[i] {
+            violations.push(format!(
+                "{relpath}:{}: [arch-confinement] std::arch use not inside a \
+                 #[cfg(target_arch = ...)]-gated item",
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Rule 3: allocation calls in hot-path code need a per-line
+/// `// alloc-ok: <why>` annotation (same line, or in the comment lines
+/// directly above the statement).
+fn check_no_alloc(
+    file: &FileScan,
+    relpath: &str,
+    _root: &Path,
+    path: &Path,
+    violations: &mut Vec<String>,
+) {
+    let in_hot_dir = HOT_DIRS
+        .iter()
+        .any(|d| relpath.starts_with(&format!("{d}/")) || relpath.contains(&format!("/{d}/")));
+    let is_plan = path.ends_with("nn/plan.rs");
+    if !in_hot_dir && !is_plan {
+        return;
+    }
+    // For nn/plan.rs only the marked run-path regions are in scope; the
+    // compile/probe half of the file allocates by design.
+    let mut hot = vec![in_hot_dir; file.raw.len()];
+    if is_plan {
+        let (mut begins, mut ends) = (0usize, 0usize);
+        let mut on = false;
+        for (i, line) in file.raw.iter().enumerate() {
+            if line.contains("xtask: begin-hot") {
+                on = true;
+                begins += 1;
+            }
+            if line.contains("xtask: end-hot") {
+                on = false;
+                ends += 1;
+            }
+            hot[i] = on;
+        }
+        if begins != ends || begins == 0 {
+            violations.push(format!(
+                "{relpath}:1: [no-alloc] unbalanced or missing \
+                 `// xtask: begin-hot`/`end-hot` markers ({begins} begin, {ends} end)"
+            ));
+            return;
+        }
+    }
+    for (i, code) in file.code.iter().enumerate() {
+        if !hot[i] || file.in_test[i] {
+            continue;
+        }
+        let Some(pat) = ALLOC_PATTERNS.iter().find(|p| code.contains(**p)) else {
+            continue;
+        };
+        if file.raw[i].contains("alloc-ok:") || statement_annotated(file, i) {
+            continue;
+        }
+        violations.push(format!(
+            "{relpath}:{}: [no-alloc] `{pat}` in a hot-path module without an \
+             `// alloc-ok:` annotation",
+            i + 1
+        ));
+    }
+}
+
+/// Walk upward from line `i` through the current statement's
+/// continuation lines (lines not ending a previous statement/block)
+/// and any comment lines, looking for an `alloc-ok:` annotation. Stops
+/// at blank lines, `;`, `{`, or `}` terminators, or after 12 lines.
+fn statement_annotated(file: &FileScan, i: usize) -> bool {
+    let lo = i.saturating_sub(12);
+    for j in (lo..i).rev() {
+        let t = file.raw[j].trim();
+        if t.starts_with("//") {
+            if t.contains("alloc-ok:") {
+                return true;
+            }
+            continue;
+        }
+        if t.is_empty() || t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            return false;
+        }
+    }
+    false
+}
+
+/// Rule 4 harvest: public `fn *_into` definitions outside test modules.
+fn collect_into_kernels(file: &FileScan, relpath: &str, out: &mut Vec<(String, String, usize)>) {
+    for (i, code) in file.code.iter().enumerate() {
+        if file.in_test[i] {
+            continue;
+        }
+        let t = code.trim_start();
+        let Some(rest) = t.strip_prefix("pub fn ") else {
+            continue;
+        };
+        let name: String = rest.chars().take_while(|c| is_ident_char(*c)).collect();
+        if name.ends_with("_into") {
+            out.push((name, relpath.to_string(), i + 1));
+        }
+    }
+}
