@@ -33,7 +33,15 @@ fn main() -> anyhow::Result<()> {
     let per_client = if quick { 10 } else { 40 };
     let mut table = Table::new(
         "E2E serving: 8 concurrent clients through the dynamic batcher",
-        &["engine", "req/s", "mean batch", "e2e p50 µs", "e2e p99 µs"],
+        &[
+            "engine",
+            "req/s",
+            "mean batch",
+            "e2e p50 µs",
+            "e2e p99 µs",
+            "shed (qfull/ttl)",
+            "restarts",
+        ],
     );
     let text = std::fs::read_to_string(
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_demo.toml"),
@@ -54,6 +62,8 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", stats.mean_batch),
             format!("{:.0}", stats.e2e_p50_us),
             format!("{:.0}", stats.e2e_p99_us),
+            format!("{}/{}", stats.shed_queue_full, stats.shed_deadline),
+            format!("{}", stats.worker_restarts),
         ]);
     }
 
@@ -72,6 +82,8 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", stats.mean_batch),
             format!("{:.0}", stats.e2e_p50_us),
             format!("{:.0}", stats.e2e_p99_us),
+            format!("{}/{}", stats.shed_queue_full, stats.shed_deadline),
+            format!("{}", stats.worker_restarts),
         ]);
     } else {
         eprintln!("(artifacts/ missing — skipping PJRT engine row)");
@@ -290,5 +302,110 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     chain_tbl.emit("chain_fusion.csv");
+
+    // ── Serving robustness: typed shedding under steady load vs 4× ────
+    // overload. The steady arm paces blocking submitters (nothing should
+    // shed); the overload arm floods `try_submit` against a small queue
+    // with a short TTL, so the admission layer sheds on queue depth and
+    // the batcher sheds expired requests before compute — bounded queue,
+    // typed errors, every request terminal. Tracked in
+    // BENCH_serving_robustness.json so bench_compare.py can watch the
+    // shed/restart counters alongside throughput across PRs.
+    #[derive(Clone)]
+    struct PacedEngine {
+        row: usize,
+        cost: std::time::Duration,
+    }
+    impl Engine for PacedEngine {
+        fn input_len(&self) -> usize {
+            self.row
+        }
+        fn output_len(&self) -> usize {
+            self.row
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            std::thread::sleep(self.cost);
+            Ok(x.to_vec())
+        }
+        fn name(&self) -> String {
+            "paced".into()
+        }
+    }
+    let mut robust = Table::new(
+        "Serving robustness: admission + deadline shedding under overload",
+        &[
+            "scenario",
+            "offered",
+            "accepted",
+            "completed",
+            "shed queue-full",
+            "shed deadline",
+            "worker lost",
+            "restarts",
+            "drain ms",
+        ],
+    );
+    let row = 8usize;
+    for (scenario, overload) in [("steady", false), ("overload 4x", true)] {
+        let serve_arm = ServeConfig {
+            max_batch: 4,
+            batch_deadline_us: 500,
+            workers: 1,
+            queue_capacity: if overload { 16 } else { 1024 },
+            request_ttl_ms: if overload { 5 } else { 0 },
+            ..Default::default()
+        };
+        let engine = PacedEngine {
+            row,
+            cost: std::time::Duration::from_millis(1),
+        };
+        let coord = Arc::new(Coordinator::start_replicated(engine, &serve_arm)?);
+        let clients = 8usize;
+        let per = if quick { 50 } else { 200 };
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let coord = Arc::clone(&coord);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(7 + c as u64);
+                let mut tickets = Vec::new();
+                for _ in 0..per {
+                    let x = rng.vec_uniform(row, -1.0, 1.0);
+                    if overload {
+                        // Fire-and-collect: no pacing, queue fills.
+                        if let Ok(t) = coord.try_submit(x) {
+                            tickets.push(t);
+                        }
+                    } else {
+                        // Paced: wait each request out (self-clocking).
+                        let _ = coord.infer(x);
+                    }
+                }
+                for t in tickets {
+                    // Every accepted request must reach a terminal state.
+                    t.wait_timeout(std::time::Duration::from_secs(10))
+                        .expect("accepted request never reached a terminal state");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let offered = (clients * per) as u64;
+        let stats = Arc::try_unwrap(coord)
+            .map_err(|_| anyhow::anyhow!("coordinator still shared"))?
+            .shutdown();
+        robust.row(vec![
+            scenario.to_string(),
+            format!("{offered}"),
+            format!("{}", stats.submitted),
+            format!("{}", stats.completed),
+            format!("{}", stats.shed_queue_full),
+            format!("{}", stats.shed_deadline),
+            format!("{}", stats.worker_lost),
+            format!("{}", stats.worker_restarts),
+            format!("{:.2}", stats.drain_ms),
+        ]);
+    }
+    robust.emit("serving_robustness.csv");
     Ok(())
 }

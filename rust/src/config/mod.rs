@@ -88,6 +88,18 @@ pub struct ServeConfig {
     /// see [`ServeConfig::effective_buckets`].
     pub batch_buckets: Vec<usize>,
     pub queue_capacity: usize,
+    /// Default request TTL in milliseconds (`serve.request_ttl_ms` /
+    /// `--request-ttl`): the batcher sheds requests it can't start
+    /// within this budget with `Shed::DeadlineExpired` instead of
+    /// burning compute on them. `0` (default) = requests never expire.
+    pub request_ttl_ms: u64,
+    /// How many times a panicked worker may be restarted with a fresh
+    /// engine (`serve.restart_budget` / `--restart-budget`). Past the
+    /// budget the pool degrades to fewer workers.
+    pub restart_budget: usize,
+    /// Base delay before a worker restart; doubles per attempt
+    /// (exponential backoff).
+    pub restart_backoff_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -101,6 +113,9 @@ impl Default for ServeConfig {
             autotune: false,
             batch_buckets: Vec::new(),
             queue_capacity: 1024,
+            request_ttl_ms: 0,
+            restart_budget: 3,
+            restart_backoff_ms: 10,
         }
     }
 }
@@ -303,6 +318,10 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
         autotune,
         batch_buckets,
         queue_capacity: count("serve.queue_capacity")?.unwrap_or(d.queue_capacity),
+        request_ttl_ms: count("serve.request_ttl_ms")?.unwrap_or(d.request_ttl_ms as usize) as u64,
+        restart_budget: count("serve.restart_budget")?.unwrap_or(d.restart_budget),
+        restart_backoff_ms: count("serve.restart_backoff_ms")?
+            .unwrap_or(d.restart_backoff_ms as usize) as u64,
     })
 }
 
@@ -395,6 +414,25 @@ backend = "sliding"
         assert!(load_config(&bad).unwrap_err().contains("threads"));
         let bad = format!("{EXAMPLE}\nworkers = -4\n");
         assert!(load_config(&bad).unwrap_err().contains("workers"));
+        let bad = format!("{EXAMPLE}\nrequest_ttl_ms = -5\n");
+        assert!(load_config(&bad).unwrap_err().contains("request_ttl_ms"));
+        let bad = format!("{EXAMPLE}\nrestart_budget = -1\n");
+        assert!(load_config(&bad).unwrap_err().contains("restart_budget"));
+    }
+
+    #[test]
+    fn robustness_fields_parse_with_defaults() {
+        // Defaults: no TTL, 3 restarts, 10 ms base backoff.
+        let (_, s) = load_config(EXAMPLE).unwrap();
+        assert_eq!(s.request_ttl_ms, 0);
+        assert_eq!(s.restart_budget, 3);
+        assert_eq!(s.restart_backoff_ms, 10);
+        let text =
+            format!("{EXAMPLE}\nrequest_ttl_ms = 250\nrestart_budget = 5\nrestart_backoff_ms = 2\n");
+        let (_, s) = load_config(&text).unwrap();
+        assert_eq!(s.request_ttl_ms, 250);
+        assert_eq!(s.restart_budget, 5);
+        assert_eq!(s.restart_backoff_ms, 2);
     }
 
     #[test]

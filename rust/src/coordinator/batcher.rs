@@ -1,6 +1,19 @@
-//! The coordinator core: bounded queue + deadline batcher + worker loop.
+//! The coordinator core: bounded queue + deadline batcher + supervised
+//! worker loop.
+//!
+//! Fault-tolerance contract (`docs/robustness.md`): every request
+//! accepted by [`Coordinator::submit`]/[`Coordinator::try_submit`]
+//! reaches exactly one terminal state — `Ok(row)`,
+//! [`ServeError::Engine`], or a [`Shed`] variant. Worker panics are
+//! caught per batch; a drop-guard completes the in-flight slots with
+//! [`Shed::WorkerLost`] and the supervisor restarts the worker with a
+//! fresh engine (re-running warm-up) under a bounded budget with
+//! exponential backoff. Past the budget the pool degrades to fewer
+//! workers; when the *last* worker dies the queue is closed and drained
+//! so no submitter ever hangs.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -9,17 +22,33 @@ use crate::exec::{Channel, ChannelError};
 use crate::telemetry::{Counter, Histogram};
 
 use super::engine::{Engine, EngineFactory};
-use super::{Request, ResponseSlot, Ticket};
+use super::{Request, ResponseSlot, ServeError, Shed, Ticket};
 
-/// Submission failure modes surfaced to clients.
+/// Submission (admission) failure modes surfaced to clients.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// Queue full — backpressure; client should retry/shed.
     Overloaded,
     /// Coordinator shut down.
     Closed,
+    /// Coordinator is draining: admission is stopped, in-flight requests
+    /// are being run to completion.
+    Draining,
     /// Input row has the wrong length for the deployed model.
     BadShape { expected: usize, got: usize },
+}
+
+impl SubmitError {
+    /// Stable wire error code (`coordinator/server.rs` response tag).
+    /// Admission sheds share codes with the matching [`Shed`] variants.
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            SubmitError::BadShape { .. } => 2,
+            SubmitError::Overloaded => Shed::QueueFull.wire_code(),
+            SubmitError::Draining => Shed::Draining.wire_code(),
+            SubmitError::Closed => 7,
+        }
+    }
 }
 
 impl std::fmt::Display for SubmitError {
@@ -27,6 +56,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Overloaded => write!(f, "queue full (backpressure)"),
             SubmitError::Closed => write!(f, "coordinator closed"),
+            SubmitError::Draining => write!(f, "coordinator draining"),
             SubmitError::BadShape { expected, got } => {
                 write!(f, "bad input shape: expected {expected} floats, got {got}")
             }
@@ -35,16 +65,42 @@ impl std::fmt::Display for SubmitError {
 }
 
 /// Aggregated serving metrics.
+///
+/// Terminal-state ledger: for every accepted request exactly one of
+/// `completed`, `failed`, `shed_deadline`, `worker_lost`, `drained`
+/// increments, so once the coordinator is quiescent
+/// `submitted == completed + failed + shed_deadline + worker_lost +
+/// drained` (asserted by `tests/chaos.rs`).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: Counter,
     pub completed: Counter,
+    /// Accepted, ran, engine returned an error.
+    pub failed: Counter,
+    /// Admission rejections (bad shape, queue full, draining, closed).
     pub rejected: Counter,
+    /// Admission rejections due to a full queue (subset of `rejected`).
+    pub shed_queue_full: Counter,
+    /// Admission rejections while draining (subset of `rejected`).
+    pub shed_draining: Counter,
+    /// Accepted requests dropped before compute: TTL expired.
+    pub shed_deadline: Counter,
+    /// Accepted requests terminated because their worker died.
+    pub worker_lost: Counter,
+    /// Accepted requests terminated with `Shed::Draining` by shutdown.
+    pub drained: Counter,
+    /// Worker batch-loop panics caught by the supervisor.
+    pub worker_panics: Counter,
+    /// Successful worker restarts (fresh engine + warm-up).
+    pub worker_restarts: Counter,
     pub batches: Counter,
     pub batched_rows: Counter,
     pub queue_wait: Histogram,
     pub inference: Histogram,
     pub e2e: Histogram,
+    /// Wall time of `Coordinator::shutdown` (stop admission → workers
+    /// joined → queue empty).
+    pub drain: Histogram,
 }
 
 /// Snapshot for reporting.
@@ -52,13 +108,85 @@ pub struct Metrics {
 pub struct CoordinatorStats {
     pub submitted: u64,
     pub completed: u64,
+    pub failed: u64,
     pub rejected: u64,
+    pub shed_queue_full: u64,
+    pub shed_draining: u64,
+    pub shed_deadline: u64,
+    pub worker_lost: u64,
+    pub drained: u64,
+    pub worker_panics: u64,
+    pub worker_restarts: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub queue_wait_p50_us: f64,
     pub inference_p50_us: f64,
     pub e2e_p50_us: f64,
     pub e2e_p99_us: f64,
+    /// Workers still draining the queue (shrinks when a worker exhausts
+    /// its restart budget).
+    pub live_workers: usize,
+    pub queue_depth: usize,
+    /// Wall time of the graceful drain (0 until `shutdown` ran).
+    pub drain_ms: f64,
+}
+
+impl CoordinatorStats {
+    /// Accepted requests that reached a terminal state so far.
+    pub fn terminal(&self) -> u64 {
+        self.completed + self.failed + self.shed_deadline + self.worker_lost + self.drained
+    }
+}
+
+/// Factory re-invoked by the supervisor to replace a panicked worker's
+/// engine (unlike [`EngineFactory`] it is `Fn`, not `FnOnce`). Runs on
+/// the worker thread — engines need not be `Send`-constructed elsewhere.
+pub type RespawnFactory = Box<dyn Fn() -> anyhow::Result<Box<dyn Engine>> + Send + 'static>;
+
+/// One worker: the startup factory plus an optional respawn factory.
+/// Without a respawn factory a panicked worker is lost (its in-flight
+/// requests still complete with [`Shed::WorkerLost`]).
+pub struct WorkerSpec {
+    pub factory: EngineFactory,
+    pub respawn: Option<RespawnFactory>,
+}
+
+impl WorkerSpec {
+    pub fn new(factory: EngineFactory) -> Self {
+        Self {
+            factory,
+            respawn: None,
+        }
+    }
+
+    pub fn with_respawn(factory: EngineFactory, respawn: RespawnFactory) -> Self {
+        Self {
+            factory,
+            respawn: Some(respawn),
+        }
+    }
+}
+
+/// State shared between the coordinator handle and every worker thread.
+struct Shared {
+    queue: Channel<Request>,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+    /// Admission gate: set before `shutdown` so new submissions see
+    /// `Draining` while queued work runs to completion.
+    draining: AtomicBool,
+    live_workers: AtomicUsize,
+}
+
+/// Per-worker parameters (identical across the pool).
+#[derive(Clone)]
+struct WorkerParams {
+    max_batch: usize,
+    deadline: Duration,
+    warm_buckets: Vec<usize>,
+    pad_buckets: Vec<usize>,
+    restart_budget: usize,
+    restart_backoff: Duration,
 }
 
 /// The running coordinator. Submit rows, get [`Ticket`]s; N background
@@ -67,39 +195,81 @@ pub struct CoordinatorStats {
 /// MPMC queue in deadline-bounded batches, so a burst is served with up
 /// to N batches in flight.
 pub struct Coordinator {
-    queue: Arc<Channel<Request>>,
-    metrics: Arc<Metrics>,
+    shared: Arc<Shared>,
     next_id: AtomicU64,
-    shutdown: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
     input_len: usize,
     output_len: usize,
     engine_name: String,
+    /// Default TTL stamped on every submission (`serve.request_ttl_ms`);
+    /// `None` = requests never expire unless submitted `_with_ttl`.
+    default_ttl: Option<Duration>,
 }
 
 impl Coordinator {
     /// Start with a single worker thread; the engine is constructed *on*
     /// it via the factory (fails fast if the factory errors). For N
     /// workers use [`Coordinator::start_multi`] /
-    /// [`Coordinator::start_replicated`].
+    /// [`Coordinator::start_replicated`]; for supervised restart-capable
+    /// workers use [`Coordinator::start_supervised`].
     pub fn start(factory: EngineFactory, cfg: &ServeConfig) -> anyhow::Result<Self> {
         Self::start_multi(vec![factory], cfg)
     }
 
     /// Start one worker per factory, all draining the shared request
-    /// queue. Every factory must produce an engine of the same deployed
-    /// shape — the shapes are cross-checked at startup and a mismatch
-    /// (like any engine-construction failure) tears everything down and
-    /// returns the error.
+    /// queue (no respawn — a panicked worker is not replaced).
     pub fn start_multi(factories: Vec<EngineFactory>, cfg: &ServeConfig) -> anyhow::Result<Self> {
-        anyhow::ensure!(!factories.is_empty(), "need at least one engine factory");
-        let queue: Arc<Channel<Request>> = Channel::new(cfg.queue_capacity);
-        let metrics = Arc::new(Metrics::default());
-        let shutdown = Arc::new(AtomicBool::new(false));
+        Self::start_supervised(factories.into_iter().map(WorkerSpec::new).collect(), cfg)
+    }
+
+    /// Convenience for engines that are already `Send` (rust-native):
+    /// a single worker owning the given engine.
+    pub fn start_native(
+        engine: impl Engine + Send + 'static,
+        cfg: &ServeConfig,
+    ) -> anyhow::Result<Self> {
+        Self::start(Box::new(move || Ok(Box::new(engine) as Box<dyn Engine>)), cfg)
+    }
+
+    /// `cfg.workers` workers, each owning a clone of the given engine —
+    /// the N-worker serving path for rust-native (cloneable) engines.
+    /// Workers are fully supervised: a panicked worker is restarted with
+    /// a fresh clone (re-running warm-up) within `cfg.restart_budget`.
+    pub fn start_replicated<E>(engine: E, cfg: &ServeConfig) -> anyhow::Result<Self>
+    where
+        E: Engine + Clone + Send + 'static,
+    {
+        let n = cfg.workers.max(1);
+        let mut specs: Vec<WorkerSpec> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let boot = engine.clone();
+            let proto = engine.clone();
+            specs.push(WorkerSpec::with_respawn(
+                Box::new(move || Ok(Box::new(boot) as Box<dyn Engine>)),
+                Box::new(move || Ok(Box::new(proto.clone()) as Box<dyn Engine>)),
+            ));
+        }
+        Self::start_supervised(specs, cfg)
+    }
+
+    /// Start one supervised worker per spec, all draining the shared
+    /// request queue. Every factory must produce an engine of the same
+    /// deployed shape — the shapes are cross-checked at startup and a
+    /// mismatch (like any engine-construction failure) tears everything
+    /// down and returns the error.
+    pub fn start_supervised(specs: Vec<WorkerSpec>, cfg: &ServeConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "need at least one engine factory");
+        let n_workers = specs.len();
+        let shared = Arc::new(Shared {
+            queue: Channel::with_capacity(cfg.queue_capacity),
+            metrics: Metrics::default(),
+            shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            live_workers: AtomicUsize::new(n_workers),
+        });
         let (meta_tx, meta_rx) =
             std::sync::mpsc::channel::<anyhow::Result<(usize, usize, String)>>();
 
-        let n_workers = factories.len();
         // Bucketed execution is opt-in ([`ServeConfig::bucketed_execution`]:
         // an explicit bucket list, or autotune under the auto backend).
         // When on, every configured bucket is warmed at startup (plans,
@@ -115,29 +285,35 @@ impl Coordinator {
         } else {
             Vec::new()
         };
+        let params = WorkerParams {
+            max_batch: cfg.max_batch.max(1),
+            deadline: Duration::from_micros(cfg.batch_deadline_us),
+            warm_buckets,
+            pad_buckets,
+            restart_budget: cfg.restart_budget,
+            restart_backoff: Duration::from_millis(cfg.restart_backoff_ms),
+        };
         let mut workers = Vec::with_capacity(n_workers);
-        for (wi, factory) in factories.into_iter().enumerate() {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            let shutdown = Arc::clone(&shutdown);
+        for (wi, spec) in specs.into_iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let params = params.clone();
             let meta_tx = meta_tx.clone();
-            let warm_buckets = warm_buckets.clone();
-            let pad_buckets = pad_buckets.clone();
-            let max_batch = cfg.max_batch.max(1);
-            let deadline = Duration::from_micros(cfg.batch_deadline_us);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("swsnn-batcher-{wi}"))
                     .spawn(move || {
+                        let WorkerSpec { factory, respawn } = spec;
                         let mut engine = match factory() {
                             Ok(e) => e,
                             Err(err) => {
                                 let _ = meta_tx.send(Err(err));
+                                shared.live_workers.fetch_sub(1, Ordering::SeqCst);
                                 return;
                             }
                         };
-                        if let Err(err) = engine.warmup(&warm_buckets) {
+                        if let Err(err) = engine.warmup(&params.warm_buckets) {
                             let _ = meta_tx.send(Err(err.context("engine warm-up failed")));
+                            shared.live_workers.fetch_sub(1, Ordering::SeqCst);
                             return;
                         }
                         let _ = meta_tx.send(Ok((
@@ -146,15 +322,7 @@ impl Coordinator {
                             engine.name(),
                         )));
                         drop(meta_tx);
-                        batch_loop(
-                            queue,
-                            engine,
-                            metrics,
-                            shutdown,
-                            max_batch,
-                            deadline,
-                            pad_buckets,
-                        )
+                        supervised_loop(&shared, &params, engine, respawn)
                     })
                     .expect("spawn batcher"),
             );
@@ -197,8 +365,9 @@ impl Coordinator {
             }
         }
         if let Some(err) = error {
-            shutdown.store(true, Ordering::SeqCst);
-            queue.close();
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.queue.close();
             for h in workers {
                 let _ = h.join();
             }
@@ -207,85 +376,101 @@ impl Coordinator {
         let (input_len, output_len, engine_name) = meta.expect("workers reported no metadata");
 
         Ok(Self {
-            queue,
-            metrics,
+            shared,
             next_id: AtomicU64::new(1),
-            shutdown,
             workers,
             input_len,
             output_len,
             engine_name,
+            default_ttl: if cfg.request_ttl_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(cfg.request_ttl_ms))
+            },
         })
     }
 
-    /// Convenience for engines that are already `Send` (rust-native):
-    /// a single worker owning the given engine.
-    pub fn start_native(
-        engine: impl Engine + Send + 'static,
-        cfg: &ServeConfig,
-    ) -> anyhow::Result<Self> {
-        Self::start(Box::new(move || Ok(Box::new(engine) as Box<dyn Engine>)), cfg)
-    }
-
-    /// `cfg.workers` workers, each owning a clone of the given engine —
-    /// the N-worker serving path for rust-native (cloneable) engines.
-    pub fn start_replicated<E>(engine: E, cfg: &ServeConfig) -> anyhow::Result<Self>
-    where
-        E: Engine + Clone + Send + 'static,
-    {
-        let n = cfg.workers.max(1);
-        let mut factories: Vec<EngineFactory> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let e = engine.clone();
-            factories.push(Box::new(move || Ok(Box::new(e) as Box<dyn Engine>)));
-        }
-        Self::start_multi(factories, cfg)
-    }
-
-    /// Blocking submit (applies backpressure by waiting).
+    /// Blocking submit (applies backpressure by waiting). Stamps the
+    /// configured default TTL, if any.
     pub fn submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, true)
+        self.submit_inner(input, self.default_ttl, true)
     }
 
     /// Non-blocking submit; `Overloaded` when the queue is full.
     pub fn try_submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, false)
+        self.submit_inner(input, self.default_ttl, false)
     }
 
-    fn submit_inner(&self, input: Vec<f32>, blocking: bool) -> Result<Ticket, SubmitError> {
+    /// Blocking submit with an explicit TTL override (`None` = never
+    /// expires, regardless of the configured default).
+    pub fn submit_with_ttl(
+        &self,
+        input: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(input, ttl, true)
+    }
+
+    /// Non-blocking submit with an explicit TTL override.
+    pub fn try_submit_with_ttl(
+        &self,
+        input: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(input, ttl, false)
+    }
+
+    fn submit_inner(
+        &self,
+        input: Vec<f32>,
+        ttl: Option<Duration>,
+        blocking: bool,
+    ) -> Result<Ticket, SubmitError> {
+        let m = &self.shared.metrics;
+        if self.shared.draining.load(Ordering::SeqCst) {
+            m.rejected.inc();
+            m.shed_draining.inc();
+            return Err(SubmitError::Draining);
+        }
         if input.len() != self.input_len {
-            self.metrics.rejected.inc();
+            m.rejected.inc();
             return Err(SubmitError::BadShape {
                 expected: self.input_len,
                 got: input.len(),
             });
         }
+        crate::fault_point!("admission.submit");
         let slot = ResponseSlot::new();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
         let req = Request {
             id,
             input,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: ttl.map(|t| now + t),
             slot: Arc::clone(&slot),
         };
         let res = if blocking {
-            self.queue.send(req).map_err(|e| match e {
+            self.shared.queue.send(req).map_err(|e| match e {
                 ChannelError::Closed => SubmitError::Closed,
                 ChannelError::Full => SubmitError::Overloaded,
             })
         } else {
-            self.queue.try_send(req).map_err(|(_, e)| match e {
+            self.shared.queue.try_send(req).map_err(|(_, e)| match e {
                 ChannelError::Closed => SubmitError::Closed,
                 ChannelError::Full => SubmitError::Overloaded,
             })
         };
         match res {
             Ok(()) => {
-                self.metrics.submitted.inc();
+                m.submitted.inc();
                 Ok(Ticket { id, slot })
             }
             Err(e) => {
-                self.metrics.rejected.inc();
+                m.rejected.inc();
+                if e == SubmitError::Overloaded {
+                    m.shed_queue_full.inc();
+                }
                 Err(e)
             }
         }
@@ -294,7 +479,7 @@ impl Coordinator {
     /// Convenience: submit and wait.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, String> {
         let ticket = self.submit(input).map_err(|e| e.to_string())?;
-        ticket.wait()
+        ticket.wait().map_err(|e| e.to_string())
     }
 
     pub fn engine_name(&self) -> String {
@@ -312,16 +497,24 @@ impl Coordinator {
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.shared.queue.len()
     }
 
     pub fn stats(&self) -> CoordinatorStats {
-        let m = &self.metrics;
+        let m = &self.shared.metrics;
         let batches = m.batches.get();
         CoordinatorStats {
             submitted: m.submitted.get(),
             completed: m.completed.get(),
+            failed: m.failed.get(),
             rejected: m.rejected.get(),
+            shed_queue_full: m.shed_queue_full.get(),
+            shed_draining: m.shed_draining.get(),
+            shed_deadline: m.shed_deadline.get(),
+            worker_lost: m.worker_lost.get(),
+            drained: m.drained.get(),
+            worker_panics: m.worker_panics.get(),
+            worker_restarts: m.worker_restarts.get(),
             batches,
             mean_batch: if batches == 0 {
                 0.0
@@ -332,25 +525,46 @@ impl Coordinator {
             inference_p50_us: m.inference.quantile_ns(0.5) / 1_000.0,
             e2e_p50_us: m.e2e.quantile_ns(0.5) / 1_000.0,
             e2e_p99_us: m.e2e.quantile_ns(0.99) / 1_000.0,
+            live_workers: self.shared.live_workers.load(Ordering::SeqCst),
+            queue_depth: self.shared.queue.len(),
+            drain_ms: m.drain.mean_ns() / 1_000_000.0,
         }
     }
 
-    /// Number of engine workers draining the queue.
+    /// Number of engine workers started (the pool may have degraded
+    /// since — see [`CoordinatorStats::live_workers`]).
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
 
-    /// Graceful shutdown: drain the queue, stop all workers.
+    /// Graceful shutdown: stop admission (new submissions get
+    /// [`SubmitError::Draining`]), run queued work to completion, join
+    /// workers, and complete any leftover requests with
+    /// [`Shed::Draining`] — no waiter is ever leaked.
     pub fn shutdown(mut self) -> CoordinatorStats {
         self.shutdown_inner();
         self.stats()
     }
 
     fn shutdown_inner(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        self.queue.close();
+        let start = Instant::now();
+        // First caller wins the drain-latency record (`drop` re-enters
+        // after an explicit `shutdown`).
+        let first = !self.shared.draining.swap(true, Ordering::SeqCst);
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // Live workers drained the queue to terminal responses before
+        // exiting; anything still here had no worker left to run it.
+        while let Some(req) = self.shared.queue.recv() {
+            if req.slot.complete(Err(ServeError::Shed(Shed::Draining))) {
+                self.shared.metrics.drained.inc();
+            }
+        }
+        if first {
+            self.shared.metrics.drain.record(start.elapsed());
         }
     }
 }
@@ -361,24 +575,123 @@ impl Drop for Coordinator {
     }
 }
 
-/// Worker: collect a batch (first request blocks, then wait up to the
-/// deadline for more, capped at `max_batch`), pad it up to the smallest
-/// bucket in `pad_buckets`, run the engine, distribute. `pad_buckets`
-/// is sorted ascending — a subset of what [`Engine::warmup`]
-/// precompiled, so padded requests only ever execute warmed batch
-/// sizes; empty = no padding (batches run at their natural size).
-#[allow(clippy::too_many_arguments)]
-fn batch_loop(
-    queue: Arc<Channel<Request>>,
+/// Supervisor wrapper around [`batch_loop`]: catches panics, restarts
+/// the worker with a fresh engine (re-running warm-up) within the
+/// budget, and on permanent death makes sure nobody can hang on this
+/// pool — the last dying worker closes the queue and completes every
+/// queued request with [`Shed::WorkerLost`].
+fn supervised_loop(
+    shared: &Shared,
+    params: &WorkerParams,
     mut engine: Box<dyn Engine>,
-    metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
-    max_batch: usize,
-    deadline: Duration,
-    pad_buckets: Vec<usize>,
+    respawn: Option<RespawnFactory>,
 ) {
+    let mut restarts_used = 0usize;
+    let died = loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            batch_loop(shared, params, engine.as_mut());
+        }));
+        match run {
+            Ok(()) => break false, // clean exit: queue closed and drained
+            Err(_) => {
+                shared.metrics.worker_panics.inc();
+                // In-flight slots were already completed with
+                // `WorkerLost` by the BatchGuard during unwind. Try to
+                // come back with a fresh engine.
+                match respawn_engine(shared, params, respawn.as_ref(), &mut restarts_used) {
+                    Some(e) => engine = e,
+                    None => break true, // budget exhausted / no factory
+                }
+            }
+        }
+    };
+    let remaining = shared.live_workers.fetch_sub(1, Ordering::SeqCst) - 1;
+    if died && remaining == 0 {
+        // Last worker is gone: nothing will ever drain the queue again.
+        // Close it (senders now fail with `Closed`) and complete every
+        // queued request so no submitter blocks forever.
+        shared.queue.close();
+        while let Some(req) = shared.queue.recv() {
+            if req.slot.complete(Err(ServeError::Shed(Shed::WorkerLost))) {
+                shared.metrics.worker_lost.inc();
+            }
+        }
+    }
+}
+
+/// One restart attempt sequence: exponential backoff, fresh engine from
+/// the respawn factory, warm-up. Returns `None` once the budget is
+/// exhausted (or there is no factory / the coordinator is shutting
+/// down with an empty queue — nothing left to serve).
+fn respawn_engine(
+    shared: &Shared,
+    params: &WorkerParams,
+    respawn: Option<&RespawnFactory>,
+    restarts_used: &mut usize,
+) -> Option<Box<dyn Engine>> {
+    let factory = respawn?;
+    while *restarts_used < params.restart_budget {
+        *restarts_used += 1;
+        // Exponential backoff: base × 2^(attempt-1), shift-capped.
+        let backoff = params
+            .restart_backoff
+            .saturating_mul(1u32 << (*restarts_used - 1).min(10) as u32);
+        if !backoff.is_zero() {
+            std::thread::sleep(backoff);
+        }
+        if shared.shutdown.load(Ordering::SeqCst) && shared.queue.is_empty() {
+            return None;
+        }
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fault_point!("supervisor.respawn");
+            factory().and_then(|mut e| {
+                e.warmup(&params.warm_buckets)
+                    .map_err(|err| err.context("engine warm-up failed"))?;
+                Ok(e)
+            })
+        }));
+        if let Ok(Ok(e)) = attempt {
+            shared.metrics.worker_restarts.inc();
+            return Some(e);
+        }
+        // Failed attempt (factory error, warm-up error, or panic):
+        // burn a budget slot and back off harder.
+    }
+    None
+}
+
+/// Completes every request still held by a worker batch with
+/// [`Shed::WorkerLost`] when dropped mid-flight (panic unwind). On the
+/// normal path all slots are already terminal, so first-wins
+/// `complete` makes the drop a no-op.
+struct BatchGuard<'a> {
+    batch: Vec<Request>,
+    metrics: &'a Metrics,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        for req in self.batch.drain(..) {
+            if req.slot.complete(Err(ServeError::Shed(Shed::WorkerLost))) {
+                self.metrics.worker_lost.inc();
+            }
+        }
+    }
+}
+
+/// Worker: collect a batch (first request blocks, then wait up to the
+/// deadline for more, capped at `max_batch`), shed expired requests,
+/// pad the rest up to the smallest bucket in `pad_buckets`, run the
+/// engine, distribute. `pad_buckets` is sorted ascending — a subset of
+/// what [`Engine::warmup`] precompiled, so padded requests only ever
+/// execute warmed batch sizes; empty = no padding (batches run at their
+/// natural size).
+fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
+    let queue = &shared.queue;
+    let metrics = &shared.metrics;
     let row = engine.input_len();
     let out_row = engine.output_len();
+    let max_batch = params.max_batch;
     // Per-worker buffer pool: the gathered input batch and the output
     // tensor recycle their allocations across requests (the engine's
     // `infer_into` recycles the intermediate activations too) instead of
@@ -391,9 +704,16 @@ fn batch_loop(
         let Some(first) = queue.recv() else {
             return;
         };
-        let mut batch = vec![first];
+        // From here until the batch is distributed the guard owns the
+        // requests: if anything below panics, its Drop completes every
+        // still-pending slot with `WorkerLost`.
+        let mut guard = BatchGuard {
+            batch: vec![first],
+            metrics,
+        };
+        let batch = &mut guard.batch;
         // Fill until deadline or max_batch.
-        let batch_deadline = Instant::now() + deadline;
+        let batch_deadline = Instant::now() + params.deadline;
         while batch.len() < max_batch {
             let now = Instant::now();
             if now >= batch_deadline {
@@ -411,6 +731,27 @@ fn batch_loop(
                 Err(_) => break,          // closed: run what we have
             }
         }
+        crate::fault_point!("worker.batch_collected");
+
+        // Deadline shedding: complete expired requests with a typed
+        // error *before* spending compute on them.
+        let now = Instant::now();
+        batch.retain(|req| {
+            if req.expired(now) {
+                if req.slot.complete(Err(ServeError::Shed(Shed::DeadlineExpired))) {
+                    metrics.shed_deadline.inc();
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if batch.is_empty() {
+            if shared.shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+                return;
+            }
+            continue;
+        }
 
         let b = batch.len();
         // Pad up to the smallest configured bucket ≥ b: the engine then
@@ -419,23 +760,30 @@ fn batch_loop(
         // the zero pad rows change nothing and are dropped below. A
         // batch no bucket covers (or an empty pad list) runs unpadded
         // and may compile lazily, once per size.
-        let bucket = pad_buckets.iter().copied().find(|&k| k >= b).unwrap_or(b);
+        let bucket = params
+            .pad_buckets
+            .iter()
+            .copied()
+            .find(|&k| k >= b)
+            .unwrap_or(b);
         let infer_start = Instant::now();
-        for req in &batch {
+        for req in batch.iter() {
             metrics
                 .queue_wait
                 .record(infer_start.duration_since(req.enqueued));
         }
         xbuf.clear();
         xbuf.reserve(bucket * row);
-        for req in &batch {
+        for req in batch.iter() {
             xbuf.extend_from_slice(&req.input);
         }
         xbuf.resize(bucket * row, 0.0);
+        crate::fault_point!("worker.infer");
         let result = engine.infer_into(&xbuf, bucket, &mut ybuf);
         metrics.inference.record(infer_start.elapsed());
         metrics.batches.inc();
         metrics.batched_rows.add(b as u64);
+        crate::fault_point!("worker.distribute");
 
         match result {
             Ok(()) => {
@@ -446,17 +794,18 @@ fn batch_loop(
                     metrics.completed.inc();
                     metrics.e2e.record(req.enqueued.elapsed());
                     req.slot
-                        .fill(Ok(ybuf[i * out_row..(i + 1) * out_row].to_vec()));
+                        .complete(Ok(ybuf[i * out_row..(i + 1) * out_row].to_vec()));
                 }
             }
             Err(e) => {
                 let msg = format!("inference failed: {e:#}");
-                for req in &batch {
-                    req.slot.fill(Err(msg.clone()));
+                for req in batch.iter() {
+                    metrics.failed.inc();
+                    req.slot.complete(Err(ServeError::Engine(msg.clone())));
                 }
             }
         }
-        if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+        if shared.shutdown.load(Ordering::SeqCst) && queue.is_empty() {
             return;
         }
     }

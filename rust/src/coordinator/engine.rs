@@ -30,8 +30,13 @@ pub trait Engine {
         *y = self.infer(x, batch)?;
         Ok(())
     }
-    /// One-time startup warm-up, run by the coordinator on the worker
-    /// thread right after construction and before the first request:
+    /// Startup warm-up, run by the coordinator on the worker thread
+    /// right after construction and before the first request — and
+    /// again on every supervised restart: when a worker panics, the
+    /// supervisor builds a *fresh* engine from the respawn factory and
+    /// re-runs `warmup` before the replacement takes any traffic, so a
+    /// restarted worker is as warm as a freshly booted one.
+    /// Specifically:
     /// precompile whatever per-bucket state the engine keeps (plans,
     /// probe results, arenas) for the configured batch buckets so
     /// steady-state inference at a bucketed batch size never pays

@@ -1,0 +1,160 @@
+//! Fault-injection harness for the chaos tests (`tests/chaos.rs`).
+//!
+//! A process-global registry maps *site names* (string literals baked
+//! into the coordinator via the [`crate::fault_point!`] macro) to armed
+//! faults. The entire module — and every `fault_point!` expansion — is
+//! compiled only under `cfg(any(test, feature = "fault-injection"))`, so
+//! release serving builds carry zero injection branches. The static
+//! checker (`cargo xtask check`, rule `fault-confinement`) keeps
+//! `faults::` references and `fault_point!` sites out of every other
+//! module.
+//!
+//! Sites currently wired into the coordinator:
+//!
+//! | site                     | where                                        |
+//! |--------------------------|----------------------------------------------|
+//! | `admission.submit`       | after admission checks, before enqueue       |
+//! | `worker.batch_collected` | batch assembled, before deadline shedding    |
+//! | `worker.infer`           | immediately before `Engine::infer_into`      |
+//! | `worker.distribute`      | after inference, before slot completion      |
+//! | `supervisor.respawn`     | inside the worker-restart path               |
+//!
+//! `Sleep` at `worker.batch_collected` models a queue stall; `Panic` at
+//! `worker.infer`/`worker.distribute` models an engine crash before/after
+//! compute (the second exercises the drop-guard with results already in
+//! hand).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// What an armed site does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the site — exercises `catch_unwind` + the
+    /// `WorkerLost` drop-guard.
+    Panic,
+    /// Sleep at the site — models engine latency spikes / queue stalls.
+    Sleep(Duration),
+}
+
+#[derive(Debug)]
+struct Armed {
+    kind: FaultKind,
+    /// Pass through this many hits before firing (lets a schedule target
+    /// "the 3rd batch" deterministically).
+    skip: usize,
+    /// Fire at most this many times, then disarm.
+    fires_left: usize,
+}
+
+#[derive(Debug, Default)]
+struct SiteState {
+    armed: Option<Armed>,
+    hits: u64,
+    fired: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<&'static str, SiteState>> {
+    static REG: OnceLock<Mutex<HashMap<&'static str, SiteState>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `site`: after `skip` pass-through hits, fire `kind` up to `fires`
+/// times. Re-arming a site replaces any previous schedule (hit/fire
+/// counts are kept).
+pub fn arm(site: &'static str, kind: FaultKind, skip: usize, fires: usize) {
+    let mut reg = registry().lock().unwrap();
+    reg.entry(site).or_default().armed = Some(Armed {
+        kind,
+        skip,
+        fires_left: fires,
+    });
+}
+
+/// Disarm every site and zero all counters. Chaos tests call this
+/// between schedules (they serialize on a global lock — the registry is
+/// process-wide).
+pub fn reset() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+}
+
+/// How many times `site` was reached (armed or not).
+pub fn hits(site: &'static str) -> u64 {
+    registry().lock().unwrap().get(site).map_or(0, |s| s.hits)
+}
+
+/// How many times `site` actually fired its fault.
+pub fn fired(site: &'static str) -> u64 {
+    registry().lock().unwrap().get(site).map_or(0, |s| s.fired)
+}
+
+/// Hot entry point expanded by [`crate::fault_point!`]. Never holds the
+/// registry lock across the injected action (a sleeping site must not
+/// serialize unrelated sites, and a panic must not poison the registry).
+pub fn fire(site: &'static str) {
+    let action = {
+        let mut reg = registry().lock().unwrap();
+        let st = reg.entry(site).or_default();
+        st.hits += 1;
+        match &mut st.armed {
+            Some(a) if a.skip > 0 => {
+                a.skip -= 1;
+                None
+            }
+            Some(a) if a.fires_left > 0 => {
+                a.fires_left -= 1;
+                st.fired += 1;
+                let kind = a.kind;
+                if a.fires_left == 0 {
+                    st.armed = None;
+                }
+                Some(kind)
+            }
+            _ => None,
+        }
+    };
+    match action {
+        Some(FaultKind::Panic) => panic!("injected fault at {site}"),
+        Some(FaultKind::Sleep(d)) => std::thread::sleep(d),
+        None => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; this test serializes with any
+    /// other registry user via reset-at-start (lib unit tests only —
+    /// integration chaos tests hold their own global lock).
+    #[test]
+    fn skip_then_fire_then_disarm() {
+        reset();
+        arm("test.site", FaultKind::Sleep(Duration::from_millis(1)), 2, 1);
+        fire("test.site"); // skip 1
+        fire("test.site"); // skip 2
+        assert_eq!(fired("test.site"), 0);
+        fire("test.site"); // fires
+        assert_eq!(fired("test.site"), 1);
+        fire("test.site"); // disarmed
+        assert_eq!(fired("test.site"), 1);
+        assert_eq!(hits("test.site"), 4);
+        reset();
+        assert_eq!(hits("test.site"), 0);
+    }
+
+    #[test]
+    fn panic_fault_panics_and_keeps_registry_usable() {
+        reset();
+        arm("test.panic", FaultKind::Panic, 0, 1);
+        let r = std::panic::catch_unwind(|| fire("test.panic"));
+        assert!(r.is_err(), "armed panic site must panic");
+        assert_eq!(fired("test.panic"), 1);
+        // Registry not poisoned: next fire is a pass-through.
+        fire("test.panic");
+        assert_eq!(hits("test.panic"), 2);
+        reset();
+    }
+}

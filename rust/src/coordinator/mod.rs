@@ -12,54 +12,184 @@
 //! Shapes are fixed per deployment (AOT artifacts are shape-specialized),
 //! so the router's job reduces to validating input length and enforcing
 //! backpressure (bounded queue + `try_submit`).
+//!
+//! **Fault tolerance** (see `docs/robustness.md`): every accepted request
+//! reaches *exactly one* terminal state — a response, a typed
+//! [`ServeError`], never a leaked waiter. Requests carry an optional
+//! deadline and are shed before compute once expired; worker panics are
+//! caught, their in-flight slots completed with [`Shed::WorkerLost`], and
+//! the worker restarted with a fresh engine under a bounded budget;
+//! shutdown stops admission ([`Shed::Draining`]) and drains the queue to
+//! terminal responses before joining workers.
 
 mod batcher;
 mod engine;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod faults;
 mod server;
 
-pub use batcher::{Coordinator, CoordinatorStats, SubmitError};
+pub use batcher::{Coordinator, CoordinatorStats, RespawnFactory, SubmitError, WorkerSpec};
 pub use engine::{Engine, EngineFactory, NativeEngine, PjrtTcnEngine};
 pub use server::{serve_tcp, TcpClient};
 
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Named fault-injection site. Compiles to nothing unless the crate is
+/// built with `cfg(test)` or `--features fault-injection` — release
+/// serving builds carry no injection branches (enforced by
+/// `cargo xtask check`, rule `fault-confinement`).
+#[macro_export]
+macro_rules! fault_point {
+    ($site:expr) => {{
+        #[cfg(any(test, feature = "fault-injection"))]
+        {
+            $crate::coordinator::faults::fire($site);
+        }
+    }};
+}
+
+/// Why a request was shed without running inference. Every variant is a
+/// *terminal* state for the request, with a distinct wire error code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shed {
+    /// Admission rejected: the bounded queue was full (backpressure).
+    QueueFull,
+    /// The request's TTL expired before an engine picked it up; the
+    /// batcher drops it without burning compute.
+    DeadlineExpired,
+    /// The coordinator is shutting down: admission is stopped and
+    /// already-queued requests are drained to this terminal state.
+    Draining,
+    /// The worker holding this request died (panic) and no replacement
+    /// could take over in time.
+    WorkerLost,
+}
+
+impl Shed {
+    /// Stable wire error code (`coordinator/server.rs` response tag).
+    pub fn wire_code(self) -> u8 {
+        match self {
+            Shed::QueueFull => 3,
+            Shed::DeadlineExpired => 4,
+            Shed::Draining => 5,
+            Shed::WorkerLost => 6,
+        }
+    }
+}
+
+impl std::fmt::Display for Shed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Shed::QueueFull => write!(f, "shed: queue full (backpressure)"),
+            Shed::DeadlineExpired => write!(f, "shed: request deadline expired"),
+            Shed::Draining => write!(f, "shed: coordinator draining"),
+            Shed::WorkerLost => write!(f, "shed: worker lost (engine panic)"),
+        }
+    }
+}
+
+/// Terminal failure for an *accepted* request: either the engine ran and
+/// failed, or the request was shed before/without compute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The engine executed the batch and returned an error.
+    Engine(String),
+    /// The request never ran — see [`Shed`].
+    Shed(Shed),
+}
+
+impl ServeError {
+    /// Stable wire error code (`coordinator/server.rs` response tag).
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            ServeError::Engine(_) => 1,
+            ServeError::Shed(s) => s.wire_code(),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Engine(msg) => write!(f, "{msg}"),
+            ServeError::Shed(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// An inference request: one input row of the deployed model shape.
 pub struct Request {
     pub id: u64,
     pub input: Vec<f32>,
     pub enqueued: std::time::Instant,
+    /// Shed-by deadline: if the batcher reaches this request after the
+    /// deadline, it completes it with [`Shed::DeadlineExpired`] instead
+    /// of running it. `None` = no TTL.
+    pub deadline: Option<std::time::Instant>,
     slot: Arc<ResponseSlot>,
 }
 
-/// Response payload (output row) or failure message.
-pub type Response = Result<Vec<f32>, String>;
+impl Request {
+    fn expired(&self, now: std::time::Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Response payload (output row) or typed terminal failure.
+pub type Response = Result<Vec<f32>, ServeError>;
 
 /// One-shot response rendezvous (std has no oneshot channel).
+///
+/// Completion is **first-wins**: the first `complete` call decides the
+/// request's terminal state; later calls are no-ops. This is what makes
+/// the exactly-one-terminal-state invariant cheap to enforce — the
+/// normal distribution path, the panic drop-guard, and the shutdown
+/// drain can all race to complete a slot without double-reporting.
 #[derive(Debug)]
 pub struct ResponseSlot {
-    value: Mutex<Option<Response>>,
+    value: Mutex<SlotState>,
     ready: Condvar,
+}
+
+#[derive(Debug)]
+struct SlotState {
+    resp: Option<Response>,
+    /// Set once a terminal state has been decided (survives `take` by
+    /// the waiter, so late completers stay no-ops).
+    done: bool,
 }
 
 impl ResponseSlot {
     fn new() -> Arc<Self> {
         Arc::new(Self {
-            value: Mutex::new(None),
+            value: Mutex::new(SlotState {
+                resp: None,
+                done: false,
+            }),
             ready: Condvar::new(),
         })
     }
 
-    fn fill(&self, resp: Response) {
+    /// First-wins completion: records `resp` as the terminal state if no
+    /// prior completion happened, and returns whether this call won.
+    fn complete(&self, resp: Response) -> bool {
         let mut g = self.value.lock().unwrap();
-        *g = Some(resp);
+        if g.done {
+            return false;
+        }
+        g.done = true;
+        g.resp = Some(resp);
         self.ready.notify_all();
+        true
     }
 
     /// Block until the response arrives.
     pub fn wait(&self) -> Response {
         let mut g = self.value.lock().unwrap();
         loop {
-            if let Some(resp) = g.take() {
+            if let Some(resp) = g.resp.take() {
                 return resp;
             }
             g = self.ready.wait(g).unwrap();
@@ -71,7 +201,7 @@ impl ResponseSlot {
         let deadline = std::time::Instant::now() + dur;
         let mut g = self.value.lock().unwrap();
         loop {
-            if let Some(resp) = g.take() {
+            if let Some(resp) = g.resp.take() {
                 return Some(resp);
             }
             let now = std::time::Instant::now();
@@ -111,7 +241,7 @@ mod tests {
         let s2 = Arc::clone(&slot);
         let t = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(10));
-            s2.fill(Ok(vec![1.0, 2.0]));
+            s2.complete(Ok(vec![1.0, 2.0]));
         });
         assert_eq!(slot.wait().unwrap(), vec![1.0, 2.0]);
         t.join().unwrap();
@@ -123,8 +253,39 @@ mod tests {
         assert!(slot
             .wait_timeout(std::time::Duration::from_millis(5))
             .is_none());
-        slot.fill(Err("boom".into()));
+        slot.complete(Err(ServeError::Engine("boom".into())));
         let got = slot.wait_timeout(std::time::Duration::from_millis(5)).unwrap();
-        assert_eq!(got.unwrap_err(), "boom");
+        assert_eq!(got.unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn response_slot_first_completion_wins() {
+        let slot = ResponseSlot::new();
+        assert!(slot.complete(Ok(vec![1.0])));
+        assert!(!slot.complete(Err(ServeError::Shed(Shed::WorkerLost))));
+        assert_eq!(slot.wait().unwrap(), vec![1.0]);
+        // Late completion after the waiter consumed the value is still a
+        // no-op — the slot stays terminal.
+        assert!(!slot.complete(Ok(vec![9.0])));
+        assert!(slot
+            .wait_timeout(std::time::Duration::from_millis(2))
+            .is_none());
+    }
+
+    #[test]
+    fn wire_codes_are_distinct() {
+        let codes = [
+            ServeError::Engine("x".into()).wire_code(),
+            ServeError::Shed(Shed::QueueFull).wire_code(),
+            ServeError::Shed(Shed::DeadlineExpired).wire_code(),
+            ServeError::Shed(Shed::Draining).wire_code(),
+            ServeError::Shed(Shed::WorkerLost).wire_code(),
+        ];
+        for (i, a) in codes.iter().enumerate() {
+            assert_ne!(*a, 0, "0 is the ok tag");
+            for b in &codes[i + 1..] {
+                assert_ne!(a, b, "wire codes must be distinct");
+            }
+        }
     }
 }

@@ -1,20 +1,38 @@
 //! TCP front-end: length-prefixed f32 frames over a blocking socket.
 //!
 //! Wire format (little-endian):
-//!   request:  u32 n  | n × f32            (one input row)
-//!   response: u8 tag | u32 n | payload    (tag 0 = ok row, 1 = error utf8)
+//!   request:  u32 n | u32 ttl_ms | n × f32     (one input row; ttl_ms 0 = no deadline)
+//!   response: u8 tag | u32 n | payload
+//!
+//! Response tags (see [`super::ServeError::wire_code`] /
+//! [`super::SubmitError::wire_code`] — payload is a utf8 message for
+//! every non-zero tag):
+//!   0 ok (payload: n × f32 output row)
+//!   1 engine error          2 bad input shape
+//!   3 shed: queue full      4 shed: deadline expired
+//!   5 shed: draining        6 shed: worker lost
+//!   7 coordinator closed
 //!
 //! One thread per connection (the workload is CPU-bound inference; the
 //! batcher serializes actual compute, so connection threads just park).
+//! Sockets carry read/write timeouts so a stalled or hostile peer can't
+//! pin its thread forever, and each connection reuses one frame buffer
+//! for reads and one for writes instead of allocating per request.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use super::Coordinator;
+
+/// Per-connection socket read/write timeout. A peer that stalls longer
+/// than this mid-frame gets its connection dropped (the thread exits)
+/// instead of parking forever.
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(30);
 
 fn read_exact_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
     let mut buf = [0u8; 4];
@@ -22,7 +40,15 @@ fn read_exact_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(buf))
 }
 
-fn read_frame(stream: &mut TcpStream, max_floats: u32) -> Result<Option<Vec<f32>>> {
+/// Read one request frame into the reused buffers: `bytes` holds the
+/// raw payload, `row` the decoded floats. Returns the TTL field, or
+/// `None` on a clean EOF at a frame boundary.
+fn read_frame(
+    stream: &mut TcpStream,
+    max_floats: u32,
+    bytes: &mut Vec<u8>,
+    row: &mut Vec<f32>,
+) -> Result<Option<Option<Duration>>> {
     let n = match read_exact_u32(stream) {
         Ok(n) => n,
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
@@ -31,32 +57,44 @@ fn read_frame(stream: &mut TcpStream, max_floats: u32) -> Result<Option<Vec<f32>
     if n > max_floats {
         bail!("frame of {n} floats exceeds limit {max_floats}");
     }
-    let mut bytes = vec![0u8; n as usize * 4];
-    stream.read_exact(&mut bytes)?;
-    let mut out = Vec::with_capacity(n as usize);
+    let ttl_ms = read_exact_u32(stream)?;
+    bytes.clear();
+    bytes.resize(n as usize * 4, 0);
+    stream.read_exact(bytes)?;
+    row.clear();
+    row.reserve(n as usize);
     for chunk in bytes.chunks_exact(4) {
-        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        row.push(f32::from_le_bytes(chunk.try_into().unwrap()));
     }
-    Ok(Some(out))
+    Ok(Some(if ttl_ms == 0 {
+        None
+    } else {
+        Some(Duration::from_millis(ttl_ms as u64))
+    }))
 }
 
-fn write_ok(stream: &mut TcpStream, row: &[f32]) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(5 + row.len() * 4);
+fn write_ok(stream: &mut TcpStream, buf: &mut Vec<u8>, row: &[f32]) -> std::io::Result<()> {
+    buf.clear();
     buf.push(0u8);
     buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
     for v in row {
         buf.extend_from_slice(&v.to_le_bytes());
     }
-    stream.write_all(&buf)
+    stream.write_all(buf)
 }
 
-fn write_err(stream: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+fn write_err(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    code: u8,
+    msg: &str,
+) -> std::io::Result<()> {
     let bytes = msg.as_bytes();
-    let mut buf = Vec::with_capacity(5 + bytes.len());
-    buf.push(1u8);
+    buf.clear();
+    buf.push(code);
     buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     buf.extend_from_slice(bytes);
-    stream.write_all(&buf)
+    stream.write_all(buf)
 }
 
 /// Serve until `stop` is set (checked between accepts). Returns the bound
@@ -75,6 +113,8 @@ pub fn serve_tcp(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(SOCKET_TIMEOUT))?;
+                stream.set_write_timeout(Some(SOCKET_TIMEOUT))?;
                 let coord = Arc::clone(&coordinator);
                 conns.push(std::thread::spawn(move || {
                     let _ = handle_conn(stream, coord);
@@ -94,13 +134,23 @@ pub fn serve_tcp(
 
 fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     let max = 1 << 22; // 16 MiB of floats per frame is plenty
-    while let Some(row) = read_frame(&mut stream, max)? {
-        match coord.try_submit(row) {
+    // Reused across every request on this connection.
+    let mut rbytes: Vec<u8> = Vec::new();
+    let mut row: Vec<f32> = Vec::new();
+    let mut wbuf: Vec<u8> = Vec::new();
+    while let Some(ttl) = read_frame(&mut stream, max, &mut rbytes, &mut row)? {
+        // A wire TTL of 0 falls back to the coordinator's configured
+        // default (plain `try_submit`); a nonzero TTL overrides it.
+        let submitted = match ttl {
+            Some(t) => coord.try_submit_with_ttl(row.clone(), Some(t)),
+            None => coord.try_submit(row.clone()),
+        };
+        match submitted {
             Ok(ticket) => match ticket.wait() {
-                Ok(out) => write_ok(&mut stream, &out)?,
-                Err(e) => write_err(&mut stream, &e)?,
+                Ok(out) => write_ok(&mut stream, &mut wbuf, &out)?,
+                Err(e) => write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string())?,
             },
-            Err(e) => write_err(&mut stream, &e.to_string())?,
+            Err(e) => write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string())?,
         }
     }
     Ok(())
@@ -120,8 +170,16 @@ impl TcpClient {
 
     /// Send one row, wait for the response.
     pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
-        let mut buf = Vec::with_capacity(4 + row.len() * 4);
+        self.infer_with_ttl(row, None)
+    }
+
+    /// Send one row with a per-request TTL; the server sheds the
+    /// request with a typed error if it can't start compute in time.
+    pub fn infer_with_ttl(&mut self, row: &[f32], ttl: Option<Duration>) -> Result<Vec<f32>> {
+        let ttl_ms: u32 = ttl.map_or(0, |t| t.as_millis().clamp(1, u32::MAX as u128) as u32);
+        let mut buf = Vec::with_capacity(8 + row.len() * 4);
         buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&ttl_ms.to_le_bytes());
         for v in row {
             buf.extend_from_slice(&v.to_le_bytes());
         }
@@ -142,7 +200,11 @@ impl TcpClient {
         } else {
             let mut bytes = vec![0u8; n];
             self.stream.read_exact(&mut bytes)?;
-            bail!("server error: {}", String::from_utf8_lossy(&bytes))
+            bail!(
+                "server error (code {}): {}",
+                tag[0],
+                String::from_utf8_lossy(&bytes)
+            )
         }
     }
 }

@@ -31,7 +31,14 @@ pub struct Channel<T> {
 
 impl<T> Channel<T> {
     pub fn new(capacity: usize) -> Arc<Self> {
-        Arc::new(Self {
+        Arc::new(Self::with_capacity(capacity))
+    }
+
+    /// Plain (non-`Arc`) constructor for embedding in a larger shared
+    /// structure (the coordinator keeps one inside its worker-shared
+    /// state instead of a second `Arc` indirection).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
             inner: Mutex::new(ChanInner {
                 queue: VecDeque::new(),
                 closed: false,
@@ -39,7 +46,7 @@ impl<T> Channel<T> {
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
-        })
+        }
     }
 
     /// Blocking send; errors if closed.

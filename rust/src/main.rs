@@ -140,6 +140,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         FlagSpec { name: "workers", value: Some("n"), help: "engine workers (default: serve.workers)" },
         FlagSpec { name: "autotune", value: None, help: "micro-probe kernel choices per layer instead of the heuristic" },
         FlagSpec { name: "buckets", value: Some("1,8,…"), help: "batch buckets precompiled at startup" },
+        FlagSpec { name: "request-ttl", value: Some("ms"), help: "default request TTL: shed requests not started within this budget (0 = never)" },
+        FlagSpec { name: "max-queue", value: Some("n"), help: "admission queue capacity (default: serve.queue_capacity)" },
+        FlagSpec { name: "restart-budget", value: Some("n"), help: "worker restarts after an engine panic before degrading the pool" },
         FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
         FlagSpec { name: "quick", value: None, help: "" },
     ];
@@ -151,6 +154,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let d = ServeConfig::default();
         serve_cfg = ServeConfig {
             workers: args.get_usize("workers", d.workers).map_err(anyhow::Error::msg)?,
+            request_ttl_ms: args
+                .get_u64("request-ttl", d.request_ttl_ms)
+                .map_err(anyhow::Error::msg)?,
+            queue_capacity: args
+                .get_usize("max-queue", d.queue_capacity)
+                .map_err(anyhow::Error::msg)?,
+            restart_budget: args
+                .get_usize("restart-budget", d.restart_budget)
+                .map_err(anyhow::Error::msg)?,
             ..d
         };
         // PJRT engines share one runtime and are constructed on a single
@@ -170,6 +182,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
         let (mc, mut sc) = load_config(&text).map_err(anyhow::Error::msg)?;
         sc.workers = args.get_usize("workers", sc.workers).map_err(anyhow::Error::msg)?;
+        sc.request_ttl_ms = args
+            .get_u64("request-ttl", sc.request_ttl_ms)
+            .map_err(anyhow::Error::msg)?;
+        sc.queue_capacity = args
+            .get_usize("max-queue", sc.queue_capacity)
+            .map_err(anyhow::Error::msg)?;
+        sc.restart_budget = args
+            .get_usize("restart-budget", sc.restart_budget)
+            .map_err(anyhow::Error::msg)?;
         if args.has("autotune") {
             sc.autotune = true;
         }

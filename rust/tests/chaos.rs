@@ -1,0 +1,415 @@
+//! Chaos harness: fault-injection schedules against the serving
+//! coordinator (`--features fault-injection`; see `docs/robustness.md`).
+//!
+//! The core invariant under test: **every accepted request reaches
+//! exactly one terminal state** — completion, engine error, deadline
+//! shed, worker-lost, or drain — no matter which fault schedule is
+//! active. "Exactly one" is enforced structurally by the first-wins
+//! `ResponseSlot::complete`; "at least one" (nobody hangs) is what the
+//! schedules here try to break.
+//!
+//! The fault registry is process-global, so every test serializes on
+//! [`lock`] and starts from `faults::reset()`.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use swsnn::config::ServeConfig;
+use swsnn::coordinator::faults::{self, FaultKind};
+use swsnn::coordinator::{Coordinator, Engine, ServeError, Shed};
+use swsnn::workload::Rng;
+
+/// Serializes chaos tests (the fault registry is process-global).
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Injected panics are caught by the supervisor; keep their backtraces
+/// out of the test output. Anything else still reaches the default hook.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .copied()
+                .map(String::from)
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.contains("injected fault at") {
+                default(info);
+            }
+        }));
+    });
+}
+
+const ROW: usize = 4;
+
+#[derive(Clone)]
+struct EchoEngine;
+
+impl Engine for EchoEngine {
+    fn input_len(&self) -> usize {
+        ROW
+    }
+    fn output_len(&self) -> usize {
+        ROW
+    }
+    fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+    fn name(&self) -> String {
+        "chaos-echo".into()
+    }
+}
+
+/// Echo engine with a fixed per-batch service time — lets the soak test
+/// offer a load that provably exceeds capacity.
+#[derive(Clone)]
+struct PacedEngine(Duration);
+
+impl Engine for PacedEngine {
+    fn input_len(&self) -> usize {
+        ROW
+    }
+    fn output_len(&self) -> usize {
+        ROW
+    }
+    fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.0);
+        Ok(x.to_vec())
+    }
+    fn name(&self) -> String {
+        "chaos-paced".into()
+    }
+}
+
+fn chaos_config(workers: usize, bucketed: bool) -> ServeConfig {
+    ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 200,
+        workers,
+        queue_capacity: 64,
+        batch_buckets: if bucketed { vec![1, 2, 4] } else { Vec::new() },
+        restart_budget: 2,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    }
+}
+
+/// The acceptance-criteria matrix: random fault schedules × worker
+/// counts {1, 2, 4, 8} × bucketed/unbucketed execution, with concurrent
+/// submitters mixing blocking, non-blocking, and TTL-stamped requests.
+/// Every accepted ticket must reach a terminal state, and the stats
+/// ledger must balance exactly.
+#[test]
+fn every_request_reaches_exactly_one_terminal_state_under_chaos() {
+    let _g = lock();
+    quiet_injected_panics();
+    let mut rng = Rng::new(0xC4A05);
+
+    // `admission.submit` runs on the *caller's* thread, so its schedule
+    // is restricted to stalls; panic schedules target worker/supervisor
+    // sites, which the supervision machinery must absorb.
+    const STALL_SITES: [&str; 1] = ["admission.submit"];
+    const CRASH_SITES: [&str; 4] = [
+        "worker.batch_collected",
+        "worker.infer",
+        "worker.distribute",
+        "supervisor.respawn",
+    ];
+
+    for &workers in &[1usize, 2, 4, 8] {
+        for &bucketed in &[false, true] {
+            faults::reset();
+            let n_faults = 1 + (rng.next_u64() % 3) as usize;
+            let mut schedule = Vec::new();
+            for _ in 0..n_faults {
+                let (site, kind) = if rng.next_u64() % 4 == 0 {
+                    let site = STALL_SITES[(rng.next_u64() as usize) % STALL_SITES.len()];
+                    (site, FaultKind::Sleep(Duration::from_millis(1 + rng.next_u64() % 5)))
+                } else {
+                    let site = CRASH_SITES[(rng.next_u64() as usize) % CRASH_SITES.len()];
+                    let kind = if rng.next_u64() % 2 == 0 {
+                        FaultKind::Panic
+                    } else {
+                        FaultKind::Sleep(Duration::from_millis(1 + rng.next_u64() % 5))
+                    };
+                    (site, kind)
+                };
+                let skip = (rng.next_u64() % 8) as usize;
+                let fires = 1 + (rng.next_u64() % 3) as usize;
+                faults::arm(site, kind, skip, fires);
+                schedule.push(format!("{site}:{kind:?} skip={skip} fires={fires}"));
+            }
+            let ctx = format!(
+                "workers={workers} bucketed={bucketed} schedule=[{}]",
+                schedule.join(", ")
+            );
+
+            let coord = Coordinator::start_replicated(EchoEngine, &chaos_config(workers, bucketed))
+                .expect("startup");
+            let accepted = AtomicUsize::new(0);
+            let never_terminal = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    let coord = &coord;
+                    let accepted = &accepted;
+                    let never_terminal = &never_terminal;
+                    s.spawn(move || {
+                        for i in 0..24usize {
+                            let x = vec![(t * 100 + i) as f32; ROW];
+                            let res = match i % 3 {
+                                0 => coord.try_submit(x),
+                                1 => coord.submit_with_ttl(x, Some(Duration::from_millis(20))),
+                                _ => coord.submit(x),
+                            };
+                            if let Ok(ticket) = res {
+                                accepted.fetch_add(1, Ordering::SeqCst);
+                                if ticket.wait_timeout(Duration::from_secs(10)).is_none() {
+                                    never_terminal.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                never_terminal.load(Ordering::SeqCst),
+                0,
+                "accepted request(s) never reached a terminal state ({ctx})"
+            );
+            let stats = coord.shutdown();
+            assert_eq!(
+                stats.submitted,
+                accepted.load(Ordering::SeqCst) as u64,
+                "accepted-ticket count disagrees with stats ({ctx})"
+            );
+            assert_eq!(
+                stats.terminal(),
+                stats.submitted,
+                "terminal ledger does not balance ({ctx}): {stats:?}"
+            );
+        }
+    }
+    faults::reset();
+}
+
+/// A panic injected at `worker.infer` loses the in-flight batch with a
+/// typed error, then the supervisor restarts the worker within budget
+/// and serving continues on the same coordinator.
+#[test]
+fn injected_worker_panic_restarts_within_budget() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("worker.infer", FaultKind::Panic, 0, 1);
+
+    let coord = Coordinator::start_replicated(EchoEngine, &chaos_config(1, false)).unwrap();
+    let t = coord.submit(vec![1.0; ROW]).unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter");
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+    assert_eq!(faults::fired("worker.infer"), 1);
+
+    let y = coord.infer(vec![2.0; ROW]).unwrap();
+    assert_eq!(y, vec![2.0; ROW]);
+    let stats = coord.shutdown();
+    assert_eq!(stats.worker_panics, 1);
+    assert_eq!(stats.worker_restarts, 1);
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// A panic injected *after* inference (`worker.distribute`) exercises
+/// the drop-guard with results already computed: waiters still get the
+/// typed `WorkerLost`, never a half-distributed batch.
+#[test]
+fn injected_panic_after_compute_still_yields_terminal_errors() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("worker.distribute", FaultKind::Panic, 0, 1);
+
+    let coord = Coordinator::start_replicated(EchoEngine, &chaos_config(1, false)).unwrap();
+    let t = coord.submit(vec![3.0; ROW]).unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter");
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+    let stats = coord.shutdown();
+    assert_eq!(stats.worker_panics, 1);
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// Respawn failures burn the restart budget: with `supervisor.respawn`
+/// rigged to panic on every attempt, one worker crash degrades the pool
+/// to zero workers — and every ticket still terminates.
+#[test]
+fn respawn_panics_exhaust_budget_and_degrade() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("worker.infer", FaultKind::Panic, 0, 1);
+    faults::arm("supervisor.respawn", FaultKind::Panic, 0, usize::MAX);
+
+    let coord = Coordinator::start_replicated(EchoEngine, &chaos_config(1, false)).unwrap();
+    let t = coord.submit(vec![1.0; ROW]).unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter");
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+
+    // Both restart attempts panicked inside the respawn path.
+    let stats = coord.stats();
+    assert_eq!(faults::fired("supervisor.respawn"), 2);
+    assert_eq!(stats.worker_restarts, 0);
+    assert_eq!(stats.live_workers, 0);
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// A queue stall (sleep at `worker.batch_collected`) delays batches past
+/// tight TTLs: stalled requests are shed with the typed deadline error
+/// instead of burning compute, and the ledger still balances.
+#[test]
+fn injected_stall_sheds_expired_requests() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm(
+        "worker.batch_collected",
+        FaultKind::Sleep(Duration::from_millis(25)),
+        0,
+        usize::MAX,
+    );
+
+    let mut cfg = chaos_config(1, false);
+    cfg.max_batch = 1; // one request per batch: each stall delays the next
+    let coord = Coordinator::start_replicated(EchoEngine, &cfg).unwrap();
+    let tickets: Vec<_> = (0..8)
+        .map(|i| {
+            coord
+                .submit_with_ttl(vec![i as f32; ROW], Some(Duration::from_millis(5)))
+                .unwrap()
+        })
+        .collect();
+    let mut shed = 0u64;
+    for t in tickets {
+        let resp = t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter");
+        if resp == Err(ServeError::Shed(Shed::DeadlineExpired)) {
+            shed += 1;
+        }
+    }
+    let stats = coord.shutdown();
+    assert!(shed > 0, "25ms stalls vs 5ms TTLs must shed something");
+    assert_eq!(stats.shed_deadline, shed);
+    assert_eq!(stats.terminal(), stats.submitted, "{stats:?}");
+    faults::reset();
+}
+
+/// Satellite soak: ~4× sustained overload for a bounded wall-clock
+/// budget. Queue depth stays within the configured bound, the shed
+/// counters actually engage (queue-full backpressure and deadline
+/// drops), and no accepted request is left without a terminal response.
+#[test]
+fn soak_overload_4x_sheds_and_stays_terminal() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset(); // no faults: pure overload
+
+    let cfg = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 100,
+        workers: 2,
+        queue_capacity: 16,
+        request_ttl_ms: 5, // default TTL stamped on every plain submit
+        ..Default::default()
+    };
+    // Capacity ≈ workers · max_batch / 300µs ≈ 26k rows/s; four tight
+    // submit loops offer far more than 4× that.
+    let coord = Coordinator::start_replicated(PacedEngine(Duration::from_micros(300)), &cfg)
+        .expect("startup");
+    let budget = Duration::from_millis(800);
+    let accepted = AtomicUsize::new(0);
+    let offered = AtomicUsize::new(0);
+    let never_terminal = AtomicUsize::new(0);
+    let max_depth = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let coord = &coord;
+            let accepted = &accepted;
+            let offered = &offered;
+            let never_terminal = &never_terminal;
+            s.spawn(move || {
+                let start = Instant::now();
+                let mut tickets = Vec::new();
+                let mut i = 0usize;
+                while start.elapsed() < budget {
+                    let x = vec![(t * 7 + i) as f32; ROW];
+                    offered.fetch_add(1, Ordering::Relaxed);
+                    // Every 10th request carries an already-expired TTL
+                    // so the deadline-shed path engages deterministically.
+                    let res = if i % 10 == 0 {
+                        coord.try_submit_with_ttl(x, Some(Duration::ZERO))
+                    } else {
+                        coord.try_submit(x)
+                    };
+                    if let Ok(ticket) = res {
+                        accepted.fetch_add(1, Ordering::SeqCst);
+                        tickets.push(ticket);
+                    }
+                    i += 1;
+                    if i % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                for ticket in tickets {
+                    if ticket.wait_timeout(Duration::from_secs(10)).is_none() {
+                        never_terminal.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+        // Sample queue depth while the flood runs: the bounded channel
+        // must never report more than its configured capacity.
+        let sampler_start = Instant::now();
+        while sampler_start.elapsed() < budget {
+            let d = coord.queue_depth();
+            max_depth.fetch_max(d, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    });
+
+    assert_eq!(
+        never_terminal.load(Ordering::SeqCst),
+        0,
+        "soak leaked accepted requests without a terminal response"
+    );
+    assert!(
+        max_depth.load(Ordering::Relaxed) <= cfg.queue_capacity,
+        "queue depth {} exceeded capacity {}",
+        max_depth.load(Ordering::Relaxed),
+        cfg.queue_capacity
+    );
+    let stats = coord.shutdown();
+    assert_eq!(stats.submitted, accepted.load(Ordering::SeqCst) as u64);
+    assert!(
+        stats.shed_queue_full > 0,
+        "4x overload must trip queue-full backpressure: {stats:?}"
+    );
+    assert!(
+        stats.shed_deadline > 0,
+        "expired-TTL requests must be shed: {stats:?}"
+    );
+    assert_eq!(
+        stats.terminal(),
+        stats.submitted,
+        "soak ledger does not balance: {stats:?}"
+    );
+    assert!(offered.load(Ordering::Relaxed) as u64 > 4 * stats.submitted / 2);
+    faults::reset();
+}

@@ -8,7 +8,8 @@ use std::time::Duration;
 use swsnn::config::{load_config, ServeConfig};
 use swsnn::conv::ConvBackend;
 use swsnn::coordinator::{
-    serve_tcp, Coordinator, Engine, NativeEngine, PjrtTcnEngine, SubmitError, TcpClient,
+    serve_tcp, Coordinator, Engine, NativeEngine, PjrtTcnEngine, ServeError, Shed, SubmitError,
+    TcpClient,
 };
 use swsnn::nn::Model;
 use swsnn::workload::Rng;
@@ -406,7 +407,278 @@ fn engine_error_propagates_to_all_waiters() {
     let t2 = coord.submit(vec![0.0; 2]).unwrap();
     for t in [t1, t2] {
         let err = t.wait().unwrap_err();
-        assert!(err.contains("numerical explosion"), "{err}");
+        assert!(matches!(err, ServeError::Engine(_)), "{err:?}");
+        assert!(err.to_string().contains("numerical explosion"), "{err}");
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.failed, 2);
+    assert_eq!(stats.completed, 0);
+}
+
+/// Regression for the client-hang bug: a worker that panics mid-batch
+/// must complete every in-flight slot with a typed `WorkerLost` error —
+/// `wait_timeout` returns the error, never times out to `None`. Without
+/// a respawn factory (start_native) the dying worker was the last one,
+/// so it also closes the queue and drains it: later submissions fail
+/// fast instead of queueing forever.
+#[test]
+fn worker_panic_completes_waiters_with_worker_lost() {
+    struct PanicEngine;
+    impl Engine for PanicEngine {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer(&self, _x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            panic!("engine exploded mid-batch")
+        }
+        fn name(&self) -> String {
+            "panic".into()
+        }
+    }
+    let serve = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 5_000,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(PanicEngine, &serve).unwrap();
+    let t1 = coord.submit(vec![0.0; 2]).unwrap();
+    let t2 = coord.submit(vec![1.0; 2]).unwrap();
+    for t in [t1, t2] {
+        let resp = t
+            .wait_timeout(Duration::from_secs(5))
+            .expect("panicked worker leaked a waiter (wait_timeout returned None)");
+        assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+    }
+    // The pool is fully dead: admission fails fast, nothing hangs.
+    let mut saw_terminal_submit = false;
+    for _ in 0..200 {
+        match coord.submit(vec![0.0; 2]) {
+            Err(SubmitError::Closed) => {
+                saw_terminal_submit = true;
+                break;
+            }
+            Err(e) => panic!("unexpected {e:?}"),
+            Ok(t) => {
+                // Raced a submit in before the dying worker closed the
+                // queue — it must still reach a terminal state.
+                let resp = t.wait_timeout(Duration::from_secs(5)).expect("leaked waiter");
+                assert!(resp.is_err());
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(saw_terminal_submit, "queue never closed after last worker died");
+    let stats = coord.stats();
+    assert!(stats.worker_panics >= 1);
+    assert_eq!(stats.live_workers, 0);
+    assert!(stats.worker_lost >= 2, "stats: {stats:?}");
+}
+
+/// Supervised restart: a worker that panics once is replaced with a
+/// fresh engine (re-running warm-up) within the restart budget, and the
+/// coordinator keeps serving.
+#[test]
+fn supervisor_restarts_panicked_worker() {
+    #[derive(Clone)]
+    struct PanicOnce {
+        armed: Arc<AtomicBool>,
+        warmups: Arc<AtomicUsize>,
+    }
+    impl Engine for PanicOnce {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                panic!("injected engine crash");
+            }
+            Ok(x.to_vec())
+        }
+        fn warmup(&mut self, _buckets: &[usize]) -> anyhow::Result<()> {
+            self.warmups.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+        fn name(&self) -> String {
+            "panic-once".into()
+        }
+    }
+    let armed = Arc::new(AtomicBool::new(true));
+    let warmups = Arc::new(AtomicUsize::new(0));
+    let serve = ServeConfig {
+        max_batch: 1,
+        batch_deadline_us: 0,
+        workers: 1,
+        restart_budget: 3,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_replicated(
+        PanicOnce {
+            armed: Arc::clone(&armed),
+            warmups: Arc::clone(&warmups),
+        },
+        &serve,
+    )
+    .unwrap();
+    assert_eq!(warmups.load(Ordering::SeqCst), 1, "startup warm-up");
+
+    // First request trips the panic → typed WorkerLost, not a hang.
+    let t = coord.submit(vec![0.0; 2]).unwrap();
+    let resp = t.wait_timeout(Duration::from_secs(5)).expect("leaked waiter");
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+
+    // The supervisor restarted the worker with a fresh engine — serving
+    // continues on the same coordinator.
+    let y = coord.infer(vec![3.0, 4.0]).unwrap();
+    assert_eq!(y, vec![3.0, 4.0]);
+    // The restarted worker is live again (workers decrement the count as
+    // they exit during shutdown, so sample before).
+    assert_eq!(coord.stats().live_workers, 1);
+    let stats = coord.shutdown();
+    assert_eq!(stats.worker_panics, 1);
+    assert_eq!(stats.worker_restarts, 1);
+    assert!(
+        warmups.load(Ordering::SeqCst) >= 2,
+        "restart must re-run warm-up"
+    );
+}
+
+/// Restart-budget exhaustion: an engine that always panics burns its
+/// budget, the pool degrades to zero workers, and every ticket obtained
+/// along the way still reaches a terminal state — nobody hangs.
+#[test]
+fn restart_budget_exhaustion_degrades_without_hang() {
+    #[derive(Clone)]
+    struct AlwaysPanic;
+    impl Engine for AlwaysPanic {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer(&self, _x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            panic!("chronically broken engine")
+        }
+        fn name(&self) -> String {
+            "always-panic".into()
+        }
+    }
+    let serve = ServeConfig {
+        max_batch: 2,
+        batch_deadline_us: 0,
+        workers: 1,
+        restart_budget: 2,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_replicated(AlwaysPanic, &serve).unwrap();
+    let mut tickets = Vec::new();
+    let mut closed = false;
+    for _ in 0..500 {
+        match coord.submit(vec![0.0; 2]) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Closed) => {
+                closed = true;
+                break;
+            }
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(closed, "pool never closed after exhausting its restart budget");
+    assert!(!tickets.is_empty());
+    for t in tickets {
+        let resp = t.wait_timeout(Duration::from_secs(5)).expect("leaked waiter");
+        assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+    }
+    let stats = coord.stats();
+    // 1 initial run + up to 2 restarts, each ending in a panic.
+    assert_eq!(stats.worker_restarts, 2);
+    assert_eq!(stats.worker_panics, 3);
+    assert_eq!(stats.live_workers, 0);
+}
+
+/// Deadline propagation: a request whose TTL expires while an earlier
+/// request occupies the worker is shed with a typed error before any
+/// compute is spent on it.
+#[test]
+fn expired_requests_shed_before_compute() {
+    struct SlowEngine(Arc<AtomicUsize>);
+    impl Engine for SlowEngine {
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            2
+        }
+        fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+            self.0.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(x.to_vec())
+        }
+        fn name(&self) -> String {
+            "slow".into()
+        }
+    }
+    let infers = Arc::new(AtomicUsize::new(0));
+    let serve = ServeConfig {
+        max_batch: 1, // one request per batch: r2 waits for r1's compute
+        batch_deadline_us: 0,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(SlowEngine(Arc::clone(&infers)), &serve).unwrap();
+    let t1 = coord.submit(vec![1.0; 2]).unwrap();
+    std::thread::sleep(Duration::from_millis(10)); // worker picked t1
+    let t2 = coord
+        .submit_with_ttl(vec![2.0; 2], Some(Duration::from_millis(1)))
+        .unwrap();
+    assert_eq!(t1.wait().unwrap(), vec![1.0; 2]);
+    let resp = t2.wait_timeout(Duration::from_secs(5)).expect("leaked waiter");
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::DeadlineExpired));
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed_deadline, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(
+        infers.load(Ordering::SeqCst),
+        1,
+        "expired request must not reach the engine"
+    );
+}
+
+/// Graceful drain: shutdown runs every queued request to a terminal
+/// state (here: completion — the workers are healthy) and records the
+/// drain latency; the terminal ledger balances.
+#[test]
+fn shutdown_drains_queued_requests_to_terminal_states() {
+    let serve = ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 200,
+        workers: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_replicated(IdEngine, &serve).unwrap();
+    let tickets: Vec<_> = (0..40)
+        .map(|i| coord.submit(vec![i as f32; 4]).unwrap())
+        .collect();
+    let stats = coord.shutdown();
+    assert_eq!(stats.submitted, 40);
+    assert_eq!(
+        stats.terminal(),
+        40,
+        "drain left non-terminal requests: {stats:?}"
+    );
+    for t in tickets {
+        let resp = t
+            .wait_timeout(Duration::from_secs(1))
+            .expect("shutdown leaked a waiter");
+        assert!(resp.is_ok(), "healthy drain must complete requests");
     }
 }
 

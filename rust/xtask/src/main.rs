@@ -17,6 +17,12 @@
 //!    `// alloc-ok: <why>` allowlist annotations.
 //! 4. **into-coverage** — every public `*_into` kernel is referenced
 //!    from at least one test under `tests/`.
+//! 5. **fault-confinement** — the serving fault-injection harness stays
+//!    out of release hot paths: `fault_point!` sites may appear only
+//!    under `src/coordinator/`, direct `faults::` references only in
+//!    `coordinator/faults.rs` and the macro definition in
+//!    `coordinator/mod.rs`, and the `mod faults` declaration must be
+//!    gated on `cfg(any(test, feature = "fault-injection"))`.
 //!
 //! The checker is a line-based scanner with a small lexer (comments,
 //! strings, brace depth) — deliberately not a full parser, so it stays
@@ -86,6 +92,7 @@ fn run_check() -> ExitCode {
         check_safety_comments(&file, &relpath, &mut violations);
         check_arch_confinement(&file, &relpath, &mut violations);
         check_no_alloc(&file, &relpath, &root, path, &mut violations);
+        check_fault_confinement(&file, &relpath, &mut violations);
         collect_into_kernels(&file, &relpath, &mut into_kernels);
     }
     for (name, relpath, line) in &into_kernels {
@@ -460,6 +467,48 @@ fn statement_annotated(file: &FileScan, i: usize) -> bool {
         }
     }
     false
+}
+
+/// Rule 5: fault-injection confinement. `fault_point!` sites live only
+/// under `src/coordinator/`; direct `faults::` references only in
+/// `coordinator/faults.rs` (the registry) and `coordinator/mod.rs` (the
+/// macro definition + gated `mod` declaration). The `mod faults`
+/// declaration itself must carry the
+/// `cfg(any(test, feature = "fault-injection"))` gate so plain release
+/// builds compile zero injection branches.
+fn check_fault_confinement(file: &FileScan, relpath: &str, violations: &mut Vec<String>) {
+    let in_coordinator = relpath.contains("/coordinator/");
+    let is_faults = relpath.ends_with("coordinator/faults.rs");
+    let is_coord_mod = relpath.ends_with("coordinator/mod.rs");
+    for (i, code) in file.code.iter().enumerate() {
+        if code.contains("fault_point!") && !in_coordinator {
+            violations.push(format!(
+                "{relpath}:{}: [fault-confinement] `fault_point!` site outside \
+                 src/coordinator/",
+                i + 1
+            ));
+        }
+        if code.contains("faults::") && !is_faults && !is_coord_mod && !file.in_test[i] {
+            violations.push(format!(
+                "{relpath}:{}: [fault-confinement] direct `faults::` reference outside \
+                 coordinator/faults.rs and the coordinator/mod.rs macro",
+                i + 1
+            ));
+        }
+        if is_coord_mod && code.contains("mod faults") {
+            // The gate mentions the feature name inside a string, which
+            // the lexer blanks — look at the raw lines.
+            let gated = file.raw[i].contains("fault-injection")
+                || (i > 0 && file.raw[i - 1].contains("fault-injection"));
+            if !gated {
+                violations.push(format!(
+                    "{relpath}:{}: [fault-confinement] `mod faults` must be gated on \
+                     cfg(any(test, feature = \"fault-injection\"))",
+                    i + 1
+                ));
+            }
+        }
+    }
 }
 
 /// Rule 4 harvest: public `fn *_into` definitions outside test modules.
