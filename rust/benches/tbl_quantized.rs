@@ -1,0 +1,101 @@
+//! TBL-Q — int8 quantized sliding conv vs the f32 sliding kernel and
+//! the im2col+GEMM baseline, across the paper's Fig-1-style shapes
+//! (long single-channel rows, growing k) plus multi-channel TCN-ish
+//! shapes. The int8 arm times the *whole* pipeline the planner runs per
+//! request — activation range scan, quantize, quantized conv — so the
+//! speedup column is honest about quantization overhead, not just the
+//! inner kernel.
+use swsnn::bench::{bench, fmt_duration, BenchConfig, Table};
+use swsnn::conv::{
+    conv1d_im2col_epilogue_into, conv1d_quantized_into, conv1d_sliding_with_into,
+    quantized_scratch_len, Conv1dParams, QuantParams,
+};
+use swsnn::exec::Executor;
+use swsnn::ops::Epilogue;
+use swsnn::workload::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let ex1 = Executor::new(1);
+    let mut rng = Rng::new(0x18B1);
+    let cases: Vec<Conv1dParams> = vec![
+        Conv1dParams::new(1, 1, 1_000_000, 3),
+        Conv1dParams::new(1, 1, 1_000_000, 15),
+        Conv1dParams::new(1, 1, 1_000_000, 63),
+        Conv1dParams::new(8, 16, 100_000, 5),
+        Conv1dParams::new(16, 16, 50_000, 3).with_dilation(4).with_same_pad(),
+    ];
+    let mut table = Table::new(
+        "TBL-Q — f32 sliding vs int8 quantized sliding vs im2col+GEMM (1 thread)",
+        &["c_in", "c_out", "n", "k", "dil", "f32_sliding", "int8_sliding", "im2col_gemm", "int8_speedup"],
+    );
+    for p in &cases {
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+        let bias = Some(b.as_slice());
+
+        let mut y = vec![0.0f32; p.y_len()];
+        let m_f32 = bench(&cfg, || {
+            conv1d_sliding_with_into(
+                &ex1,
+                std::hint::black_box(&x),
+                &w,
+                bias,
+                p,
+                Epilogue::None,
+                std::hint::black_box(&mut y),
+            );
+        });
+
+        // int8 pipeline, weights pre-quantized once (plan compile does
+        // this too); activations scanned + quantized per call.
+        let wp = QuantParams::from_slice(&w);
+        let qw = wp.quantize_slice(&w);
+        let mut qx = vec![0i8; p.x_len()];
+        let mut acc = vec![0i32; quantized_scratch_len(p)];
+        let m_int8 = bench(&cfg, || {
+            let xp = QuantParams::from_slice(std::hint::black_box(&x));
+            xp.quantize_slice_into(&x, &mut qx);
+            conv1d_quantized_into(
+                &qx,
+                &qw,
+                xp,
+                wp,
+                bias,
+                p,
+                Epilogue::None,
+                &mut acc,
+                std::hint::black_box(&mut y),
+            );
+        });
+
+        let mut col = vec![0.0f32; p.c_in * p.k * p.n_out()];
+        let m_gemm = bench(&cfg, || {
+            conv1d_im2col_epilogue_into(
+                &ex1,
+                std::hint::black_box(&x),
+                &w,
+                bias,
+                p,
+                Epilogue::None,
+                &mut col,
+                std::hint::black_box(&mut y),
+            );
+        });
+
+        let speedup = m_f32.median_ns() / m_int8.median_ns();
+        table.row(vec![
+            p.c_in.to_string(),
+            p.c_out.to_string(),
+            p.n.to_string(),
+            p.k.to_string(),
+            p.dilation.to_string(),
+            fmt_duration(m_f32.median),
+            fmt_duration(m_int8.median),
+            fmt_duration(m_gemm.median),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    table.emit("quantized.csv");
+}

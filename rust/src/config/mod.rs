@@ -39,6 +39,12 @@ pub enum LayerConfig {
         /// "sliding_pair"`; omit or `"auto"` to let the cost model
         /// choose). Beats the deployment-level backend either way.
         backend: Option<ConvBackend>,
+        /// Per-layer opt-in to int8 quantized execution
+        /// (`quantize = "int8"`). The planner never auto-picks the
+        /// quantized kernel for layers that did not opt in; with
+        /// autotune it is probed against f32 and only wins on measured
+        /// time. Absent → f32 only.
+        quantize: bool,
     },
     Pool {
         kind: String,
@@ -218,6 +224,15 @@ fn model_from_doc(doc: &ConfigDoc) -> Result<ModelConfig, String> {
                 same_pad: doc.get_bool(&format!("{prefix}.same_pad")).unwrap_or(true),
                 relu: doc.get_bool(&format!("{prefix}.relu")).unwrap_or(true),
                 backend: layer_backend()?,
+                quantize: match doc.get_str(&format!("{prefix}.quantize")) {
+                    // A mistyped scheme must fail loudly, mirroring
+                    // serve.autotune: the operator believes int8 is on.
+                    None | Some("none") => false,
+                    Some("int8") => true,
+                    Some(s) => {
+                        return Err(format!("{prefix}.quantize: unknown scheme {s:?} (want \"int8\")"))
+                    }
+                },
             },
             "pool" => LayerConfig::Pool {
                 kind: doc
@@ -398,6 +413,25 @@ backend = "sliding"
         // Unknown per-layer backend is an error.
         let bad = text.replace("\"im2col_gemm\"", "\"magic\"");
         assert!(load_config(&bad).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn per_layer_quantize_key() {
+        // Absent → f32 only.
+        let (m, _) = load_config(EXAMPLE).unwrap();
+        assert!(matches!(m.layers[0], LayerConfig::Conv { quantize: false, .. }));
+        let text = EXAMPLE.replace(
+            "type = \"conv\"\nc_out = 8\nk = 7\n",
+            "type = \"conv\"\nc_out = 8\nk = 7\nquantize = \"int8\"\n",
+        );
+        let (m, _) = load_config(&text).unwrap();
+        assert!(matches!(m.layers[0], LayerConfig::Conv { quantize: true, .. }));
+        // Explicit off and unknown scheme.
+        let off = text.replace("\"int8\"", "\"none\"");
+        let (m, _) = load_config(&off).unwrap();
+        assert!(matches!(m.layers[0], LayerConfig::Conv { quantize: false, .. }));
+        let bad = text.replace("\"int8\"", "\"int4\"");
+        assert!(load_config(&bad).unwrap_err().contains("int4"));
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use im2col::{
 };
 pub use matmul_reform::conv1d_tap_gemm;
 pub use params::{BackendChoice, Conv1dParams, ConvBackend};
-pub use quantized::{conv1d_quantized, QuantParams};
+pub use quantized::{conv1d_quantized, conv1d_quantized_into, quantized_scratch_len, QuantParams};
 pub use sliding::{
     conv1d_pair, conv1d_pair_tree, conv1d_sliding, conv1d_sliding_into, conv1d_sliding_with,
     conv1d_sliding_with_into,

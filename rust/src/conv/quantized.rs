@@ -5,8 +5,16 @@
 //! problem" — this module is that claim made concrete: the identical
 //! slid-accumulate schedule over `i8` activations/weights with `i32`
 //! accumulation and per-tensor affine (scale, zero-point)
-//! (de)quantization. The operator genericity of the sliding family is
-//! what makes this a ~100-line addition rather than a new kernel stack.
+//! (de)quantization. Since PR 8 this is a real planner backend
+//! ([`conv1d_quantized_into`]: full stride/dilation/pad, fused
+//! [`Epilogue`], `_into` contract, runtime-dispatched int8 SIMD inner
+//! loops), not just the PR 0 stride-1 study path. The arithmetic is
+//! pure `i32` — exactly associative — so every SIMD tier is
+//! **bit-identical**, a strictly stronger parity story than the f32
+//! kernels'. See docs/quantization.md for the affine scheme and the
+//! zero-point folding argument.
+
+use crate::ops::Epilogue;
 
 use super::Conv1dParams;
 
@@ -27,6 +35,23 @@ impl QuantParams {
         Self { scale, zero_point }
     }
 
+    /// Parameters covering the observed range of `xs` (the dynamic
+    /// activation-quantization pass; non-finite values are skipped so a
+    /// stray NaN cannot poison the scale).
+    pub fn from_slice(xs: &[f32]) -> Self {
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &x in xs {
+            if x < lo {
+                lo = x;
+            }
+            if x > hi {
+                hi = x;
+            }
+        }
+        Self::from_range(lo, hi)
+    }
+
     pub fn quantize(&self, x: f32) -> i8 {
         ((x / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
     }
@@ -35,20 +60,32 @@ impl QuantParams {
         (q - self.zero_point) as f32 * self.scale
     }
 
+    /// Quantize a slice into a caller-provided destination (the hot
+    /// form: the planner recycles its activation-quant scratch).
+    /// `dst.len()` must equal `xs.len()`; every element is overwritten.
+    pub fn quantize_slice_into(&self, xs: &[f32], dst: &mut [i8]) {
+        assert_eq!(dst.len(), xs.len(), "dst length");
+        for (d, &x) in dst.iter_mut().zip(xs) {
+            *d = self.quantize(x);
+        }
+    }
+
     pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
-        // alloc-ok: one-time quantization of inputs/weights (setup).
-        xs.iter().map(|&x| self.quantize(x)).collect()
+        // alloc-ok: Vec-returning wrapper; quantize_slice_into is the hot path.
+        let mut dst = vec![0i8; xs.len()];
+        self.quantize_slice_into(xs, &mut dst);
+        dst
     }
 }
 
-/// Quantized 1-D convolution (single channel per pair, batched/channelled
-/// like the f32 backends): i8 inputs/weights, i32 accumulators, f32 out.
-///
-/// Zero-point handling: with `x = sx(qx − zx)` and `w = sw(qw − zw)`,
-/// `Σ w·x = sx·sw·Σ (qx−zx)(qw−zw)` — the cross terms are folded by
-/// accumulating `Σ qw·qx − zw·Σ qx − zx·Σ qw + k·zx·zw` where `Σ qx`
-/// per window is *itself a sliding window sum* (Eq. 3 with + over i32),
-/// so even the correction term rides the paper's machinery.
+/// Scratch length [`conv1d_quantized_into`] requires: the i32
+/// accumulator row plus the Σqx window-sum row.
+pub fn quantized_scratch_len(p: &Conv1dParams) -> usize {
+    2 * p.n_out()
+}
+
+/// Quantized 1-D convolution, `Vec`-returning study/demo form (no bias,
+/// no epilogue). The planner path is [`conv1d_quantized_into`].
 pub fn conv1d_quantized(
     qx: &[i8],
     qw: &[i8],
@@ -56,59 +93,162 @@ pub fn conv1d_quantized(
     w_params: QuantParams,
     p: &Conv1dParams,
 ) -> Vec<f32> {
-    assert_eq!(p.stride, 1, "quantized path implements stride 1");
-    assert_eq!(p.pad, 0, "quantized path implements valid mode");
+    // alloc-ok: Vec-returning wrapper; conv1d_quantized_into is the hot path.
+    let mut y = vec![0.0f32; p.y_len()];
+    // alloc-ok: wrapper-owned i32 scratch (acc + winsum rows).
+    let mut acc = vec![0i32; quantized_scratch_len(p)];
+    conv1d_quantized_into(qx, qw, x_params, w_params, None, p, Epilogue::None, &mut acc, &mut y);
+    y
+}
+
+/// Quantized 1-D convolution into a caller-provided destination: i8
+/// inputs/weights, i32 accumulators, f32 out. Full stride/dilation/pad
+/// (padded positions behave as real value 0.0 — see below), fused
+/// bias + [`Epilogue`] on the destination write.
+///
+/// Zero-point handling: with `x = sx(qx − zx)` and `w = sw(qw − zw)`,
+/// `Σ w·x = sx·sw·Σ (qx−zx)(qw−zw)` — the cross terms are folded by
+/// accumulating `Σ qw·qx − zw·Σ qx − zx·Σ qw + k·zx·zw` where `Σ qx`
+/// per window is *itself a sliding window sum* (Eq. 3 with + over i32),
+/// so even the correction term rides the paper's machinery. A padded
+/// position contributes `qx = zx`, whose per-tap term
+/// `zx·qw − zw·zx − zx·qw + zx·zw` cancels to exactly 0 — i.e. zero
+/// padding in real space falls out of the folding for free.
+///
+/// `acc` is caller-provided i32 scratch of at least
+/// [`quantized_scratch_len`] elements (contents irrelevant — fully
+/// rewritten per output row). The interior of each row runs the
+/// runtime-dispatched int8 SIMD loops ([`crate::simd::dot_i8_tap`] /
+/// [`crate::simd::sum_i8_tap`]); all tiers are bit-identical because
+/// every accumulator element receives exactly the same i32 products
+/// and i32 addition is exactly associative.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_quantized_into(
+    qx: &[i8],
+    qw: &[i8],
+    x_params: QuantParams,
+    w_params: QuantParams,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+    acc: &mut [i32],
+    y: &mut [f32],
+) {
     assert_eq!(qx.len(), p.x_len(), "input shape");
     assert_eq!(qw.len(), p.w_len(), "filter shape");
-    let n_out = p.n_out();
-    // alloc-ok: Vec-returning i8 study path, not on the plan run path.
-    let mut y = vec![0.0f32; p.y_len()];
-    if n_out == 0 {
-        return y;
+    assert_eq!(y.len(), p.y_len(), "dst length");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), p.c_out, "bias shape");
     }
+    assert!(p.k >= 1 && p.stride >= 1 && p.dilation >= 1);
+    epi.check_len(y.len());
+    crate::check::poison(y);
+    let n_out = p.n_out();
+    if n_out == 0 {
+        return;
+    }
+    assert!(acc.len() >= quantized_scratch_len(p), "acc scratch length");
+    let (accs, winsum) = acc.split_at_mut(n_out);
+    let accs = &mut accs[..n_out];
+    let winsum = &mut winsum[..n_out];
+
     let zx = x_params.zero_point;
     let zw = w_params.zero_point;
     let s = x_params.scale * w_params.scale;
+    let k_total = (p.c_in * p.k) as i32;
+    let corr = k_total * zx * zw;
 
     for b in 0..p.batch {
         for co in 0..p.c_out {
-            let yrow = &mut y[(b * p.c_out + co) * n_out..][..n_out];
-            let mut acc = vec![0i32; n_out]; // alloc-ok: study-path scratch
-            // alloc-ok: Σ qx per window (sliding!) — study-path scratch.
-            let mut qx_winsum = vec![0i32; n_out];
+            let row = b * p.c_out + co;
+            let yrow = &mut y[row * n_out..][..n_out];
+            accs.fill(0);
+            winsum.fill(0);
             let mut qw_sum = 0i32;
             for ci in 0..p.c_in {
                 let xrow = &qx[(b * p.c_in + ci) * p.n..][..p.n];
                 let wrow = &qw[(co * p.c_in + ci) * p.k..][..p.k];
                 for (tap, &wq) in wrow.iter().enumerate() {
-                    let off = tap * p.dilation;
-                    let wq = wq as i32;
-                    qw_sum += wq;
-                    let xs = &xrow[off..off + n_out];
-                    for t in 0..n_out {
-                        let xq = xs[t] as i32;
-                        acc[t] += wq * xq;
-                        if tap == 0 {
-                            // start the Σ qx sliding accumulation
-                        }
-                        qx_winsum[t] += xq;
-                    }
+                    qw_sum += wq as i32;
+                    accumulate_quantized_tap(accs, winsum, xrow, wq, tap, zx, p);
                 }
             }
-            let k_total = (p.c_in * p.k) as i32;
+            let bias_v = bias.map_or(0.0, |bv| bv[co]);
             for t in 0..n_out {
                 // Σ(qx−zx)(qw−zw) = Σqxqw − zw·Σqx − zx·Σqw + k·zx·zw
-                let exact = acc[t] - zw * qx_winsum[t] - zx * qw_sum + k_total * zx * zw;
-                yrow[t] = (exact as f32) * s;
+                let exact = accs[t]
+                    .wrapping_sub(zw.wrapping_mul(winsum[t]))
+                    .wrapping_sub(zx * qw_sum)
+                    .wrapping_add(corr);
+                yrow[t] = (exact as f32) * s + bias_v;
             }
+            epi.apply(yrow, row * n_out);
         }
     }
-    y
+    crate::check::assert_no_poison(y, "conv1d_quantized_into");
+}
+
+/// One filter tap over one channel row: for every output `t`, fold the
+/// input position `t·stride + tap·dilation − pad` into both the product
+/// accumulator and the Σqx window sum. Out-of-range positions (zero
+/// padding) contribute the activation zero point. The in-range interior
+/// takes the SIMD lanes at stride 1 and a scalar gather otherwise; both
+/// add identical i32 terms, so the split never changes a bit.
+fn accumulate_quantized_tap(
+    accs: &mut [i32],
+    winsum: &mut [i32],
+    xrow: &[i8],
+    wq: i8,
+    tap: usize,
+    zx: i32,
+    p: &Conv1dParams,
+) {
+    let n_out = accs.len();
+    let n = p.n;
+    // x index for output t: t·stride + tap·dilation − pad ∈ [0, n)
+    let base = tap as isize * p.dilation as isize - p.pad as isize;
+    let t_lo = if base >= 0 {
+        0usize
+    } else {
+        ((-base) as usize).div_ceil(p.stride)
+    }
+    .min(n_out);
+    let t_hi = if (n as isize) <= base {
+        0usize
+    } else {
+        (((n as isize - base) as usize).div_ceil(p.stride)).min(n_out)
+    }
+    .max(t_lo);
+
+    // Padded head/tail: the position reads as the zero point.
+    let pad_acc = wq as i32 * zx;
+    for t in (0..t_lo).chain(t_hi..n_out) {
+        accs[t] = accs[t].wrapping_add(pad_acc);
+        winsum[t] = winsum[t].wrapping_add(zx);
+    }
+    if t_lo >= t_hi {
+        return;
+    }
+    if p.stride == 1 {
+        let x_off = (t_lo as isize + base) as usize;
+        let xs = &xrow[x_off..x_off + (t_hi - t_lo)];
+        crate::simd::dot_i8_tap(&mut accs[t_lo..t_hi], xs, wq);
+        crate::simd::sum_i8_tap(&mut winsum[t_lo..t_hi], xs);
+    } else {
+        let w = wq as i32;
+        let mut xi = (t_lo as isize * p.stride as isize + base) as usize;
+        for t in t_lo..t_hi {
+            let xq = xrow[xi] as i32;
+            accs[t] = accs[t].wrapping_add(w * xq);
+            winsum[t] = winsum[t].wrapping_add(xq);
+            xi += p.stride;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::conv1d_direct;
+    use super::super::{conv1d_direct, conv1d_sliding};
     use super::*;
     use crate::workload::Rng;
 
@@ -120,6 +260,27 @@ mod tests {
             let back = qp.dequantize(q as i32);
             assert!((back - x).abs() <= qp.scale, "{x} → {q} → {back}");
         }
+    }
+
+    #[test]
+    fn from_slice_covers_range_and_ignores_nan() {
+        let qp = QuantParams::from_slice(&[-1.5, 0.25, f32::NAN, 3.0]);
+        let want = QuantParams::from_range(-1.5, 3.0);
+        assert_eq!(qp, want);
+        // Empty/degenerate input still yields a usable (tiny) scale.
+        let qp = QuantParams::from_slice(&[]);
+        assert!(qp.scale > 0.0);
+    }
+
+    #[test]
+    fn quantize_slice_into_matches_vec() {
+        let mut rng = Rng::new(0x0_A);
+        let xs = rng.vec_uniform(301, -2.0, 2.0);
+        let qp = QuantParams::from_range(-2.0, 2.0);
+        let want = qp.quantize_slice(&xs);
+        let mut dst = vec![77i8; xs.len()];
+        qp.quantize_slice_into(&xs, &mut dst);
+        assert_eq!(dst, want);
     }
 
     #[test]
@@ -149,6 +310,56 @@ mod tests {
         }
     }
 
+    /// Full-generality shapes (stride, dilation, padding, batch, bias,
+    /// epilogue): the `_into` form against the dequantized f32 sliding
+    /// reference, exact up to f32 rounding of the final rescale.
+    #[test]
+    fn quantized_into_full_params_tracks_dequantized_reference() {
+        let mut rng = Rng::new(0x0_B);
+        let shapes = [
+            Conv1dParams::new(1, 1, 120, 5).with_pad(2),
+            Conv1dParams::new(2, 3, 90, 3).with_stride(2).with_pad(1).with_batch(2),
+            Conv1dParams::new(2, 2, 100, 5).with_dilation(3).with_same_pad(),
+            Conv1dParams::new(3, 2, 64, 7).with_stride(3).with_dilation(2).with_pad(4),
+        ];
+        for p in shapes {
+            let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+            let w = rng.vec_uniform(p.w_len(), -0.5, 0.5);
+            let b = rng.vec_uniform(p.c_out, -0.25, 0.25);
+            let xq_p = QuantParams::from_range(-1.0, 1.0);
+            let wq_p = QuantParams::from_range(-0.5, 0.5);
+            let qx = xq_p.quantize_slice(&x);
+            let qw = wq_p.quantize_slice(&w);
+            let x_deq: Vec<f32> = qx.iter().map(|&q| xq_p.dequantize(q as i32)).collect();
+            let w_deq: Vec<f32> = qw.iter().map(|&q| wq_p.dequantize(q as i32)).collect();
+            let mut want = conv1d_sliding(&x_deq, &w_deq, Some(&b), &p);
+            for v in want.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut acc = vec![-7i32; quantized_scratch_len(&p)];
+            let mut got = vec![777.75f32; p.y_len()];
+            conv1d_quantized_into(
+                &qx,
+                &qw,
+                xq_p,
+                wq_p,
+                Some(&b),
+                &p,
+                Epilogue::Relu,
+                &mut acc,
+                &mut got,
+            );
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "{p:?} idx {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn end_to_end_quantization_error_small() {
         // Against the true f32 conv, error is bounded by the quant grid.
@@ -166,5 +377,11 @@ mod tests {
         }
         // 7 taps × per-product grid error — generous bound.
         assert!(worst < 0.05, "quantization error {worst}");
+    }
+
+    #[test]
+    fn empty_output_ok() {
+        let p = Conv1dParams::new(1, 1, 3, 5);
+        assert!(conv1d_quantized(&[0i8; 3], &[0i8; 5], QuantParams::from_range(-1.0, 1.0), QuantParams::from_range(-1.0, 1.0), &p).is_empty());
     }
 }

@@ -126,7 +126,7 @@ fn print_help() {
                        --json (also write bench_results/BENCH_<table>.json), --help\n\
          serve flags:  --autotune (measure kernel choices per layer),\n\
                        --buckets 1,8,32 (batch buckets precompiled at startup)\n\
-         env: SWSNN_THREADS, SWSNN_SIMD=off|generic|sse2|avx2|neon, SWSNN_BENCH_QUICK, SWSNN_BENCH_JSON"
+         env: SWSNN_THREADS, SWSNN_SIMD=off|generic|sse2|avx2|avx512|neon, SWSNN_BENCH_QUICK, SWSNN_BENCH_JSON"
     );
 }
 

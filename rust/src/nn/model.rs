@@ -55,6 +55,9 @@ pub struct Model {
     shape_trace: Vec<(usize, usize)>,
     /// Per-layer backend override (None = planner decides).
     backend_overrides: Vec<Option<ConvBackend>>,
+    /// Per-layer int8 opt-in (`quantize = "int8"` on conv layers). The
+    /// planner only considers the quantized kernel where this is true.
+    quantize_flags: Vec<bool>,
 }
 
 impl Model {
@@ -67,10 +70,12 @@ impl Model {
         }
         let mut layers = Vec::new();
         let mut overrides = Vec::new();
+        let mut quantize_flags = Vec::new();
         let mut c = cfg.c_in;
         let mut n = cfg.seq_len;
         let mut trace = Vec::new();
         for (idx, lc) in cfg.layers.iter().enumerate() {
+            quantize_flags.push(matches!(lc, LayerConfig::Conv { quantize: true, .. }));
             let (layer, over) = match lc {
                 LayerConfig::Conv {
                     c_out,
@@ -80,6 +85,7 @@ impl Model {
                     same_pad,
                     relu,
                     backend,
+                    quantize: _,
                 } => (
                     Layer::conv(rng, c, *c_out, *k, *stride, *dilation, *same_pad, *relu),
                     *backend,
@@ -119,6 +125,7 @@ impl Model {
             layers,
             shape_trace: trace,
             backend_overrides: overrides,
+            quantize_flags,
         })
     }
 
@@ -139,6 +146,11 @@ impl Model {
     /// Config-level backend override for layer `i`, if any.
     pub(crate) fn backend_override(&self, i: usize) -> Option<ConvBackend> {
         self.backend_overrides.get(i).copied().flatten()
+    }
+
+    /// Whether layer `i` opted into int8 execution (`quantize = "int8"`).
+    pub(crate) fn quantize_hint(&self, i: usize) -> bool {
+        self.quantize_flags.get(i).copied().unwrap_or(false)
     }
 
     /// Final (channels, n) shape per input row. [`Model::init`] rejects

@@ -99,6 +99,11 @@ pub enum PlanKernel {
     /// Literal Eq. 7–9 pair-operator prefix sum (allocates; kept for
     /// fidelity, never chosen by the cost model).
     SlidingPair,
+    /// int8 sliding conv: dynamic activation quantization into the
+    /// plan's i8 scratch, pre-quantized weights, i32 accumulation
+    /// (bit-identical across SIMD tiers). Only reachable for layers
+    /// that opted in via `quantize = "int8"`.
+    QuantizedSliding,
     /// Blocked-GEMM gemv (dense layers).
     Gemm,
     /// Sliding-sum pooling.
@@ -117,6 +122,7 @@ impl PlanKernel {
             PlanKernel::SmallK => "small_k",
             PlanKernel::Direct => "direct",
             PlanKernel::SlidingPair => "sliding_pair",
+            PlanKernel::QuantizedSliding => "int8",
             PlanKernel::Gemm => "gemm",
             PlanKernel::Pool => "pool",
             PlanKernel::FusedChain => "fused_chain",
@@ -132,6 +138,7 @@ fn parse_conv_kernel(name: &str) -> Option<PlanKernel> {
         "im2col" => Some(PlanKernel::Im2col),
         "small_k" => Some(PlanKernel::SmallK),
         "direct" => Some(PlanKernel::Direct),
+        "int8" => Some(PlanKernel::QuantizedSliding),
         _ => None,
     }
 }
@@ -405,10 +412,18 @@ fn build_chain(raw: &[Step], batch: usize, cfg: &PlannerConfig) -> Result<ChainP
 
 /// The scratch a plan executes in: one flat arena
 /// `[act A | act B | tmp | col | fuse | pool]`, grown once to the
-/// plan's precomputed size and recycled dirty across requests.
+/// plan's precomputed size and recycled dirty across requests, plus
+/// the typed side regions quantized steps need (i8 activation quant
+/// buffer and i32 accumulator rows — f32 arena space cannot be
+/// reinterpreted without aliasing the audit story).
 #[derive(Clone, Debug, Default)]
 pub struct PlanScratch {
     arena: Vec<f32>,
+    /// Quantized activations of the current int8 step (largest
+    /// quantized input across the plan's steps).
+    qbuf: Vec<i8>,
+    /// i32 accumulator + window-sum rows for int8 steps.
+    qacc: Vec<i32>,
 }
 
 impl PlanScratch {
@@ -552,6 +567,10 @@ struct TuneKey {
     shape: Conv1dParams,
     tier: SimdTier,
     threads: usize,
+    /// Whether the int8 kernel was among the candidates (the layer
+    /// opted in via `quantize = "int8"`). Part of the key so a shape
+    /// probed f32-only never answers for an opted-in layer.
+    quant: bool,
 }
 
 /// Key for a fused-vs-unfused segment decision: the segment signature
@@ -773,6 +792,9 @@ impl TuneCache {
                 if k < 1 || stride < 1 || dilation < 1 || threads < 1 {
                     continue;
                 }
+                // Files written before the int8 kernel existed carry no
+                // "quant" field — those probes ran f32-only.
+                let quant = obj_field(obj, "quant") == Some("true");
                 let key = TuneKey {
                     shape: Conv1dParams {
                         batch,
@@ -786,6 +808,7 @@ impl TuneCache {
                     },
                     tier,
                     threads,
+                    quant,
                 };
                 if !g.entries.iter().any(|(existing, _)| *existing == key) {
                     g.entries.push((key, kernel));
@@ -856,7 +879,7 @@ fn render_tune_json(entries: &[(TuneKey, PlanKernel)], segments: &[(SegKey, bool
         .iter()
         .map(|(k, v)| {
             format!(
-                "{{\"batch\":{},\"c_in\":{},\"c_out\":{},\"n\":{},\"k\":{},\"stride\":{},\"dilation\":{},\"pad\":{},\"tier\":\"{}\",\"threads\":{},\"kernel\":\"{}\"}}",
+                "{{\"batch\":{},\"c_in\":{},\"c_out\":{},\"n\":{},\"k\":{},\"stride\":{},\"dilation\":{},\"pad\":{},\"tier\":\"{}\",\"threads\":{},\"quant\":{},\"kernel\":\"{}\"}}",
                 k.shape.batch,
                 k.shape.c_in,
                 k.shape.c_out,
@@ -867,6 +890,7 @@ fn render_tune_json(entries: &[(TuneKey, PlanKernel)], segments: &[(SegKey, bool
                 k.shape.pad,
                 k.tier.name(),
                 k.threads,
+                k.quant,
                 v.name()
             )
         })
@@ -965,6 +989,25 @@ fn obj_usize(obj: &str, key: &str) -> Option<usize> {
     obj_field(obj, key)?.parse().ok()
 }
 
+/// Pre-quantized weights for a layer compiled to the int8 kernel:
+/// built once at [`Plan::compile`] from the actual weight range, so
+/// requests never touch f32 weights on a quantized step.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    qw: Vec<i8>,
+    w_params: conv::QuantParams,
+}
+
+impl QuantLayer {
+    fn from_weights(w: &[f32]) -> Self {
+        let w_params = conv::QuantParams::from_slice(w);
+        Self {
+            qw: w_params.quantize_slice(w),
+            w_params,
+        }
+    }
+}
+
 /// Reused probe buffers (compile-time only — probing allocates once per
 /// compile, never on the request path).
 #[derive(Default)]
@@ -972,6 +1015,9 @@ struct ProbeScratch {
     x: Vec<f32>,
     y: Vec<f32>,
     col: Vec<f32>,
+    /// int8 probe scratch (activation quant buffer + i32 accumulators).
+    qx: Vec<i8>,
+    qacc: Vec<i32>,
 }
 
 impl ProbeScratch {
@@ -988,12 +1034,17 @@ impl ProbeScratch {
 }
 
 /// Run every candidate kernel against the layer's real shape and
-/// weights; returns the measured times in candidate order.
+/// weights; returns the measured times in candidate order. `quant`
+/// adds the int8 kernel to the field (opted-in layers only); its probe
+/// times the *whole* per-request pipeline — range scan, activation
+/// quantization, and the quantized conv — so the measurement reflects
+/// what execution actually pays.
 fn probe_candidates(
     ex: &Executor,
     w: &[f32],
     bias: Option<&[f32]>,
     p: &Conv1dParams,
+    quant: bool,
     scratch: &mut ProbeScratch,
 ) -> Result<Vec<ProbeResult>> {
     let mut cands = vec![PlanKernel::Sliding];
@@ -1002,35 +1053,55 @@ fn probe_candidates(
     }
     cands.push(PlanKernel::Im2col);
     cands.push(PlanKernel::Direct);
+    // Last: ties go to the earlier (f32) candidate, so int8 must
+    // measure strictly faster to win.
+    if quant {
+        cands.push(PlanKernel::QuantizedSliding);
+    }
     scratch.fill(p);
+    let ql = if quant {
+        scratch.qx.resize(p.x_len(), 0);
+        scratch.qacc.resize(conv::quantized_scratch_len(p), 0);
+        Some(QuantLayer::from_weights(w))
+    } else {
+        None
+    };
     let mut out = Vec::with_capacity(cands.len());
     for kernel in cands {
+        let mut run_once = |scratch: &mut ProbeScratch| -> Result<()> {
+            if kernel == PlanKernel::QuantizedSliding {
+                let ql = ql.as_ref().expect("quant candidate implies weights");
+                run_conv_quantized(
+                    &scratch.x,
+                    ql,
+                    bias,
+                    p,
+                    Epilogue::None,
+                    &mut scratch.qx,
+                    &mut scratch.qacc,
+                    &mut scratch.y,
+                );
+                Ok(())
+            } else {
+                run_conv(
+                    ex,
+                    kernel,
+                    &scratch.x,
+                    w,
+                    bias,
+                    p,
+                    Epilogue::None,
+                    &mut scratch.col,
+                    &mut scratch.y,
+                )
+            }
+        };
         // Untimed warm-up: fault in buffers, settle the dispatch.
-        run_conv(
-            ex,
-            kernel,
-            &scratch.x,
-            w,
-            bias,
-            p,
-            Epilogue::None,
-            &mut scratch.col,
-            &mut scratch.y,
-        )?;
+        run_once(scratch)?;
         let mut best = f64::INFINITY;
         for _ in 0..PROBE_ITERS {
             let t0 = Instant::now();
-            run_conv(
-                ex,
-                kernel,
-                &scratch.x,
-                w,
-                bias,
-                p,
-                Epilogue::None,
-                &mut scratch.col,
-                &mut scratch.y,
-            )?;
+            run_once(scratch)?;
             best = best.min(t0.elapsed().as_secs_f64() * 1e6);
         }
         out.push(ProbeResult { kernel, micros: best });
@@ -1041,12 +1112,14 @@ fn probe_candidates(
 /// Measured kernel choice for one layer: consult the [`TuneCache`],
 /// probe on a miss, record the decision on the plan's tune log either
 /// way.
+#[allow(clippy::too_many_arguments)]
 fn measured_kernel(
     ex: &Executor,
     layer: usize,
     p: &Conv1dParams,
     w: &[f32],
     bias: Option<&[f32]>,
+    quant: bool,
     probe: &mut ProbeScratch,
     tunes: &mut Vec<LayerTune>,
 ) -> Result<PlanKernel> {
@@ -1054,6 +1127,7 @@ fn measured_kernel(
         shape: *p,
         tier: crate::simd::tier(),
         threads: ex.threads(),
+        quant,
     };
     if let Some(kernel) = TuneCache::global().lookup(&key) {
         tunes.push(LayerTune {
@@ -1064,7 +1138,7 @@ fn measured_kernel(
         });
         return Ok(kernel);
     }
-    let probes = probe_candidates(ex, w, bias, p, probe)?;
+    let probes = probe_candidates(ex, w, bias, p, quant, probe)?;
     let mut chosen = probes[0];
     for pr in &probes[1..] {
         // Strict `<`: ties keep the earlier candidate (sliding first —
@@ -1086,8 +1160,10 @@ fn measured_kernel(
 }
 
 /// A compiled execution plan for one `(model, batch)` pair. Cheap to
-/// clone (no parameter copies — weights stay in the [`Model`] the plan
-/// is run against).
+/// clone — no f32 parameter copies (weights stay in the [`Model`] the
+/// plan is run against); layers compiled to the int8 kernel carry
+/// their pre-quantized i8 weights, which clone at a quarter of f32
+/// size and only exist for opted-in layers.
 #[derive(Clone, Debug)]
 pub struct Plan {
     batch: usize,
@@ -1110,6 +1186,15 @@ pub struct Plan {
     in_len: usize,
     out_c: usize,
     out_n: usize,
+    /// Pre-quantized weights per model layer (`None` = f32 execution;
+    /// `Some` exactly where the compiled kernel is
+    /// [`PlanKernel::QuantizedSliding`]).
+    quant: Vec<Option<QuantLayer>>,
+    /// Elements for the i8 activation-quant scratch (largest quantized
+    /// step input; zero when nothing quantized).
+    qbuf_len: usize,
+    /// Elements for the i32 accumulator scratch of quantized steps.
+    qacc_len: usize,
     /// Autotune audit log (empty unless compiled with
     /// [`PlannerConfig::autotune`]).
     tunes: Vec<LayerTune>,
@@ -1157,7 +1242,11 @@ fn kernel_for_backend(b: ConvBackend) -> PlanKernel {
 
 /// Kernel choice for one conv-shaped layer. Priority: per-layer TOML
 /// override > fixed deployment backend > measured probe (autotune) >
-/// shape heuristic.
+/// per-layer `quantize = "int8"` opt-in > shape heuristic. An explicit
+/// backend name (per-layer or deployment-fixed) always wins — naming a
+/// kernel beats an opt-in hint. Under autotune the opt-in adds int8 to
+/// the probe field, so it only runs where it measures faster; without
+/// autotune the opt-in is taken at its word.
 #[allow(clippy::too_many_arguments)]
 fn select_kernel(
     model: &Model,
@@ -1170,13 +1259,15 @@ fn select_kernel(
     probe: &mut ProbeScratch,
     tunes: &mut Vec<LayerTune>,
 ) -> Result<PlanKernel> {
+    let quant = model.quantize_hint(layer);
     Ok(match model.backend_override(layer) {
         Some(b) => kernel_for_backend(b),
         None => match cfg.backend {
             BackendChoice::Fixed(b) => kernel_for_backend(b),
             BackendChoice::Auto if cfg.autotune => {
-                measured_kernel(ex, layer, p, w, bias, probe, tunes)?
+                measured_kernel(ex, layer, p, w, bias, quant, probe, tunes)?
             }
+            BackendChoice::Auto if quant => PlanKernel::QuantizedSliding,
             BackendChoice::Auto => choose_kernel(p),
         },
     })
@@ -1203,6 +1294,8 @@ impl Plan {
         // double-probe a layer).
         let mut raw: Vec<Step> = Vec::with_capacity(nlayers);
         let (mut tmp_len, mut col_len) = (0usize, 0usize);
+        let (mut qbuf_len, mut qacc_len) = (0usize, 0usize);
+        let mut quant: Vec<Option<QuantLayer>> = vec![None; nlayers];
         let mut tunes: Vec<LayerTune> = Vec::new();
         let mut probe = ProbeScratch::default();
         for i in 0..nlayers {
@@ -1232,6 +1325,14 @@ impl Plan {
                         select_kernel(model, cfg, i, &p, w, Some(b), ex, &mut probe, &mut tunes)?;
                     if kernel == PlanKernel::Im2col {
                         col_len = col_len.max(p.c_in * p.k * p.n_out());
+                    }
+                    if kernel == PlanKernel::QuantizedSliding {
+                        // Weight-quantization pass: quantize once here
+                        // from the actual weight range; requests only
+                        // ever quantize activations.
+                        quant[i] = Some(QuantLayer::from_weights(w));
+                        qbuf_len = qbuf_len.max(p.x_len());
+                        qacc_len = qacc_len.max(conv::quantized_scratch_len(&p));
                     }
                     (kernel, StepOp::Conv { p, relu: *relu })
                 }
@@ -1364,6 +1465,9 @@ impl Plan {
             in_len: batch * model.c_in * model.seq_len,
             out_c: c,
             out_n: n,
+            quant,
+            qbuf_len,
+            qacc_len,
             tunes,
             seg_tunes,
         };
@@ -1413,6 +1517,20 @@ impl Plan {
                         crate::invariant!(
                             p.c_in * p.k * p.n_out() <= self.col_len,
                             "arena audit: step {si} im2col columns exceed the col region"
+                        );
+                    }
+                    if s.kernel == PlanKernel::QuantizedSliding {
+                        crate::invariant!(
+                            p.x_len() <= self.qbuf_len,
+                            "arena audit: step {si} quantized input exceeds the qbuf region"
+                        );
+                        crate::invariant!(
+                            conv::quantized_scratch_len(p) <= self.qacc_len,
+                            "arena audit: step {si} quantized accumulators exceed the qacc region"
+                        );
+                        crate::invariant!(
+                            self.quant.get(s.layer).is_some_and(|q| q.is_some()),
+                            "arena audit: step {si} quantized step has no pre-quantized weights"
                         );
                     }
                 }
@@ -1593,6 +1711,12 @@ impl Plan {
         if scratch.arena.len() < arena_len {
             scratch.arena.resize(arena_len, 0.0);
         }
+        if scratch.qbuf.len() < self.qbuf_len {
+            scratch.qbuf.resize(self.qbuf_len, 0);
+        }
+        if scratch.qacc.len() < self.qacc_len {
+            scratch.qacc.resize(self.qacc_len, 0);
+        }
         out.resize(self.batch * self.out_c * self.out_n, 0.0);
         crate::check::poison(out.as_mut_slice());
         let (reg_a, rest) = scratch.arena.split_at_mut(self.act_len);
@@ -1614,7 +1738,21 @@ impl Plan {
                 } else {
                     &mut reg_dst[..step.out_len]
                 };
-                exec_step(ex, model, step, src, dst, tmp_reg, col_reg, fuse_reg, pool_reg)?;
+                let qlayer = self.quant.get(step.layer).and_then(|q| q.as_ref());
+                exec_step(
+                    ex,
+                    model,
+                    step,
+                    src,
+                    dst,
+                    tmp_reg,
+                    col_reg,
+                    fuse_reg,
+                    pool_reg,
+                    qlayer,
+                    &mut scratch.qbuf,
+                    &mut scratch.qacc,
+                )?;
             }
             std::mem::swap(&mut reg_src, &mut reg_dst);
         }
@@ -1638,6 +1776,9 @@ fn exec_step(
     col: &mut [f32],
     fuse: &mut [f32],
     pool_scratch: &mut [f32],
+    qlayer: Option<&QuantLayer>,
+    qbuf: &mut [i8],
+    qacc: &mut [i32],
 ) -> Result<()> {
     if let StepOp::Chain(chain) = &step.op {
         return run_fused_chain(ex, model, chain, src, fuse, dst);
@@ -1646,6 +1787,13 @@ fn exec_step(
     match (&step.op, layer) {
         (StepOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
             let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+            if step.kernel == PlanKernel::QuantizedSliding {
+                let Some(ql) = qlayer else {
+                    bail!("quantized step {} has no pre-quantized weights", step.layer);
+                };
+                run_conv_quantized(src, ql, Some(b), p, epi, qbuf, qacc, dst);
+                return Ok(());
+            }
             run_conv(ex, step.kernel, src, w, Some(b), p, epi, col, dst)
         }
         (StepOp::Residual { p }, Layer::Residual { w1, b1, w2, b2, .. }) => {
@@ -2117,11 +2265,36 @@ fn run_conv(
             y.copy_from_slice(&v);
             epi.apply(y, 0);
         }
+        PlanKernel::QuantizedSliding => {
+            bail!("quantized steps resolve through the plan's QuantLayer, not run_conv")
+        }
         PlanKernel::Gemm | PlanKernel::Pool | PlanKernel::FusedChain => {
             bail!("non-conv kernel {} in a conv step", kernel.name())
         }
     }
     Ok(())
+}
+
+/// Execute one int8 conv step: scan the f32 activations for their
+/// dynamic range, quantize them into the plan's i8 scratch, and run the
+/// quantized sliding kernel over pre-quantized weights. Serial over
+/// `(batch, c_out)` rows and pure i32 inside, so output is
+/// bit-identical across thread counts *and* SIMD tiers.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_quantized(
+    x: &[f32],
+    ql: &QuantLayer,
+    bias: Option<&[f32]>,
+    p: &Conv1dParams,
+    epi: Epilogue<'_>,
+    qbuf: &mut [i8],
+    qacc: &mut [i32],
+    y: &mut [f32],
+) {
+    let x_params = conv::QuantParams::from_slice(x);
+    let qx = &mut qbuf[..x.len()];
+    x_params.quantize_slice_into(x, qx);
+    conv::conv1d_quantized_into(qx, &ql.qw, x_params, ql.w_params, bias, p, epi, qacc, y);
 }
 
 // xtask: end-hot
@@ -2399,6 +2572,7 @@ stride = 2
             same_pad: true,
             relu: true,
             backend,
+            quantize: false,
         };
         let cfg = PlannerConfig {
             backend: BackendChoice::Fixed(ConvBackend::Sliding),
@@ -2568,8 +2742,16 @@ stride = 2
             shape: Conv1dParams::new(3, 4, 100, 5).with_batch(2).with_same_pad(),
             tier: SimdTier::Generic,
             threads: 3,
+            quant: false,
         };
         assert_eq!(cache.insert(key, PlanKernel::Im2col), PlanKernel::Im2col);
+        // The same shape with int8 eligibility is a distinct key and an
+        // int8 decision round-trips through the file format.
+        let qkey = TuneKey { quant: true, ..key };
+        assert_eq!(
+            cache.insert(qkey, PlanKernel::QuantizedSliding),
+            PlanKernel::QuantizedSliding
+        );
         let seg: SegKey = (
             "b2+conv_ci1co2n64k3s1d1p0r1+pool_maxc2n62w2s2".into(),
             SimdTier::Generic,
@@ -2583,8 +2765,9 @@ stride = 2
         ));
         cache.save_to(&path).unwrap();
         let fresh = TuneCache::default();
-        assert_eq!(fresh.load_from(&path).unwrap(), 2, "both entries merge");
+        assert_eq!(fresh.load_from(&path).unwrap(), 3, "all entries merge");
         assert_eq!(fresh.lookup(&key), Some(PlanKernel::Im2col));
+        assert_eq!(fresh.lookup(&qkey), Some(PlanKernel::QuantizedSliding));
         assert_eq!(fresh.lookup_segment(&seg), Some(true));
         // A different machine configuration (threads) still misses.
         let other = TuneKey { threads: 4, ..key };
@@ -2611,6 +2794,7 @@ stride = 2
                 shape: Conv1dParams::new(2, 3, 80, 3).with_batch(2),
                 tier: SimdTier::Generic,
                 threads: 2,
+                quant: false,
             },
             PlanKernel::Sliding,
         );
@@ -2778,5 +2962,128 @@ backend = "direct"
         .unwrap();
         assert_eq!(plan.kernels(), vec![PlanKernel::Direct]);
         assert!(plan.tuning().is_empty(), "override must not probe");
+    }
+
+    const QCFG: &str = r#"
+[model]
+name = "quant_t"
+c_in = 2
+seq_len = 96
+
+[layer.0]
+type = "conv"
+c_out = 3
+k = 5
+quantize = "int8"
+
+[layer.1]
+type = "conv"
+c_out = 2
+k = 3
+"#;
+
+    /// The per-layer `quantize = "int8"` opt-in compiles that layer — and
+    /// only that layer — to the int8 kernel under `Auto` without
+    /// autotune, and the quantized plan tracks the f32 reference within
+    /// a bound derived from the quantization scales (the accuracy gate).
+    #[test]
+    fn quantize_opt_in_compiles_int8_and_tracks_f32() {
+        let (mc, _) = load_config(QCFG).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(21)).unwrap();
+        let plan = Plan::compile(&m, 2, &PlannerConfig::default()).unwrap();
+        let kernels = plan.layer_kernels();
+        assert_eq!(kernels[0], PlanKernel::QuantizedSliding, "{}", plan.describe());
+        assert_ne!(kernels[1], PlanKernel::QuantizedSliding, "opt-in is per-layer");
+        assert!(plan.qbuf_len > 0 && plan.qacc_len > 0, "quantized scratch reserved");
+        assert!(plan.describe().contains("int8"), "{}", plan.describe());
+        let mut rng = Rng::new(22);
+        let x = rng.vec_uniform(2 * 2 * 96, -1.0, 1.0);
+        let mut got = Vec::new();
+        plan.run_into(&m, &x, &mut PlanScratch::default(), &mut got)
+            .unwrap();
+        let mut want = Vec::new();
+        m.forward_eager_into(
+            &x,
+            2,
+            ConvBackend::Sliding,
+            &mut crate::nn::EagerScratch::default(),
+            &mut want,
+        )
+        .unwrap();
+        assert_eq!(got.len(), want.len());
+        let worst = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // Derived bound: per-product error ≤ |x|·sw/2 + |w|·sx/2 +
+        // sx·sw/4 over c_in·k products (layer 0), amplified through
+        // layer 1 by at most its own absolute-weight sum per output.
+        let amax = |v: &[f32]| v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let layers = m.layers();
+        let Layer::Conv { w: w0, .. } = &layers[0] else { panic!("layer 0 is a conv") };
+        let Layer::Conv { w: w1, .. } = &layers[1] else { panic!("layer 1 is a conv") };
+        let (xm, w0m) = (amax(&x), amax(w0));
+        let (sx, sw) = (2.0 * xm / 255.0, 2.0 * w0m / 255.0);
+        let e0 = (2 * 5) as f32 * (xm * sw * 0.5 + w0m * sx * 0.5 + sx * sw * 0.25) + 1e-4;
+        let bound = e0 * (1.0 + (3 * 3) as f32 * amax(w1));
+        assert!(
+            worst <= bound,
+            "quantization error {worst} exceeds the derived gate {bound}"
+        );
+    }
+
+    /// Under autotune, int8 joins the probe field only for opted-in
+    /// layers; the decision lands in the tune log either way and the
+    /// compiled plan executes.
+    #[test]
+    fn autotune_probes_int8_only_for_opted_in_layers() {
+        let (mc, _) = load_config(QCFG).unwrap();
+        let m = Model::init(&mc, &mut Rng::new(23)).unwrap();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Auto,
+            autotune: true,
+            ..PlannerConfig::default()
+        };
+        // Uncommon batch so other tests cannot have pre-seeded the keys.
+        let plan = Plan::compile(&m, 7, &cfg).unwrap();
+        assert_eq!(plan.tuning().len(), 2);
+        let t0 = &plan.tuning()[0];
+        let t1 = &plan.tuning()[1];
+        if !t0.cached {
+            assert!(
+                t0.probes.iter().any(|pr| pr.kernel == PlanKernel::QuantizedSliding),
+                "int8 probed for the opted-in layer: {t0:?}"
+            );
+        }
+        if !t1.cached {
+            assert!(
+                t1.probes.iter().all(|pr| pr.kernel != PlanKernel::QuantizedSliding),
+                "int8 must not be probed without opt-in: {t1:?}"
+            );
+        }
+        let mut rng = Rng::new(24);
+        let x = rng.vec_uniform(7 * 2 * 96, -1.0, 1.0);
+        let mut out = Vec::new();
+        plan.run_into(&m, &x, &mut PlanScratch::default(), &mut out)
+            .unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    /// int8 never leaks into layers that did not opt in: a plain-Auto
+    /// compile of a quantize-free model selects no quantized kernel and
+    /// reserves no quantized scratch.
+    #[test]
+    fn no_opt_in_means_no_int8_anywhere() {
+        let m = model();
+        let plan = Plan::compile(&m, 3, &PlannerConfig::default()).unwrap();
+        assert!(
+            plan.layer_kernels()
+                .iter()
+                .all(|k| *k != PlanKernel::QuantizedSliding)
+        );
+        assert_eq!(plan.qbuf_len, 0);
+        assert_eq!(plan.qacc_len, 0);
+        assert!(plan.quant.iter().all(|q| q.is_none()));
     }
 }

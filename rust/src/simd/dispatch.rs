@@ -8,23 +8,24 @@
 //!
 //! | tier | ISA | used by |
 //! |------|-----|---------|
-//! | [`SimdTier::Avx2`] | x86_64 AVX2 + FMA | add/max/min combine, fused conv taps |
+//! | [`SimdTier::Avx512`] | x86_64 AVX-512F | add/max/min combine, fused conv taps, i8 dot |
+//! | [`SimdTier::Avx2`] | x86_64 AVX2 + FMA | add/max/min combine, fused conv taps, i8 dot |
 //! | [`SimdTier::Sse2`] | x86_64 baseline SSE2 | add/max/min combine (no fused ops) |
-//! | [`SimdTier::Neon`] | aarch64 NEON | add/max/min combine, fused conv taps |
+//! | [`SimdTier::Neon`] | aarch64 NEON | add/max/min combine, fused conv taps, i8 dot |
 //! | [`SimdTier::Generic`] | portable scalar | everything (fallback + parity oracle) |
 //!
 //! Every specialized kernel is **bit-identical** to its generic
 //! counterpart for non-NaN inputs (asserted by `tests/simd_parity.rs`):
 //! the add/max/min lane ops have identical rounding on every ISA, and
 //! the conv kernels only run where a *fused* multiply-add exists
-//! (AVX2+FMA, NEON), matching the scalar `f32::mul_add` chain. SSE2 has
-//! no fused multiply-add, so the conv taps stay generic under that tier
-//! rather than silently changing rounding.
+//! (AVX-512F, AVX2+FMA, NEON), matching the scalar `f32::mul_add`
+//! chain. SSE2 has no fused multiply-add, so the conv taps stay generic
+//! under that tier rather than silently changing rounding.
 //!
 //! Set `SWSNN_SIMD=off` (or `generic`) to force the portable fallback
-//! for debugging; `avx2` / `sse2` / `neon` pin a specific tier when the
-//! host supports it. [`force_tier`] overrides the choice at runtime
-//! (used by the parity tests).
+//! for debugging; `avx512` / `avx2` / `sse2` / `neon` pin a specific
+//! tier when the host supports it. [`force_tier`] overrides the choice
+//! at runtime (used by the parity tests).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -32,6 +33,8 @@ use std::sync::OnceLock;
 /// SIMD implementation tier, ordered best-first per architecture.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdTier {
+    /// x86_64 AVX-512F: 16 f32 lanes with fused multiply-add.
+    Avx512,
     /// x86_64 AVX2 + FMA: 8 f32 lanes with fused multiply-add.
     Avx2,
     /// x86_64 baseline SSE2: 4 f32 lanes, no fused ops (conv taps fall
@@ -46,6 +49,7 @@ pub enum SimdTier {
 impl SimdTier {
     pub fn name(&self) -> &'static str {
         match self {
+            SimdTier::Avx512 => "avx512",
             SimdTier::Avx2 => "avx2",
             SimdTier::Sse2 => "sse2",
             SimdTier::Neon => "neon",
@@ -56,6 +60,7 @@ impl SimdTier {
     /// Parse an `SWSNN_SIMD` value. `off` is an alias for `generic`.
     pub fn parse(s: &str) -> Option<SimdTier> {
         match s {
+            "avx512" => Some(SimdTier::Avx512),
             "avx2" => Some(SimdTier::Avx2),
             "sse2" => Some(SimdTier::Sse2),
             "neon" => Some(SimdTier::Neon),
@@ -67,6 +72,7 @@ impl SimdTier {
     /// Whether the current host can execute this tier.
     pub fn is_supported(&self) -> bool {
         match self {
+            SimdTier::Avx512 => avx512f_available(),
             SimdTier::Avx2 => avx2_fma_available(),
             SimdTier::Sse2 => cfg!(target_arch = "x86_64"),
             SimdTier::Neon => cfg!(target_arch = "aarch64"),
@@ -78,7 +84,7 @@ impl SimdTier {
     /// fused tiers may take the SIMD conv-tap path: an unfused mul+add
     /// would change rounding vs the scalar `f32::mul_add` chain.
     pub fn has_fused_fma(&self) -> bool {
-        matches!(self, SimdTier::Avx2 | SimdTier::Neon)
+        matches!(self, SimdTier::Avx512 | SimdTier::Avx2 | SimdTier::Neon)
     }
 }
 
@@ -89,6 +95,19 @@ fn avx2_fma_available() -> bool {
 
 #[cfg(not(target_arch = "x86_64"))]
 fn avx2_fma_available() -> bool {
+    false
+}
+
+// Every intrinsic the Avx512 tier uses (f32 loads/stores/arith/fmadd,
+// i8→i32 widen + mullo/add) is in the AVX-512 *Foundation* subset, so
+// one feature bit is the whole support check.
+#[cfg(target_arch = "x86_64")]
+fn avx512f_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx512f_available() -> bool {
     false
 }
 
@@ -103,6 +122,8 @@ fn encode(t: SimdTier) -> u8 {
         SimdTier::Sse2 => 2,
         SimdTier::Neon => 3,
         SimdTier::Generic => 4,
+        // Appended (not renumbered) so any stale encoded value stays valid.
+        SimdTier::Avx512 => 5,
     }
 }
 
@@ -112,6 +133,7 @@ fn decode(v: u8) -> Option<SimdTier> {
         2 => Some(SimdTier::Sse2),
         3 => Some(SimdTier::Neon),
         4 => Some(SimdTier::Generic),
+        5 => Some(SimdTier::Avx512),
         _ => None,
     }
 }
@@ -153,7 +175,9 @@ fn detected() -> SimdTier {
 
 #[cfg(target_arch = "x86_64")]
 fn best_available() -> SimdTier {
-    if avx2_fma_available() {
+    if avx512f_available() {
+        SimdTier::Avx512
+    } else if avx2_fma_available() {
         SimdTier::Avx2
     } else {
         SimdTier::Sse2
@@ -206,6 +230,9 @@ pub fn as_f32_mut<T: 'static>(xs: &mut [T]) -> Option<&mut [f32]> {
 pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx512 only after runtime AVX-512F detection.
+        SimdTier::Avx512 => unsafe { x86::add_assign_avx512(dst, src) },
+        #[cfg(target_arch = "x86_64")]
         // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::add_assign_avx2(dst, src) },
         #[cfg(target_arch = "x86_64")]
@@ -222,6 +249,9 @@ pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
 pub fn max_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx512 only after runtime AVX-512F detection.
+        SimdTier::Avx512 => unsafe { x86::max_assign_avx512(dst, src) },
+        #[cfg(target_arch = "x86_64")]
         // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::max_assign_avx2(dst, src) },
         #[cfg(target_arch = "x86_64")]
@@ -237,6 +267,9 @@ pub fn max_assign_f32(dst: &mut [f32], src: &[f32]) {
 /// Lane-wise `dst[i] = min(dst[i], src[i])`, runtime-dispatched.
 pub fn min_assign_f32(dst: &mut [f32], src: &[f32]) {
     match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() returns Avx512 only after runtime AVX-512F detection.
+        SimdTier::Avx512 => unsafe { x86::min_assign_avx512(dst, src) },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: tier() returns Avx2 only after runtime AVX2 detection.
         SimdTier::Avx2 => unsafe { x86::min_assign_avx2(dst, src) },
@@ -284,6 +317,10 @@ pub fn fma_tap1_f32(yb: &mut [f32], xs: &[f32], wk: f32) {
     debug_assert!(xs.len() >= yb.len());
     match tier() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx512 tier requires AVX-512F at detection time; the
+        // caller contract `xs.len() >= yb.len()` keeps loads in bounds.
+        SimdTier::Avx512 => unsafe { x86::fma_tap1_avx512(yb, xs, wk) },
+        #[cfg(target_arch = "x86_64")]
         // SAFETY: the Avx2 tier requires AVX2+FMA at detection time; the
         // caller contract `xs.len() >= yb.len()` keeps loads in bounds.
         SimdTier::Avx2 => unsafe { x86::fma_tap1_avx2(yb, xs, wk) },
@@ -299,6 +336,10 @@ pub fn fma_tap1_f32(yb: &mut [f32], xs: &[f32], wk: f32) {
 pub fn fma_tap4_f32(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
     debug_assert!(xs.len() >= yb.len() + 3);
     match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx512 tier requires AVX-512F at detection time; the
+        // caller contract `xs.len() >= yb.len() + 3` keeps loads in bounds.
+        SimdTier::Avx512 => unsafe { x86::fma_tap4_avx512(yb, xs, w) },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: the Avx2 tier requires AVX2+FMA at detection time; the
         // caller contract `xs.len() >= yb.len() + 3` keeps loads in bounds.
@@ -385,12 +426,94 @@ mod x86 {
         };
     }
 
+    macro_rules! assign_avx512 {
+        ($name:ident, $vop:ident, $scalar:expr) => {
+            #[target_feature(enable = "avx512f")]
+            // SAFETY: caller must guarantee AVX-512F (dispatch does, via
+            // the Avx512 tier). All pointer offsets stay below
+            // `n = min(dst.len(), src.len())`, within both slices.
+            pub unsafe fn $name(dst: &mut [f32], src: &[f32]) {
+                let n = dst.len().min(src.len());
+                let dp = dst.as_mut_ptr();
+                let sp = src.as_ptr();
+                let mut i = 0;
+                while i + 16 <= n {
+                    let d = _mm512_loadu_ps(dp.add(i));
+                    let s = _mm512_loadu_ps(sp.add(i));
+                    _mm512_storeu_ps(dp.add(i), $vop(d, s));
+                    i += 16;
+                }
+                while i < n {
+                    let f: fn(f32, f32) -> f32 = $scalar;
+                    dst[i] = f(dst[i], src[i]);
+                    i += 1;
+                }
+            }
+        };
+    }
+
+    assign_avx512!(add_assign_avx512, _mm512_add_ps, |a, b| a + b);
+    assign_avx512!(max_assign_avx512, _mm512_max_ps, |a, b| if a > b { a } else { b });
+    assign_avx512!(min_assign_avx512, _mm512_min_ps, |a, b| if a < b { a } else { b });
     assign_avx!(add_assign_avx2, _mm256_add_ps, |a, b| a + b);
     assign_avx!(max_assign_avx2, _mm256_max_ps, |a, b| if a > b { a } else { b });
     assign_avx!(min_assign_avx2, _mm256_min_ps, |a, b| if a < b { a } else { b });
     assign_sse!(add_assign_sse2, _mm_add_ps, |a, b| a + b);
     assign_sse!(max_assign_sse2, _mm_max_ps, |a, b| if a > b { a } else { b });
     assign_sse!(min_assign_sse2, _mm_min_ps, |a, b| if a < b { a } else { b });
+
+    #[target_feature(enable = "avx512f")]
+    // SAFETY: caller must guarantee AVX-512F (dispatch does, via the
+    // Avx512 tier) and `xs.len() >= yb.len()`; offsets stay below
+    // `yb.len()`.
+    pub unsafe fn fma_tap1_avx512(yb: &mut [f32], xs: &[f32], wk: f32) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let wv = _mm512_set1_ps(wk);
+        let mut t = 0;
+        while t + 16 <= n {
+            let acc = _mm512_loadu_ps(yp.add(t));
+            let x = _mm512_loadu_ps(xp.add(t));
+            _mm512_storeu_ps(yp.add(t), _mm512_fmadd_ps(wv, x, acc));
+            t += 16;
+        }
+        while t < n {
+            yb[t] = wk.mul_add(xs[t], yb[t]);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    // SAFETY: caller must guarantee AVX-512F (dispatch does, via the
+    // Avx512 tier) and `xs.len() >= yb.len() + 3`, covering the `t + 3`
+    // loads.
+    pub unsafe fn fma_tap4_avx512(yb: &mut [f32], xs: &[f32], w: [f32; 4]) {
+        let n = yb.len();
+        let yp = yb.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let w0 = _mm512_set1_ps(w[0]);
+        let w1 = _mm512_set1_ps(w[1]);
+        let w2 = _mm512_set1_ps(w[2]);
+        let w3 = _mm512_set1_ps(w[3]);
+        let mut t = 0;
+        while t + 16 <= n {
+            let mut acc = _mm512_loadu_ps(yp.add(t));
+            acc = _mm512_fmadd_ps(w0, _mm512_loadu_ps(xp.add(t)), acc);
+            acc = _mm512_fmadd_ps(w1, _mm512_loadu_ps(xp.add(t + 1)), acc);
+            acc = _mm512_fmadd_ps(w2, _mm512_loadu_ps(xp.add(t + 2)), acc);
+            acc = _mm512_fmadd_ps(w3, _mm512_loadu_ps(xp.add(t + 3)), acc);
+            _mm512_storeu_ps(yp.add(t), acc);
+            t += 16;
+        }
+        while t < n {
+            let acc = w[0].mul_add(xs[t], yb[t]);
+            let acc = w[1].mul_add(xs[t + 1], acc);
+            let acc = w[2].mul_add(xs[t + 2], acc);
+            yb[t] = w[3].mul_add(xs[t + 3], acc);
+            t += 1;
+        }
+    }
 
     #[target_feature(enable = "avx2", enable = "fma")]
     // SAFETY: caller must guarantee AVX2+FMA (dispatch does, via the Avx2
@@ -533,11 +656,17 @@ mod tests {
 
     #[test]
     fn tier_names_roundtrip() {
-        for t in [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon, SimdTier::Generic] {
+        for t in [
+            SimdTier::Avx512,
+            SimdTier::Avx2,
+            SimdTier::Sse2,
+            SimdTier::Neon,
+            SimdTier::Generic,
+        ] {
             assert_eq!(SimdTier::parse(t.name()), Some(t));
         }
         assert_eq!(SimdTier::parse("off"), Some(SimdTier::Generic));
-        assert_eq!(SimdTier::parse("avx512"), None);
+        assert_eq!(SimdTier::parse("avx1024"), None);
     }
 
     #[test]

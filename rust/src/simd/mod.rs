@@ -10,12 +10,14 @@
 //! scaling law.
 //!
 //! The lane-wise `⊕` no longer relies on LLVM auto-vectorization alone:
-//! [`dispatch`] selects AVX2/SSE2 (x86_64) or NEON (aarch64) kernels at
-//! startup via runtime feature detection, with the generic code as the
-//! portable fallback (`SWSNN_SIMD=off` forces it). See [`SimdTier`] for
-//! the tier table and the bit-exactness contract.
+//! [`dispatch`] selects AVX-512F/AVX2/SSE2 (x86_64) or NEON (aarch64)
+//! kernels at startup via runtime feature detection, with the generic
+//! code as the portable fallback (`SWSNN_SIMD=off` forces it). See
+//! [`SimdTier`] for the tier table and the bit-exactness contract.
+//! [`qdot`] carries the int8 twin loops for the quantized conv backend.
 
 mod dispatch;
+mod qdot;
 mod vector;
 
 pub use dispatch::{
@@ -23,6 +25,7 @@ pub use dispatch::{
     fma_tap1_f32_generic, fma_tap4_f32, fma_tap4_f32_generic, force_tier, max_assign_f32,
     max_assign_f32_generic, min_assign_f32, min_assign_f32_generic, tier, SimdTier,
 };
+pub use qdot::{dot_i8_tap, dot_i8_tap_generic, sum_i8_tap, sum_i8_tap_generic};
 pub use vector::VecReg;
 
 /// Maximum logical lane count of the software vector machine.

@@ -1,0 +1,284 @@
+//! Runtime-dispatched i8 → i32 inner loops for the quantized sliding
+//! convolution (`conv::conv1d_quantized_into`).
+//!
+//! Two primitives, both accumulating into an `i32` row:
+//!
+//! * [`dot_i8_tap`] — one broadcast tap of the sliding schedule:
+//!   `acc[t] += wq · xs[t]` (the int8 twin of `fma_tap1_f32`);
+//! * [`sum_i8_tap`] — `acc[t] += xs[t]`, the per-window Σqx correction
+//!   sum the affine zero-point folding needs (see docs/quantization.md).
+//!
+//! Unlike the f32 kernels, **every** tier is bit-identical here by
+//! construction, not just by matching rounding: an i8×i8 product is at
+//! most 127·127 = 16129 (exact in i16 and i32 alike) and i32 addition
+//! is exactly associative, so lane width and tap grouping cannot change
+//! a single bit. The generic oracle uses `wrapping_add` so debug builds
+//! agree with the (wrapping) vector adds even if a caller overflows the
+//! documented headroom (|acc| stays below `taps · 2^14`, far from i32
+//! range for every model shape the planner emits).
+
+use super::dispatch::{tier, SimdTier};
+
+/// `acc[t] += wq · xs[t]` for every accumulator element.
+/// Requires `xs.len() >= acc.len()`.
+pub fn dot_i8_tap(acc: &mut [i32], xs: &[i8], wq: i8) {
+    debug_assert!(xs.len() >= acc.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx512 tier requires AVX-512F at detection time;
+        // the caller contract `xs.len() >= acc.len()` keeps loads in
+        // bounds.
+        SimdTier::Avx512 => unsafe { x86::dot_i8_tap_avx512(acc, xs, wq) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier requires AVX2 at detection time; same
+        // length contract.
+        SimdTier::Avx2 => unsafe { x86::dot_i8_tap_avx2(acc, xs, wq) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same length contract.
+        SimdTier::Neon => unsafe { neon::dot_i8_tap_neon(acc, xs, wq) },
+        // SSE2 lacks i8→i32 widening (cvtepi8 is SSE4.1): generic path.
+        _ => dot_i8_tap_generic(acc, xs, wq),
+    }
+}
+
+/// `acc[t] += xs[t]` for every accumulator element.
+/// Requires `xs.len() >= acc.len()`.
+pub fn sum_i8_tap(acc: &mut [i32], xs: &[i8]) {
+    debug_assert!(xs.len() >= acc.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx512 tier requires AVX-512F at detection time;
+        // the caller contract `xs.len() >= acc.len()` keeps loads in
+        // bounds.
+        SimdTier::Avx512 => unsafe { x86::sum_i8_tap_avx512(acc, xs) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 tier requires AVX2 at detection time; same
+        // length contract.
+        SimdTier::Avx2 => unsafe { x86::sum_i8_tap_avx2(acc, xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same length contract.
+        SimdTier::Neon => unsafe { neon::sum_i8_tap_neon(acc, xs) },
+        _ => sum_i8_tap_generic(acc, xs),
+    }
+}
+
+/// Portable oracle for [`dot_i8_tap`].
+pub fn dot_i8_tap_generic(acc: &mut [i32], xs: &[i8], wq: i8) {
+    let w = wq as i32;
+    for (a, &x) in acc.iter_mut().zip(xs) {
+        *a = a.wrapping_add(w * x as i32);
+    }
+}
+
+/// Portable oracle for [`sum_i8_tap`].
+pub fn sum_i8_tap_generic(acc: &mut [i32], xs: &[i8]) {
+    for (a, &x) in acc.iter_mut().zip(xs) {
+        *a = a.wrapping_add(x as i32);
+    }
+}
+
+// ───────────────────────── x86_64 back ends ───────────────────────────
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx512f")]
+    // SAFETY: caller must guarantee AVX-512F (dispatch does, via the
+    // Avx512 tier) and `xs.len() >= acc.len()`; all offsets stay below
+    // `acc.len()`.
+    pub unsafe fn dot_i8_tap_avx512(acc: &mut [i32], xs: &[i8], wq: i8) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let wv = _mm512_set1_epi32(wq as i32);
+        let mut t = 0;
+        while t + 16 <= n {
+            // 16 × i8 → 16 × i32, exact product in 32 bits.
+            let x = _mm512_cvtepi8_epi32(_mm_loadu_si128(xp.add(t) as *const __m128i));
+            let a = _mm512_loadu_epi32(ap.add(t));
+            _mm512_storeu_epi32(ap.add(t), _mm512_add_epi32(a, _mm512_mullo_epi32(wv, x)));
+            t += 16;
+        }
+        let w = wq as i32;
+        while t < n {
+            acc[t] = acc[t].wrapping_add(w * xs[t] as i32);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    // SAFETY: caller must guarantee AVX-512F (dispatch does, via the
+    // Avx512 tier) and `xs.len() >= acc.len()`; all offsets stay below
+    // `acc.len()`.
+    pub unsafe fn sum_i8_tap_avx512(acc: &mut [i32], xs: &[i8]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let mut t = 0;
+        while t + 16 <= n {
+            let x = _mm512_cvtepi8_epi32(_mm_loadu_si128(xp.add(t) as *const __m128i));
+            let a = _mm512_loadu_epi32(ap.add(t));
+            _mm512_storeu_epi32(ap.add(t), _mm512_add_epi32(a, x));
+            t += 16;
+        }
+        while t < n {
+            acc[t] = acc[t].wrapping_add(xs[t] as i32);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 (dispatch does, via the Avx2
+    // tier) and `xs.len() >= acc.len()`; all offsets stay below
+    // `acc.len()`.
+    pub unsafe fn dot_i8_tap_avx2(acc: &mut [i32], xs: &[i8], wq: i8) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let wv = _mm256_set1_epi16(wq as i16);
+        let mut t = 0;
+        while t + 16 <= n {
+            // 16 × i8 → i16, multiply exactly in i16 (|wq·x| ≤ 16129),
+            // then widen each half to i32 and add.
+            let x16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(xp.add(t) as *const __m128i));
+            let prod = _mm256_mullo_epi16(wv, x16);
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(prod));
+            let a0 = _mm256_loadu_si256(ap.add(t) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(t + 8) as *const __m256i);
+            _mm256_storeu_si256(ap.add(t) as *mut __m256i, _mm256_add_epi32(a0, lo));
+            _mm256_storeu_si256(ap.add(t + 8) as *mut __m256i, _mm256_add_epi32(a1, hi));
+            t += 16;
+        }
+        let w = wq as i32;
+        while t < n {
+            acc[t] = acc[t].wrapping_add(w * xs[t] as i32);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // SAFETY: caller must guarantee AVX2 (dispatch does, via the Avx2
+    // tier) and `xs.len() >= acc.len()`; all offsets stay below
+    // `acc.len()`.
+    pub unsafe fn sum_i8_tap_avx2(acc: &mut [i32], xs: &[i8]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let mut t = 0;
+        while t + 16 <= n {
+            let x16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(xp.add(t) as *const __m128i));
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(x16));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(x16));
+            let a0 = _mm256_loadu_si256(ap.add(t) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(t + 8) as *const __m256i);
+            _mm256_storeu_si256(ap.add(t) as *mut __m256i, _mm256_add_epi32(a0, lo));
+            _mm256_storeu_si256(ap.add(t + 8) as *mut __m256i, _mm256_add_epi32(a1, hi));
+            t += 16;
+        }
+        while t < n {
+            acc[t] = acc[t].wrapping_add(xs[t] as i32);
+            t += 1;
+        }
+    }
+}
+
+// ───────────────────────── aarch64 back end ───────────────────────────
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: caller must guarantee NEON (baseline on aarch64) and
+    // `xs.len() >= acc.len()`; all offsets stay below `acc.len()`.
+    pub unsafe fn dot_i8_tap_neon(acc: &mut [i32], xs: &[i8], wq: i8) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let wv = vdup_n_s8(wq);
+        let mut t = 0;
+        while t + 8 <= n {
+            // 8 × i8 widening multiply → i16 (exact), then widening adds
+            // into the two i32 accumulator quads.
+            let prod = vmull_s8(vld1_s8(xp.add(t)), wv);
+            let a0 = vld1q_s32(ap.add(t));
+            let a1 = vld1q_s32(ap.add(t + 4));
+            vst1q_s32(ap.add(t), vaddw_s16(a0, vget_low_s16(prod)));
+            vst1q_s32(ap.add(t + 4), vaddw_s16(a1, vget_high_s16(prod)));
+            t += 8;
+        }
+        let w = wq as i32;
+        while t < n {
+            acc[t] = acc[t].wrapping_add(w * xs[t] as i32);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    // SAFETY: caller must guarantee NEON (baseline on aarch64) and
+    // `xs.len() >= acc.len()`; all offsets stay below `acc.len()`.
+    pub unsafe fn sum_i8_tap_neon(acc: &mut [i32], xs: &[i8]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = xs.as_ptr();
+        let mut t = 0;
+        while t + 8 <= n {
+            let x16 = vmovl_s8(vld1_s8(xp.add(t)));
+            let a0 = vld1q_s32(ap.add(t));
+            let a1 = vld1q_s32(ap.add(t + 4));
+            vst1q_s32(ap.add(t), vaddw_s16(a0, vget_low_s16(x16)));
+            vst1q_s32(ap.add(t + 4), vaddw_s16(a1, vget_high_s16(x16)));
+            t += 8;
+        }
+        while t < n {
+            acc[t] = acc[t].wrapping_add(xs[t] as i32);
+            t += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn i8_pattern(n: usize, salt: i32) -> Vec<i8> {
+        (0..n).map(|i| (((i as i32 * 37 + salt) % 255) - 127) as i8).collect()
+    }
+
+    #[test]
+    fn dispatched_dot_matches_generic() {
+        // Whatever tier detection picked, results must equal the oracle
+        // exactly (i32 arithmetic — no rounding story at all).
+        let xs = i8_pattern(133, 5);
+        let base: Vec<i32> = (0..133).map(|i| (i as i32 * 91) % 1000 - 500).collect();
+        for wq in [-128i8, -7, 0, 1, 127] {
+            let mut a = base.clone();
+            dot_i8_tap(&mut a, &xs, wq);
+            let mut a_ref = base.clone();
+            dot_i8_tap_generic(&mut a_ref, &xs, wq);
+            assert_eq!(a, a_ref, "wq={wq}");
+        }
+        let mut s = base.clone();
+        sum_i8_tap(&mut s, &xs);
+        let mut s_ref = base;
+        sum_i8_tap_generic(&mut s_ref, &xs);
+        assert_eq!(s, s_ref);
+    }
+
+    #[test]
+    fn generic_matches_scalar_math() {
+        let xs = i8_pattern(40, 11);
+        let mut acc = vec![3i32; 37];
+        dot_i8_tap_generic(&mut acc, &xs, -9);
+        for (t, a) in acc.iter().enumerate() {
+            assert_eq!(*a, 3 + (-9) * xs[t] as i32);
+        }
+        let mut acc = vec![-2i32; 37];
+        sum_i8_tap_generic(&mut acc, &xs);
+        for (t, a) in acc.iter().enumerate() {
+            assert_eq!(*a, -2 + xs[t] as i32);
+        }
+    }
+}

@@ -65,6 +65,7 @@ fn random_chain_config(g: &mut swsnn::prop::Gen, idx: usize) -> ModelConfig {
                 same_pad: g.usize_in(0, 4) != 0,
                 relu: g.bool(),
                 backend: None,
+                quantize: false,
             }),
         }
     }

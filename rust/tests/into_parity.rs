@@ -10,9 +10,10 @@
 
 use swsnn::conv::{
     conv1d_direct, conv1d_direct_into, conv1d_im2col_epilogue_into, conv1d_im2col_with,
-    conv1d_sliding_into, conv1d_sliding_with, conv1d_sliding_with_into, conv2d_sliding,
-    conv2d_sliding_into, conv2d_sliding_with, conv2d_sliding_with_into, im2col_expand,
-    im2col_expand_into, Conv1dParams, Conv2dParams,
+    conv1d_quantized, conv1d_quantized_into, conv1d_sliding_into, conv1d_sliding_with,
+    conv1d_sliding_with_into, conv2d_sliding, conv2d_sliding_into, conv2d_sliding_with,
+    conv2d_sliding_with_into, im2col_expand, im2col_expand_into, quantized_scratch_len,
+    Conv1dParams, Conv2dParams, QuantParams,
 };
 use swsnn::exec::Executor;
 use swsnn::nn::{ForwardScratch, Model};
@@ -170,6 +171,35 @@ fn conv2d_into_matches_vec_with_dirty_dst() {
         let mut y = vec![DIRT; p.y_len()];
         conv2d_sliding_with_into(&ex, &x, &w, None, &p, Epilogue::None, &mut y);
         assert_eq!(y, want, "conv2d threads={t}");
+    }
+}
+
+#[test]
+fn quantized_into_matches_vec_with_dirty_dst() {
+    let mut rng = Rng::new(0x170D);
+    for p in [
+        Conv1dParams::new(2, 3, 4_000, 5).with_batch(2).with_same_pad(),
+        Conv1dParams::new(1, 2, 6_001, 7).with_stride(2).with_dilation(2).with_pad(3),
+    ] {
+        let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+        let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+        let xp = QuantParams::from_slice(&x);
+        let wp = QuantParams::from_slice(&w);
+
+        // quantize_slice_into over a dirty destination matches the
+        // Vec-returning form.
+        let mut qx = vec![-77i8; x.len()];
+        xp.quantize_slice_into(&x, &mut qx);
+        assert_eq!(qx, xp.quantize_slice(&x), "quantize_slice_into {p:?}");
+        let qw = wp.quantize_slice(&w);
+
+        // conv1d_quantized_into with dirty i32 scratch AND dirty f32
+        // dst is bitwise equal to the allocating wrapper.
+        let want = conv1d_quantized(&qx, &qw, xp, wp, &p);
+        let mut acc = vec![i32::MIN; quantized_scratch_len(&p)];
+        let mut y = vec![DIRT; p.y_len()];
+        conv1d_quantized_into(&qx, &qw, xp, wp, None, &p, Epilogue::None, &mut acc, &mut y);
+        assert_eq!(y, want, "conv1d_quantized_into {p:?}");
     }
 }
 

@@ -68,6 +68,7 @@ fn random_config(rng: &mut Rng, idx: usize) -> ModelConfig {
                 same_pad: rng.below(4) != 0,
                 relu: rng.below(2) == 0,
                 backend: None,
+                quantize: false,
             }),
         }
     }
@@ -212,6 +213,7 @@ fn forward_into_wrapper_matches_plan_and_eager() {
                 same_pad: true,
                 relu: true,
                 backend: None,
+                quantize: false,
             },
             LayerConfig::Residual { k: 3, dilation: 2, backend: None },
             LayerConfig::Dense { out: 3, relu: false },
@@ -251,6 +253,7 @@ fn per_layer_override_beats_fixed_choice() {
                 same_pad: true,
                 relu: true,
                 backend: Some(ConvBackend::Im2colGemm),
+                quantize: false,
             },
             LayerConfig::Residual { k: 3, dilation: 1, backend: Some(ConvBackend::Direct) },
         ],
@@ -291,6 +294,7 @@ fn auto_plan_faithful_to_direct_oracle() {
                 same_pad: false,
                 relu: false,
                 backend: None,
+                quantize: false,
             },
             // Fat reduction, small receptive field → im2col under Auto.
             LayerConfig::Conv {
@@ -301,6 +305,7 @@ fn auto_plan_faithful_to_direct_oracle() {
                 same_pad: true,
                 relu: true,
                 backend: None,
+                quantize: false,
             },
             // Wide dilated filter → sliding under Auto.
             LayerConfig::Conv {
@@ -311,6 +316,7 @@ fn auto_plan_faithful_to_direct_oracle() {
                 same_pad: true,
                 relu: false,
                 backend: None,
+                quantize: false,
             },
         ],
     };
@@ -567,6 +573,7 @@ fn plan_rejects_foreign_model_and_bad_batch() {
             same_pad: true,
             relu: true,
             backend: None,
+            quantize: false,
         }],
     };
     let model = Model::init(&mc, &mut Rng::new(2)).unwrap();

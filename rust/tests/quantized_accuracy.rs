@@ -1,0 +1,108 @@
+//! Accuracy contract of the int8 quantized conv backend.
+//!
+//! The quantized kernel computes `Σ ŵ·x̂` **exactly** (i32 accumulation
+//! of dequantization-equivalent products), so its error against the f32
+//! sliding oracle is bounded purely by the per-element rounding of the
+//! affine quantizer: with per-tensor scales `sx`, `sw` and `k_total =
+//! c_in · k` products per output,
+//!
+//! ```text
+//! |y_q − y_f32| ≤ k_total · (max|x|·sw/2 + max|w|·sx/2 + sx·sw/4)
+//! ```
+//!
+//! (each product's error is `|w−ŵ|·|x| + |ŵ−w|·|x−x̂| + |w|·|x−x̂|`
+//! with `|x−x̂| ≤ sx/2`, `|w−ŵ| ≤ sw/2`; padded positions dequantize to
+//! exactly 0 and contribute no error). The property test derives this
+//! bound per case — it is not a hand-tuned tolerance.
+
+use swsnn::conv::{
+    conv1d_quantized_into, conv1d_sliding, quantized_scratch_len, Conv1dParams, QuantParams,
+};
+use swsnn::ops::Epilogue;
+use swsnn::prop::{self, PropConfig};
+
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+#[test]
+fn quantized_conv_error_bounded_by_scales() {
+    prop::check(
+        PropConfig {
+            cases: 96,
+            ..Default::default()
+        },
+        "int8 conv tracks f32 sliding within the k·scale bound",
+        |g| {
+            let c_in = g.usize_in(1, 4);
+            let c_out = g.usize_in(1, 4);
+            let k = g.usize_in(1, 8);
+            let n = g.usize_in(k, k + g.size.max(8));
+            let p = Conv1dParams::new(c_in, c_out, n, k)
+                .with_batch(g.usize_in(1, 3))
+                .with_stride(g.usize_in(1, 4))
+                .with_dilation(g.usize_in(1, 3))
+                .with_pad(g.usize_in(0, k + 1));
+            let x = g.vec_f32_len(p.x_len(), -2.0, 2.0);
+            let w = g.vec_f32_len(p.w_len(), -1.5, 1.5);
+            let b = g.vec_f32_len(p.c_out, -0.5, 0.5);
+            let bias = g.bool().then_some(b.as_slice());
+
+            let xp = QuantParams::from_slice(&x);
+            let wp = QuantParams::from_slice(&w);
+            let qx = xp.quantize_slice(&x);
+            let qw = wp.quantize_slice(&w);
+
+            // Dilation can push effective_k past the padded input →
+            // empty output; the kernel must accept that and write
+            // nothing (y_len() is 0 then, so the zip below is empty).
+            let want = conv1d_sliding(&x, &w, bias, &p);
+            let mut acc = vec![i32::MIN; quantized_scratch_len(&p)];
+            let mut y = vec![f32::NAN; p.y_len()];
+            conv1d_quantized_into(&qx, &qw, xp, wp, bias, &p, Epilogue::None, &mut acc, &mut y);
+            prop::ensure(y.len() == want.len(), "output length mismatch")?;
+
+            let k_total = (c_in * k) as f32;
+            let (sx, sw) = (xp.scale, wp.scale);
+            let bound =
+                k_total * (amax(&x) * sw / 2.0 + amax(&w) * sx / 2.0 + sx * sw / 4.0) + 1e-4;
+            for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+                prop::ensure(a.is_finite(), format!("y[{i}] not finite: {a}"))?;
+                prop::ensure(
+                    (a - b).abs() <= bound,
+                    format!("y[{i}]: quantized {a} vs f32 {b}, derived bound {bound} ({p:?})"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_into_overwrites_nan_poisoned_dst() {
+    // NaN is the nastiest dirt: any unwritten destination element (or
+    // any read of one) propagates into the output. Under
+    // `--features check-invariants` the kernel additionally poisons its
+    // destination with a sentinel on entry and asserts every element
+    // was overwritten on exit — this test drives that path with a dirty
+    // buffer so the sentinel machinery is exercised, feature on or off.
+    let p = Conv1dParams::new(3, 2, 1_000, 5).with_batch(2).with_same_pad();
+    let mut rng = swsnn::workload::Rng::new(0x0_8A1);
+    let x = rng.vec_uniform(p.x_len(), -1.0, 1.0);
+    let w = rng.vec_uniform(p.w_len(), -1.0, 1.0);
+    let b = rng.vec_uniform(p.c_out, -0.5, 0.5);
+    let xp = QuantParams::from_slice(&x);
+    let wp = QuantParams::from_slice(&w);
+    let qx = xp.quantize_slice(&x);
+    let qw = wp.quantize_slice(&w);
+
+    let mut acc = vec![0i32; quantized_scratch_len(&p)];
+    let mut want = vec![0.0f32; p.y_len()];
+    conv1d_quantized_into(&qx, &qw, xp, wp, Some(&b), &p, Epilogue::Relu, &mut acc, &mut want);
+
+    let mut acc = vec![i32::MIN; quantized_scratch_len(&p)];
+    let mut y = vec![f32::NAN; p.y_len()];
+    conv1d_quantized_into(&qx, &qw, xp, wp, Some(&b), &p, Epilogue::Relu, &mut acc, &mut y);
+    assert_eq!(y, want, "dirty scratch/dst must not change the output");
+    assert!(y.iter().all(|v| v.is_finite()), "NaN leaked through");
+}

@@ -6,9 +6,11 @@
 //! process-global override, and the libtest harness runs `#[test]` fns
 //! concurrently within this binary.
 
-use swsnn::conv::{conv1d_sliding_with, Conv1dParams};
+use swsnn::conv::{
+    conv1d_quantized_into, conv1d_sliding_with, quantized_scratch_len, Conv1dParams, QuantParams,
+};
 use swsnn::exec::Executor;
-use swsnn::ops::{AddOp, MaxOp};
+use swsnn::ops::{AddOp, Epilogue, MaxOp};
 use swsnn::pool::{pool1d_with, Pool1dParams, PoolKind};
 use swsnn::simd::{self, SimdTier};
 use swsnn::sliding::{self, Algo};
@@ -44,6 +46,29 @@ fn all_supported_tiers_bit_identical_to_generic() {
     let pool_p = Pool1dParams::new(2, 30_000, 16).with_batch(1);
     let pool_x = rng.vec_uniform(2 * 30_000, -2.0, 2.0);
 
+    // int8 inputs for the quantized sweep: full i8 range including the
+    // lane tails (4_099 is not a multiple of any vector width).
+    let qsrc: Vec<i8> = (0..4_099).map(|i| ((i * 73 + 5) % 256 - 128) as i8).collect();
+    let quant_cases: Vec<(Conv1dParams, bool)> = vec![
+        (Conv1dParams::new(2, 3, 5_000, 7).with_same_pad(), true),
+        (
+            Conv1dParams::new(1, 2, 6_001, 5).with_batch(2).with_stride(2).with_dilation(2).with_pad(3),
+            false,
+        ),
+    ];
+    let quant_inputs: Vec<(Vec<i8>, Vec<i8>, Vec<f32>)> = quant_cases
+        .iter()
+        .map(|(p, _)| {
+            (
+                (0..p.x_len() as i64).map(|i| ((i * 31 + 17) % 256 - 128) as i8).collect(),
+                (0..p.w_len() as i64).map(|i| ((i * 97 + 3) % 256 - 128) as i8).collect(),
+                rng.vec_uniform(p.c_out, -0.5, 0.5),
+            )
+        })
+        .collect();
+    let xp = QuantParams { scale: 0.05, zero_point: 3 };
+    let wp = QuantParams { scale: 0.02, zero_point: -5 };
+
     // References under the forced generic tier.
     simd::force_tier(Some(SimdTier::Generic));
     assert_eq!(simd::tier(), SimdTier::Generic);
@@ -62,7 +87,22 @@ fn all_supported_tiers_bit_identical_to_generic() {
     let auto_ref = sliding::auto_with(&ex4, AddOp::<f32>::new(), &xs, 63, 64);
     let pool_ref = pool1d_with(&ex1, PoolKind::Avg, &pool_x, &pool_p);
 
-    let tiers = [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon];
+    // Quantized conv references under the generic tier. The i32
+    // accumulation is exact (associativity holds for wrapping integer
+    // adds), so every tier must reproduce these f32 outputs *bitwise*.
+    let quant_refs: Vec<Vec<f32>> = quant_cases
+        .iter()
+        .zip(&quant_inputs)
+        .map(|((p, with_bias), (qx, qw, b))| {
+            let mut acc = vec![i32::MIN; quantized_scratch_len(p)];
+            let mut y = vec![f32::NAN; p.y_len()];
+            let bias = with_bias.then_some(b.as_slice());
+            conv1d_quantized_into(qx, qw, xp, wp, bias, p, Epilogue::Relu, &mut acc, &mut y);
+            y
+        })
+        .collect();
+
+    let tiers = [SimdTier::Avx512, SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon];
     for t in tiers.into_iter().filter(|t| t.is_supported()) {
         simd::force_tier(Some(t));
         assert_eq!(simd::tier(), t);
@@ -99,6 +139,32 @@ fn all_supported_tiers_bit_identical_to_generic() {
         let mut want = kernel_base[..nn].to_vec();
         simd::fma_tap4_f32_generic(&mut want, &kernel_src, taps);
         assert_eq!(got, want, "{t:?} fma_tap4");
+
+        // int8 tap kernels: dispatched vs generic oracle, exact. The
+        // nonzero seed in `acc` checks the accumulate (not overwrite)
+        // semantics; 4_001 outputs exercise the vector tails.
+        let mut got = vec![7i32; 4_001];
+        simd::dot_i8_tap(&mut got, &qsrc, -77);
+        let mut want = vec![7i32; 4_001];
+        simd::dot_i8_tap_generic(&mut want, &qsrc, -77);
+        assert_eq!(got, want, "{t:?} dot_i8_tap");
+
+        let mut got = vec![-3i32; 4_001];
+        simd::sum_i8_tap(&mut got, &qsrc);
+        let mut want = vec![-3i32; 4_001];
+        simd::sum_i8_tap_generic(&mut want, &qsrc);
+        assert_eq!(got, want, "{t:?} sum_i8_tap");
+
+        // Full quantized conv: bit-identical across tiers.
+        for (((p, with_bias), (qx, qw, b)), want) in
+            quant_cases.iter().zip(&quant_inputs).zip(&quant_refs)
+        {
+            let mut acc = vec![i32::MIN; quantized_scratch_len(p)];
+            let mut y = vec![f32::NAN; p.y_len()];
+            let bias = with_bias.then_some(b.as_slice());
+            conv1d_quantized_into(qx, qw, xp, wp, bias, p, Epilogue::Relu, &mut acc, &mut y);
+            assert_eq!(&y, want, "{t:?} conv1d_quantized {p:?}");
+        }
 
         // Full conv stack, serial and parallel.
         for ((p, (x, w, b)), want) in conv_cases.iter().zip(&conv_inputs).zip(&conv_refs) {
@@ -144,6 +210,13 @@ fn tier_surface_is_sane() {
     // parity test owns it for this binary.
     assert!(SimdTier::Generic.is_supported());
     assert!(!SimdTier::Generic.has_fused_fma());
+    assert!(SimdTier::Avx512.has_fused_fma());
     // Cross-architecture tiers are mutually exclusive.
     assert!(!(SimdTier::Sse2.is_supported() && SimdTier::Neon.is_supported()));
+    assert!(!(SimdTier::Avx512.is_supported() && SimdTier::Neon.is_supported()));
+    // AVX-512F implies the AVX2 tier's prerequisites on every real CPU
+    // this crate targets; the dispatch order relies on it.
+    if SimdTier::Avx512.is_supported() {
+        assert!(SimdTier::Avx2.is_supported());
+    }
 }

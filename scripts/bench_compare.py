@@ -4,6 +4,7 @@ fresh run) and print per-row deltas for every shared numeric column.
 
 Usage:
     python3 scripts/bench_compare.py <baseline_dir> <current_dir>
+    python3 scripts/bench_compare.py --record <src_dir> [dest_dir]
 
 Each BENCH_<table>.json is the hand-rolled `{"title", "headers",
 "rows"}` shape `swsnn::bench::Table::json` emits. Rows are matched by
@@ -12,12 +13,16 @@ script always exits 0 — perf gating stays a human decision, this just
 turns "is the fused plan still beating the unfused one?" into a
 one-glance table on every CI run.
 
-To (re)record a baseline on a reference machine:
-    cd rust && cargo bench --bench e2e_serving -- --json
-    cp bench_results/BENCH_*.json bench_results/baselines/
+To (re)record baselines on a reference machine:
+    cd rust && cargo bench -- --json       # or a single --bench target
+    python3 ../scripts/bench_compare.py --record bench_results
+which snapshots every BENCH_*.json from <src_dir> into <dest_dir>
+(default: rust/bench_results/baselines/, next to this script's repo).
+Commit the snapshots to make the CI comparison step meaningful.
 """
 
 import json
+import shutil
 import sys
 from pathlib import Path
 
@@ -67,7 +72,26 @@ def compare_table(name: str, base: dict, cur: dict) -> None:
             print(f"  {key}: row disappeared from the current run")
 
 
+def record(src_dir: Path, dest_dir: Path) -> int:
+    snapshots = sorted(src_dir.glob("BENCH_*.json"))
+    if not snapshots:
+        print(f"no BENCH_*.json under {src_dir} — run a bench with --json first")
+        return 0
+    dest_dir.mkdir(parents=True, exist_ok=True)
+    for path in snapshots:
+        shutil.copy2(path, dest_dir / path.name)
+        print(f"recorded {path.name} -> {dest_dir}")
+    return 0
+
+
 def main() -> int:
+    if len(sys.argv) >= 2 and sys.argv[1] == "--record":
+        if len(sys.argv) not in (3, 4):
+            print(__doc__)
+            return 0
+        default_dest = Path(__file__).resolve().parent.parent / "rust/bench_results/baselines"
+        dest = Path(sys.argv[3]) if len(sys.argv) == 4 else default_dest
+        return record(Path(sys.argv[2]), dest)
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
