@@ -1,0 +1,78 @@
+//! TBL-STREAM: per-sample cost of stateful streaming sessions vs the
+//! stateless baseline that recomputes the full forward on every
+//! arriving packet. The session replays the fused chain incrementally
+//! over slab-backed halo rings (amortized O(1) work per sample); the
+//! recompute baseline pays one whole batch-1 plan run per packet, so
+//! its per-sample cost scales with `seq_len / packet`. Emits
+//! `bench_results/BENCH_streaming.json` under `--json`.
+use swsnn::bench::{bench, BenchConfig, Table};
+use swsnn::config::load_config;
+use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::exec::Executor;
+use swsnn::nn::{Model, Plan, PlanScratch, PlannerConfig, Session};
+use swsnn::workload::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env();
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_stream.toml"),
+    )?;
+    let (mc, _) = load_config(&text).map_err(anyhow::Error::msg)?;
+    let model = Model::init(&mc, &mut Rng::new(1))?;
+    let pcfg = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        ..PlannerConfig::default()
+    };
+    let plan = Plan::compile(&model, 1, &pcfg)?;
+    let n = mc.seq_len;
+    let c_in = mc.c_in;
+    let planar = Rng::new(2).vec_uniform(c_in * n, -1.0, 1.0);
+    // Interleave planar [c, n] to the session wire order [t, c].
+    let mut stream = vec![0.0f32; planar.len()];
+    for t in 0..n {
+        for ch in 0..c_in {
+            stream[t * c_in + ch] = planar[ch * n + t];
+        }
+    }
+
+    let mut sess = Session::open(&plan, &model)?;
+    let mut dst = vec![0.0f32; sess.spec().out_len() * sess.spec().out_channels()];
+    let ex = Executor::new(1);
+    let mut scratch = PlanScratch::default();
+    let mut full = Vec::new();
+    plan.run_with_into(&ex, &model, &planar, &mut scratch, &mut full)?; // warm
+
+    let mut table = Table::new(
+        &format!("Streaming session step vs full recompute per packet ({}, seq {n})", mc.name),
+        &["packet", "session ns/sample", "recompute ns/sample", "speedup", "slab grows"],
+    );
+    for &packet in &[1usize, 4, 16] {
+        // One full stream replay through the session, `packet` samples
+        // per step. Steady-state steps are allocation-free, so the
+        // replay cost is the amortized per-sample cost × seq_len.
+        let m_sess = bench(&cfg, || {
+            sess.reset();
+            for chunk in stream.chunks(packet * c_in) {
+                sess.step_into(&model, chunk, &mut dst).unwrap();
+            }
+        });
+        let sess_ns = m_sess.median_ns() / n as f64;
+        // Stateless baseline: every arriving packet reruns the whole
+        // batch-1 plan on the full history — per-sample cost is one
+        // forward divided by the packet size.
+        let m_full = bench(&cfg, || {
+            plan.run_with_into(&ex, &model, &planar, &mut scratch, &mut full)
+                .unwrap();
+        });
+        let re_ns = m_full.median_ns() / packet as f64;
+        table.row(vec![
+            format!("{packet}"),
+            format!("{sess_ns:.1}"),
+            format!("{re_ns:.1}"),
+            format!("{:.2}x", re_ns / sess_ns),
+            format!("{}", sess.grows()),
+        ]);
+    }
+    table.emit("streaming.csv");
+    Ok(())
+}

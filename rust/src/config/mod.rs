@@ -106,6 +106,15 @@ pub struct ServeConfig {
     /// Base delay before a worker restart; doubles per attempt
     /// (exponential backoff).
     pub restart_backoff_ms: u64,
+    /// Default streaming-session idle TTL in milliseconds
+    /// (`serve.session_ttl_ms`): a session not stepped within this
+    /// budget is evicted (state recycled; the next step on it is shed
+    /// with `DeadlineExpired`). `0` = sessions never expire.
+    pub session_ttl_ms: u64,
+    /// Maximum live streaming sessions per worker
+    /// (`serve.session_capacity`); opens beyond it fail with a typed
+    /// engine error.
+    pub session_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -122,6 +131,8 @@ impl Default for ServeConfig {
             request_ttl_ms: 0,
             restart_budget: 3,
             restart_backoff_ms: 10,
+            session_ttl_ms: 30_000,
+            session_capacity: 64,
         }
     }
 }
@@ -337,6 +348,8 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
         restart_budget: count("serve.restart_budget")?.unwrap_or(d.restart_budget),
         restart_backoff_ms: count("serve.restart_backoff_ms")?
             .unwrap_or(d.restart_backoff_ms as usize) as u64,
+        session_ttl_ms: count("serve.session_ttl_ms")?.unwrap_or(d.session_ttl_ms as usize) as u64,
+        session_capacity: count("serve.session_capacity")?.unwrap_or(d.session_capacity),
     })
 }
 
@@ -467,6 +480,20 @@ backend = "sliding"
         assert_eq!(s.request_ttl_ms, 250);
         assert_eq!(s.restart_budget, 5);
         assert_eq!(s.restart_backoff_ms, 2);
+    }
+
+    #[test]
+    fn session_fields_parse_with_defaults() {
+        // Defaults: 30 s idle TTL, 64 sessions per worker.
+        let (_, s) = load_config(EXAMPLE).unwrap();
+        assert_eq!(s.session_ttl_ms, 30_000);
+        assert_eq!(s.session_capacity, 64);
+        let text = format!("{EXAMPLE}\nsession_ttl_ms = 1500\nsession_capacity = 4\n");
+        let (_, s) = load_config(&text).unwrap();
+        assert_eq!(s.session_ttl_ms, 1500);
+        assert_eq!(s.session_capacity, 4);
+        let bad = format!("{EXAMPLE}\nsession_ttl_ms = -1\n");
+        assert!(load_config(&bad).unwrap_err().contains("session_ttl_ms"));
     }
 
     #[test]

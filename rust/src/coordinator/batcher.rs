@@ -12,6 +12,7 @@
 //! workers; when the *last* worker dies the queue is closed and drained
 //! so no submitter ever hangs.
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -22,7 +23,7 @@ use crate::exec::{Channel, ChannelError};
 use crate::telemetry::{Counter, Histogram};
 
 use super::engine::{Engine, EngineFactory};
-use super::{Request, ResponseSlot, ServeError, Shed, Ticket};
+use super::{ReqKind, Request, ResponseSlot, ServeError, Shed, Ticket};
 
 /// Submission (admission) failure modes surfaced to clients.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -95,6 +96,16 @@ pub struct Metrics {
     pub worker_restarts: Counter,
     pub batches: Counter,
     pub batched_rows: Counter,
+    /// Streaming sessions opened by workers.
+    pub sessions_opened: Counter,
+    /// Streaming sessions closed by explicit client request.
+    pub sessions_closed: Counter,
+    /// Session step operations run (each also increments `completed`
+    /// or `failed` — steps are ordinary accepted requests).
+    pub session_steps: Counter,
+    /// Sessions evicted after their idle TTL lapsed (state recycled
+    /// without a client close).
+    pub sessions_evicted: Counter,
     pub queue_wait: Histogram,
     pub inference: Histogram,
     pub e2e: Histogram,
@@ -119,6 +130,10 @@ pub struct CoordinatorStats {
     pub worker_restarts: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub session_steps: u64,
+    pub sessions_evicted: u64,
     pub queue_wait_p50_us: f64,
     pub inference_p50_us: f64,
     pub e2e_p50_us: f64,
@@ -187,6 +202,11 @@ struct WorkerParams {
     pad_buckets: Vec<usize>,
     restart_budget: usize,
     restart_backoff: Duration,
+    /// Default streaming-session idle TTL (`Duration::ZERO` = never
+    /// expire).
+    session_ttl: Duration,
+    /// Live streaming sessions allowed per worker.
+    session_capacity: usize,
 }
 
 /// The running coordinator. Submit rows, get [`Ticket`]s; N background
@@ -292,6 +312,8 @@ impl Coordinator {
             pad_buckets,
             restart_budget: cfg.restart_budget,
             restart_backoff: Duration::from_millis(cfg.restart_backoff_ms),
+            session_ttl: Duration::from_millis(cfg.session_ttl_ms),
+            session_capacity: cfg.session_capacity.max(1),
         };
         let mut workers = Vec::with_capacity(n_workers);
         for (wi, spec) in specs.into_iter().enumerate() {
@@ -393,12 +415,12 @@ impl Coordinator {
     /// Blocking submit (applies backpressure by waiting). Stamps the
     /// configured default TTL, if any.
     pub fn submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, self.default_ttl, true)
+        self.submit_inner(input, self.default_ttl, true, ReqKind::Infer)
     }
 
     /// Non-blocking submit; `Overloaded` when the queue is full.
     pub fn try_submit(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, self.default_ttl, false)
+        self.submit_inner(input, self.default_ttl, false, ReqKind::Infer)
     }
 
     /// Blocking submit with an explicit TTL override (`None` = never
@@ -408,7 +430,7 @@ impl Coordinator {
         input: Vec<f32>,
         ttl: Option<Duration>,
     ) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, ttl, true)
+        self.submit_inner(input, ttl, true, ReqKind::Infer)
     }
 
     /// Non-blocking submit with an explicit TTL override.
@@ -417,7 +439,26 @@ impl Coordinator {
         input: Vec<f32>,
         ttl: Option<Duration>,
     ) -> Result<Ticket, SubmitError> {
-        self.submit_inner(input, ttl, false)
+        self.submit_inner(input, ttl, false, ReqKind::Infer)
+    }
+
+    /// Open a streaming session (idle TTL `ttl_ms`; `0` = server
+    /// default). The response payload is one f32 whose **bits** are the
+    /// session id — decode with `f32::to_bits`.
+    pub fn open_session(&self, ttl_ms: u32) -> Result<Ticket, SubmitError> {
+        self.submit_inner(Vec::new(), self.default_ttl, true, ReqKind::SessionOpen { ttl_ms })
+    }
+
+    /// Advance session `session` by a packet of input samples
+    /// (interleaved `[t, c]`; any prefix of the stream, not a full
+    /// row). The response carries the newly finalized output samples.
+    pub fn step_session(&self, session: u32, input: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.submit_inner(input, self.default_ttl, true, ReqKind::SessionStep { session })
+    }
+
+    /// Close session `session`, recycling its state slot.
+    pub fn close_session(&self, session: u32) -> Result<Ticket, SubmitError> {
+        self.submit_inner(Vec::new(), self.default_ttl, true, ReqKind::SessionClose { session })
     }
 
     fn submit_inner(
@@ -425,6 +466,7 @@ impl Coordinator {
         input: Vec<f32>,
         ttl: Option<Duration>,
         blocking: bool,
+        kind: ReqKind,
     ) -> Result<Ticket, SubmitError> {
         let m = &self.shared.metrics;
         if self.shared.draining.load(Ordering::SeqCst) {
@@ -432,7 +474,16 @@ impl Coordinator {
             m.shed_draining.inc();
             return Err(SubmitError::Draining);
         }
-        if input.len() != self.input_len {
+        // Shape gate per request kind: full rows for stateless
+        // inference; session packets are bounded by a row (the engine
+        // validates channel alignment and stream overrun); control ops
+        // carry no payload.
+        let shape_ok = match kind {
+            ReqKind::Infer => input.len() == self.input_len,
+            ReqKind::SessionStep { .. } => input.len() <= self.input_len,
+            ReqKind::SessionOpen { .. } | ReqKind::SessionClose { .. } => input.is_empty(),
+        };
+        if !shape_ok {
             m.rejected.inc();
             return Err(SubmitError::BadShape {
                 expected: self.input_len,
@@ -446,6 +497,7 @@ impl Coordinator {
         let req = Request {
             id,
             input,
+            kind,
             enqueued: now,
             deadline: ttl.map(|t| now + t),
             slot: Arc::clone(&slot),
@@ -521,6 +573,10 @@ impl Coordinator {
             } else {
                 m.batched_rows.get() as f64 / batches as f64
             },
+            sessions_opened: m.sessions_opened.get(),
+            sessions_closed: m.sessions_closed.get(),
+            session_steps: m.session_steps.get(),
+            sessions_evicted: m.sessions_evicted.get(),
             queue_wait_p50_us: m.queue_wait.quantile_ns(0.5) / 1_000.0,
             inference_p50_us: m.inference.quantile_ns(0.5) / 1_000.0,
             e2e_p50_us: m.e2e.quantile_ns(0.5) / 1_000.0,
@@ -698,6 +754,15 @@ fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
     // a fresh `vec![0.0; n]` per call.
     let mut xbuf: Vec<f32> = Vec::new();
     let mut ybuf: Vec<f32> = Vec::new();
+    // Streaming sessions are worker-owned: the engine holds the halo
+    // state, this map holds each session's idle deadline + TTL for
+    // eviction. Both die with the loop — after a worker panic the
+    // respawned engine starts sessionless, and stale ids fail with a
+    // typed engine error (documented single-worker requirement: with
+    // N > 1 workers a step may land on a worker that doesn't own the
+    // session and fail the same honest way).
+    let mut sessions: HashMap<u32, (Instant, Duration)> = HashMap::new();
+    let mut sbuf: Vec<f32> = Vec::new();
     loop {
         // Block for the first request. `None` means the queue is closed
         // *and* drained — nothing will ever arrive again.
@@ -746,6 +811,41 @@ fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
                 true
             }
         });
+        // Partition session control ops out of the infer batch. They
+        // run per-request in collection order under their own panic
+        // guard, so a mid-op panic still completes every pending slot
+        // with `WorkerLost` (same exactly-one-terminal contract as
+        // batched inference).
+        let mut sess_guard = BatchGuard {
+            batch: Vec::new(),
+            metrics,
+        };
+        let mut i = 0;
+        while i < batch.len() {
+            if matches!(batch[i].kind, ReqKind::Infer) {
+                i += 1;
+            } else {
+                sess_guard.batch.push(batch.remove(i));
+            }
+        }
+        if !sess_guard.batch.is_empty() {
+            run_session_ops(metrics, params, engine, &sess_guard.batch, &mut sessions, &mut sbuf);
+            sess_guard.batch.clear(); // all slots terminal — drop quietly
+        }
+        // Idle-TTL sweep: evict sessions nobody stepped in time. Runs
+        // after the ops so an expired step sheds as `DeadlineExpired`
+        // (above) rather than turning into an unknown-id error here.
+        let now = Instant::now();
+        sessions.retain(|&sid, &mut (deadline, _)| {
+            if now >= deadline {
+                let _ = engine.session_close(sid);
+                metrics.sessions_evicted.inc();
+                false
+            } else {
+                true
+            }
+        });
+
         if batch.is_empty() {
             if shared.shutdown.load(Ordering::SeqCst) && queue.is_empty() {
                 return;
@@ -807,6 +907,122 @@ fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
         }
         if shared.shutdown.load(Ordering::SeqCst) && queue.is_empty() {
             return;
+        }
+    }
+}
+
+/// Run a collected slice of session control ops in order, completing
+/// every slot. Requests stay owned by the caller's guard: if this
+/// panics mid-op, the guard completes the rest with [`Shed::WorkerLost`]
+/// (already-completed slots are first-wins no-ops).
+///
+/// Ledger accounting mirrors the infer path: success → `completed`,
+/// engine failure (including unknown ids and capacity exhaustion) →
+/// `failed`, idle-TTL-expired step → `shed_deadline` — so
+/// `CoordinatorStats::terminal()` stays exact with sessions in play.
+fn run_session_ops(
+    metrics: &Metrics,
+    params: &WorkerParams,
+    engine: &mut dyn Engine,
+    ops: &[Request],
+    sessions: &mut HashMap<u32, (Instant, Duration)>,
+    sbuf: &mut Vec<f32>,
+) {
+    for req in ops {
+        let now = Instant::now();
+        match req.kind {
+            ReqKind::Infer => unreachable!("infer requests are batched, not session ops"),
+            ReqKind::SessionOpen { ttl_ms } => {
+                if engine.live_sessions() >= params.session_capacity {
+                    metrics.failed.inc();
+                    req.slot.complete(Err(ServeError::Engine(format!(
+                        "session capacity ({}) exhausted",
+                        params.session_capacity
+                    ))));
+                    continue;
+                }
+                match engine.session_open() {
+                    Ok(sid) => {
+                        let ttl = if ttl_ms == 0 {
+                            params.session_ttl
+                        } else {
+                            Duration::from_millis(u64::from(ttl_ms))
+                        };
+                        // ZERO TTL (from config) = never expire: park the
+                        // deadline far out and never refresh-check it.
+                        let deadline = if ttl.is_zero() {
+                            now + Duration::from_secs(u64::MAX / 4)
+                        } else {
+                            now + ttl
+                        };
+                        sessions.insert(sid, (deadline, ttl));
+                        metrics.sessions_opened.inc();
+                        metrics.completed.inc();
+                        metrics.e2e.record(req.enqueued.elapsed());
+                        req.slot.complete(Ok(vec![f32::from_bits(sid)]));
+                    }
+                    Err(e) => {
+                        metrics.failed.inc();
+                        req.slot.complete(Err(ServeError::Engine(format!(
+                            "session open failed: {e:#}"
+                        ))));
+                    }
+                }
+            }
+            ReqKind::SessionStep { session } => {
+                crate::fault_point!("worker.session_step");
+                let Some(&(deadline, ttl)) = sessions.get(&session) else {
+                    metrics.failed.inc();
+                    req.slot.complete(Err(ServeError::Engine(format!(
+                        "unknown session id {session}"
+                    ))));
+                    continue;
+                };
+                if now >= deadline {
+                    // Idle TTL lapsed: recycle the state and shed the
+                    // step through the standard deadline taxonomy.
+                    sessions.remove(&session);
+                    let _ = engine.session_close(session);
+                    metrics.sessions_evicted.inc();
+                    metrics.shed_deadline.inc();
+                    req.slot.complete(Err(ServeError::Shed(Shed::DeadlineExpired)));
+                    continue;
+                }
+                match engine.session_step(session, &req.input, sbuf) {
+                    Ok(_) => {
+                        if !ttl.is_zero() {
+                            sessions.insert(session, (now + ttl, ttl));
+                        }
+                        metrics.session_steps.inc();
+                        metrics.completed.inc();
+                        metrics.e2e.record(req.enqueued.elapsed());
+                        req.slot.complete(Ok(sbuf.clone()));
+                    }
+                    Err(e) => {
+                        metrics.failed.inc();
+                        req.slot.complete(Err(ServeError::Engine(format!(
+                            "session step failed: {e:#}"
+                        ))));
+                    }
+                }
+            }
+            ReqKind::SessionClose { session } => {
+                sessions.remove(&session);
+                match engine.session_close(session) {
+                    Ok(()) => {
+                        metrics.sessions_closed.inc();
+                        metrics.completed.inc();
+                        metrics.e2e.record(req.enqueued.elapsed());
+                        req.slot.complete(Ok(Vec::new()));
+                    }
+                    Err(e) => {
+                        metrics.failed.inc();
+                        req.slot.complete(Err(ServeError::Engine(format!(
+                            "session close failed: {e:#}"
+                        ))));
+                    }
+                }
+            }
         }
     }
 }

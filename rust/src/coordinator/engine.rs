@@ -1,12 +1,16 @@
 //! Inference engines the coordinator can drive.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Constructor run on the coordinator's worker thread.
 pub type EngineFactory = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send + 'static>;
 
+use std::collections::HashMap;
+
 use crate::conv::{BackendChoice, ConvBackend};
-use crate::nn::{EagerScratch, Model, Plan, PlanCache, PlanScratch, PlannerConfig};
+use crate::nn::{
+    EagerScratch, Model, Plan, PlanCache, PlanScratch, PlannerConfig, SessionArena, SessionId,
+};
 use crate::runtime::{ArtifactRegistry, TensorView};
 
 /// A batched inference engine with a fixed per-row input/output shape.
@@ -47,6 +51,45 @@ pub trait Engine {
     }
     /// Human-readable backend tag for metrics/logs.
     fn name(&self) -> String;
+
+    // --- Streaming sessions (optional capability) ---------------------
+    //
+    // Engines that can hold per-stream halo state between requests
+    // (see `nn::session`) override these; the defaults report the
+    // capability as absent so the coordinator sheds session traffic
+    // with a typed engine error instead of a protocol crash.
+
+    /// Open a streaming session; returns an engine-scoped session id.
+    /// Ids are never reused within an engine's lifetime, so a stale id
+    /// (closed or evicted) fails instead of silently hitting a
+    /// recycled slot.
+    fn session_open(&mut self) -> Result<u32> {
+        bail!("engine '{}' does not support streaming sessions", self.name())
+    }
+
+    /// Advance session `id` by the packet `x` (interleaved `[t, c]`),
+    /// writing the newly final output samples into `out` (resized to
+    /// exactly the emitted length) and returning the emitted *sample*
+    /// count.
+    fn session_step(&mut self, id: u32, _x: &[f32], _out: &mut Vec<f32>) -> Result<usize> {
+        bail!("unknown session id {id} (engine '{}' has no sessions)", self.name())
+    }
+
+    /// Close session `id`, recycling its state slot.
+    fn session_close(&mut self, id: u32) -> Result<()> {
+        bail!("unknown session id {id} (engine '{}' has no sessions)", self.name())
+    }
+
+    /// Live (open) session count — feeds `CoordinatorStats`.
+    fn live_sessions(&self) -> usize {
+        0
+    }
+
+    /// Session-state slab growths (see `SessionArena::grows`); serving
+    /// tests assert this stays flat across steady-state stepping.
+    fn session_grows(&self) -> u64 {
+        0
+    }
 }
 
 /// Rust-native engine: the [`Model`] layer stack executed through
@@ -82,6 +125,13 @@ pub struct NativeEngine {
     /// synchronization).
     scratch: PlanScratch,
     eager_scratch: EagerScratch,
+    /// Streaming-session state, built lazily from the batch-1 plan on
+    /// the first `session_open` (chain-only models; see `nn::session`).
+    sessions: Option<SessionArena>,
+    /// Wire session id → arena slot. Wire ids are monotonic and never
+    /// reused, so stale ids fail cleanly even after slot recycling.
+    session_ids: HashMap<u32, SessionId>,
+    next_session: u32,
 }
 
 impl NativeEngine {
@@ -105,6 +155,9 @@ impl NativeEngine {
             plans: PlanCache::default(),
             scratch: PlanScratch::default(),
             eager_scratch: EagerScratch::default(),
+            sessions: None,
+            session_ids: HashMap::new(),
+            next_session: 0,
         }
     }
 
@@ -259,6 +312,69 @@ impl Engine for NativeEngine {
         let tune = if self.autotune && !self.eager { "+tune" } else { "" };
         let fuse = if !self.fuse && !self.eager { "+nofuse" } else { "" };
         format!("native/{mode}/{}{tune}{fuse}", self.choice.name())
+    }
+
+    fn session_open(&mut self) -> Result<u32> {
+        ensure!(!self.eager, "eager engines do not support streaming sessions");
+        if self.sessions.is_none() {
+            // Sessions stream one sample row at a time, so the halo
+            // geometry comes from the batch-1 plan (cached — steady
+            // traffic after warmup never compiles here).
+            let plan = self.plan_for(1)?.clone();
+            self.sessions = Some(SessionArena::new(&plan, &self.model)?);
+        }
+        let arena = self.sessions.as_mut().unwrap();
+        let slot = arena.open();
+        let id = self.next_session;
+        self.next_session += 1;
+        self.session_ids.insert(id, slot);
+        Ok(id)
+    }
+
+    fn session_step(&mut self, id: u32, x: &[f32], out: &mut Vec<f32>) -> Result<usize> {
+        let slot = *self
+            .session_ids
+            .get(&id)
+            .with_context(|| format!("unknown session id {id}"))?;
+        let arena = self
+            .sessions
+            .as_mut()
+            .expect("a mapped session id implies an arena");
+        let spec = arena.spec();
+        let (c_in, c_out) = (spec.in_channels(), spec.out_channels());
+        ensure!(
+            x.len() % c_in == 0,
+            "session packet length {} is not a multiple of c_in = {c_in}",
+            x.len()
+        );
+        // The emit count is deterministic from the cursor state, so the
+        // output buffer is sized exactly up front (it reaches its
+        // high-water mark after the first full-tile packet and is
+        // allocation-free from then on).
+        let r = arena.pending_out_samples(slot, x.len() / c_in);
+        out.resize(r * c_out, 0.0);
+        let got = arena.step_into(slot, &self.model, x, out)?;
+        debug_assert_eq!(got, r);
+        Ok(got)
+    }
+
+    fn session_close(&mut self, id: u32) -> Result<()> {
+        let slot = self
+            .session_ids
+            .remove(&id)
+            .with_context(|| format!("unknown session id {id}"))?;
+        self.sessions
+            .as_mut()
+            .expect("a mapped session id implies an arena")
+            .close(slot)
+    }
+
+    fn live_sessions(&self) -> usize {
+        self.sessions.as_ref().map_or(0, |a| a.live_sessions())
+    }
+
+    fn session_grows(&self) -> u64 {
+        self.sessions.as_ref().map_or(0, |a| a.grows())
     }
 }
 

@@ -17,6 +17,7 @@
 //! | `worker.batch_collected` | batch assembled, before deadline shedding    |
 //! | `worker.infer`           | immediately before `Engine::infer_into`      |
 //! | `worker.distribute`      | after inference, before slot completion      |
+//! | `worker.session_step`    | before each `Engine::session_step` call      |
 //! | `supervisor.respawn`     | inside the worker-restart path               |
 //!
 //! `Sleep` at `worker.batch_collected` models a queue stall; `Panic` at

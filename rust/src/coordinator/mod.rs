@@ -29,6 +29,7 @@ pub mod faults;
 mod server;
 
 pub use batcher::{Coordinator, CoordinatorStats, RespawnFactory, SubmitError, WorkerSpec};
+pub use server::{SESSION_CLOSE_MAGIC, SESSION_OPEN_MAGIC, SESSION_STEP_MAGIC};
 pub use engine::{Engine, EngineFactory, NativeEngine, PjrtTcnEngine};
 pub use server::{serve_tcp, TcpClient};
 
@@ -119,10 +120,30 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// An inference request: one input row of the deployed model shape.
+/// What an accepted request asks the worker to do. Everything rides the
+/// same bounded queue, response slots, and panic guards, so the
+/// exactly-one-terminal-state ledger covers session traffic for free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    /// Stateless batched inference on one full input row (the default).
+    Infer,
+    /// Open a streaming session; the response payload is one f32 whose
+    /// *bits* are the session id. `ttl_ms = 0` = server default idle
+    /// TTL.
+    SessionOpen { ttl_ms: u32 },
+    /// Advance a session by a packet of samples; the response is the
+    /// newly finalized output samples (possibly empty).
+    SessionStep { session: u32 },
+    /// Close a session, recycling its state slot (empty response).
+    SessionClose { session: u32 },
+}
+
+/// An inference request: one input row of the deployed model shape, or a
+/// session control operation (see [`ReqKind`]).
 pub struct Request {
     pub id: u64,
     pub input: Vec<f32>,
+    pub kind: ReqKind,
     pub enqueued: std::time::Instant,
     /// Shed-by deadline: if the batcher reaches this request after the
     /// deadline, it completes it with [`Shed::DeadlineExpired`] instead
@@ -204,11 +225,16 @@ impl ResponseSlot {
             if let Some(resp) = g.resp.take() {
                 return Some(resp);
             }
-            let now = std::time::Instant::now();
-            if now >= deadline {
+            // `saturating_duration_since` instead of `deadline - now`: a
+            // wakeup (spurious or racing a completer) can land *after*
+            // the deadline, and bare subtraction of Instants panics on
+            // underflow. Saturating to zero keeps the late-wakeup path a
+            // clean timeout.
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
                 return None;
             }
-            let (guard, _) = self.ready.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = self.ready.wait_timeout(g, remaining).unwrap();
             g = guard;
         }
     }
@@ -270,6 +296,31 @@ mod tests {
         assert!(slot
             .wait_timeout(std::time::Duration::from_millis(2))
             .is_none());
+    }
+
+    /// Regression: `wait_timeout` used `deadline - now` after the
+    /// condvar wakeup, which panics (Instant subtraction underflow) when
+    /// a wakeup lands after the deadline. Race many completers right at
+    /// the timeout boundary — both outcomes (response or clean `None`)
+    /// are fine; a panic is the bug.
+    #[test]
+    fn wait_timeout_survives_deadline_race() {
+        for i in 0..64 {
+            let slot = ResponseSlot::new();
+            let s2 = Arc::clone(&slot);
+            let dur = std::time::Duration::from_micros(200 + 17 * i);
+            let t = std::thread::spawn(move || {
+                // Notify right around the waiter's deadline so some runs
+                // wake the waiter after the deadline has passed.
+                std::thread::sleep(dur);
+                s2.complete(Ok(vec![i as f32]));
+            });
+            match slot.wait_timeout(dur) {
+                Some(resp) => assert_eq!(resp.unwrap(), vec![i as f32]),
+                None => {} // timed out cleanly — the point is no panic
+            }
+            t.join().unwrap();
+        }
     }
 
     #[test]

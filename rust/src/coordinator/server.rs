@@ -4,6 +4,13 @@
 //!   request:  u32 n | u32 ttl_ms | n × f32     (one input row; ttl_ms 0 = no deadline)
 //!   response: u8 tag | u32 n | payload
 //!
+//! Session frames reuse the same channel, keyed by a magic first word
+//! that can never be a valid row length (row lengths are capped at
+//! `1 << 22` floats; the magics sit at the top of the u32 range):
+//!   open:  u32 0xFFFF_FF01 | u32 ttl_ms              → ok payload: 1 × f32 (bits = session id)
+//!   step:  u32 0xFFFF_FF02 | u32 id | u32 n | n × f32 → ok payload: newly final output samples
+//!   close: u32 0xFFFF_FF03 | u32 id                  → ok payload: empty
+//!
 //! Response tags (see [`super::ServeError::wire_code`] /
 //! [`super::SubmitError::wire_code`] — payload is a utf8 message for
 //! every non-zero tag):
@@ -34,30 +41,37 @@ use super::Coordinator;
 /// instead of parking forever.
 const SOCKET_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Magic first word of a session-open frame. All session magics exceed
+/// the `1 << 22` row-length cap, so they can never collide with an
+/// inference frame's length prefix.
+pub const SESSION_OPEN_MAGIC: u32 = 0xFFFF_FF01;
+/// Magic first word of a session-step frame.
+pub const SESSION_STEP_MAGIC: u32 = 0xFFFF_FF02;
+/// Magic first word of a session-close frame.
+pub const SESSION_CLOSE_MAGIC: u32 = 0xFFFF_FF03;
+
 fn read_exact_u32(stream: &mut TcpStream) -> std::io::Result<u32> {
     let mut buf = [0u8; 4];
     stream.read_exact(&mut buf)?;
     Ok(u32::from_le_bytes(buf))
 }
 
-/// Read one request frame into the reused buffers: `bytes` holds the
-/// raw payload, `row` the decoded floats. Returns the TTL field, or
-/// `None` on a clean EOF at a frame boundary.
-fn read_frame(
+/// One decoded request frame; float payloads land in the caller's
+/// reused `row` buffer.
+enum Frame {
+    Infer { ttl: Option<Duration> },
+    Open { ttl_ms: u32 },
+    Step { session: u32 },
+    Close { session: u32 },
+}
+
+/// Read the `n × f32` payload section into the reused buffers.
+fn read_floats(
     stream: &mut TcpStream,
-    max_floats: u32,
+    n: u32,
     bytes: &mut Vec<u8>,
     row: &mut Vec<f32>,
-) -> Result<Option<Option<Duration>>> {
-    let n = match read_exact_u32(stream) {
-        Ok(n) => n,
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
-    };
-    if n > max_floats {
-        bail!("frame of {n} floats exceeds limit {max_floats}");
-    }
-    let ttl_ms = read_exact_u32(stream)?;
+) -> Result<()> {
     bytes.clear();
     bytes.resize(n as usize * 4, 0);
     stream.read_exact(bytes)?;
@@ -66,10 +80,56 @@ fn read_frame(
     for chunk in bytes.chunks_exact(4) {
         row.push(f32::from_le_bytes(chunk.try_into().unwrap()));
     }
-    Ok(Some(if ttl_ms == 0 {
-        None
-    } else {
-        Some(Duration::from_millis(ttl_ms as u64))
+    Ok(())
+}
+
+/// Read one request frame into the reused buffers: `bytes` holds the
+/// raw payload, `row` the decoded floats. Returns the decoded frame, or
+/// `None` on a clean EOF at a frame boundary.
+fn read_frame(
+    stream: &mut TcpStream,
+    max_floats: u32,
+    bytes: &mut Vec<u8>,
+    row: &mut Vec<f32>,
+) -> Result<Option<Frame>> {
+    let head = match read_exact_u32(stream) {
+        Ok(n) => n,
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    row.clear();
+    match head {
+        SESSION_OPEN_MAGIC => {
+            let ttl_ms = read_exact_u32(stream)?;
+            return Ok(Some(Frame::Open { ttl_ms }));
+        }
+        SESSION_CLOSE_MAGIC => {
+            let session = read_exact_u32(stream)?;
+            return Ok(Some(Frame::Close { session }));
+        }
+        SESSION_STEP_MAGIC => {
+            let session = read_exact_u32(stream)?;
+            let n = read_exact_u32(stream)?;
+            if n > max_floats {
+                bail!("frame of {n} floats exceeds limit {max_floats}");
+            }
+            read_floats(stream, n, bytes, row)?;
+            return Ok(Some(Frame::Step { session }));
+        }
+        _ => {}
+    }
+    let n = head;
+    if n > max_floats {
+        bail!("frame of {n} floats exceeds limit {max_floats}");
+    }
+    let ttl_ms = read_exact_u32(stream)?;
+    read_floats(stream, n, bytes, row)?;
+    Ok(Some(Frame::Infer {
+        ttl: if ttl_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(ttl_ms as u64))
+        },
     }))
 }
 
@@ -138,12 +198,15 @@ fn handle_conn(mut stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     let mut rbytes: Vec<u8> = Vec::new();
     let mut row: Vec<f32> = Vec::new();
     let mut wbuf: Vec<u8> = Vec::new();
-    while let Some(ttl) = read_frame(&mut stream, max, &mut rbytes, &mut row)? {
-        // A wire TTL of 0 falls back to the coordinator's configured
-        // default (plain `try_submit`); a nonzero TTL overrides it.
-        let submitted = match ttl {
-            Some(t) => coord.try_submit_with_ttl(row.clone(), Some(t)),
-            None => coord.try_submit(row.clone()),
+    while let Some(frame) = read_frame(&mut stream, max, &mut rbytes, &mut row)? {
+        let submitted = match frame {
+            // A wire TTL of 0 falls back to the coordinator's configured
+            // default (plain `try_submit`); a nonzero TTL overrides it.
+            Frame::Infer { ttl: Some(t) } => coord.try_submit_with_ttl(row.clone(), Some(t)),
+            Frame::Infer { ttl: None } => coord.try_submit(row.clone()),
+            Frame::Open { ttl_ms } => coord.open_session(ttl_ms),
+            Frame::Step { session } => coord.step_session(session, row.clone()),
+            Frame::Close { session } => coord.close_session(session),
         };
         match submitted {
             Ok(ticket) => match ticket.wait() {
@@ -184,7 +247,51 @@ impl TcpClient {
             buf.extend_from_slice(&v.to_le_bytes());
         }
         self.stream.write_all(&buf)?;
+        self.read_response()
+    }
 
+    /// Open a streaming session; `ttl` is the *idle* TTL between steps
+    /// (`None` = server default). Returns the session id.
+    pub fn session_open(&mut self, ttl: Option<Duration>) -> Result<u32> {
+        let ttl_ms: u32 = ttl.map_or(0, |t| t.as_millis().clamp(1, u32::MAX as u128) as u32);
+        let mut buf = Vec::with_capacity(8);
+        buf.extend_from_slice(&SESSION_OPEN_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&ttl_ms.to_le_bytes());
+        self.stream.write_all(&buf)?;
+        let out = self.read_response()?;
+        // The id rides as the raw bit pattern of one f32 — bit-exact
+        // through serialization, unlike a numeric cast.
+        if out.len() != 1 {
+            bail!("session open returned {} floats, expected 1", out.len());
+        }
+        Ok(out[0].to_bits())
+    }
+
+    /// Push a packet of input samples (interleaved `[t, c]`) into the
+    /// session; returns the newly finalized output samples (interleaved,
+    /// possibly empty).
+    pub fn session_step(&mut self, session: u32, packet: &[f32]) -> Result<Vec<f32>> {
+        let mut buf = Vec::with_capacity(12 + packet.len() * 4);
+        buf.extend_from_slice(&SESSION_STEP_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&session.to_le_bytes());
+        buf.extend_from_slice(&(packet.len() as u32).to_le_bytes());
+        for v in packet {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+        self.read_response()
+    }
+
+    /// Close the session, recycling its server-side state.
+    pub fn session_close(&mut self, session: u32) -> Result<()> {
+        let mut buf = Vec::with_capacity(8);
+        buf.extend_from_slice(&SESSION_CLOSE_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&session.to_le_bytes());
+        self.stream.write_all(&buf)?;
+        self.read_response().map(|_| ())
+    }
+
+    fn read_response(&mut self) -> Result<Vec<f32>> {
         let mut tag = [0u8; 1];
         self.stream.read_exact(&mut tag)?;
         let mut len = [0u8; 4];

@@ -19,6 +19,7 @@
 mod layers;
 mod model;
 pub mod plan;
+pub mod session;
 
 pub use layers::{Layer, LayerOutput};
 pub use model::{EagerScratch, ForwardScratch, Model, TensorSpec};
@@ -26,6 +27,7 @@ pub use plan::{
     LayerTune, Plan, PlanCache, PlanKernel, PlanScratch, PlannerConfig, ProbeResult, SegmentTune,
     TuneCache,
 };
+pub use session::{Session, SessionArena, SessionId, StreamSpec, SESSION_TILE};
 
 #[cfg(test)]
 mod tests {

@@ -237,33 +237,33 @@ const CHAIN_MIN_SPAN: usize = 64;
 /// and the run-time sweep derive ranges from — sharing the arithmetic
 /// is what makes the precomputed ring-buffer capacities exact.
 #[derive(Clone, Debug)]
-struct ChainStage {
+pub(crate) struct ChainStage {
     /// Index into the model's layer stack (weight lookup + validation).
-    layer: usize,
-    op: ChainOp,
+    pub(crate) layer: usize,
+    pub(crate) op: ChainOp,
     /// Input / output channels (equal for pools).
-    c_in: usize,
-    c_out: usize,
+    pub(crate) c_in: usize,
+    pub(crate) c_out: usize,
     /// Conceptual input / output row lengths.
-    n_in: usize,
-    n_out: usize,
+    pub(crate) n_in: usize,
+    pub(crate) n_out: usize,
     /// Output stride.
-    stride: usize,
+    pub(crate) stride: usize,
     /// Window extent in input elements (`eff_k` for convs, `w` for
     /// pools).
-    extent: usize,
+    pub(crate) extent: usize,
     /// Left zero-padding (convs only; plan pools are valid-mode).
-    pad: usize,
+    pub(crate) pad: usize,
     /// Ring-buffer row capacity for this stage's *output* (0 for the
     /// last stage, which writes the step destination directly).
-    cap: usize,
+    pub(crate) cap: usize,
     /// Element offset of this stage's ring buffer inside one worker's
     /// chunk of the fuse region.
-    buf_off: usize,
+    pub(crate) buf_off: usize,
 }
 
 #[derive(Clone, Debug)]
-enum ChainOp {
+pub(crate) enum ChainOp {
     Conv { p: Conv1dParams, relu: bool },
     Pool { kind: PoolKind, p: Pool1dParams },
 }
@@ -272,13 +272,13 @@ impl ChainStage {
     /// First conceptual input index needed to produce output `t` —
     /// also the resume point the previous stage's ring buffer must keep
     /// buffered (everything below it has been fully consumed).
-    fn in_lo(&self, t: usize) -> usize {
+    pub(crate) fn in_lo(&self, t: usize) -> usize {
         (t * self.stride).saturating_sub(self.pad).min(self.n_in)
     }
 
     /// One past the last conceptual input index needed to produce
     /// outputs `[.., t1)`.
-    fn in_hi(&self, t1: usize) -> usize {
+    pub(crate) fn in_hi(&self, t1: usize) -> usize {
         if t1 == 0 {
             return 0;
         }
@@ -317,7 +317,7 @@ struct ChainPlan {
 /// minus the consumed-and-dropped prefix. Clamping at the row ends only
 /// shrinks ranges, so the bound is safe; it is also capped at the full
 /// row length, which the content can never exceed.
-fn chain_task_elems(stages: &mut [ChainStage], tile: usize) -> usize {
+pub(crate) fn chain_task_elems(stages: &mut [ChainStage], tile: usize) -> usize {
     let m = stages.len();
     let mut g = tile.max(1);
     for i in (0..m - 1).rev() {
@@ -334,6 +334,21 @@ fn chain_task_elems(stages: &mut [ChainStage], tile: usize) -> usize {
         off += st.c_out * st.cap;
     }
     off
+}
+
+/// Input-row capacity a *streaming* sweep of `stages` needs: the same
+/// affine halo recursion [`chain_task_elems`] runs over stages `1..m`,
+/// continued one more hop through stage 0's geometry — with `tile`
+/// final outputs as the per-advance target, at most this many input
+/// rows are ever buffered between the drop-consumed point and the
+/// append of the next packet. Clamped at the full row length, which
+/// the content can never exceed.
+pub(crate) fn chain_input_cap(stages: &[ChainStage], tile: usize) -> usize {
+    let mut g = tile.max(1);
+    for st in stages.iter().rev() {
+        g = st.stride * g + st.extent.saturating_sub(st.stride);
+    }
+    g.min(stages[0].n_in).max(1)
 }
 
 /// Whether a classified step can join a fused chain: a conv that runs
@@ -1480,6 +1495,109 @@ impl Plan {
         self.batch
     }
 
+    /// Flatten this plan into one fused-chain stage sequence for
+    /// streaming sessions ([`crate::nn::session`]): every step must
+    /// have a tile-sweepable form — fused chains contribute their
+    /// compiled stages verbatim, standalone sliding-family convs and
+    /// non-overlapping valid pools become single stages. Residual
+    /// blocks (the skip path needs the full input), dense heads,
+    /// im2col/direct/int8 kernels, and overlapping pools have no
+    /// incremental form and fail the conversion. `model` is
+    /// cross-checked the same way [`Plan::run_with_into`] checks it.
+    ///
+    /// The returned stages carry zeroed ring capacities; the session
+    /// layer sizes them for its own tile via [`chain_task_elems`].
+    pub(crate) fn stream_stages(&self, model: &Model) -> Result<Vec<ChainStage>> {
+        ensure!(
+            model.layer_count() == self.n_layers,
+            "plan compiled for a different model (layer count {} vs {})",
+            self.n_layers,
+            model.layer_count()
+        );
+        ensure!(
+            self.batch == 1,
+            "streaming sessions are single-stream: compile the plan at batch 1 (got {})",
+            self.batch
+        );
+        let mut stages: Vec<ChainStage> = Vec::new();
+        for step in &self.steps {
+            match &step.op {
+                StepOp::Chain(chain) => {
+                    for st in &chain.stages {
+                        stages.push(ChainStage {
+                            cap: 0,
+                            buf_off: 0,
+                            ..st.clone()
+                        });
+                    }
+                }
+                StepOp::Conv { p, relu } => {
+                    ensure!(
+                        matches!(step.kernel, PlanKernel::Sliding | PlanKernel::SmallK),
+                        "layer {}: {} kernel has no streaming tile form (sliding-family only)",
+                        step.layer,
+                        step.kernel.name()
+                    );
+                    stages.push(ChainStage {
+                        layer: step.layer,
+                        c_in: p.c_in,
+                        c_out: p.c_out,
+                        n_in: p.n,
+                        n_out: p.n_out(),
+                        stride: p.stride,
+                        extent: p.effective_k(),
+                        pad: p.pad,
+                        cap: 0,
+                        buf_off: 0,
+                        op: ChainOp::Conv { p: *p, relu: *relu },
+                    });
+                }
+                StepOp::Pool { kind, p } => {
+                    ensure!(
+                        p.stride > 1 && p.stride >= p.w && p.boundary == Boundary::Valid,
+                        "layer {}: overlapping or dense pool has no streaming tile form",
+                        step.layer
+                    );
+                    stages.push(ChainStage {
+                        layer: step.layer,
+                        c_in: p.channels,
+                        c_out: p.channels,
+                        n_in: p.n,
+                        n_out: p.n_out(),
+                        stride: p.stride,
+                        extent: p.w,
+                        pad: 0,
+                        cap: 0,
+                        buf_off: 0,
+                        op: ChainOp::Pool { kind: *kind, p: *p },
+                    });
+                }
+                StepOp::Residual { .. } => bail!(
+                    "layer {}: residual blocks cannot stream (the skip path needs the full input)",
+                    step.layer
+                ),
+                StepOp::Dense { .. } => {
+                    bail!("layer {}: dense heads cannot stream", step.layer)
+                }
+            }
+        }
+        ensure!(!stages.is_empty(), "plan has no steps");
+        // Stage ↔ layer pairing, same check the chain executor makes.
+        for st in &stages {
+            let ok = matches!(
+                (&st.op, &model.layers()[st.layer]),
+                (ChainOp::Conv { .. }, Layer::Conv { .. })
+                    | (ChainOp::Pool { .. }, Layer::Pool { .. })
+            );
+            ensure!(
+                ok,
+                "stream stage {} does not match the model's layer kind",
+                st.layer
+            );
+        }
+        Ok(stages)
+    }
+
     /// Total arena elements: `2·act + tmp + col + fuse + pool`.
     pub fn arena_len(&self) -> usize {
         2 * self.act_len + self.tmp_len + self.col_len + self.fuse_len + self.pool_len
@@ -1833,19 +1951,85 @@ fn exec_step(
     }
 }
 
-/// A chain stage with its weights resolved — what the sweep workers
-/// actually execute.
-enum StageKernel<'a> {
-    Conv {
-        w: &'a [f32],
-        bias: &'a [f32],
-        p: &'a Conv1dParams,
-        relu: bool,
+/// Where a chain advance writes its final-stage outputs.
+///
+/// The batch sweep hands out per-channel destination column slices
+/// (`Rows`); a streaming session stages the tile into a small planar
+/// buffer it then interleaves out to the caller (`Planar`). Both
+/// resolve `(channel, first column, length)` to a contiguous segment,
+/// so the final-stage kernel call is identical — which is what keeps
+/// session steps bit-identical to the batch sweep.
+pub(crate) enum ChainDst<'d, 'r> {
+    /// Per-channel column slices; `v0` is the conceptual column of each
+    /// slice's first element (the unit's span start).
+    Rows {
+        rows: &'d mut [&'r mut [f32]],
+        v0: usize,
     },
-    Pool {
-        kind: PoolKind,
-        p: &'a Pool1dParams,
+    /// Planar `[c_out, cap]` staging rows; `lo` is the conceptual
+    /// column of each row's first element.
+    Planar {
+        buf: &'d mut [f32],
+        cap: usize,
+        lo: usize,
     },
+}
+
+impl ChainDst<'_, '_> {
+    /// The segment holding channel `co`, conceptual columns
+    /// `[t0, t0 + n)`.
+    fn seg(&mut self, co: usize, t0: usize, n: usize) -> &mut [f32] {
+        match self {
+            ChainDst::Rows { rows, v0 } => &mut rows[co][t0 - *v0..][..n],
+            ChainDst::Planar { buf, cap, lo } => &mut buf[co * *cap + (t0 - *lo)..][..n],
+        }
+    }
+}
+
+/// Run one chain stage's kernel over conceptual output columns
+/// `[new_lo, new_lo + n_new)`, resolving the stage's weights inline
+/// from the model (the pairing was validated when the chain/stream was
+/// built, so a mismatch here is unreachable). Same row-tile conv body
+/// and non-overlapping pool fold as the unfused plan — bit-identity
+/// hinges on dispatching to exactly these kernels.
+#[allow(clippy::too_many_arguments)]
+fn chain_run_stage(
+    st: &ChainStage,
+    model: &Model,
+    src_view: &[f32],
+    src0: usize,
+    pitch: usize,
+    new_lo: usize,
+    n_new: usize,
+    dst: &mut ChainDst<'_, '_>,
+) {
+    match (&st.op, &model.layers()[st.layer]) {
+        (ChainOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
+            let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
+            for co in 0..st.c_out {
+                conv::conv1d_sliding_row_tile_into(
+                    dst.seg(co, new_lo, n_new),
+                    new_lo,
+                    co,
+                    src_view,
+                    src0,
+                    pitch,
+                    w.as_slice(),
+                    Some(b.as_slice()),
+                    p,
+                    epi,
+                    0,
+                );
+            }
+        }
+        (ChainOp::Pool { kind, p }, Layer::Pool { .. }) => {
+            for ch in 0..st.c_out {
+                let xin = &src_view[ch * pitch..][..pitch];
+                pool1d_row_nonoverlap_tile(*kind, xin, src0, p, new_lo, dst.seg(ch, new_lo, n_new));
+            }
+        }
+        _ => unreachable!("chain stage/layer pairing validated at build"),
+    }
 }
 
 /// Execute a fused chain step: workers sweep `(batch element ×
@@ -1869,27 +2053,18 @@ fn run_fused_chain(
 ) -> Result<()> {
     let stages = &chain.stages;
     let m = stages.len();
-    // alloc-ok: O(stages) resolved-weight table, built once per request.
-    let mut kernels: Vec<StageKernel<'_>> = Vec::with_capacity(m);
+    // Validate the stage ↔ layer pairing up front; the sweep resolves
+    // weights inline per tile and treats a mismatch as unreachable.
     for st in stages {
-        let layer = &model.layers()[st.layer];
-        match (&st.op, layer) {
-            (ChainOp::Conv { p, relu }, Layer::Conv { w, b, .. }) => {
-                kernels.push(StageKernel::Conv {
-                    w,
-                    bias: b,
-                    p,
-                    relu: *relu,
-                });
-            }
-            (ChainOp::Pool { kind, p }, Layer::Pool { .. }) => {
-                kernels.push(StageKernel::Pool { kind: *kind, p });
-            }
-            _ => bail!(
-                "fused-chain stage {} does not match the model's layer kind",
-                st.layer
+        ensure!(
+            matches!(
+                (&st.op, &model.layers()[st.layer]),
+                (ChainOp::Conv { .. }, Layer::Conv { .. })
+                    | (ChainOp::Pool { .. }, Layer::Pool { .. })
             ),
-        }
+            "fused-chain stage {} does not match the model's layer kind",
+            st.layer
+        );
     }
     let batch = chain.batch;
     let (c_final, n_final) = (stages[m - 1].c_out, stages[m - 1].n_out);
@@ -1946,7 +2121,6 @@ fn run_fused_chain(
         debug_assert!(rest.is_empty());
     }
     let fuse = &mut fuse[..tasks * chain.task_elems];
-    let kernels_ref: &[StageKernel<'_>] = &kernels;
     let tile = chain.tile;
     // alloc-ok: one job closure per task (fan-out setup).
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(tasks);
@@ -1969,7 +2143,7 @@ fn run_fused_chain(
                 if v0 >= v1 {
                     continue;
                 }
-                chain_sweep_unit(stages, kernels_ref, tile, src, b, v0, v1, buf, &mut dsl);
+                chain_sweep_unit(stages, model, tile, src, b, v0, v1, buf, &mut dsl);
             }
         }));
     }
@@ -1985,10 +2159,10 @@ fn run_fused_chain(
 /// rows, hand off. Every stage resumes exactly where it stopped, so
 /// nothing is recomputed within a span and the dense intermediates
 /// never exist.
-#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+#[allow(clippy::too_many_arguments)]
 fn chain_sweep_unit(
     stages: &[ChainStage],
-    kernels: &[StageKernel<'_>],
+    model: &Model,
     tile: usize,
     src: &[f32],
     b: usize,
@@ -2000,21 +2174,8 @@ fn chain_sweep_unit(
     let m = stages.len();
     let row0 = stages[0].c_in * stages[0].n_in;
     let src_b = &src[b * row0..][..row0];
-    // Split the task buffer into per-stage ring buffers (laid out in
-    // stage order by `buf_off`).
-    // alloc-ok: O(stages) ring-buffer views into the arena's fuse region.
-    let mut bufs: Vec<&mut [f32]> = Vec::with_capacity(m - 1);
-    {
-        let mut rest = task_buf;
-        for st in &stages[..m - 1] {
-            let rem = rest;
-            let (a, tail) = rem.split_at_mut(st.c_out * st.cap);
-            rest = tail;
-            bufs.push(a);
-        }
-    }
     // prod[i]: outputs produced so far; lo[i]: conceptual origin of
-    // stage i's ring buffer (content = [lo, prod)); hi[i]: this tile's
+    // stage i's ring buffer (content = [lo, prod)); hi[i]: per-advance
     // production target.
     let mut prod: Vec<usize> = vec![0; m]; // alloc-ok: O(stages) cursors
     let mut lo: Vec<usize> = vec![0; m]; // alloc-ok: O(stages) cursors
@@ -2027,85 +2188,142 @@ fn chain_sweep_unit(
     let mut u = v0;
     while u < v1 {
         let u1 = (u + tile).min(v1);
-        hi[m - 1] = u1;
-        for i in (0..m - 1).rev() {
-            hi[i] = stages[i + 1].in_hi(hi[i + 1]).max(prod[i]);
-        }
-        for i in 0..m {
-            // Drop fully consumed input rows: the next stage resumes at
-            // prod[i+1], so everything below its in_lo is dead. A
-            // stride > extent stage (gapped pool) can leave lo ahead of
-            // prod — the gap elements are simply never produced.
-            if i + 1 < m {
-                let keep = stages[i + 1].in_lo(prod[i + 1]);
-                if keep > lo[i] {
-                    let have = prod[i].saturating_sub(keep);
-                    if have > 0 {
-                        let shift = keep - lo[i];
-                        let cap = stages[i].cap;
-                        crate::invariant!(
-                            shift + have <= cap,
-                            "chain halo shift out of ring bounds at stage {i}"
-                        );
-                        for row in bufs[i].chunks_mut(cap) {
-                            row.copy_within(shift..shift + have, 0);
-                        }
-                    }
-                    lo[i] = keep;
-                }
-            }
-            let new_lo = if i + 1 < m {
-                prod[i].max(lo[i])
-            } else {
-                prod[i]
-            };
-            let new_hi = hi[i];
-            if new_hi <= new_lo {
-                prod[i] = prod[i].max(new_hi);
-                continue;
-            }
-            let n_new = new_hi - new_lo;
-            crate::invariant!(
-                i + 1 == m || new_hi - lo[i] <= stages[i].cap,
-                "chain ring-buffer overflow at stage {i}"
-            );
-            let (inputs, outputs) = bufs.split_at_mut(i);
-            let (src_view, src0, pitch): (&[f32], usize, usize) = if i == 0 {
-                (src_b, 0, stages[0].n_in)
-            } else {
-                (&*inputs[i - 1], lo[i - 1], stages[i - 1].cap)
-            };
-            match &kernels[i] {
-                StageKernel::Conv { w, bias, p, relu } => {
-                    let epi = if *relu { Epilogue::Relu } else { Epilogue::None };
-                    for co in 0..stages[i].c_out {
-                        let yseg: &mut [f32] = if i + 1 < m {
-                            let cap = stages[i].cap;
-                            &mut outputs[0][co * cap + (new_lo - lo[i])..][..n_new]
-                        } else {
-                            &mut dst[co][new_lo - v0..][..n_new]
-                        };
-                        conv::conv1d_sliding_row_tile_into(
-                            yseg, new_lo, co, src_view, src0, pitch, w, Some(bias), p, epi, 0,
-                        );
-                    }
-                }
-                StageKernel::Pool { kind, p } => {
-                    for ch in 0..stages[i].c_out {
-                        let xin = &src_view[ch * pitch..][..pitch];
-                        let yseg: &mut [f32] = if i + 1 < m {
-                            let cap = stages[i].cap;
-                            &mut outputs[0][ch * cap + (new_lo - lo[i])..][..n_new]
-                        } else {
-                            &mut dst[ch][new_lo - v0..][..n_new]
-                        };
-                        pool1d_row_nonoverlap_tile(*kind, xin, src0, p, new_lo, yseg);
-                    }
-                }
-            }
-            prod[i] = new_hi;
-        }
+        chain_advance(
+            stages,
+            model,
+            src_b,
+            0,
+            stages[0].n_in,
+            task_buf,
+            &mut prod,
+            &mut lo,
+            &mut hi,
+            u1,
+            ChainDst::Rows {
+                rows: &mut *dst,
+                v0,
+            },
+        );
         u = u1;
+    }
+}
+
+/// Advance every stage of a chain far enough to bring the final stage
+/// from `prod[m-1]` up to `u1` final outputs — one tile of the batch
+/// sweep, or one packet of a streaming session. Targets propagate back
+/// through the halo geometry ([`ChainStage::in_hi`]) and stages then
+/// produce front to back: drop what the next stage has consumed
+/// (shifting the retained `extent − stride` halo to the ring-buffer
+/// front), append the new rows, hand off. Every stage resumes exactly
+/// where it stopped — nothing is recomputed and the dense
+/// intermediates never exist.
+///
+/// `src`/`src0`/`pitch0` describe stage 0's input rows: a view whose
+/// per-channel rows (pitch `pitch0`) start at conceptual column `src0`
+/// and must cover every column `[in_lo(new_lo), in_hi(u1-target))`
+/// stage 0 still needs — the full input row for the batch sweep, the
+/// session's input ring otherwise. `task_buf` holds the per-stage ring
+/// buffers laid out by [`ChainStage::buf_off`]; `prod`/`lo`/`hi` are
+/// the resume cursors (callers zero them at conceptual origin v0 = 0,
+/// or back-solve via [`ChainStage::in_lo`] for a mid-row span start).
+///
+/// Performs no allocation: per-stage ring views are carved out of
+/// `task_buf` by offset on the fly, and weights resolve inline from
+/// `model` — this is what lets a session step run allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn chain_advance(
+    stages: &[ChainStage],
+    model: &Model,
+    src: &[f32],
+    src0: usize,
+    pitch0: usize,
+    task_buf: &mut [f32],
+    prod: &mut [usize],
+    lo: &mut [usize],
+    hi: &mut [usize],
+    u1: usize,
+    dst: ChainDst<'_, '_>,
+) {
+    let m = stages.len();
+    hi[m - 1] = u1;
+    for i in (0..m - 1).rev() {
+        hi[i] = stages[i + 1].in_hi(hi[i + 1]).max(prod[i]);
+    }
+    let mut final_dst = Some(dst);
+    for i in 0..m {
+        // Drop fully consumed input rows: the next stage resumes at
+        // prod[i+1], so everything below its in_lo is dead. A
+        // stride > extent stage (gapped pool) can leave lo ahead of
+        // prod — the gap elements are simply never produced.
+        if i + 1 < m {
+            let keep = stages[i + 1].in_lo(prod[i + 1]);
+            if keep > lo[i] {
+                let have = prod[i].saturating_sub(keep);
+                if have > 0 {
+                    let shift = keep - lo[i];
+                    let cap = stages[i].cap;
+                    crate::invariant!(
+                        shift + have <= cap,
+                        "chain halo shift out of ring bounds at stage {i}"
+                    );
+                    let ring = &mut task_buf[stages[i].buf_off..][..stages[i].c_out * cap];
+                    for row in ring.chunks_mut(cap) {
+                        row.copy_within(shift..shift + have, 0);
+                    }
+                }
+                lo[i] = keep;
+            }
+        }
+        let new_lo = if i + 1 < m {
+            prod[i].max(lo[i])
+        } else {
+            prod[i]
+        };
+        let new_hi = hi[i];
+        if new_hi <= new_lo {
+            prod[i] = prod[i].max(new_hi);
+            continue;
+        }
+        let n_new = new_hi - new_lo;
+        crate::invariant!(
+            i + 1 == m || new_hi - lo[i] <= stages[i].cap,
+            "chain ring-buffer overflow at stage {i}"
+        );
+        // Rings live in `task_buf` in stage order, so one split at this
+        // stage's offset separates its input ring (behind) from its
+        // output ring (ahead) without aliasing — no view table needed.
+        if i + 1 < m {
+            let (behind, ahead) = task_buf.split_at_mut(stages[i].buf_off);
+            let (src_view, sv0, pitch): (&[f32], usize, usize) = if i == 0 {
+                (src, src0, pitch0)
+            } else {
+                (
+                    &behind[stages[i - 1].buf_off..][..stages[i - 1].c_out * stages[i - 1].cap],
+                    lo[i - 1],
+                    stages[i - 1].cap,
+                )
+            };
+            let ring = &mut ahead[..stages[i].c_out * stages[i].cap];
+            let mut sdst = ChainDst::Planar {
+                buf: ring,
+                cap: stages[i].cap,
+                lo: lo[i],
+            };
+            chain_run_stage(&stages[i], model, src_view, sv0, pitch, new_lo, n_new, &mut sdst);
+        } else {
+            let (src_view, sv0, pitch): (&[f32], usize, usize) = if i == 0 {
+                (src, src0, pitch0)
+            } else {
+                (
+                    &task_buf[stages[i - 1].buf_off..][..stages[i - 1].c_out * stages[i - 1].cap],
+                    lo[i - 1],
+                    stages[i - 1].cap,
+                )
+            };
+            let mut sdst = final_dst.take().expect("final stage runs once per advance");
+            chain_run_stage(&stages[i], model, src_view, sv0, pitch, new_lo, n_new, &mut sdst);
+        }
+        prod[i] = new_hi;
     }
 }
 

@@ -1,0 +1,649 @@
+//! Stateful streaming inference sessions — amortized O(1) work per
+//! sample over the fused-chain halo machinery.
+//!
+//! The paper's setting is streaming ("input sequence elements become
+//! available one by one"), and PR 5's chain fusion already computes
+//! exactly the state an incremental forward needs: per stage, the
+//! trailing `extent − stride` input halo in a small ring buffer. A
+//! [`Session`] captures that state between calls: each
+//! [`Session::step_into`] appends a packet of input samples, advances
+//! every stage only as far as the new samples allow (the per-stage
+//! *availability* frontier), and emits the final-layer outputs that
+//! just became computable — bit-identical to rerunning the full
+//! forward on the extended history, because the per-element math is
+//! the same row-tile conv body and pool fold the batch plan runs
+//! (`chain_advance`, shared verbatim with the fused-chain sweep).
+//!
+//! **State layout.** Sessions live in a slab-backed [`SessionArena`]:
+//! one `Vec<f32>` slab of uniform slots (input ring + per-stage chain
+//! rings + a planar output staging tile) plus one `Vec<usize>` cursor
+//! slab — no per-session allocations, and closed slots are recycled
+//! through a free list. Opening a session may grow the slabs (tracked
+//! by [`SessionArena::grows`]); stepping never does, which is the
+//! zero-allocation assertion the streaming tests pin.
+//!
+//! **Availability.** With `a` input samples absorbed, a stage of
+//! geometry `(stride s, extent e, left/right pad p)` has finalized
+//! exactly `min(n_out, (a + p − e)/s + 1)` outputs while `a < n_in`
+//! (only left padding is usable mid-stream), and all `n_out` once
+//! `a == n_in` — the right-pad windows unlock in one burst at end of
+//! stream. Composing this over the stages gives the emit count per
+//! step, deterministically, before any kernel runs.
+//!
+//! See `docs/streaming.md` for the wire protocol and serving-side
+//! lifecycle (TTL, eviction, coalescing).
+
+use anyhow::{bail, ensure, Result};
+
+use super::plan::{
+    chain_advance, chain_input_cap, chain_task_elems, ChainDst, ChainStage, Plan,
+};
+use super::Model;
+
+/// Final-stage outputs per internal advance — the session's sweep tile.
+/// Small keeps the per-slot ring/staging footprint tiny (sessions are
+/// many, packets are small); the halo recursion in `chain_task_elems`
+/// sizes every ring for exactly this target.
+pub const SESSION_TILE: usize = 8;
+
+/// Outputs stage `st` has finalized once `avail_in` of its input rows
+/// are absorbed (see the module docs for the derivation).
+fn stage_avail(st: &ChainStage, avail_in: usize) -> usize {
+    if avail_in >= st.n_in {
+        return st.n_out;
+    }
+    let a = avail_in + st.pad;
+    if a < st.extent {
+        0
+    } else {
+        ((a - st.extent) / st.stride + 1).min(st.n_out)
+    }
+}
+
+/// Final-stage availability after absorbing `avail_in` input samples.
+fn chain_avail(stages: &[ChainStage], avail_in: usize) -> usize {
+    let mut a = avail_in;
+    for st in stages {
+        a = stage_avail(st, a);
+    }
+    a
+}
+
+/// Compiled streaming geometry for one model: the plan's fused-chain
+/// stage sequence re-tiled for [`SESSION_TILE`], with the slab slot
+/// layout every session of this model shares.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    stages: Vec<ChainStage>,
+    n_layers: usize,
+    c_in: usize,
+    c_out: usize,
+    /// Input samples per full stream (the model's `seq_len`).
+    n_in: usize,
+    /// Final outputs per full stream.
+    n_out: usize,
+    /// Input-ring row capacity (per channel).
+    in_cap: usize,
+    /// Chain ring-buffer elements per slot (`chain_task_elems`).
+    ring_elems: usize,
+    /// f32 elements per slab slot:
+    /// `c_in·in_cap + ring_elems + c_out·SESSION_TILE`.
+    slot_elems: usize,
+    /// usize cursor words per slot: `3m` sweep cursors + input origin +
+    /// absorbed count + open flag.
+    cur_words: usize,
+}
+
+impl StreamSpec {
+    /// Build from a batch-1 plan. Fails if any step has no streaming
+    /// tile form (see [`Plan`]'s stream conversion for the rules).
+    pub fn new(plan: &Plan, model: &Model) -> Result<Self> {
+        let mut stages = plan.stream_stages(model)?;
+        let m = stages.len();
+        let ring_elems = chain_task_elems(&mut stages, SESSION_TILE);
+        let in_cap = chain_input_cap(&stages, SESSION_TILE);
+        let (c_in, n_in) = (stages[0].c_in, stages[0].n_in);
+        let (c_out, n_out) = (stages[m - 1].c_out, stages[m - 1].n_out);
+        Ok(Self {
+            stages,
+            n_layers: model.layer_count(),
+            c_in,
+            c_out,
+            n_in,
+            n_out,
+            in_cap,
+            ring_elems,
+            slot_elems: c_in * in_cap + ring_elems + c_out * SESSION_TILE,
+            cur_words: 3 * m + 3,
+        })
+    }
+
+    pub fn in_channels(&self) -> usize {
+        self.c_in
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.c_out
+    }
+
+    /// Input samples a full stream carries (the model's `seq_len`).
+    pub fn stream_len(&self) -> usize {
+        self.n_in
+    }
+
+    /// Output samples a full stream emits.
+    pub fn out_len(&self) -> usize {
+        self.n_out
+    }
+
+    /// Per-session f32 state footprint.
+    pub fn slot_elems(&self) -> usize {
+        self.slot_elems
+    }
+}
+
+/// Handle to one live session inside a [`SessionArena`]. Slot indices
+/// are recycled after close; serving keeps its own generation map on
+/// top (a stale wire id must not reach a recycled slot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionId(u32);
+
+impl SessionId {
+    pub fn index(self) -> u32 {
+        self.0
+    }
+}
+
+// Cursor-word layout inside one slot's `cur` span (after the 3m sweep
+// cursors prod/lo/hi).
+const CUR_IN_LO: usize = 0;
+const CUR_AVAIL: usize = 1;
+const CUR_OPEN: usize = 2;
+
+/// Slab-backed pool of streaming sessions for one model/plan: all
+/// per-session state lives in two uniform-slot slabs, so N sessions
+/// cost exactly `N · slot_elems` floats plus cursors — no per-session
+/// `Vec`s, no fragmentation, and closed slots recycle via a free list.
+#[derive(Clone, Debug)]
+pub struct SessionArena {
+    spec: StreamSpec,
+    /// `[input ring | chain rings | staging]` per slot.
+    slab: Vec<f32>,
+    /// `[prod(m) | lo(m) | hi(m) | in_lo | avail | open]` per slot.
+    cur: Vec<usize>,
+    free: Vec<u32>,
+    slots: usize,
+    live: usize,
+    grows: u64,
+}
+
+impl SessionArena {
+    pub fn new(plan: &Plan, model: &Model) -> Result<Self> {
+        Ok(Self {
+            spec: StreamSpec::new(plan, model)?,
+            slab: Vec::new(),
+            cur: Vec::new(),
+            free: Vec::new(),
+            slots: 0,
+            live: 0,
+            grows: 0,
+        })
+    }
+
+    pub fn spec(&self) -> &StreamSpec {
+        &self.spec
+    }
+
+    /// Live (open) session count.
+    pub fn live_sessions(&self) -> usize {
+        self.live
+    }
+
+    /// Times the slab grew (a fresh slot was carved instead of reusing
+    /// a free one). Open may grow; **step never does** — steady-state
+    /// tests assert this stays flat across arbitrarily many steps.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Pre-carve capacity for `n` sessions so later opens are
+    /// growth-free (the serving warm-up path).
+    pub fn reserve(&mut self, n: usize) {
+        while self.slots < n {
+            let idx = self.slots as u32;
+            self.slots += 1;
+            self.slab.resize(self.slots * self.spec.slot_elems, 0.0);
+            self.cur.resize(self.slots * self.spec.cur_words, 0);
+            self.free.push(idx);
+        }
+    }
+
+    /// Open a session: recycle a free slot or grow the slab by one.
+    pub fn open(&mut self) -> SessionId {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                let i = self.slots as u32;
+                self.slots += 1;
+                self.slab.resize(self.slots * self.spec.slot_elems, 0.0);
+                self.cur.resize(self.slots * self.spec.cur_words, 0);
+                self.grows += 1;
+                i
+            }
+        };
+        self.live += 1;
+        let id = SessionId(idx);
+        self.reset(id);
+        id
+    }
+
+    /// Rewind a session to the empty-stream state (keeps the slot).
+    /// Ring contents need no zeroing: the sweep only ever reads rows it
+    /// has produced since the cursors were reset.
+    pub fn reset(&mut self, id: SessionId) {
+        let m3 = self.spec.cur_words - 3; // 3m sweep-cursor words
+        let cur = self.cur_slot_mut(id);
+        for w in cur.iter_mut() {
+            *w = 0;
+        }
+        cur[m3 + CUR_OPEN] = 1;
+    }
+
+    /// Close a session and recycle its slot.
+    pub fn close(&mut self, id: SessionId) -> Result<()> {
+        let m3 = self.spec.cur_words - 3;
+        let cur = self.cur_slot_mut(id);
+        ensure!(cur[m3 + CUR_OPEN] == 1, "session already closed");
+        cur[m3 + CUR_OPEN] = 0;
+        self.live -= 1;
+        self.free.push(id.0);
+        Ok(())
+    }
+
+    /// Input samples this session has absorbed so far.
+    pub fn samples_seen(&self, id: SessionId) -> usize {
+        let m3 = self.spec.cur_words - 3;
+        self.cur[id.0 as usize * self.spec.cur_words + m3 + CUR_AVAIL]
+    }
+
+    /// Whether the session has absorbed its full stream.
+    pub fn finished(&self, id: SessionId) -> bool {
+        self.samples_seen(id) >= self.spec.n_in
+    }
+
+    /// Output *samples* (per-sample rows of `out_channels` floats) that
+    /// pushing `n_new` more input samples would emit.
+    pub fn pending_out_samples(&self, id: SessionId, n_new: usize) -> usize {
+        let m = self.spec.stages.len();
+        let base = id.0 as usize * self.spec.cur_words;
+        let avail = self.cur[base + 3 * m + CUR_AVAIL];
+        let prod_final = self.cur[base + m - 1];
+        chain_avail(&self.spec.stages, (avail + n_new).min(self.spec.n_in)) - prod_final
+    }
+
+    fn cur_slot_mut(&mut self, id: SessionId) -> &mut [usize] {
+        &mut self.cur[id.0 as usize * self.spec.cur_words..][..self.spec.cur_words]
+    }
+
+    /// Advance session `id` by the packet `x` (interleaved `[t, c]`:
+    /// `x[j·c_in + ch]` is sample `j`, channel `ch`), writing the
+    /// outputs that just became final into the prefix of `dst`
+    /// (interleaved the same way) and returning the emitted *sample*
+    /// count `r` — `dst[..r·out_channels]` is fully overwritten, the
+    /// rest untouched. `model` must be the model the arena was built
+    /// from. Emits are bit-identical to the batch forward on the full
+    /// history; pushing beyond the model's `seq_len` is an error.
+    ///
+    /// Steady-state cost: O(packet) kernel work plus O(stages) cursor
+    /// arithmetic — amortized O(1) per sample — and zero allocations
+    /// (all state is pre-carved slab).
+    pub fn step_into(
+        &mut self,
+        id: SessionId,
+        model: &Model,
+        x: &[f32],
+        dst: &mut [f32],
+    ) -> Result<usize> {
+        let spec = &self.spec;
+        let m = spec.stages.len();
+        ensure!((id.0 as usize) < self.slots, "unknown session id");
+        ensure!(
+            model.layer_count() == spec.n_layers,
+            "session arena built for a different model (layer count {} vs {})",
+            spec.n_layers,
+            model.layer_count()
+        );
+        ensure!(
+            x.len() % spec.c_in == 0,
+            "packet length {} is not a multiple of c_in = {}",
+            x.len(),
+            spec.c_in
+        );
+        let samples = x.len() / spec.c_in;
+        let base = id.0 as usize * spec.cur_words;
+        ensure!(self.cur[base + 3 * m + CUR_OPEN] == 1, "session is closed");
+        let mut s_avail = self.cur[base + 3 * m + CUR_AVAIL];
+        let mut s_in_lo = self.cur[base + 3 * m + CUR_IN_LO];
+        ensure!(
+            s_avail + samples <= spec.n_in,
+            "packet overruns the stream: {} absorbed + {} new > seq_len {}",
+            s_avail,
+            samples,
+            spec.n_in
+        );
+        // Emit count is deterministic from the availability math alone —
+        // check the caller's buffer before touching any state.
+        let prod_final0 = self.cur[base + m - 1];
+        let r = chain_avail(&spec.stages, s_avail + samples) - prod_final0;
+        ensure!(
+            dst.len() >= r * spec.c_out,
+            "dst holds {} floats, step emits {} samples × {} channels",
+            dst.len(),
+            r,
+            spec.c_out
+        );
+        crate::check::poison(&mut dst[..r * spec.c_out]);
+
+        // Carve this slot's state: input ring rows, chain rings,
+        // planar staging — then the cursor words.
+        let slab = &mut self.slab[id.0 as usize * spec.slot_elems..][..spec.slot_elems];
+        let (input_ring, rest) = slab.split_at_mut(spec.c_in * spec.in_cap);
+        let (task_buf, staging) = rest.split_at_mut(spec.ring_elems);
+        let cur = &mut self.cur[base..][..spec.cur_words];
+        let (prod, rest_c) = cur.split_at_mut(m);
+        let (lo, rest_c) = rest_c.split_at_mut(m);
+        let (hi, _tail) = rest_c.split_at_mut(m);
+
+        let mut xoff = 0usize;
+        while xoff < samples {
+            let c = (samples - xoff).min(SESSION_TILE);
+            // Drop input rows every stage has consumed; the retained
+            // halo shifts to the ring front. (`prod[0]` only moves
+            // forward, so `in_lo` is monotone and rows the sweep still
+            // needs are never dropped.)
+            let keep = spec.stages[0].in_lo(prod[0]).min(s_avail);
+            if keep > s_in_lo {
+                let have = s_avail - keep;
+                if have > 0 {
+                    let shift = keep - s_in_lo;
+                    for row in input_ring.chunks_mut(spec.in_cap) {
+                        row.copy_within(shift..shift + have, 0);
+                    }
+                }
+                s_in_lo = keep;
+            }
+            crate::invariant!(
+                s_avail + c - s_in_lo <= spec.in_cap,
+                "session input ring overflow"
+            );
+            // Append the packet chunk, de-interleaving [t, c] → rows.
+            for j in 0..c {
+                for ch in 0..spec.c_in {
+                    input_ring[ch * spec.in_cap + (s_avail - s_in_lo + j)] =
+                        x[(xoff + j) * spec.c_in + ch];
+                }
+            }
+            s_avail += c;
+            xoff += c;
+            // Advance in SESSION_TILE bites up to the new availability
+            // frontier. Mid-stream this is at most one bite; the
+            // end-of-stream right-pad burst may take several (rings are
+            // sized per bite, so the target must stay capped).
+            let avail_final = chain_avail(&spec.stages, s_avail);
+            loop {
+                let t_base = prod[m - 1];
+                let target = avail_final.min(t_base + SESSION_TILE);
+                if target <= t_base {
+                    break;
+                }
+                chain_advance(
+                    &spec.stages,
+                    model,
+                    &*input_ring,
+                    s_in_lo,
+                    spec.in_cap,
+                    task_buf,
+                    prod,
+                    lo,
+                    hi,
+                    target,
+                    ChainDst::Planar {
+                        buf: &mut *staging,
+                        cap: SESSION_TILE,
+                        lo: t_base,
+                    },
+                );
+                // Drain the staging tile to the caller, re-interleaving
+                // rows → [t, c].
+                let n_new = prod[m - 1] - t_base;
+                for j in 0..n_new {
+                    let t = t_base - prod_final0 + j;
+                    for co in 0..spec.c_out {
+                        dst[t * spec.c_out + co] = staging[co * SESSION_TILE + j];
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(prod[m - 1] - prod_final0, r);
+        self.cur[base + 3 * m + CUR_AVAIL] = s_avail;
+        self.cur[base + 3 * m + CUR_IN_LO] = s_in_lo;
+        crate::check::assert_no_poison(&dst[..r * spec.c_out], "SessionArena::step_into");
+        Ok(r)
+    }
+}
+
+/// Single-session convenience wrapper: an arena with one slot.
+pub struct Session {
+    arena: SessionArena,
+    id: SessionId,
+}
+
+impl Session {
+    /// Capture streaming state for `plan` (compiled at batch 1 from
+    /// `model`).
+    pub fn open(plan: &Plan, model: &Model) -> Result<Self> {
+        let mut arena = SessionArena::new(plan, model)?;
+        let id = arena.open();
+        Ok(Self { arena, id })
+    }
+
+    /// See [`SessionArena::step_into`].
+    pub fn step_into(&mut self, model: &Model, x: &[f32], dst: &mut [f32]) -> Result<usize> {
+        self.arena.step_into(self.id, model, x, dst)
+    }
+
+    /// Output samples the next `n_new`-sample packet would emit.
+    pub fn pending_out_samples(&self, n_new: usize) -> usize {
+        self.arena.pending_out_samples(self.id, n_new)
+    }
+
+    /// Rewind to the empty-stream state (state slot is kept).
+    pub fn reset(&mut self) {
+        self.arena.reset(self.id);
+    }
+
+    pub fn samples_seen(&self) -> usize {
+        self.arena.samples_seen(self.id)
+    }
+
+    pub fn finished(&self) -> bool {
+        self.arena.finished(self.id)
+    }
+
+    pub fn spec(&self) -> &StreamSpec {
+        self.arena.spec()
+    }
+
+    /// Slab growths since open — stays at the open-time value forever
+    /// if stepping is truly allocation-free.
+    pub fn grows(&self) -> u64 {
+        self.arena.grows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::load_config;
+    use crate::conv::{BackendChoice, ConvBackend};
+    use crate::nn::{EagerScratch, PlannerConfig};
+    use crate::workload::Rng;
+
+    const CHAIN_CFG: &str = r#"
+[model]
+name = "stream-t"
+c_in = 2
+seq_len = 64
+
+[layer.0]
+type = "conv"
+c_out = 4
+k = 5
+
+[layer.1]
+type = "conv"
+c_out = 4
+k = 3
+dilation = 2
+
+[layer.2]
+type = "pool"
+kind = "max"
+w = 2
+stride = 2
+
+[layer.3]
+type = "conv"
+c_out = 3
+k = 3
+"#;
+
+    fn build() -> (Model, Plan) {
+        let (mc, _) = load_config(CHAIN_CFG).unwrap();
+        let mut rng = Rng::new(7);
+        let model = Model::init(&mc, &mut rng).unwrap();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..PlannerConfig::default()
+        };
+        let plan = Plan::compile(&model, 1, &cfg).unwrap();
+        (model, plan)
+    }
+
+    /// Planar [c, n] eager output for the full input.
+    fn oracle(model: &Model, x: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        model
+            .forward_eager_into(
+                x,
+                1,
+                ConvBackend::Sliding,
+                &mut EagerScratch::default(),
+                &mut out,
+            )
+            .unwrap();
+        out
+    }
+
+    /// Interleave planar [c, n] to [t, c].
+    fn interleave(planar: &[f32], c: usize) -> Vec<f32> {
+        let n = planar.len() / c;
+        let mut out = vec![0.0; planar.len()];
+        for t in 0..n {
+            for ch in 0..c {
+                out[t * c + ch] = planar[ch * n + t];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn session_matches_eager_forward() {
+        let (model, plan) = build();
+        let mut rng = Rng::new(9);
+        let n = model.seq_len;
+        let c_in = model.c_in;
+        // Planar input for the oracle, interleaved for the session.
+        let planar: Vec<f32> = rng.vec_uniform(c_in * n, -1.0, 1.0);
+        let stream = interleave(&planar, c_in);
+        let want = interleave(&oracle(&model, &planar), model.out_shape().0);
+
+        let mut sess = Session::open(&plan, &model).unwrap();
+        let c_out = sess.spec().out_channels();
+        let mut got: Vec<f32> = Vec::new();
+        let mut dst = vec![0.0f32; sess.spec().out_len() * c_out];
+        for chunk in stream.chunks(5 * c_in) {
+            let r = sess.step_into(&model, chunk, &mut dst).unwrap();
+            got.extend_from_slice(&dst[..r * c_out]);
+        }
+        assert!(sess.finished());
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "output {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn arena_recycles_slots_without_growth() {
+        let (model, plan) = build();
+        let mut arena = SessionArena::new(&plan, &model).unwrap();
+        let a = arena.open();
+        let b = arena.open();
+        assert_eq!(arena.grows(), 2);
+        assert_eq!(arena.live_sessions(), 2);
+        arena.close(a).unwrap();
+        assert!(arena.close(a).is_err(), "double close must fail");
+        let c = arena.open();
+        assert_eq!(arena.grows(), 2, "recycled slot must not grow the slab");
+        assert_eq!(arena.live_sessions(), 2);
+        arena.close(b).unwrap();
+        arena.close(c).unwrap();
+        assert_eq!(arena.live_sessions(), 0);
+    }
+
+    #[test]
+    fn step_past_end_of_stream_errors() {
+        let (model, plan) = build();
+        let mut sess = Session::open(&plan, &model).unwrap();
+        let n = sess.spec().stream_len();
+        let c_in = sess.spec().in_channels();
+        let x = vec![0.5f32; n * c_in];
+        let mut dst = vec![0.0f32; sess.spec().out_len() * sess.spec().out_channels()];
+        sess.step_into(&model, &x, &mut dst).unwrap();
+        assert!(sess.step_into(&model, &x[..c_in], &mut dst).is_err());
+        sess.reset();
+        assert_eq!(sess.samples_seen(), 0);
+        let r = sess.step_into(&model, &x[..c_in], &mut dst).unwrap();
+        assert_eq!(r, 0, "one sample cannot complete the first window");
+        assert_eq!(sess.samples_seen(), 1);
+    }
+
+    #[test]
+    fn residual_and_dense_models_refuse_sessions() {
+        let cfg = r#"
+[model]
+name = "nostream"
+c_in = 1
+seq_len = 32
+
+[layer.0]
+type = "conv"
+c_out = 2
+k = 3
+
+[layer.1]
+type = "dense"
+out = 4
+"#;
+        let (mc, _) = load_config(cfg).unwrap();
+        let mut rng = Rng::new(3);
+        let model = Model::init(&mc, &mut rng).unwrap();
+        let cfg = PlannerConfig {
+            backend: BackendChoice::Fixed(ConvBackend::Sliding),
+            ..PlannerConfig::default()
+        };
+        let plan = Plan::compile(&model, 1, &cfg).unwrap();
+        let err = Session::open(&plan, &model).unwrap_err();
+        assert!(err.to_string().contains("dense"), "{err}");
+    }
+}

@@ -6,6 +6,16 @@
 //! so each push is `O(w)` lane work / `O(1)` vector steps and no history
 //! buffer is kept.
 //!
+//! **Bit-exactness contract:** every emitted window sum is bit-identical
+//! to [`sliding_scalar_input`] on the same prefix (register path,
+//! `w ≤ p`). That requires reproducing Alg 1's lane seeding literally:
+//! the per-element broadcast combines `x` into the *identity* lane
+//! `w-1`, so a fresh suffix accumulator starts as `id ⊕ x` — not a bare
+//! `x`. For operators where `id ⊕ x ≠ x` bitwise (`-0.0` under f32 add:
+//! `0.0 + -0.0 = 0.0`), a bare seed re-associates the window fold and
+//! drifts off the batch kernel; that drift is what the old 1e-3
+//! tolerance in the tests was papering over.
+//!
 //! [`sliding_scalar_input`]: super::sliding_scalar_input
 
 use crate::ops::AssocOp;
@@ -15,6 +25,7 @@ pub struct StreamingSlidingSum<O: AssocOp> {
     op: O,
     w: usize,
     /// Suffix accumulators; logical lane `l` lives at `(head + l) % cap`.
+    /// Empty for `w == 1` (a width-1 window has no carried state).
     ring: Vec<O::Elem>,
     head: usize,
     /// Elements consumed so far (windows start emitting at `w`).
@@ -27,7 +38,9 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
         Self {
             op,
             w,
-            ring: vec![op.identity(); w.max(2) - 1], // alloc-ok: one-time O(w) state
+            // w == 1 keeps no ring at all — `Vec::new` for an empty
+            // window-1 state, O(w-1) lanes otherwise.
+            ring: vec![op.identity(); w - 1], // alloc-ok: one-time O(w) state
             head: 0,
             seen: 0,
         }
@@ -42,19 +55,28 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
         self.seen
     }
 
+    /// Window sums that pushing `n` more elements would emit (sizes the
+    /// `dst` of [`StreamingSlidingSum::push_slice_into`]).
+    pub fn pending_out_len(&self, n: usize) -> usize {
+        (self.seen + n).saturating_sub((self.w - 1).max(self.seen))
+    }
+
     /// Push one element; returns the completed window sum once `w`
     /// elements have been seen (i.e. from the `w`-th push onward).
     pub fn push(&mut self, x: O::Elem) -> Option<O::Elem> {
         self.seen += 1;
         if self.w == 1 {
-            return Some(x);
+            // Alg 1 with w == 1: the broadcast folds x into the identity
+            // lane and emits it immediately — id ⊕ x, no ring state.
+            return Some(self.op.combine(self.op.identity(), x));
         }
         let cap = self.ring.len();
         let front = self.op.combine(self.ring[self.head], x);
-        // Broadcast x into every live suffix lane; the vacated slot
-        // becomes the youngest lane seeded with x (Alg 1's broadcast
-        // touches lane w-1 too).
-        self.ring[self.head] = x;
+        // Broadcast x into every live suffix lane. The vacated slot
+        // becomes the youngest lane, seeded the way Alg 1's broadcast
+        // seeds lane w-1: combined into the identity (see module docs
+        // for why `id ⊕ x`, not bare `x`, is load-bearing).
+        self.ring[self.head] = self.op.combine(self.op.identity(), x);
         for l in 1..cap {
             let idx = (self.head + l) % cap;
             self.ring[idx] = self.op.combine(self.ring[idx], x);
@@ -69,14 +91,32 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
 
     /// Push a packet; collects completed sums (vector-input usage shape).
     pub fn push_slice(&mut self, xs: &[O::Elem]) -> Vec<O::Elem> {
-        // alloc-ok: Vec-returning convenience API, not on the plan run path.
-        let mut out = Vec::with_capacity(xs.len());
+        // alloc-ok: Vec-returning convenience wrapper over push_slice_into.
+        let mut out = vec![self.op.identity(); self.pending_out_len(xs.len())];
+        self.push_slice_into(xs, &mut out);
+        out
+    }
+
+    /// Push a packet, writing the completed window sums into a
+    /// caller-provided buffer of length exactly
+    /// [`StreamingSlidingSum::pending_out_len`]`(xs.len())`. Every
+    /// element of `dst` is overwritten; no allocation.
+    pub fn push_slice_into(&mut self, xs: &[O::Elem], dst: &mut [O::Elem]) {
+        assert_eq!(
+            dst.len(),
+            self.pending_out_len(xs.len()),
+            "dst length (see pending_out_len)"
+        );
+        crate::check::poison(dst);
+        let mut emitted = 0usize;
         for &x in xs {
             if let Some(y) = self.push(x) {
-                out.push(y);
+                dst[emitted] = y;
+                emitted += 1;
             }
         }
-        out
+        debug_assert_eq!(emitted, dst.len());
+        crate::check::assert_no_poison(dst, "push_slice_into");
     }
 
     /// Reset to the empty-stream state.
@@ -93,7 +133,8 @@ impl<O: AssocOp> StreamingSlidingSum<O> {
 mod tests {
     use super::*;
     use crate::ops::{AddOp, ConvPair, MaxOp, Pair};
-    use crate::sliding::sliding_naive;
+    use crate::simd::MAX_LANES;
+    use crate::sliding::sliding_scalar_input;
 
     #[test]
     fn streaming_matches_batch() {
@@ -101,12 +142,37 @@ mod tests {
         for w in [1usize, 2, 3, 7, 16, 63] {
             let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
             let got = s.push_slice(&xs);
-            let want = sliding_naive(AddOp::<f32>::new(), &xs, w);
-            assert_eq!(got.len(), want.len(), "w={w}");
-            for (a, b) in got.iter().zip(&want) {
-                assert!((a - b).abs() < 1e-3, "w={w}");
-            }
+            // Register path (w ≤ p) of the batch kernel: the oracle the
+            // streaming state machine is bit-identical to.
+            let want = sliding_scalar_input(AddOp::<f32>::new(), &xs, w, MAX_LANES);
+            assert_eq!(got, want, "w={w}");
         }
+    }
+
+    /// `-0.0` under f32 add is the case where `id ⊕ x ≠ x` bitwise; a
+    /// bare-`x` lane seed (the old code) diverges from the batch kernel
+    /// here. Compare bit patterns — `-0.0 == 0.0` under `PartialEq`
+    /// would mask the regression.
+    #[test]
+    fn negative_zero_lane_seed_is_bit_exact() {
+        for w in [1usize, 3, 5] {
+            let xs = vec![-0.0f32; 4 * w];
+            let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
+            let got = s.push_slice(&xs);
+            let want = sliding_scalar_input(AddOp::<f32>::new(), &xs, w, MAX_LANES);
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "w={w}");
+        }
+    }
+
+    #[test]
+    fn window_one_keeps_no_ring() {
+        let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), 1);
+        assert_eq!(s.ring.capacity(), 0, "w == 1 must not allocate a ring");
+        assert_eq!(s.push(4.5), Some(4.5));
+        assert_eq!(s.push(-1.25), Some(-1.25));
+        assert_eq!(s.len_seen(), 2);
     }
 
     #[test]
@@ -122,15 +188,27 @@ mod tests {
     #[test]
     fn packets_split_arbitrarily() {
         let xs: Vec<f32> = (0..50).map(|i| i as f32).collect();
-        let want = sliding_naive(AddOp::<f32>::new(), &xs, 5);
+        let want = sliding_scalar_input(AddOp::<f32>::new(), &xs, 5, MAX_LANES);
         let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), 5);
         let mut got = Vec::new();
         for chunk in xs.chunks(7) {
             got.extend(s.push_slice(chunk));
         }
-        assert_eq!(got.len(), want.len());
-        for (a, b) in got.iter().zip(&want) {
-            assert!((a - b).abs() < 1e-3);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn push_slice_into_matches_push_slice() {
+        let xs: Vec<f32> = (0..40).map(|i| (i as f32) * 0.5 - 7.0).collect();
+        for w in [1usize, 3, 8] {
+            let mut a = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
+            let mut b = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
+            for chunk in xs.chunks(6) {
+                let want = a.push_slice(chunk);
+                let mut got = vec![0.0f32; b.pending_out_len(chunk.len())];
+                b.push_slice_into(chunk, &mut got);
+                assert_eq!(got, want, "w={w}");
+            }
         }
     }
 
@@ -141,7 +219,7 @@ mod tests {
             .collect();
         let mut s = StreamingSlidingSum::new(ConvPair, 6);
         let got = s.push_slice(&xs);
-        let want = sliding_naive(ConvPair, &xs, 6);
+        let want = sliding_scalar_input(ConvPair, &xs, 6, MAX_LANES);
         for (g, t) in got.iter().zip(&want) {
             assert!((g.u - t.u).abs() < 1e-3 && (g.v - t.v).abs() < 1e-3);
         }

@@ -69,6 +69,49 @@ impl Engine for EchoEngine {
     }
 }
 
+/// Echo engine with toy streaming sessions: steps echo their packet.
+/// Exercises the coordinator's session plumbing (guards, counters,
+/// eviction) without dragging real NN state into the chaos harness.
+#[derive(Clone, Default)]
+struct SessionEchoEngine {
+    next: u32,
+    live: std::collections::HashSet<u32>,
+}
+
+impl Engine for SessionEchoEngine {
+    fn input_len(&self) -> usize {
+        ROW
+    }
+    fn output_len(&self) -> usize {
+        ROW
+    }
+    fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+    fn name(&self) -> String {
+        "chaos-session-echo".into()
+    }
+    fn session_open(&mut self) -> anyhow::Result<u32> {
+        let id = self.next;
+        self.next += 1;
+        self.live.insert(id);
+        Ok(id)
+    }
+    fn session_step(&mut self, id: u32, x: &[f32], out: &mut Vec<f32>) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.live.contains(&id), "unknown session id {id}");
+        out.clear();
+        out.extend_from_slice(x);
+        Ok(x.len())
+    }
+    fn session_close(&mut self, id: u32) -> anyhow::Result<()> {
+        anyhow::ensure!(self.live.remove(&id), "unknown session id {id}");
+        Ok(())
+    }
+    fn live_sessions(&self) -> usize {
+        self.live.len()
+    }
+}
+
 /// Echo engine with a fixed per-batch service time — lets the soak test
 /// offer a load that provably exceeds capacity.
 #[derive(Clone)]
@@ -306,6 +349,54 @@ fn injected_stall_sheds_expired_requests() {
     let stats = coord.shutdown();
     assert!(shed > 0, "25ms stalls vs 5ms TTLs must shed something");
     assert_eq!(stats.shed_deadline, shed);
+    assert_eq!(stats.terminal(), stats.submitted, "{stats:?}");
+    faults::reset();
+}
+
+/// A panic injected at `worker.session_step` must leave the stepping
+/// request in exactly one terminal state (`WorkerLost`, via the session
+/// op guard), restart the worker within budget, and keep the stats
+/// ledger balanced with session counters in play. The respawned worker
+/// starts sessionless, so a stale id fails with a typed engine error —
+/// honest, terminal, never a hang.
+#[test]
+fn injected_session_step_panic_stays_terminal() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+
+    let cfg = chaos_config(1, false);
+    let coord = Coordinator::start_replicated(SessionEchoEngine::default(), &cfg).unwrap();
+    let wait = |t: swsnn::coordinator::Ticket| {
+        t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter")
+    };
+    // Open a session (response payload: one f32 whose bits are the id)
+    // and step it once cleanly.
+    let id = wait(coord.open_session(0).unwrap()).unwrap()[0].to_bits();
+    let ok = wait(coord.step_session(id, vec![1.0; 2]).unwrap()).unwrap();
+    assert_eq!(ok, vec![1.0; 2]);
+
+    // Arm the session-step site: the injected panic fires before the
+    // engine runs, the guard completes the slot with `WorkerLost`.
+    faults::arm("worker.session_step", FaultKind::Panic, 0, 1);
+    let resp = wait(coord.step_session(id, vec![2.0; 2]).unwrap());
+    assert_eq!(resp.unwrap_err(), ServeError::Shed(Shed::WorkerLost));
+    assert_eq!(faults::fired("worker.session_step"), 1);
+
+    // The respawned worker owns no sessions: the stale id terminates
+    // with a typed engine error, not a hang.
+    match wait(coord.step_session(id, vec![3.0; 2]).unwrap()) {
+        Err(ServeError::Engine(msg)) => {
+            assert!(msg.contains("unknown session"), "{msg}")
+        }
+        other => panic!("stale session step must fail typed, got {other:?}"),
+    }
+
+    let stats = coord.shutdown();
+    assert_eq!(stats.worker_panics, 1);
+    assert_eq!(stats.worker_restarts, 1);
+    assert_eq!(stats.sessions_opened, 1);
+    assert_eq!(stats.session_steps, 1, "only the pre-fault step succeeded");
     assert_eq!(stats.terminal(), stats.submitted, "{stats:?}");
     faults::reset();
 }

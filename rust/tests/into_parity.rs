@@ -309,6 +309,34 @@ fn serial_sliding_into_variants_match_vec_with_dirty_dst() {
 }
 
 #[test]
+fn streaming_push_slice_into_overwrites_nan_poisoned_dst() {
+    // The streaming accumulator's `_into` form must honor the same
+    // overwrite-everything contract as the batch kernels: a NaN-filled
+    // destination comes out bit-identical to the batch oracle on the
+    // same prefix (any unwritten element would surface as a NaN, and
+    // NaN != NaN fails the comparison). Packets split at awkward sizes
+    // so emission starts and stops mid-packet.
+    use swsnn::simd::MAX_LANES;
+    use swsnn::sliding::{sliding_scalar_input, StreamingSlidingSum};
+    let mut rng = Rng::new(0x170E);
+    let xs = rng.vec_uniform(333, -2.0, 2.0);
+    for w in [1usize, 2, 5, 16] {
+        let want = sliding_scalar_input(AddOp::<f32>::new(), &xs, w, MAX_LANES);
+        let mut s = StreamingSlidingSum::new(AddOp::<f32>::new(), w);
+        let mut got: Vec<f32> = Vec::new();
+        for chunk in xs.chunks(7) {
+            let mut dst = vec![f32::NAN; s.pending_out_len(chunk.len())];
+            s.push_slice_into(chunk, &mut dst);
+            got.extend_from_slice(&dst);
+        }
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb, "w={w}");
+        assert!(got.iter().all(|v| v.is_finite()), "NaN leaked w={w}");
+    }
+}
+
+#[test]
 fn conv_into_convenience_and_im2col_match_vec_with_dirty_dst() {
     let mut rng = Rng::new(0x170A);
     let p = Conv1dParams::new(2, 3, 6_000, 5).with_batch(2);

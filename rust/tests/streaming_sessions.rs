@@ -1,0 +1,475 @@
+//! Streaming stateful sessions (`nn::session`), end to end:
+//!
+//! 1. **Property-tested parity**: `Session::step_into` over random
+//!    chain-only models (kernel sizes × strides × dilations × padding ×
+//!    pool interleavings) × arbitrary packet splits × mid-stream resets
+//!    is bit-identical to `forward_eager_into` on the full history, and
+//!    to the fused batch plan across thread counts {1, 2, 4, 8}.
+//! 2. Forced SIMD tiers on `configs/tcn_stream.toml`: the streamed
+//!    output stays bit-identical to eager under every supported tier
+//!    (single `#[test]` — the tier override is process-global).
+//! 3. **Steady-state counters**: once a session is open, stepping does
+//!    zero slab growths and zero plan compiles (`NativeEngine` counter
+//!    asserts — the acceptance criterion for O(1) amortized work).
+//! 4. Serving integration: coordinator open/step/close round-trip with
+//!    `CoordinatorStats` session counters, idle-TTL eviction shedding as
+//!    `Shed::DeadlineExpired`, session-capacity admission, and the TCP
+//!    wire frames via `TcpClient::session_{open,step,close}`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use swsnn::config::{load_config, LayerConfig, ModelConfig, ServeConfig};
+use swsnn::conv::{BackendChoice, ConvBackend};
+use swsnn::coordinator::{
+    serve_tcp, Coordinator, Engine, NativeEngine, ServeError, Shed, TcpClient, Ticket,
+};
+use swsnn::exec::Executor;
+use swsnn::nn::{EagerScratch, Model, Plan, PlanScratch, PlannerConfig, Session};
+use swsnn::prop::{check, ensure, PropConfig};
+use swsnn::simd::{self, SimdTier};
+use swsnn::workload::Rng;
+
+/// Planar [c, n] eager forward of the full input — the oracle every
+/// streamed emission must match bit-for-bit.
+fn oracle(model: &Model, planar: &[f32], scratch: &mut EagerScratch) -> Vec<f32> {
+    let mut out = Vec::new();
+    model
+        .forward_eager_into(planar, 1, ConvBackend::Sliding, scratch, &mut out)
+        .unwrap();
+    out
+}
+
+/// Interleave planar [c, n] to the session wire order [t, c].
+fn interleave(planar: &[f32], c: usize) -> Vec<f32> {
+    let n = planar.len() / c;
+    let mut out = vec![0.0; planar.len()];
+    for t in 0..n {
+        for ch in 0..c {
+            out[t * c + ch] = planar[ch * n + t];
+        }
+    }
+    out
+}
+
+/// Drive one session over `stream` with the given per-packet sample
+/// counts, asserting the `pending_out_samples` prediction and the
+/// zero-growth contract on every step. Returns the concatenated [t, c]
+/// emissions.
+fn stream_session(
+    sess: &mut Session,
+    model: &Model,
+    stream: &[f32],
+    splits: &[usize],
+) -> Vec<f32> {
+    let c_in = sess.spec().in_channels();
+    let c_out = sess.spec().out_channels();
+    let grows = sess.grows();
+    let mut dst = vec![f32::NAN; sess.spec().out_len() * c_out];
+    let mut got = Vec::new();
+    let mut off = 0usize;
+    for &take in splits {
+        let chunk = &stream[off * c_in..(off + take) * c_in];
+        off += take;
+        let predicted = sess.pending_out_samples(take);
+        let r = sess.step_into(model, chunk, &mut dst).unwrap();
+        assert_eq!(r, predicted, "pending_out_samples mispredicted the emit count");
+        got.extend_from_slice(&dst[..r * c_out]);
+    }
+    assert_eq!(sess.grows(), grows, "a steady-state step grew the slab");
+    got
+}
+
+/// Random chain-only stack: sliding convs (strided / dilated / padded)
+/// and non-overlapping pools — every layer streamable, so the whole
+/// model compiles to one fused chain a session can capture.
+fn random_stream_config(g: &mut swsnn::prop::Gen, idx: usize) -> ModelConfig {
+    let c_in = 1 + g.usize_in(0, 3);
+    let seq_len = 40 + g.usize_in(0, 120);
+    let n_layers = 1 + g.usize_in(0, 4);
+    let mut layers = Vec::new();
+    for _ in 0..n_layers {
+        if g.usize_in(0, 4) == 0 {
+            let w = 2 + g.usize_in(0, 2);
+            layers.push(LayerConfig::Pool {
+                kind: ["max", "avg", "min"][g.usize_in(0, 3)].to_string(),
+                w,
+                stride: w + g.usize_in(0, 2),
+            });
+        } else {
+            layers.push(LayerConfig::Conv {
+                c_out: 1 + g.usize_in(0, 5),
+                k: [1, 2, 3, 5, 7, 9][g.usize_in(0, 6)],
+                stride: 1 + g.usize_in(0, 2),
+                dilation: 1 + g.usize_in(0, 2),
+                same_pad: g.usize_in(0, 3) == 0,
+                relu: g.bool(),
+                backend: None,
+                quantize: false,
+            });
+        }
+    }
+    ModelConfig {
+        name: format!("stream{idx}"),
+        c_in,
+        seq_len,
+        layers,
+    }
+}
+
+#[test]
+fn prop_session_step_into_matches_full_forward() {
+    let eager_scratch = RefCell::new(EagerScratch::default());
+    let plan_scratch = RefCell::new(PlanScratch::default());
+    let case = Cell::new(0usize);
+    check(
+        PropConfig {
+            cases: 30,
+            ..Default::default()
+        },
+        "session step_into ≡ eager forward on the full history",
+        |g| {
+            let idx = case.get();
+            case.set(idx + 1);
+            let mc = random_stream_config(g, idx);
+            let seed = g.rng.next_u64();
+            let Ok(model) = Model::init(&mc, &mut Rng::new(seed)) else {
+                return Ok(()); // generator produced a collapsing shape
+            };
+            let (c_out, n_out) = model.out_shape();
+            if n_out == 0 {
+                return Ok(());
+            }
+            let cfg = PlannerConfig {
+                backend: BackendChoice::Fixed(ConvBackend::Sliding),
+                ..PlannerConfig::default()
+            };
+            let plan = Plan::compile(&model, 1, &cfg).map_err(|e| e.to_string())?;
+            let planar = Rng::new(seed ^ 0xc0de).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+            let stream = interleave(&planar, mc.c_in);
+            let want = interleave(
+                &oracle(&model, &planar, &mut eager_scratch.borrow_mut()),
+                c_out,
+            );
+
+            let mut sess = Session::open(&plan, &model).map_err(|e| e.to_string())?;
+
+            // Mid-stream reset: absorb a junk prefix, rewind, and the
+            // replay below must still match the oracle bit-for-bit.
+            if g.bool() {
+                let junk = 1 + g.usize_in(0, mc.seq_len - 1);
+                let mut sink = vec![0.0f32; n_out * c_out];
+                sess.step_into(&model, &stream[..junk * mc.c_in], &mut sink)
+                    .map_err(|e| e.to_string())?;
+                sess.reset();
+                ensure(sess.samples_seen() == 0, "reset kept samples_seen")?;
+            }
+
+            // Arbitrary packet splits covering the whole stream.
+            let mut splits = Vec::new();
+            let mut left = mc.seq_len;
+            while left > 0 {
+                let take = (1 + g.usize_in(0, 9)).min(left);
+                splits.push(take);
+                left -= take;
+            }
+            let got = stream_session(&mut sess, &model, &stream, &splits);
+            ensure(sess.finished(), "full stream did not finish the session")?;
+            ensure(
+                got.len() == want.len(),
+                format!("emitted {} floats, oracle has {}", got.len(), want.len()),
+            )?;
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                ensure(
+                    a.to_bits() == b.to_bits(),
+                    format!("{}: output {i}: {a} vs {b} (splits {splits:?})", mc.name),
+                )?;
+            }
+
+            // The fused batch plan under a random thread count agrees
+            // with the same bits — the session is exactly the chain.
+            let threads = *g.choose(&[1usize, 2, 4, 8]);
+            let ex = Executor::new(threads);
+            let mut batch = Vec::new();
+            plan.run_with_into(&ex, &model, &planar, &mut plan_scratch.borrow_mut(), &mut batch)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                interleave(&batch, c_out) == got,
+                format!("{}: fused plan (threads {threads}) != session", mc.name),
+            )
+        },
+    );
+}
+
+/// The SIMD tiers worth forcing on this host: the portable oracle plus
+/// whatever the hardware actually dispatches.
+fn tiers() -> Vec<SimdTier> {
+    let mut ts = vec![SimdTier::Generic];
+    for t in [SimdTier::Avx2, SimdTier::Sse2, SimdTier::Neon] {
+        if t.is_supported() {
+            ts.push(t);
+        }
+    }
+    ts
+}
+
+fn load_stream_model(seed: u64) -> (ModelConfig, ServeConfig, Model) {
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tcn_stream.toml"),
+    )
+    .unwrap();
+    let (mc, serve) = load_config(&text).unwrap();
+    let model = Model::init(&mc, &mut Rng::new(seed)).unwrap();
+    (mc, serve, model)
+}
+
+/// Forced SIMD tiers × thread counts on the shipped streaming config:
+/// the kernels under the chain sweep change with the tier, the streamed
+/// bits must not.
+#[test]
+fn session_parity_under_forced_tiers_and_threads() {
+    let (mc, _, model) = load_stream_model(11);
+    let (c_out, _) = model.out_shape();
+    let cfg = PlannerConfig {
+        backend: BackendChoice::Fixed(ConvBackend::Sliding),
+        ..PlannerConfig::default()
+    };
+    let plan = Plan::compile(&model, 1, &cfg).unwrap();
+    let planar = Rng::new(12).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+    let stream = interleave(&planar, mc.c_in);
+    let splits: Vec<usize> = {
+        let mut v = Vec::new();
+        let (mut left, mut k) = (mc.seq_len, 1usize);
+        while left > 0 {
+            let take = k.min(left);
+            v.push(take);
+            left -= take;
+            k = k % 11 + 1;
+        }
+        v
+    };
+    let mut plan_scratch = PlanScratch::default();
+    for tier in tiers() {
+        simd::force_tier(Some(tier));
+        let mut eager_scratch = EagerScratch::default();
+        let want = interleave(&oracle(&model, &planar, &mut eager_scratch), c_out);
+        let mut sess = Session::open(&plan, &model).unwrap();
+        let got = stream_session(&mut sess, &model, &stream, &splits);
+        assert_eq!(got.len(), want.len(), "{tier:?}");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tier:?} output {i}: {a} vs {b}");
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let ex = Executor::new(threads);
+            let mut batch = Vec::new();
+            plan.run_with_into(&ex, &model, &planar, &mut plan_scratch, &mut batch)
+                .unwrap();
+            assert_eq!(
+                interleave(&batch, c_out),
+                got,
+                "{tier:?} threads={threads}: fused plan != session"
+            );
+        }
+    }
+    simd::force_tier(None);
+}
+
+/// Acceptance criterion: steady-state session steps do zero allocations
+/// (slab `grows` flat) and zero plan compiles (`NativeEngine` counter
+/// flat) — open pays the one-time cost, stepping never does.
+#[test]
+fn steady_state_steps_allocate_nothing_and_compile_nothing() {
+    let (mc, _, model) = load_stream_model(13);
+    let reference = {
+        let m = Model::init(&mc, &mut Rng::new(13)).unwrap(); // same seed → same params
+        let mut scratch = EagerScratch::default();
+        let planar = Rng::new(14).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+        let want = interleave(&oracle(&m, &planar, &mut scratch), m.out_shape().0);
+        (planar, want)
+    };
+    let mut engine =
+        NativeEngine::with_choice(model, BackendChoice::Fixed(ConvBackend::Sliding), 8);
+    let id = engine.session_open().unwrap();
+    assert_eq!(engine.plan_compiles(), 1, "open compiles the batch-1 plan once");
+    assert_eq!(engine.live_sessions(), 1);
+
+    let stream = interleave(&reference.0, mc.c_in);
+    let compiles = engine.plan_compiles();
+    let grows = engine.session_grows();
+    let mut got = Vec::new();
+    let mut out = Vec::new();
+    for chunk in stream.chunks(6 * mc.c_in) {
+        engine.session_step(id, chunk, &mut out).unwrap();
+        got.extend_from_slice(&out);
+        assert_eq!(engine.plan_compiles(), compiles, "a step compiled a plan");
+        assert_eq!(engine.session_grows(), grows, "a step grew the session slab");
+    }
+    let want = &reference.1;
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "output {i}: {a} vs {b}");
+    }
+    engine.session_close(id).unwrap();
+    assert_eq!(engine.live_sessions(), 0);
+    assert!(
+        engine.session_close(id).is_err(),
+        "closing a closed session must fail"
+    );
+}
+
+fn wait(t: Ticket) -> Result<Vec<f32>, ServeError> {
+    t.wait_timeout(Duration::from_secs(10)).expect("leaked waiter")
+}
+
+/// Coordinator round-trip: open/step/close through the batcher, with
+/// session counters in `CoordinatorStats` and bit-parity against eager.
+#[test]
+fn coordinator_sessions_roundtrip_with_counters() {
+    let (mc, serve, model) = load_stream_model(15);
+    let reference = Model::init(&mc, &mut Rng::new(15)).unwrap();
+    let engine = NativeEngine::with_choice(model, BackendChoice::Fixed(ConvBackend::Sliding), 8);
+    let coord = Coordinator::start_native(engine, &serve).unwrap();
+
+    let sid = wait(coord.open_session(0).unwrap()).unwrap()[0].to_bits();
+    let planar = Rng::new(16).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+    let stream = interleave(&planar, mc.c_in);
+    let mut scratch = EagerScratch::default();
+    let want = interleave(&oracle(&reference, &planar, &mut scratch), reference.out_shape().0);
+    let mut got = Vec::new();
+    let mut steps = 0u64;
+    for chunk in stream.chunks(10 * mc.c_in) {
+        got.extend(wait(coord.step_session(sid, chunk.to_vec()).unwrap()).unwrap());
+        steps += 1;
+    }
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "output {i}: {a} vs {b}");
+    }
+
+    // Stepping an unknown id is a typed engine failure, not a hang.
+    match wait(coord.step_session(sid + 1, vec![0.0; mc.c_in]).unwrap()) {
+        Err(ServeError::Engine(msg)) => assert!(msg.contains("unknown session"), "{msg}"),
+        other => panic!("unknown-id step returned {other:?}"),
+    }
+    wait(coord.close_session(sid).unwrap()).unwrap();
+    match wait(coord.step_session(sid, vec![0.0; mc.c_in]).unwrap()) {
+        Err(ServeError::Engine(msg)) => assert!(msg.contains("unknown session"), "{msg}"),
+        other => panic!("closed-id step returned {other:?}"),
+    }
+
+    let stats = coord.shutdown();
+    assert_eq!(stats.sessions_opened, 1);
+    assert_eq!(stats.sessions_closed, 1);
+    assert_eq!(stats.session_steps, steps);
+    assert_eq!(stats.sessions_evicted, 0);
+    assert_eq!(stats.failed, 2, "the two bad-id steps");
+    assert_eq!(stats.terminal(), stats.submitted, "ledger must balance");
+}
+
+/// Idle sessions ride the shed taxonomy: a step arriving after the TTL
+/// sheds as `DeadlineExpired`, the slot is evicted, and the wire id is
+/// dead from then on.
+#[test]
+fn idle_session_ttl_evicts_and_sheds() {
+    let (mc, serve, model) = load_stream_model(17);
+    let engine = NativeEngine::with_choice(model, BackendChoice::Fixed(ConvBackend::Sliding), 8);
+    let coord = Coordinator::start_native(engine, &serve).unwrap();
+
+    let sid = wait(coord.open_session(500).unwrap()).unwrap()[0].to_bits();
+    // A prompt step lands inside the TTL and refreshes it.
+    wait(coord.step_session(sid, vec![0.25; 4 * mc.c_in]).unwrap()).unwrap();
+    std::thread::sleep(Duration::from_millis(1_500));
+    match wait(coord.step_session(sid, vec![0.25; mc.c_in]).unwrap()) {
+        Err(ServeError::Shed(Shed::DeadlineExpired)) => {}
+        other => panic!("expired step returned {other:?}"),
+    }
+    match wait(coord.step_session(sid, vec![0.25; mc.c_in]).unwrap()) {
+        Err(ServeError::Engine(msg)) => assert!(msg.contains("unknown session"), "{msg}"),
+        other => panic!("evicted-id step returned {other:?}"),
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.sessions_evicted, 1);
+    assert_eq!(stats.shed_deadline, 1);
+    assert_eq!(stats.terminal(), stats.submitted, "ledger must balance");
+}
+
+/// `serve.session_capacity` bounds live slots per worker; opens past
+/// the cap fail typed, and closing frees a slot for the next open.
+#[test]
+fn session_capacity_bounds_live_sessions() {
+    let (_, _, model) = load_stream_model(19);
+    let serve = ServeConfig {
+        session_capacity: 1,
+        ..Default::default()
+    };
+    let engine = NativeEngine::with_choice(model, BackendChoice::Fixed(ConvBackend::Sliding), 8);
+    let coord = Coordinator::start_native(engine, &serve).unwrap();
+    let sid = wait(coord.open_session(0).unwrap()).unwrap()[0].to_bits();
+    match wait(coord.open_session(0).unwrap()) {
+        Err(ServeError::Engine(msg)) => assert!(msg.contains("session capacity"), "{msg}"),
+        other => panic!("over-capacity open returned {other:?}"),
+    }
+    wait(coord.close_session(sid).unwrap()).unwrap();
+    let sid2 = wait(coord.open_session(0).unwrap()).unwrap()[0].to_bits();
+    assert_ne!(sid, sid2, "wire ids are never reused");
+    let stats = coord.shutdown();
+    assert_eq!(stats.sessions_opened, 2);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.terminal(), stats.submitted, "ledger must balance");
+}
+
+/// The TCP wire frames: open (ttl'd), step packets bit-identical to
+/// eager, error frames for bad ids, close — on one connection.
+#[test]
+fn tcp_session_frames_roundtrip() {
+    let (mc, serve, model) = load_stream_model(21);
+    let reference = Model::init(&mc, &mut Rng::new(21)).unwrap();
+    let engine = NativeEngine::with_choice(model, BackendChoice::Fixed(ConvBackend::Sliding), 8);
+    let coord = Arc::new(Coordinator::start_native(engine, &serve).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp(coord, "127.0.0.1:0", stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut client = TcpClient::connect(addr).unwrap();
+
+    let sid = client.session_open(None).unwrap();
+    let planar = Rng::new(22).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+    let stream = interleave(&planar, mc.c_in);
+    let mut scratch = EagerScratch::default();
+    let want = interleave(&oracle(&reference, &planar, &mut scratch), reference.out_shape().0);
+    let mut got = Vec::new();
+    for chunk in stream.chunks(16 * mc.c_in) {
+        got.extend(client.session_step(sid, chunk).unwrap());
+    }
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "output {i}: {a} vs {b}");
+    }
+    // Bad id → error frame; the connection stays usable.
+    let one_sample = vec![0.0f32; mc.c_in];
+    let err = client.session_step(sid + 1, &one_sample).unwrap_err();
+    assert!(err.to_string().contains("server error"), "{err}");
+    client.session_close(sid).unwrap();
+    let err = client.session_step(sid, &one_sample).unwrap_err();
+    assert!(err.to_string().contains("server error"), "{err}");
+    // Plain inference still works on the same connection after session
+    // traffic (frame dispatch keeps the two request kinds separate).
+    let row = Rng::new(23).vec_uniform(mc.c_in * mc.seq_len, -1.0, 1.0);
+    let out = client.infer(&row).unwrap();
+    assert_eq!(out.len(), coord.output_len());
+
+    stop.store(true, Ordering::SeqCst);
+    drop(client);
+    server.join().unwrap();
+}
