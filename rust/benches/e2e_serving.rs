@@ -6,7 +6,10 @@ use std::sync::Arc;
 use swsnn::bench::Table;
 use swsnn::config::{load_config, ServeConfig};
 use swsnn::conv::{BackendChoice, ConvBackend};
-use swsnn::coordinator::{Coordinator, Engine, NativeEngine, PjrtTcnEngine};
+use swsnn::coordinator::{
+    serve_tcp_with, Coordinator, Engine, NativeEngine, PjrtTcnEngine, QuotaConfig, TcpClient,
+    TransportConfig,
+};
 use swsnn::nn::{Model, Plan, PlannerConfig};
 use swsnn::workload::Rng;
 
@@ -343,6 +346,10 @@ fn main() -> anyhow::Result<()> {
             "worker lost",
             "restarts",
             "drain ms",
+            "conns",
+            "conn rejected",
+            "quota shed",
+            "decode err",
         ],
     );
     let row = 8usize;
@@ -404,6 +411,99 @@ fn main() -> anyhow::Result<()> {
             format!("{}", stats.worker_lost),
             format!("{}", stats.worker_restarts),
             format!("{:.2}", stats.drain_ms),
+            // In-process arms never touch the transport tier.
+            "0".into(),
+            "0".into(),
+            "0".into(),
+            "0".into(),
+        ]);
+    }
+
+    // ── TCP + per-tenant quota arm: the same paced engine behind the ──
+    // transport tier, with each tenant's back-to-back flood metered by
+    // the admission token bucket. Transport counters come back over the
+    // wire via the stats frame, so this row also exercises the metrics
+    // endpoint itself.
+    {
+        let serve_arm = ServeConfig {
+            max_batch: 4,
+            batch_deadline_us: 500,
+            workers: 1,
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let engine = PacedEngine {
+            row,
+            cost: std::time::Duration::from_millis(1),
+        };
+        let coord = Arc::new(Coordinator::start_replicated(engine, &serve_arm)?);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let server = {
+            let coord = Arc::clone(&coord);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                serve_tcp_with(
+                    coord,
+                    "127.0.0.1:0",
+                    TransportConfig {
+                        max_connections: 64,
+                        quota: QuotaConfig {
+                            rate_per_sec: 200,
+                            burst: 8,
+                        },
+                        ..Default::default()
+                    },
+                    stop,
+                    move |addr| {
+                        addr_tx.send(addr).unwrap();
+                    },
+                )
+                .unwrap();
+            })
+        };
+        let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let clients = 4usize;
+        let per = if quick { 50 } else { 200 };
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(11 + c as u64);
+                let mut client = TcpClient::connect(addr).unwrap();
+                client.set_tenant(c as u32 + 1).unwrap();
+                for _ in 0..per {
+                    // Over-quota frames come back as typed code-9 sheds;
+                    // the connection stays usable either way.
+                    let _ = client.infer(&rng.vec_uniform(row, -1.0, 1.0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut probe = TcpClient::connect(addr).unwrap();
+        let wire = probe.stats_map()?;
+        drop(probe);
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        server.join().unwrap();
+        let offered = (clients * per) as u64;
+        let stats = Arc::try_unwrap(coord)
+            .map_err(|_| anyhow::anyhow!("coordinator still shared"))?
+            .shutdown();
+        robust.row(vec![
+            "tcp quota".to_string(),
+            format!("{offered}"),
+            format!("{}", stats.submitted),
+            format!("{}", stats.completed),
+            format!("{}", stats.shed_queue_full),
+            format!("{}", stats.shed_deadline),
+            format!("{}", stats.worker_lost),
+            format!("{}", stats.worker_restarts),
+            format!("{:.2}", stats.drain_ms),
+            format!("{}", wire["conns_accepted"] as u64),
+            format!("{}", wire["conns_rejected"] as u64),
+            format!("{}", wire["quota_shed"] as u64),
+            format!("{}", wire["decode_errors"] as u64),
         ]);
     }
     robust.emit("serving_robustness.csv");

@@ -115,6 +115,22 @@ pub struct ServeConfig {
     /// (`serve.session_capacity`); opens beyond it fail with a typed
     /// engine error.
     pub session_capacity: usize,
+    /// Hard cap on concurrently served TCP connections
+    /// (`serve.max_connections` / `--max-connections`); accepts beyond
+    /// it are refused with the typed `ConnLimit` wire code (8).
+    pub max_connections: usize,
+    /// Per-connection idle (read) timeout in milliseconds
+    /// (`serve.idle_timeout_ms` / `--idle-timeout`): a peer idle or
+    /// stalled mid-frame longer than this gets its connection dropped.
+    /// `0` = never time out.
+    pub idle_timeout_ms: u64,
+    /// Per-tenant admission quota in requests/second
+    /// (`serve.quota_rps` / `--quota-rps`); over-quota frames get the
+    /// typed `QuotaExceeded` wire code (9). `0` (default) = unlimited.
+    pub quota_rps: u64,
+    /// Token-bucket burst depth per tenant (`serve.quota_burst` /
+    /// `--quota-burst`); `0` is treated as 1 when quotas are enabled.
+    pub quota_burst: u64,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +149,10 @@ impl Default for ServeConfig {
             restart_backoff_ms: 10,
             session_ttl_ms: 30_000,
             session_capacity: 64,
+            max_connections: 1024,
+            idle_timeout_ms: 30_000,
+            quota_rps: 0,
+            quota_burst: 0,
         }
     }
 }
@@ -350,6 +370,11 @@ fn serve_from_doc(doc: &ConfigDoc) -> Result<ServeConfig, String> {
             .unwrap_or(d.restart_backoff_ms as usize) as u64,
         session_ttl_ms: count("serve.session_ttl_ms")?.unwrap_or(d.session_ttl_ms as usize) as u64,
         session_capacity: count("serve.session_capacity")?.unwrap_or(d.session_capacity),
+        max_connections: count("serve.max_connections")?.unwrap_or(d.max_connections),
+        idle_timeout_ms: count("serve.idle_timeout_ms")?.unwrap_or(d.idle_timeout_ms as usize)
+            as u64,
+        quota_rps: count("serve.quota_rps")?.unwrap_or(d.quota_rps as usize) as u64,
+        quota_burst: count("serve.quota_burst")?.unwrap_or(d.quota_burst as usize) as u64,
     })
 }
 
@@ -494,6 +519,28 @@ backend = "sliding"
         assert_eq!(s.session_capacity, 4);
         let bad = format!("{EXAMPLE}\nsession_ttl_ms = -1\n");
         assert!(load_config(&bad).unwrap_err().contains("session_ttl_ms"));
+    }
+
+    #[test]
+    fn transport_fields_parse_with_defaults() {
+        // Defaults: 1024 connections, 30 s idle timeout, quotas off.
+        let (_, s) = load_config(EXAMPLE).unwrap();
+        assert_eq!(s.max_connections, 1024);
+        assert_eq!(s.idle_timeout_ms, 30_000);
+        assert_eq!(s.quota_rps, 0);
+        assert_eq!(s.quota_burst, 0);
+        let text = format!(
+            "{EXAMPLE}\nmax_connections = 16\nidle_timeout_ms = 500\nquota_rps = 100\nquota_burst = 8\n"
+        );
+        let (_, s) = load_config(&text).unwrap();
+        assert_eq!(s.max_connections, 16);
+        assert_eq!(s.idle_timeout_ms, 500);
+        assert_eq!(s.quota_rps, 100);
+        assert_eq!(s.quota_burst, 8);
+        let bad = format!("{EXAMPLE}\nmax_connections = -1\n");
+        assert!(load_config(&bad).unwrap_err().contains("max_connections"));
+        let bad = format!("{EXAMPLE}\nquota_rps = -10\n");
+        assert!(load_config(&bad).unwrap_err().contains("quota_rps"));
     }
 
     #[test]

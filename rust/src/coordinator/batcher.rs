@@ -40,7 +40,7 @@ pub enum SubmitError {
 }
 
 impl SubmitError {
-    /// Stable wire error code (`coordinator/server.rs` response tag).
+    /// Stable wire error code (`coordinator/transport.rs` response tag).
     /// Admission sheds share codes with the matching [`Shed`] variants.
     pub fn wire_code(&self) -> u8 {
         match self {
@@ -829,7 +829,14 @@ fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
             }
         }
         if !sess_guard.batch.is_empty() {
-            run_session_ops(metrics, params, engine, &sess_guard.batch, &mut sessions, &mut sbuf);
+            run_session_ops(
+                metrics,
+                params,
+                engine,
+                &mut sess_guard.batch,
+                &mut sessions,
+                &mut sbuf,
+            );
             sess_guard.batch.clear(); // all slots terminal — drop quietly
         }
         // Idle-TTL sweep: evict sessions nobody stepped in time. Runs
@@ -888,19 +895,24 @@ fn batch_loop(shared: &Shared, params: &WorkerParams, engine: &mut dyn Engine) {
         match result {
             Ok(()) => {
                 debug_assert_eq!(ybuf.len(), bucket * out_row);
-                for (i, req) in batch.iter().enumerate() {
+                for (i, req) in batch.iter_mut().enumerate() {
                     // Record metrics BEFORE waking the waiter so stats()
                     // observed after wait() always include this request.
                     metrics.completed.inc();
                     metrics.e2e.record(req.enqueued.elapsed());
+                    // Hand the input buffer back (before `complete` —
+                    // the waiter may reclaim as soon as it wakes) so the
+                    // transport can reuse the allocation.
+                    req.slot.return_input(std::mem::take(&mut req.input));
                     req.slot
                         .complete(Ok(ybuf[i * out_row..(i + 1) * out_row].to_vec()));
                 }
             }
             Err(e) => {
                 let msg = format!("inference failed: {e:#}");
-                for req in batch.iter() {
+                for req in batch.iter_mut() {
                     metrics.failed.inc();
+                    req.slot.return_input(std::mem::take(&mut req.input));
                     req.slot.complete(Err(ServeError::Engine(msg.clone())));
                 }
             }
@@ -924,11 +936,11 @@ fn run_session_ops(
     metrics: &Metrics,
     params: &WorkerParams,
     engine: &mut dyn Engine,
-    ops: &[Request],
+    ops: &mut [Request],
     sessions: &mut HashMap<u32, (Instant, Duration)>,
     sbuf: &mut Vec<f32>,
 ) {
-    for req in ops {
+    for req in ops.iter_mut() {
         let now = Instant::now();
         match req.kind {
             ReqKind::Infer => unreachable!("infer requests are batched, not session ops"),
@@ -996,10 +1008,14 @@ fn run_session_ops(
                         metrics.session_steps.inc();
                         metrics.completed.inc();
                         metrics.e2e.record(req.enqueued.elapsed());
+                        // Return the packet buffer (before `complete`)
+                        // so the transport reuses the allocation.
+                        req.slot.return_input(std::mem::take(&mut req.input));
                         req.slot.complete(Ok(sbuf.clone()));
                     }
                     Err(e) => {
                         metrics.failed.inc();
+                        req.slot.return_input(std::mem::take(&mut req.input));
                         req.slot.complete(Err(ServeError::Engine(format!(
                             "session step failed: {e:#}"
                         ))));

@@ -13,6 +13,9 @@
 //!
 //! | site                     | where                                        |
 //! |--------------------------|----------------------------------------------|
+//! | `transport.accept`       | connection handler start, before first read  |
+//! | `transport.frame`        | frame decoded, before admission/submit       |
+//! | `transport.respond`      | response in hand, before the wire write      |
 //! | `admission.submit`       | after admission checks, before enqueue       |
 //! | `worker.batch_collected` | batch assembled, before deadline shedding    |
 //! | `worker.infer`           | immediately before `Engine::infer_into`      |
@@ -23,7 +26,11 @@
 //! `Sleep` at `worker.batch_collected` models a queue stall; `Panic` at
 //! `worker.infer`/`worker.distribute` models an engine crash before/after
 //! compute (the second exercises the drop-guard with results already in
-//! hand).
+//! hand). The `transport.*` sites live on connection-handler threads
+//! (`coordinator/transport.rs`): a `Panic` there kills one connection —
+//! never the listener — before submission (`accept`/`frame`) or after
+//! the request is already terminal (`respond`), so the ledger must stay
+//! balanced either way; a `Sleep` models a stalled handler.
 
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};

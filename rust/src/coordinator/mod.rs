@@ -22,16 +22,20 @@
 //! shutdown stops admission ([`Shed::Draining`]) and drains the queue to
 //! terminal responses before joining workers.
 
+mod admission;
 mod batcher;
 mod engine;
 #[cfg(any(test, feature = "fault-injection"))]
 pub mod faults;
-mod server;
+mod transport;
 
+pub use admission::{Admission, QuotaConfig};
 pub use batcher::{Coordinator, CoordinatorStats, RespawnFactory, SubmitError, WorkerSpec};
-pub use server::{SESSION_CLOSE_MAGIC, SESSION_OPEN_MAGIC, SESSION_STEP_MAGIC};
 pub use engine::{Engine, EngineFactory, NativeEngine, PjrtTcnEngine};
-pub use server::{serve_tcp, TcpClient};
+pub use transport::{
+    serve_tcp, serve_tcp_with, TcpClient, TransportConfig, SESSION_CLOSE_MAGIC,
+    SESSION_OPEN_MAGIC, SESSION_STEP_MAGIC, STATS_MAGIC, TENANT_MAGIC, WIRE_DECODE_ERROR,
+};
 
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -64,16 +68,27 @@ pub enum Shed {
     /// The worker holding this request died (panic) and no replacement
     /// could take over in time.
     WorkerLost,
+    /// Transport-level shed: the listener is at `max_connections`; the
+    /// connection is refused with this code before any frame is read.
+    /// Emitted *before* admission, so it is counted in the transport
+    /// counters (`conns_rejected`), not the coordinator terminal ledger.
+    ConnLimit,
+    /// Admission-level shed: the frame's tenant exhausted its
+    /// token-bucket quota. Also pre-queue: counted as `quota_shed` in
+    /// the transport counters, not in the terminal ledger.
+    QuotaExceeded,
 }
 
 impl Shed {
-    /// Stable wire error code (`coordinator/server.rs` response tag).
+    /// Stable wire error code (`coordinator/transport.rs` response tag).
     pub fn wire_code(self) -> u8 {
         match self {
             Shed::QueueFull => 3,
             Shed::DeadlineExpired => 4,
             Shed::Draining => 5,
             Shed::WorkerLost => 6,
+            Shed::ConnLimit => 8,
+            Shed::QuotaExceeded => 9,
         }
     }
 }
@@ -85,6 +100,8 @@ impl std::fmt::Display for Shed {
             Shed::DeadlineExpired => write!(f, "shed: request deadline expired"),
             Shed::Draining => write!(f, "shed: coordinator draining"),
             Shed::WorkerLost => write!(f, "shed: worker lost (engine panic)"),
+            Shed::ConnLimit => write!(f, "shed: connection limit reached"),
+            Shed::QuotaExceeded => write!(f, "shed: tenant quota exceeded"),
         }
     }
 }
@@ -100,7 +117,7 @@ pub enum ServeError {
 }
 
 impl ServeError {
-    /// Stable wire error code (`coordinator/server.rs` response tag).
+    /// Stable wire error code (`coordinator/transport.rs` response tag).
     pub fn wire_code(&self) -> u8 {
         match self {
             ServeError::Engine(_) => 1,
@@ -180,6 +197,11 @@ struct SlotState {
     /// Set once a terminal state has been decided (survives `take` by
     /// the waiter, so late completers stay no-ops).
     done: bool,
+    /// The request's input buffer, handed back by the worker once it is
+    /// done reading it so the submitter can reuse the allocation
+    /// (transport double-buffering). Must be deposited *before*
+    /// `complete` — the waiter may reclaim immediately after waking.
+    input_back: Option<Vec<f32>>,
 }
 
 impl ResponseSlot {
@@ -188,9 +210,16 @@ impl ResponseSlot {
             value: Mutex::new(SlotState {
                 resp: None,
                 done: false,
+                input_back: None,
             }),
             ready: Condvar::new(),
         })
+    }
+
+    /// Hand the (no longer needed) input buffer back to the submitter.
+    /// Call before `complete` so a reclaim racing the wakeup sees it.
+    fn return_input(&self, buf: Vec<f32>) {
+        self.value.lock().unwrap().input_back = Some(buf);
     }
 
     /// First-wins completion: records `resp` as the terminal state if no
@@ -254,6 +283,15 @@ impl Ticket {
 
     pub fn wait_timeout(&self, dur: std::time::Duration) -> Option<Response> {
         self.slot.wait_timeout(dur)
+    }
+
+    /// Take back the request's input buffer if the worker returned it
+    /// (it does so on every successful completion path). Lets the TCP
+    /// connection loop double-buffer decode rows instead of cloning per
+    /// request. `None` if the request failed before the worker finished
+    /// with the buffer — the caller then just allocates a fresh row.
+    pub fn reclaim_input(&self) -> Option<Vec<f32>> {
+        self.slot.value.lock().unwrap().input_back.take()
     }
 }
 
@@ -331,6 +369,9 @@ mod tests {
             ServeError::Shed(Shed::DeadlineExpired).wire_code(),
             ServeError::Shed(Shed::Draining).wire_code(),
             ServeError::Shed(Shed::WorkerLost).wire_code(),
+            ServeError::Shed(Shed::ConnLimit).wire_code(),
+            ServeError::Shed(Shed::QuotaExceeded).wire_code(),
+            WIRE_DECODE_ERROR,
         ];
         for (i, a) in codes.iter().enumerate() {
             assert_ne!(*a, 0, "0 is the ok tag");
@@ -338,5 +379,28 @@ mod tests {
                 assert_ne!(a, b, "wire codes must be distinct");
             }
         }
+        // Pin the transport-tier codes: clients match on the numbers.
+        assert_eq!(Shed::ConnLimit.wire_code(), 8);
+        assert_eq!(Shed::QuotaExceeded.wire_code(), 9);
+        assert_eq!(WIRE_DECODE_ERROR, 10);
+    }
+
+    #[test]
+    fn ticket_reclaims_input_buffer() {
+        let slot = ResponseSlot::new();
+        let ticket = Ticket {
+            id: 1,
+            slot: Arc::clone(&slot),
+        };
+        assert!(ticket.reclaim_input().is_none());
+        let mut buf = vec![1.0f32, 2.0];
+        buf.reserve(64);
+        let cap = buf.capacity();
+        slot.return_input(buf);
+        slot.complete(Ok(vec![3.0]));
+        assert_eq!(ticket.wait().unwrap(), vec![3.0]);
+        let back = ticket.reclaim_input().expect("buffer returned");
+        assert_eq!(back.capacity(), cap);
+        assert!(ticket.reclaim_input().is_none(), "reclaim is one-shot");
     }
 }

@@ -1,0 +1,796 @@
+//! TCP transport layer: length-prefixed f32 frames over blocking
+//! sockets, hardened against abusive peers.
+//!
+//! Layering (see `docs/robustness.md`, "Transport & admission"):
+//!
+//! ```text
+//!   accept loop (serve_tcp_with) ── connection cap, handle reaping
+//!        │ one thread per connection
+//!   frame decode (read_frame) ───── typed decode errors, idle timeout
+//!        │
+//!   admission (Admission) ───────── per-tenant token-bucket quotas
+//!        │
+//!   batcher (Coordinator) ───────── bounded queue, terminal ledger
+//! ```
+//!
+//! Wire format (little-endian):
+//!   request:  u32 n | u32 ttl_ms | n × f32     (one input row; ttl_ms 0 = no deadline)
+//!   response: u8 tag | u32 n | payload
+//!
+//! Control frames reuse the same channel, keyed by a magic first word
+//! that can never be a valid row length (row lengths are capped at
+//! `1 << 22` floats; the magics sit at the top of the u32 range):
+//!   open:   u32 0xFFFF_FF01 | u32 ttl_ms              → ok payload: 1 × f32 (bits = session id)
+//!   step:   u32 0xFFFF_FF02 | u32 id | u32 n | n × f32 → ok payload: newly final output samples
+//!   close:  u32 0xFFFF_FF03 | u32 id                  → ok payload: empty
+//!   stats:  u32 0xFFFF_FF04                           → ok payload: u32 *byte* length | utf8
+//!                                                       `name value` lines (one metric per line)
+//!   tenant: u32 0xFFFF_FF05 | u32 tenant              → ok payload: empty; tags every later
+//!                                                       frame on this connection (0 = anonymous)
+//!
+//! Response tags (see [`super::ServeError::wire_code`] /
+//! [`super::SubmitError::wire_code`] — payload is a utf8 message for
+//! every non-zero tag):
+//!   0 ok (payload: n × f32 output row; u32 *byte* length + utf8 for stats)
+//!   1 engine error          2 bad input shape
+//!   3 shed: queue full      4 shed: deadline expired
+//!   5 shed: draining        6 shed: worker lost
+//!   7 coordinator closed    8 shed: connection limit
+//!   9 shed: quota exceeded  10 malformed frame (decode error)
+//!
+//! One thread per connection (the workload is CPU-bound inference; the
+//! batcher serializes actual compute, so connection threads just park).
+//! Abuse containment: the accept loop reaps finished handler threads
+//! and refuses over-capacity connections with wire code 8; reads carry
+//! the configured idle timeout so a slow-loris peer stalling mid-frame
+//! gets its connection dropped (typed as a decode error) instead of
+//! pinning a thread; oversized length prefixes and unknown magics get
+//! wire code 10 and a close, never a listener death. The decode row is
+//! double-buffered with the submitted request (the worker hands the
+//! buffer back through the response slot), so the steady-state loop is
+//! allocation-free.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Admission, Coordinator, QuotaConfig, ServeError, Shed};
+use crate::config::ServeConfig;
+use crate::telemetry::{Counter, Gauge, Histogram};
+
+/// Per-connection socket *write* timeout. Reads use the configured idle
+/// timeout; writes always carry this cap so a peer that stops draining
+/// its receive buffer can't pin a handler thread forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Frames are capped at this many floats (16 MiB); larger length
+/// prefixes are rejected as malformed without allocating.
+const MAX_FRAME_FLOATS: u32 = 1 << 22;
+
+/// Start of the reserved control-magic range. A first word at or above
+/// this that is not a known magic is a protocol error (wire code 10),
+/// not an oversized row.
+const CONTROL_BASE: u32 = 0xFFFF_FF00;
+
+/// Magic first word of a session-open frame. All control magics exceed
+/// the `1 << 22` row-length cap, so they can never collide with an
+/// inference frame's length prefix.
+pub const SESSION_OPEN_MAGIC: u32 = 0xFFFF_FF01;
+/// Magic first word of a session-step frame.
+pub const SESSION_STEP_MAGIC: u32 = 0xFFFF_FF02;
+/// Magic first word of a session-close frame.
+pub const SESSION_CLOSE_MAGIC: u32 = 0xFFFF_FF03;
+/// Magic first word of a stats frame: the response is a utf8 text
+/// export of the coordinator + transport counters.
+pub const STATS_MAGIC: u32 = 0xFFFF_FF04;
+/// Magic first word of a tenant frame: sets the tenant id metered by
+/// admission for every subsequent frame on this connection.
+pub const TENANT_MAGIC: u32 = 0xFFFF_FF05;
+
+/// Wire code for a malformed frame (oversized length prefix, unknown
+/// magic, truncation mid-frame). The connection is closed after this
+/// response — the stream cannot be resynchronized.
+pub const WIRE_DECODE_ERROR: u8 = 10;
+
+/// Transport-layer knobs, derived from [`ServeConfig`] in production
+/// (`TransportConfig::from_serve`) or defaulted for tests.
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    /// Hard cap on concurrently served connections; accepts beyond it
+    /// get wire code 8 ([`Shed::ConnLimit`]) and an immediate close.
+    pub max_connections: usize,
+    /// Per-connection read timeout. A peer idle (or stalled mid-frame)
+    /// longer than this gets its connection dropped. `ZERO` = never.
+    pub idle_timeout: Duration,
+    /// Per-tenant admission quotas (`rate_per_sec == 0` = unlimited).
+    pub quota: QuotaConfig,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 1024,
+            idle_timeout: Duration::from_secs(30),
+            quota: QuotaConfig::default(),
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        Self {
+            max_connections: cfg.max_connections.max(1),
+            idle_timeout: Duration::from_millis(cfg.idle_timeout_ms),
+            quota: QuotaConfig {
+                rate_per_sec: cfg.quota_rps,
+                burst: cfg.quota_burst,
+            },
+        }
+    }
+}
+
+/// Transport-tier counters, exported over the wire by the stats frame.
+/// These sit *in front of* the coordinator ledger: `conns_rejected` and
+/// `quota_shed` count work refused before submission, so they are
+/// intentionally not part of `CoordinatorStats::terminal()`.
+#[derive(Default)]
+struct TransportMetrics {
+    /// Connections currently being served (gauge).
+    conns_open: Gauge,
+    conns_accepted: Counter,
+    /// Connections refused at the capacity cap (wire code 8).
+    conns_rejected: Counter,
+    /// Handler join-handles held by the accept loop after the last reap
+    /// (gauge; the churn regression test pins this ≤ `max_connections`).
+    handles_live: Gauge,
+    /// Malformed frames: oversized prefix, unknown magic, truncation,
+    /// mid-frame stall. Each one closes its connection.
+    decode_errors: Counter,
+    /// Frames refused by per-tenant quota (wire code 9).
+    quota_shed: Counter,
+    /// Data-plane frames fully served (any response tag).
+    frames: Counter,
+    /// Wire-level latency per served frame: decode done → response
+    /// written (includes queue wait + inference for data frames).
+    frame_time: Histogram,
+    tenants: Mutex<BTreeMap<u32, TenantCounters>>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct TenantCounters {
+    accepted: u64,
+    shed: u64,
+}
+
+impl TransportMetrics {
+    fn tenant_accepted(&self, tenant: u32) {
+        self.tenants.lock().unwrap().entry(tenant).or_default().accepted += 1;
+    }
+
+    fn tenant_shed(&self, tenant: u32) {
+        self.tenants.lock().unwrap().entry(tenant).or_default().shed += 1;
+    }
+}
+
+/// Panic-safe `conns_open` scope: incremented when a handler starts,
+/// decremented on *any* exit (return, decode error, injected panic).
+struct ConnGuard {
+    metrics: Arc<TransportMetrics>,
+}
+
+impl ConnGuard {
+    fn new(metrics: &Arc<TransportMetrics>) -> Self {
+        metrics.conns_open.inc();
+        Self {
+            metrics: Arc::clone(metrics),
+        }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.metrics.conns_open.dec();
+    }
+}
+
+/// One decoded request frame; float payloads land in the caller's
+/// reused `row` buffer.
+enum Frame {
+    Infer { ttl: Option<Duration> },
+    Open { ttl_ms: u32 },
+    Step { session: u32 },
+    Close { session: u32 },
+    Stats,
+    Tenant { tenant: u32 },
+}
+
+/// Typed decode outcome for one frame. Everything except `Io` is a
+/// per-connection condition: the handler responds (where the protocol
+/// allows) and closes that connection; the listener never sees it.
+enum FrameError {
+    /// Clean EOF at a frame boundary — normal disconnect.
+    Eof,
+    /// Read timeout at a frame boundary — idle peer, close quietly.
+    Idle,
+    /// EOF or stall *mid-frame* (truncated frame, slow-loris partial
+    /// write). No response is possible; counted as a decode error.
+    Truncated(std::io::Error),
+    /// Length prefix over the frame cap; responded with wire code 10.
+    Oversized { n: u32, max: u32 },
+    /// First word in the reserved control range but not a known magic;
+    /// responded with wire code 10.
+    UnknownMagic(u32),
+    /// Transport failure writing/reading beyond the cases above.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "eof"),
+            FrameError::Idle => write!(f, "idle timeout"),
+            FrameError::Truncated(e) => write!(f, "truncated frame: {e}"),
+            FrameError::Oversized { n, max } => {
+                write!(f, "frame of {n} floats exceeds limit {max}")
+            }
+            FrameError::UnknownMagic(m) => write!(f, "unknown frame magic 0x{m:08X}"),
+            FrameError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+fn is_timeout(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read the first word of a frame. EOF/timeout here happen at a frame
+/// boundary and are benign (disconnect / idle peer).
+fn read_head_u32(stream: &mut TcpStream) -> Result<u32, FrameError> {
+    let mut buf = [0u8; 4];
+    match stream.read_exact(&mut buf) {
+        Ok(()) => Ok(u32::from_le_bytes(buf)),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(FrameError::Eof),
+        Err(e) if is_timeout(e.kind()) => Err(FrameError::Idle),
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+/// Read a word *inside* a frame. EOF/timeout here mean the peer sent a
+/// partial frame (truncation or slow-loris) — a decode error.
+fn read_body_u32(stream: &mut TcpStream) -> Result<u32, FrameError> {
+    let mut buf = [0u8; 4];
+    match stream.read_exact(&mut buf) {
+        Ok(()) => Ok(u32::from_le_bytes(buf)),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof || is_timeout(e.kind()) => {
+            Err(FrameError::Truncated(e))
+        }
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+/// Read the `n × f32` payload section into the reused buffers.
+fn read_floats(
+    stream: &mut TcpStream,
+    n: u32,
+    bytes: &mut Vec<u8>,
+    row: &mut Vec<f32>,
+) -> Result<(), FrameError> {
+    bytes.clear();
+    bytes.resize(n as usize * 4, 0);
+    if let Err(e) = stream.read_exact(bytes) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof || is_timeout(e.kind()) {
+            return Err(FrameError::Truncated(e));
+        }
+        return Err(FrameError::Io(e));
+    }
+    row.clear();
+    row.reserve(n as usize);
+    for chunk in bytes.chunks_exact(4) {
+        row.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(())
+}
+
+/// Read one request frame into the reused buffers: `bytes` holds the
+/// raw payload, `row` the decoded floats.
+fn read_frame(
+    stream: &mut TcpStream,
+    bytes: &mut Vec<u8>,
+    row: &mut Vec<f32>,
+) -> Result<Frame, FrameError> {
+    let head = read_head_u32(stream)?;
+    row.clear();
+    match head {
+        SESSION_OPEN_MAGIC => Ok(Frame::Open {
+            ttl_ms: read_body_u32(stream)?,
+        }),
+        SESSION_CLOSE_MAGIC => Ok(Frame::Close {
+            session: read_body_u32(stream)?,
+        }),
+        SESSION_STEP_MAGIC => {
+            let session = read_body_u32(stream)?;
+            let n = read_body_u32(stream)?;
+            if n > MAX_FRAME_FLOATS {
+                return Err(FrameError::Oversized {
+                    n,
+                    max: MAX_FRAME_FLOATS,
+                });
+            }
+            read_floats(stream, n, bytes, row)?;
+            Ok(Frame::Step { session })
+        }
+        STATS_MAGIC => Ok(Frame::Stats),
+        TENANT_MAGIC => Ok(Frame::Tenant {
+            tenant: read_body_u32(stream)?,
+        }),
+        m if m >= CONTROL_BASE => Err(FrameError::UnknownMagic(m)),
+        n if n > MAX_FRAME_FLOATS => Err(FrameError::Oversized {
+            n,
+            max: MAX_FRAME_FLOATS,
+        }),
+        n => {
+            let ttl_ms = read_body_u32(stream)?;
+            read_floats(stream, n, bytes, row)?;
+            Ok(Frame::Infer {
+                ttl: if ttl_ms == 0 {
+                    None
+                } else {
+                    Some(Duration::from_millis(u64::from(ttl_ms)))
+                },
+            })
+        }
+    }
+}
+
+fn write_ok(stream: &mut TcpStream, buf: &mut Vec<u8>, row: &[f32]) -> std::io::Result<()> {
+    buf.clear();
+    buf.push(0u8);
+    buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(buf)
+}
+
+/// Write a tagged message frame: error responses (nonzero tag) and the
+/// stats text export (tag 0) share this byte-length + utf8 layout.
+fn write_msg(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    tag: u8,
+    msg: &str,
+) -> std::io::Result<()> {
+    let bytes = msg.as_bytes();
+    buf.clear();
+    buf.push(tag);
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    stream.write_all(buf)
+}
+
+fn write_err(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    code: u8,
+    msg: &str,
+) -> std::io::Result<()> {
+    write_msg(stream, buf, code, msg)
+}
+
+/// Render the stats-frame text: one `name value` line per metric, the
+/// full [`super::CoordinatorStats`] snapshot followed by the transport
+/// counters and per-tenant admission tallies.
+fn render_stats(coord: &Coordinator, tm: &TransportMetrics) -> String {
+    use std::fmt::Write as _;
+    let s = coord.stats();
+    let mut out = String::with_capacity(1024);
+    let _ = writeln!(out, "submitted {}", s.submitted);
+    let _ = writeln!(out, "completed {}", s.completed);
+    let _ = writeln!(out, "failed {}", s.failed);
+    let _ = writeln!(out, "rejected {}", s.rejected);
+    let _ = writeln!(out, "shed_queue_full {}", s.shed_queue_full);
+    let _ = writeln!(out, "shed_draining {}", s.shed_draining);
+    let _ = writeln!(out, "shed_deadline {}", s.shed_deadline);
+    let _ = writeln!(out, "worker_lost {}", s.worker_lost);
+    let _ = writeln!(out, "drained {}", s.drained);
+    let _ = writeln!(out, "worker_panics {}", s.worker_panics);
+    let _ = writeln!(out, "worker_restarts {}", s.worker_restarts);
+    let _ = writeln!(out, "batches {}", s.batches);
+    let _ = writeln!(out, "mean_batch {:.3}", s.mean_batch);
+    let _ = writeln!(out, "sessions_opened {}", s.sessions_opened);
+    let _ = writeln!(out, "sessions_closed {}", s.sessions_closed);
+    let _ = writeln!(out, "session_steps {}", s.session_steps);
+    let _ = writeln!(out, "sessions_evicted {}", s.sessions_evicted);
+    let _ = writeln!(out, "queue_wait_p50_us {:.3}", s.queue_wait_p50_us);
+    let _ = writeln!(out, "inference_p50_us {:.3}", s.inference_p50_us);
+    let _ = writeln!(out, "e2e_p50_us {:.3}", s.e2e_p50_us);
+    let _ = writeln!(out, "e2e_p99_us {:.3}", s.e2e_p99_us);
+    let _ = writeln!(out, "live_workers {}", s.live_workers);
+    let _ = writeln!(out, "queue_depth {}", s.queue_depth);
+    let _ = writeln!(out, "drain_ms {:.3}", s.drain_ms);
+    let _ = writeln!(out, "conns_open {}", tm.conns_open.get());
+    let _ = writeln!(out, "conns_accepted {}", tm.conns_accepted.get());
+    let _ = writeln!(out, "conns_rejected {}", tm.conns_rejected.get());
+    let _ = writeln!(out, "handles_live {}", tm.handles_live.get());
+    let _ = writeln!(out, "decode_errors {}", tm.decode_errors.get());
+    let _ = writeln!(out, "quota_shed {}", tm.quota_shed.get());
+    let wire = tm.frame_time.snapshot();
+    let _ = writeln!(out, "wire_frames {}", wire.count);
+    let _ = writeln!(out, "wire_frame_mean_us {:.3}", wire.mean_us);
+    let _ = writeln!(out, "wire_frame_p50_us {:.3}", wire.p50_us);
+    let _ = writeln!(out, "wire_frame_p99_us {:.3}", wire.p99_us);
+    for (tenant, c) in tm.tenants.lock().unwrap().iter() {
+        let _ = writeln!(out, "tenant.{tenant}.accepted {}", c.accepted);
+        let _ = writeln!(out, "tenant.{tenant}.shed {}", c.shed);
+    }
+    out
+}
+
+/// Serve until `stop` is set (checked between accepts), with default
+/// transport limits. Returns the bound address immediately via the
+/// callback so tests can connect.
+pub fn serve_tcp(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_tcp_with(coordinator, addr, TransportConfig::default(), stop, on_bound)
+}
+
+/// Serve with explicit transport limits: bounded connection capacity,
+/// per-connection idle timeout, per-tenant quotas. The accept loop owns
+/// the handler threads and reaps finished ones every iteration, so the
+/// handle vector is bounded by the number of *live* connections.
+pub fn serve_tcp_with(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    cfg: TransportConfig,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let metrics = Arc::new(TransportMetrics::default());
+    let admission = Arc::new(Admission::new(cfg.quota));
+    let idle = if cfg.idle_timeout.is_zero() {
+        None
+    } else {
+        Some(cfg.idle_timeout)
+    };
+    let max_conns = cfg.max_connections.max(1);
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut wbuf: Vec<u8> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        // Reap finished handler threads. Joining here (not just dropping
+        // the handle) also surfaces their panics to nobody — injected
+        // handler faults must never propagate into the accept loop.
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].is_finished() {
+                let _ = conns.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        metrics.handles_live.set(conns.len() as u64);
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(idle)?;
+                stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+                if conns.len() >= max_conns {
+                    // Typed refusal (wire code 8), then close: the peer
+                    // learns why instead of seeing a silent reset.
+                    metrics.conns_rejected.inc();
+                    let e = ServeError::Shed(Shed::ConnLimit);
+                    let _ = write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string());
+                    continue;
+                }
+                metrics.conns_accepted.inc();
+                let coord = Arc::clone(&coordinator);
+                let m = Arc::clone(&metrics);
+                let adm = Arc::clone(&admission);
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, coord, m, adm);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: Arc<Coordinator>,
+    metrics: Arc<TransportMetrics>,
+    admission: Arc<Admission>,
+) -> Result<()> {
+    let _open = ConnGuard::new(&metrics);
+    crate::fault_point!("transport.accept");
+    // Reused across every request on this connection. `row` ping-pongs
+    // with the coordinator: submission takes it, the worker returns it
+    // through the response slot, `reclaim_input` takes it back.
+    let mut rbytes: Vec<u8> = Vec::new();
+    let mut row: Vec<f32> = Vec::new();
+    let mut wbuf: Vec<u8> = Vec::new();
+    let mut tenant: u32 = 0;
+    loop {
+        let frame = match read_frame(&mut stream, &mut rbytes, &mut row) {
+            Ok(f) => f,
+            Err(FrameError::Eof) | Err(FrameError::Idle) => return Ok(()),
+            Err(FrameError::Truncated(_)) => {
+                // Partial frame: no response possible (the peer may
+                // never read it) — count it and drop the connection.
+                metrics.decode_errors.inc();
+                return Ok(());
+            }
+            Err(e @ FrameError::Oversized { .. }) | Err(e @ FrameError::UnknownMagic(_)) => {
+                metrics.decode_errors.inc();
+                let _ = write_err(&mut stream, &mut wbuf, WIRE_DECODE_ERROR, &e.to_string());
+                return Ok(());
+            }
+            Err(FrameError::Io(e)) => return Err(e.into()),
+        };
+        crate::fault_point!("transport.frame");
+        let t0 = Instant::now();
+        match frame {
+            Frame::Tenant { tenant: t } => {
+                tenant = t;
+                write_ok(&mut stream, &mut wbuf, &[])?;
+            }
+            Frame::Stats => {
+                let text = render_stats(&coord, &metrics);
+                write_msg(&mut stream, &mut wbuf, 0, &text)?;
+            }
+            frame => {
+                // Data plane: metered by the per-tenant token bucket
+                // (control frames above are exempt). A quota rejection
+                // sheds only this frame; the connection stays usable.
+                if !admission.admit(tenant, Instant::now()) {
+                    metrics.quota_shed.inc();
+                    metrics.tenant_shed(tenant);
+                    let e = ServeError::Shed(Shed::QuotaExceeded);
+                    write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string())?;
+                    continue;
+                }
+                metrics.tenant_accepted(tenant);
+                let reclaims_row = matches!(frame, Frame::Infer { .. } | Frame::Step { .. });
+                let submitted = match frame {
+                    // A wire TTL of 0 falls back to the coordinator's
+                    // configured default (plain `try_submit`); a nonzero
+                    // TTL overrides it.
+                    Frame::Infer { ttl: Some(t) } => {
+                        coord.try_submit_with_ttl(std::mem::take(&mut row), Some(t))
+                    }
+                    Frame::Infer { ttl: None } => coord.try_submit(std::mem::take(&mut row)),
+                    Frame::Open { ttl_ms } => coord.open_session(ttl_ms),
+                    Frame::Step { session } => {
+                        coord.step_session(session, std::mem::take(&mut row))
+                    }
+                    Frame::Close { session } => coord.close_session(session),
+                    Frame::Stats | Frame::Tenant { .. } => unreachable!("handled above"),
+                };
+                match submitted {
+                    Ok(ticket) => {
+                        let resp = ticket.wait();
+                        crate::fault_point!("transport.respond");
+                        if reclaims_row {
+                            if let Some(buf) = ticket.reclaim_input() {
+                                row = buf;
+                            }
+                        }
+                        match resp {
+                            Ok(out) => write_ok(&mut stream, &mut wbuf, &out)?,
+                            Err(e) => {
+                                write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string())?
+                            }
+                        }
+                    }
+                    Err(e) => write_err(&mut stream, &mut wbuf, e.wire_code(), &e.to_string())?,
+                }
+            }
+        }
+        metrics.frames.inc();
+        metrics.frame_time.record(t0.elapsed());
+    }
+}
+
+/// Blocking client for examples/tests/benches.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(Self {
+            stream: TcpStream::connect(addr)?,
+        })
+    }
+
+    /// Send one row, wait for the response.
+    pub fn infer(&mut self, row: &[f32]) -> Result<Vec<f32>> {
+        self.infer_with_ttl(row, None)
+    }
+
+    /// Send one row with a per-request TTL; the server sheds the
+    /// request with a typed error if it can't start compute in time.
+    pub fn infer_with_ttl(&mut self, row: &[f32], ttl: Option<Duration>) -> Result<Vec<f32>> {
+        let ttl_ms: u32 = ttl.map_or(0, |t| t.as_millis().clamp(1, u32::MAX as u128) as u32);
+        let mut buf = Vec::with_capacity(8 + row.len() * 4);
+        buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&ttl_ms.to_le_bytes());
+        for v in row {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+        self.read_response()
+    }
+
+    /// Declare this connection's tenant id for admission quotas
+    /// (`0` = the shared anonymous pool). Applies to every subsequent
+    /// frame on this connection.
+    pub fn set_tenant(&mut self, tenant: u32) -> Result<()> {
+        let mut buf = Vec::with_capacity(8);
+        buf.extend_from_slice(&TENANT_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&tenant.to_le_bytes());
+        self.stream.write_all(&buf)?;
+        self.read_response().map(|_| ())
+    }
+
+    /// Fetch the server's stats export: utf8 text, one `name value`
+    /// line per metric (coordinator ledger + transport counters).
+    pub fn stats(&mut self) -> Result<String> {
+        self.stream.write_all(&STATS_MAGIC.to_le_bytes())?;
+        let mut tag = [0u8; 1];
+        self.stream.read_exact(&mut tag)?;
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        let mut bytes = vec![0u8; n];
+        self.stream.read_exact(&mut bytes)?;
+        if tag[0] != 0 {
+            bail!(
+                "server error (code {}): {}",
+                tag[0],
+                String::from_utf8_lossy(&bytes)
+            );
+        }
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+
+    /// [`TcpClient::stats`], parsed into a name → value map (every
+    /// exported metric is numeric).
+    pub fn stats_map(&mut self) -> Result<std::collections::HashMap<String, f64>> {
+        let text = self.stats()?;
+        let mut map = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once(' ') {
+                if let Ok(num) = v.trim().parse::<f64>() {
+                    map.insert(k.to_string(), num);
+                }
+            }
+        }
+        Ok(map)
+    }
+
+    /// Open a streaming session; `ttl` is the *idle* TTL between steps
+    /// (`None` = server default). Returns the session id.
+    pub fn session_open(&mut self, ttl: Option<Duration>) -> Result<u32> {
+        let ttl_ms: u32 = ttl.map_or(0, |t| t.as_millis().clamp(1, u32::MAX as u128) as u32);
+        let mut buf = Vec::with_capacity(8);
+        buf.extend_from_slice(&SESSION_OPEN_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&ttl_ms.to_le_bytes());
+        self.stream.write_all(&buf)?;
+        let out = self.read_response()?;
+        // The id rides as the raw bit pattern of one f32 — bit-exact
+        // through serialization, unlike a numeric cast.
+        if out.len() != 1 {
+            bail!("session open returned {} floats, expected 1", out.len());
+        }
+        Ok(out[0].to_bits())
+    }
+
+    /// Push a packet of input samples (interleaved `[t, c]`) into the
+    /// session; returns the newly finalized output samples (interleaved,
+    /// possibly empty).
+    pub fn session_step(&mut self, session: u32, packet: &[f32]) -> Result<Vec<f32>> {
+        let mut buf = Vec::with_capacity(12 + packet.len() * 4);
+        buf.extend_from_slice(&SESSION_STEP_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&session.to_le_bytes());
+        buf.extend_from_slice(&(packet.len() as u32).to_le_bytes());
+        for v in packet {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&buf)?;
+        self.read_response()
+    }
+
+    /// Close the session, recycling its server-side state.
+    pub fn session_close(&mut self, session: u32) -> Result<()> {
+        let mut buf = Vec::with_capacity(8);
+        buf.extend_from_slice(&SESSION_CLOSE_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&session.to_le_bytes());
+        self.stream.write_all(&buf)?;
+        self.read_response().map(|_| ())
+    }
+
+    fn read_response(&mut self) -> Result<Vec<f32>> {
+        let mut tag = [0u8; 1];
+        self.stream.read_exact(&mut tag)?;
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if tag[0] == 0 {
+            let mut bytes = vec![0u8; n * 4];
+            self.stream.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        } else {
+            let mut bytes = vec![0u8; n];
+            self.stream.read_exact(&mut bytes)?;
+            bail!(
+                "server error (code {}): {}",
+                tag[0],
+                String::from_utf8_lossy(&bytes)
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_magics_sit_above_the_row_cap() {
+        for magic in [
+            SESSION_OPEN_MAGIC,
+            SESSION_STEP_MAGIC,
+            SESSION_CLOSE_MAGIC,
+            STATS_MAGIC,
+            TENANT_MAGIC,
+        ] {
+            assert!(magic >= CONTROL_BASE);
+            assert!(magic > MAX_FRAME_FLOATS);
+        }
+    }
+
+    #[test]
+    fn frame_error_messages_are_typed() {
+        let e = FrameError::Oversized { n: 5_000_000, max: MAX_FRAME_FLOATS };
+        assert!(e.to_string().contains("exceeds limit"));
+        let e = FrameError::UnknownMagic(0xFFFF_FFEE);
+        assert!(e.to_string().contains("0xFFFFFFEE"));
+    }
+
+    #[test]
+    fn transport_config_from_serve_clamps() {
+        let cfg = ServeConfig {
+            max_connections: 0,
+            idle_timeout_ms: 0,
+            ..Default::default()
+        };
+        let t = TransportConfig::from_serve(&cfg);
+        assert_eq!(t.max_connections, 1, "cap of 0 would refuse everything");
+        assert!(t.idle_timeout.is_zero(), "0 = no idle timeout");
+    }
+}

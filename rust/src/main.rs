@@ -20,7 +20,9 @@ use swsnn::bench::{figs, BenchConfig};
 use swsnn::cli::{parse_args, Args, FlagSpec};
 use swsnn::config::{load_config, ServeConfig};
 use swsnn::conv::{conv1d, BackendChoice, Conv1dParams, ConvBackend};
-use swsnn::coordinator::{serve_tcp, Coordinator, NativeEngine, PjrtTcnEngine};
+use swsnn::coordinator::{
+    serve_tcp_with, Coordinator, NativeEngine, PjrtTcnEngine, TransportConfig,
+};
 use swsnn::nn::{Model, Plan, PlannerConfig};
 use swsnn::pool::{minimizer_positions, sliding_minimum};
 use swsnn::runtime::{ArtifactRegistry, TensorView};
@@ -125,7 +127,8 @@ fn print_help() {
          common flags: --threads N (kernel worker-pool width), --quick (short bench),\n\
                        --json (also write bench_results/BENCH_<table>.json), --help\n\
          serve flags:  --autotune (measure kernel choices per layer),\n\
-                       --buckets 1,8,32 (batch buckets precompiled at startup)\n\
+                       --buckets 1,8,32 (batch buckets precompiled at startup),\n\
+                       --max-connections N, --idle-timeout MS, --quota-rps N, --quota-burst N\n\
          env: SWSNN_THREADS, SWSNN_SIMD=off|generic|sse2|avx2|avx512|neon, SWSNN_BENCH_QUICK, SWSNN_BENCH_JSON"
     );
 }
@@ -143,13 +146,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         FlagSpec { name: "request-ttl", value: Some("ms"), help: "default request TTL: shed requests not started within this budget (0 = never)" },
         FlagSpec { name: "max-queue", value: Some("n"), help: "admission queue capacity (default: serve.queue_capacity)" },
         FlagSpec { name: "restart-budget", value: Some("n"), help: "worker restarts after an engine panic before degrading the pool" },
+        FlagSpec { name: "max-connections", value: Some("n"), help: "concurrent TCP connection cap; refused connections get wire code 8" },
+        FlagSpec { name: "idle-timeout", value: Some("ms"), help: "per-connection idle/stall read timeout (0 = never)" },
+        FlagSpec { name: "quota-rps", value: Some("n"), help: "per-tenant admission quota in requests/second (0 = unlimited)" },
+        FlagSpec { name: "quota-burst", value: Some("n"), help: "per-tenant token-bucket burst depth" },
         FlagSpec { name: "pjrt", value: None, help: "serve the AOT TCN via PJRT" },
         FlagSpec { name: "quick", value: None, help: "" },
     ];
     args.reject_unknown(&specs).map_err(anyhow::Error::msg)?;
     let addr = args.get_str("addr", "127.0.0.1:7878");
 
-    let serve_cfg;
+    let mut serve_cfg;
     let coord = if args.has("pjrt") {
         let d = ServeConfig::default();
         serve_cfg = ServeConfig {
@@ -308,10 +315,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         coord.worker_count(),
         swsnn::exec::Executor::global().threads()
     );
+    // Transport-layer flags apply to both engine paths.
+    serve_cfg.max_connections = args
+        .get_usize("max-connections", serve_cfg.max_connections)
+        .map_err(anyhow::Error::msg)?;
+    serve_cfg.idle_timeout_ms = args
+        .get_u64("idle-timeout", serve_cfg.idle_timeout_ms)
+        .map_err(anyhow::Error::msg)?;
+    serve_cfg.quota_rps = args
+        .get_u64("quota-rps", serve_cfg.quota_rps)
+        .map_err(anyhow::Error::msg)?;
+    serve_cfg.quota_burst = args
+        .get_u64("quota-burst", serve_cfg.quota_burst)
+        .map_err(anyhow::Error::msg)?;
     let stop = Arc::new(AtomicBool::new(false));
-    serve_tcp(Arc::new(coord), &addr, stop, |bound| {
-        println!("listening on {bound}");
-    })
+    serve_tcp_with(
+        Arc::new(coord),
+        &addr,
+        TransportConfig::from_serve(&serve_cfg),
+        stop,
+        |bound| {
+            println!("listening on {bound}");
+        },
+    )
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {

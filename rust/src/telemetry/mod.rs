@@ -27,6 +27,38 @@ impl Counter {
     }
 }
 
+/// Up/down gauge for live counts (open connections, live thread
+/// handles). `dec` saturates at zero instead of wrapping so a racy
+/// extra decrement can never report ~2^64 open connections.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Log₂-bucketed histogram of nanosecond durations: bucket `i` covers
 /// `[2^i, 2^{i+1})` ns. 64 buckets span ns → ~584 years; quantiles are
 /// estimated at bucket midpoints (≤ 2× relative error, fine for latency

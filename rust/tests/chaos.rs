@@ -13,13 +13,13 @@
 
 #![cfg(feature = "fault-injection")]
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use swsnn::config::ServeConfig;
 use swsnn::coordinator::faults::{self, FaultKind};
-use swsnn::coordinator::{Coordinator, Engine, ServeError, Shed};
+use swsnn::coordinator::{serve_tcp, Coordinator, Engine, ServeError, Shed, TcpClient};
 use swsnn::workload::Rng;
 
 /// Serializes chaos tests (the fault registry is process-global).
@@ -502,5 +502,173 @@ fn soak_overload_4x_sheds_and_stays_terminal() {
         "soak ledger does not balance: {stats:?}"
     );
     assert!(offered.load(Ordering::Relaxed) as u64 > 4 * stats.submitted / 2);
+    faults::reset();
+}
+
+// --- Transport-tier fault injection ---------------------------------
+//
+// The `transport.*` sites live on connection-handler threads
+// (`coordinator/transport.rs`). The invariant they attack: a fault in
+// one handler kills at most that one connection — the listener keeps
+// accepting, and the coordinator ledger still balances, because the
+// sites fire either before submission (`accept`, `frame`) or after the
+// request is already terminal (`respond`).
+
+/// Boot a TCP server over an echo coordinator; returns the pieces the
+/// test needs to drive and later drain it.
+fn start_tcp(
+    workers: usize,
+) -> (
+    Arc<Coordinator>,
+    std::net::SocketAddr,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<()>,
+) {
+    let coord =
+        Arc::new(Coordinator::start_replicated(EchoEngine, &chaos_config(workers, false)).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp(coord, "127.0.0.1:0", stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    (coord, addr, stop, server)
+}
+
+fn drain_tcp(
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    server: std::thread::JoinHandle<()>,
+) -> swsnn::coordinator::CoordinatorStats {
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap();
+    Arc::try_unwrap(coord)
+        .ok()
+        .expect("server still holds the coordinator")
+        .shutdown()
+}
+
+/// A panic at `transport.accept` (handler start) kills that connection
+/// before it reads a single byte; the listener accepts the next one.
+#[test]
+fn injected_accept_panic_kills_one_connection_not_the_listener() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("transport.accept", FaultKind::Panic, 0, 1);
+
+    let (coord, addr, stop, server) = start_tcp(1);
+    let mut doomed = TcpClient::connect(addr).unwrap();
+    assert!(
+        doomed.infer(&[1.0; ROW]).is_err(),
+        "handler panicked before the first read; the response is an EOF"
+    );
+    drop(doomed);
+    assert_eq!(faults::fired("transport.accept"), 1);
+
+    let mut client = TcpClient::connect(addr).unwrap();
+    assert_eq!(client.infer(&[2.0; ROW]).unwrap(), vec![2.0; ROW]);
+    drop(client);
+    let stats = drain_tcp(coord, stop, server);
+    // The doomed connection never submitted anything.
+    assert_eq!(stats.submitted, 1);
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// A panic at `transport.frame` fires after decode but *before*
+/// submission: the request never enters the ledger, so nothing leaks.
+#[test]
+fn injected_frame_panic_fires_before_submission() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("transport.frame", FaultKind::Panic, 0, 1);
+
+    let (coord, addr, stop, server) = start_tcp(1);
+    let mut doomed = TcpClient::connect(addr).unwrap();
+    assert!(doomed.infer(&[3.0; ROW]).is_err());
+    drop(doomed);
+    assert_eq!(faults::fired("transport.frame"), 1);
+
+    let mut client = TcpClient::connect(addr).unwrap();
+    assert_eq!(client.infer(&[4.0; ROW]).unwrap(), vec![4.0; ROW]);
+    drop(client);
+    let stats = drain_tcp(coord, stop, server);
+    assert_eq!(stats.submitted, 1, "panicked frame must not be submitted");
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// A panic at `transport.respond` fires with the response already in
+/// hand — the request is terminal (completed) even though the wire
+/// write never happens. The client loses the answer; the ledger doesn't.
+#[test]
+fn injected_respond_panic_is_already_terminal() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm("transport.respond", FaultKind::Panic, 0, 1);
+
+    let (coord, addr, stop, server) = start_tcp(1);
+    let mut doomed = TcpClient::connect(addr).unwrap();
+    assert!(
+        doomed.infer(&[5.0; ROW]).is_err(),
+        "response was computed but the handler died before writing it"
+    );
+    drop(doomed);
+    assert_eq!(faults::fired("transport.respond"), 1);
+
+    let mut client = TcpClient::connect(addr).unwrap();
+    assert_eq!(client.infer(&[6.0; ROW]).unwrap(), vec![6.0; ROW]);
+    drop(client);
+    let stats = drain_tcp(coord, stop, server);
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.completed, 2, "lost-on-the-wire request still completed");
+    assert_eq!(stats.terminal(), stats.submitted);
+    faults::reset();
+}
+
+/// A stalled handler (`Sleep` at `transport.frame`) delays its own
+/// connection but doesn't block the listener or other connections.
+#[test]
+fn injected_handler_stall_does_not_block_other_connections() {
+    let _g = lock();
+    quiet_injected_panics();
+    faults::reset();
+    faults::arm(
+        "transport.frame",
+        FaultKind::Sleep(Duration::from_millis(200)),
+        0,
+        1,
+    );
+
+    let (coord, addr, stop, server) = start_tcp(1);
+    let mut slow = TcpClient::connect(addr).unwrap();
+    let slow_thread = std::thread::spawn(move || {
+        let y = slow.infer(&[7.0; ROW]).unwrap();
+        drop(slow);
+        y
+    });
+    // While the armed handler sleeps, a second connection is served.
+    std::thread::sleep(Duration::from_millis(20));
+    let t0 = Instant::now();
+    let mut fast = TcpClient::connect(addr).unwrap();
+    assert_eq!(fast.infer(&[8.0; ROW]).unwrap(), vec![8.0; ROW]);
+    assert!(
+        t0.elapsed() < Duration::from_millis(150),
+        "an unrelated stalled handler must not delay this connection"
+    );
+    drop(fast);
+    assert_eq!(slow_thread.join().unwrap(), vec![7.0; ROW]);
+    let stats = drain_tcp(coord, stop, server);
+    assert_eq!(stats.terminal(), stats.submitted);
     faults::reset();
 }

@@ -8,8 +8,8 @@ use std::time::Duration;
 use swsnn::config::{load_config, ServeConfig};
 use swsnn::conv::ConvBackend;
 use swsnn::coordinator::{
-    serve_tcp, Coordinator, Engine, NativeEngine, PjrtTcnEngine, ServeError, Shed, SubmitError,
-    TcpClient,
+    serve_tcp, serve_tcp_with, Coordinator, Engine, NativeEngine, PjrtTcnEngine, ServeError, Shed,
+    SubmitError, TcpClient, TransportConfig,
 };
 use swsnn::nn::Model;
 use swsnn::workload::Rng;
@@ -845,6 +845,89 @@ fn tcp_roundtrip_and_error_frames() {
     assert!(err.to_string().contains("bad input shape"), "{err}");
     let out2 = client.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
     assert_eq!(out2.len(), 32);
+
+    stop.store(true, Ordering::SeqCst);
+    drop(client);
+    server.join().unwrap();
+}
+
+/// The stats wire frame reports the same ledger the coordinator holds
+/// in memory, plus live transport counters.
+#[test]
+fn tcp_stats_frame_matches_coordinator_ledger() {
+    let coord = Arc::new(native_coordinator(&ServeConfig::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp(coord, "127.0.0.1:0", stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut client = TcpClient::connect(addr).unwrap();
+    let mut rng = Rng::new(17);
+    for _ in 0..7 {
+        client.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    }
+    let map = client.stats_map().unwrap();
+    let direct = coord.stats();
+    assert_eq!(map["submitted"] as u64, direct.submitted);
+    assert_eq!(map["completed"] as u64, direct.completed);
+    assert_eq!(map["completed"] as u64, 7);
+    assert_eq!(map["conns_accepted"] as u64, 1);
+    assert!(map["conns_open"] >= 1.0, "this connection is open");
+    assert_eq!(map["decode_errors"] as u64, 0);
+    assert!(map["wire_frames"] as u64 >= 7, "data frames are metered");
+
+    stop.store(true, Ordering::SeqCst);
+    drop(client);
+    server.join().unwrap();
+}
+
+/// A connection idle past the transport idle timeout is closed by the
+/// server (quietly — boundary idleness is not a decode error); new
+/// connections are unaffected.
+#[test]
+fn tcp_idle_connection_is_closed_after_timeout() {
+    let coord = Arc::new(native_coordinator(&ServeConfig::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let tcfg = TransportConfig {
+        idle_timeout: Duration::from_millis(150),
+        ..Default::default()
+    };
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp_with(coord, "127.0.0.1:0", tcfg, stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut rng = Rng::new(23);
+    let mut idler = TcpClient::connect(addr).unwrap();
+    idler.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    // Sit idle well past the timeout: the server hangs up.
+    std::thread::sleep(Duration::from_millis(500));
+    assert!(
+        idler.infer(&rng.vec_uniform(32, -1.0, 1.0)).is_err(),
+        "idle connection should have been closed by the server"
+    );
+    drop(idler);
+    // The listener still serves fresh connections, and the idle close
+    // was not miscounted as a protocol abuse.
+    let mut client = TcpClient::connect(addr).unwrap();
+    client.infer(&rng.vec_uniform(32, -1.0, 1.0)).unwrap();
+    let map = client.stats_map().unwrap();
+    assert_eq!(map["decode_errors"] as u64, 0);
 
     stop.store(true, Ordering::SeqCst);
     drop(client);

@@ -1,0 +1,430 @@
+//! Deterministic wire-protocol fuzz + transport-hardening tests
+//! (`docs/robustness.md`, "Transport & admission").
+//!
+//! The invariants under attack: a malformed, truncated, oversized, or
+//! stalled frame (1) produces a *typed* outcome on that connection —
+//! wire code 10 where a response is possible, a silent close where it
+//! isn't — (2) never kills the listener, and (3) never leaks a ticket,
+//! so the coordinator's terminal-state ledger balances after every
+//! abuse schedule. Mutations are seeded (`workload::Rng`), so a failure
+//! reproduces byte-for-byte.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use swsnn::config::ServeConfig;
+use swsnn::coordinator::{
+    serve_tcp_with, Coordinator, CoordinatorStats, Engine, QuotaConfig, TcpClient,
+    TransportConfig,
+};
+use swsnn::workload::Rng;
+
+const ROW: usize = 4;
+
+/// Echo engine with toy streaming sessions (mirrors the chaos harness):
+/// infers echo their row, steps echo their packet.
+#[derive(Clone, Default)]
+struct EchoEngine {
+    next: u32,
+    live: std::collections::HashSet<u32>,
+}
+
+impl Engine for EchoEngine {
+    fn input_len(&self) -> usize {
+        ROW
+    }
+    fn output_len(&self) -> usize {
+        ROW
+    }
+    fn infer(&self, x: &[f32], _batch: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+    fn name(&self) -> String {
+        "fuzz-echo".into()
+    }
+    fn session_open(&mut self) -> anyhow::Result<u32> {
+        let id = self.next;
+        self.next += 1;
+        self.live.insert(id);
+        Ok(id)
+    }
+    fn session_step(&mut self, id: u32, x: &[f32], out: &mut Vec<f32>) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.live.contains(&id), "unknown session id {id}");
+        out.clear();
+        out.extend_from_slice(x);
+        Ok(x.len())
+    }
+    fn session_close(&mut self, id: u32) -> anyhow::Result<()> {
+        anyhow::ensure!(self.live.remove(&id), "unknown session id {id}");
+        Ok(())
+    }
+    fn live_sessions(&self) -> usize {
+        self.live.len()
+    }
+}
+
+fn fuzz_config() -> ServeConfig {
+    ServeConfig {
+        max_batch: 4,
+        batch_deadline_us: 200,
+        workers: 1,
+        queue_capacity: 64,
+        ..Default::default()
+    }
+}
+
+struct TestServer {
+    coord: Arc<Coordinator>,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    server: std::thread::JoinHandle<()>,
+}
+
+fn start_server(tcfg: TransportConfig) -> TestServer {
+    let coord =
+        Arc::new(Coordinator::start_replicated(EchoEngine::default(), &fuzz_config()).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            serve_tcp_with(coord, "127.0.0.1:0", tcfg, stop, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    TestServer {
+        coord,
+        addr,
+        stop,
+        server,
+    }
+}
+
+impl TestServer {
+    /// Stop the listener (all clients must be dropped first), join it,
+    /// and drain the coordinator to its final stats.
+    fn finish(self) -> CoordinatorStats {
+        self.stop.store(true, Ordering::SeqCst);
+        self.server.join().unwrap();
+        Arc::try_unwrap(self.coord)
+            .ok()
+            .expect("server still holds the coordinator")
+            .shutdown()
+    }
+}
+
+/// A canonical valid infer frame: `u32 n | u32 ttl_ms | n × f32`.
+fn valid_infer_frame() -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + ROW * 4);
+    buf.extend_from_slice(&(ROW as u32).to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    for i in 0..ROW {
+        buf.extend_from_slice(&(i as f32).to_le_bytes());
+    }
+    buf
+}
+
+/// Fire raw bytes at the server, close the write side, and drain
+/// whatever comes back until the server closes (or 2 s pass).
+fn send_raw(addr: std::net::SocketAddr, bytes: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let _ = s.write_all(bytes);
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    let mut got = Vec::new();
+    let _ = s.read_to_end(&mut got);
+    got
+}
+
+fn assert_listener_alive(addr: std::net::SocketAddr) {
+    let mut client = TcpClient::connect(addr).unwrap();
+    let row = vec![1.5f32; ROW];
+    assert_eq!(
+        client.infer(&row).unwrap(),
+        row,
+        "listener must keep serving after abuse"
+    );
+}
+
+/// Seeded mutation sweep over a valid frame: truncations, oversized
+/// length prefixes, unknown magics, byte flips, mid-frame EOFs. Every
+/// case must leave the listener serving and the ledger balanced.
+#[test]
+fn mutated_frames_never_kill_listener_and_ledger_balances() {
+    let srv = start_server(TransportConfig {
+        idle_timeout: Duration::from_millis(500),
+        ..Default::default()
+    });
+    let valid = valid_infer_frame();
+    let mut rng = Rng::new(0xF422_0010);
+    for case in 0..60u32 {
+        let mut bytes = valid.clone();
+        match case % 5 {
+            0 => {
+                // Truncated frame: cut anywhere inside the frame.
+                let cut = 1 + (rng.next_u64() as usize) % (bytes.len() - 1);
+                bytes.truncate(cut);
+            }
+            1 => {
+                // Oversized length prefix, below the control range.
+                let n = (1u32 << 22) + 1 + (rng.next_u64() as u32 % 1_000_000);
+                bytes[..4].copy_from_slice(&n.to_le_bytes());
+            }
+            2 => {
+                // Unknown magic in the reserved control range (skip the
+                // five assigned magics 0xFFFF_FF01..=05).
+                let m = 0xFFFF_FF10u32 | (rng.next_u64() as u32 & 0xEF);
+                bytes[..4].copy_from_slice(&m.to_le_bytes());
+            }
+            3 => {
+                // Single byte flip anywhere in the frame.
+                let idx = (rng.next_u64() as usize) % bytes.len();
+                bytes[idx] ^= 1 << (rng.next_u64() % 8);
+            }
+            _ => {
+                // Mid-frame EOF: header only, no payload.
+                bytes.truncate(8);
+            }
+        }
+        let _ = send_raw(srv.addr, &bytes);
+    }
+    assert_listener_alive(srv.addr);
+    let stats = srv.finish();
+    assert_eq!(
+        stats.terminal(),
+        stats.submitted,
+        "every accepted request must reach exactly one terminal state"
+    );
+}
+
+#[test]
+fn oversized_and_unknown_magic_get_typed_decode_errors() {
+    let srv = start_server(TransportConfig::default());
+
+    // Oversized length prefix → wire code 10, then close.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(u32::MAX / 2).to_le_bytes());
+    let got = send_raw(srv.addr, &bytes);
+    assert_eq!(got.first(), Some(&10u8), "oversized prefix → decode error");
+
+    // Unknown control magic → wire code 10, then close.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&0xFFFF_FFEEu32.to_le_bytes());
+    let got = send_raw(srv.addr, &bytes);
+    assert_eq!(got.first(), Some(&10u8), "unknown magic → decode error");
+
+    // Both were counted, and the listener still serves.
+    assert_listener_alive(srv.addr);
+    let mut client = TcpClient::connect(srv.addr).unwrap();
+    let stats = client.stats_map().unwrap();
+    assert!(
+        stats["decode_errors"] >= 2.0,
+        "decode errors must be counted, got {:?}",
+        stats.get("decode_errors")
+    );
+    drop(client);
+    let stats = srv.finish();
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+#[test]
+fn mid_frame_eof_closes_connection_without_response() {
+    let srv = start_server(TransportConfig::default());
+    // Header promises ROW floats; send none and close.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(ROW as u32).to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    let got = send_raw(srv.addr, &bytes);
+    assert!(got.is_empty(), "truncated frame gets no response, got {got:?}");
+    assert_listener_alive(srv.addr);
+    let stats = srv.finish();
+    assert_eq!(stats.submitted, 1, "only the liveness probe was submitted");
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+/// Slow-loris: a peer that sends a partial frame and stalls is dropped
+/// once the idle timeout lapses — typed as a decode error — instead of
+/// pinning its handler thread for the life of the socket.
+#[test]
+fn slow_loris_partial_frame_is_dropped_on_idle_timeout() {
+    let srv = start_server(TransportConfig {
+        idle_timeout: Duration::from_millis(200),
+        ..Default::default()
+    });
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // First word of a frame, then silence: the server is now mid-frame.
+    s.write_all(&(ROW as u32).to_le_bytes()).unwrap();
+    let start = std::time::Instant::now();
+    let mut got = Vec::new();
+    let n = s.read_to_end(&mut got);
+    assert!(n.is_ok(), "server should close (EOF), not reset: {n:?}");
+    assert!(
+        start.elapsed() < Duration::from_secs(4),
+        "stalled connection must be dropped near the 200ms idle timeout"
+    );
+    drop(s);
+    assert_listener_alive(srv.addr);
+    let mut client = TcpClient::connect(srv.addr).unwrap();
+    let stats = client.stats_map().unwrap();
+    assert!(stats["decode_errors"] >= 1.0, "stall counts as decode error");
+    drop(client);
+    let stats = srv.finish();
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+/// Session control frames, inference frames, and an engine error all
+/// interleave on one connection without desynchronizing the stream.
+#[test]
+fn interleaved_session_and_infer_frames_share_a_connection() {
+    let srv = start_server(TransportConfig::default());
+    let mut client = TcpClient::connect(srv.addr).unwrap();
+    let row = vec![2.0f32; ROW];
+
+    let sid = client.session_open(None).unwrap();
+    assert_eq!(client.infer(&row).unwrap(), row);
+    assert_eq!(client.session_step(sid, &row).unwrap(), row);
+    // Unknown session id → typed engine error (code 1), connection
+    // stays usable (only *decode* errors close it).
+    let err = client.session_step(sid + 1000, &row).unwrap_err().to_string();
+    assert!(err.contains("code 1"), "engine error expected, got: {err}");
+    assert_eq!(client.infer(&row).unwrap(), row);
+    client.session_close(sid).unwrap();
+    assert_eq!(client.infer(&row).unwrap(), row);
+
+    drop(client);
+    let stats = srv.finish();
+    assert_eq!(stats.sessions_opened, 1);
+    assert_eq!(stats.sessions_closed, 1);
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+/// The join-handle leak regression (PR 10): 100 sequential short-lived
+/// connections must leave at most `max_connections` live handles, and a
+/// stats round-trip must agree with the coordinator's own ledger.
+#[test]
+fn connection_churn_reaps_finished_handles() {
+    let srv = start_server(TransportConfig {
+        max_connections: 8,
+        ..Default::default()
+    });
+    let row = vec![3.0f32; ROW];
+    for _ in 0..100 {
+        let mut client = TcpClient::connect(srv.addr).unwrap();
+        assert_eq!(client.infer(&row).unwrap(), row);
+    }
+    let mut client = TcpClient::connect(srv.addr).unwrap();
+    let map = client.stats_map().unwrap();
+    assert!(
+        map["handles_live"] <= 8.0,
+        "reaper must bound live handles, got {}",
+        map["handles_live"]
+    );
+    assert!(map["conns_accepted"] >= 101.0);
+    assert!(map["conns_open"] >= 1.0, "this stats connection is open");
+    // Wire stats match the coordinator's own counters.
+    let direct = srv.coord.stats();
+    assert_eq!(map["submitted"] as u64, direct.submitted);
+    assert_eq!(map["completed"] as u64, direct.completed);
+    assert_eq!(map["completed"] as u64, 100);
+    drop(client);
+    let stats = srv.finish();
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+/// Over-capacity connections are refused with wire code 8
+/// (`Shed::ConnLimit`) and a close — not a silent reset.
+#[test]
+fn conn_limit_refuses_with_typed_wire_code() {
+    let srv = start_server(TransportConfig {
+        max_connections: 2,
+        ..Default::default()
+    });
+    let row = vec![4.0f32; ROW];
+    let mut c1 = TcpClient::connect(srv.addr).unwrap();
+    let mut c2 = TcpClient::connect(srv.addr).unwrap();
+    assert_eq!(c1.infer(&row).unwrap(), row);
+    assert_eq!(c2.infer(&row).unwrap(), row);
+    // Third connection: read the refusal without sending anything (the
+    // server writes code 8 at accept time, then closes).
+    let mut s = TcpStream::connect(srv.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut got = Vec::new();
+    s.read_to_end(&mut got).unwrap();
+    assert_eq!(got.first(), Some(&8u8), "expected ConnLimit wire code 8");
+    drop(s);
+    // Capacity frees up once a held connection closes.
+    drop(c1);
+    std::thread::sleep(Duration::from_millis(50));
+    assert_listener_alive(srv.addr);
+    drop(c2);
+    let stats = srv.finish();
+    assert_eq!(stats.terminal(), stats.submitted);
+}
+
+/// Admission fairness over the wire: a tenant flooding far beyond its
+/// token-bucket rate collects `QuotaExceeded` (code 9) sheds, while a
+/// well-behaved tenant pacing under the rate is never rejected.
+#[test]
+fn flooding_tenant_cannot_starve_well_behaved_tenant() {
+    let srv = start_server(TransportConfig {
+        quota: QuotaConfig {
+            rate_per_sec: 20,
+            burst: 2,
+        },
+        ..Default::default()
+    });
+    let row = vec![5.0f32; ROW];
+
+    // Tenant 7 floods 40 back-to-back requests.
+    let mut flooder = TcpClient::connect(srv.addr).unwrap();
+    flooder.set_tenant(7).unwrap();
+    let mut flood_ok = 0u32;
+    let mut flood_shed = 0u32;
+    for _ in 0..40 {
+        match flooder.infer(&row) {
+            Ok(out) => {
+                assert_eq!(out, row);
+                flood_ok += 1;
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("code 9"), "expected quota shed, got: {msg}");
+                flood_shed += 1;
+            }
+        }
+    }
+    assert!(flood_shed > 0, "40 back-to-back requests must exceed 20 rps");
+    assert!(flood_ok >= 2, "the burst depth is always admitted");
+
+    // Tenant 8 paces well under the rate on its own connection — its
+    // bucket is untouched by the flood, so nothing is shed.
+    let mut polite = TcpClient::connect(srv.addr).unwrap();
+    polite.set_tenant(8).unwrap();
+    for _ in 0..5 {
+        assert_eq!(polite.infer(&row).unwrap(), row, "paced tenant starved");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Per-tenant counters surfaced over the wire.
+    let map = polite.stats_map().unwrap();
+    assert_eq!(map["tenant.7.shed"] as u32, flood_shed);
+    assert_eq!(map["tenant.7.accepted"] as u32, flood_ok);
+    assert_eq!(map["tenant.8.shed"] as u32, 0);
+    assert!(map["quota_shed"] as u32 >= flood_shed);
+    drop(flooder);
+    drop(polite);
+
+    // Quota sheds happen *before* submission: the terminal ledger
+    // balances without them.
+    let stats = srv.finish();
+    assert_eq!(stats.terminal(), stats.submitted);
+    assert_eq!(stats.submitted as u32, flood_ok + 5);
+}

@@ -19,10 +19,12 @@
 //!    from at least one test under `tests/`.
 //! 5. **fault-confinement** — the serving fault-injection harness stays
 //!    out of release hot paths: `fault_point!` sites may appear only
-//!    under `src/coordinator/`, direct `faults::` references only in
-//!    `coordinator/faults.rs` and the macro definition in
-//!    `coordinator/mod.rs`, and the `mod faults` declaration must be
-//!    gated on `cfg(any(test, feature = "fault-injection"))`.
+//!    under `src/coordinator/` (the batcher plus the transport tier:
+//!    `coordinator/transport.rs` and `coordinator/admission.rs`),
+//!    direct `faults::` references only in `coordinator/faults.rs` and
+//!    the macro definition in `coordinator/mod.rs`, and the
+//!    `mod faults` declaration must be gated on
+//!    `cfg(any(test, feature = "fault-injection"))`.
 //!
 //! The checker is a line-based scanner with a small lexer (comments,
 //! strings, brace depth) — deliberately not a full parser, so it stays
@@ -470,9 +472,12 @@ fn statement_annotated(file: &FileScan, i: usize) -> bool {
 }
 
 /// Rule 5: fault-injection confinement. `fault_point!` sites live only
-/// under `src/coordinator/`; direct `faults::` references only in
-/// `coordinator/faults.rs` (the registry) and `coordinator/mod.rs` (the
-/// macro definition + gated `mod` declaration). The `mod faults`
+/// under `src/coordinator/` — the batcher/supervisor (`batcher.rs`) and
+/// the transport tier (`transport.rs` with its `transport.*` sites;
+/// `admission.rs` is covered by the same directory scope) — direct
+/// `faults::` references only in `coordinator/faults.rs` (the registry)
+/// and `coordinator/mod.rs` (the macro definition + gated `mod`
+/// declaration). The `mod faults`
 /// declaration itself must carry the
 /// `cfg(any(test, feature = "fault-injection"))` gate so plain release
 /// builds compile zero injection branches.
